@@ -1,0 +1,100 @@
+//! Design-space exploration with the analytic stack (no artifacts
+//! needed): sweep devices, batch sizes, and layouts for any network in
+//! the zoo, and show what the Algorithm-1 scheduler picks and why.
+//!
+//! Run with: `cargo run --release --example design_explorer [network]`
+
+use ef_train::device::{pynq_z1, zcu102};
+use ef_train::layout::streams::StreamSpec;
+use ef_train::layout::{Process, Scheme};
+use ef_train::model::parallelism::equal_budget;
+use ef_train::model::scheduler::{network_conv_training_cycles, schedule};
+use ef_train::nets::network_by_name;
+use ef_train::report::commas;
+use ef_train::sim::{on_chip_feature_words, simulate_layer};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet".into());
+    let net = network_by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown network `{name}`");
+        std::process::exit(1);
+    });
+
+    // 1. What the scheduler picks per device.
+    for dev in [zcu102(), pynq_z1()] {
+        let s = schedule(&net, &dev, 8);
+        println!("== {} on {} (B=8): Tm=Tn={} ==", net.name, dev.name, s.tm);
+        for (i, (l, t)) in net.conv_layers().iter().zip(&s.tilings).enumerate() {
+            println!(
+                "  conv{:<2} [M={:<4} N={:<4} R={:<3} K={}] -> Tr={:<3} Tc={:<3} M_on={}",
+                i + 1, l.m, l.n, l.r, l.k, t.tr, t.tc, t.m_on
+            );
+        }
+        let cycles = network_conv_training_cycles(&net, &s, &dev, 8);
+        let gflops = net.conv_training_flops(8) as f64 / dev.cycles_to_s(cycles) / 1e9;
+        println!(
+            "  conv-stack training: {} cycles/batch, {gflops:.2} GFLOPS\n",
+            commas(cycles)
+        );
+    }
+
+    // 2. Throughput vs batch (the paper's channel-parallelism stability).
+    let dev = zcu102();
+    println!("== throughput vs batch on {} ==", dev.name);
+    for b in [1usize, 2, 4, 8, 16] {
+        let s = schedule(&net, &dev, b);
+        let cycles = network_conv_training_cycles(&net, &s, &dev, b);
+        let gflops = net.conv_training_flops(b) as f64 / dev.cycles_to_s(cycles) / 1e9;
+        println!("  B={b:<3} {gflops:.2} GFLOPS");
+    }
+
+    // 3. Layout ablation on the busiest layer.
+    let layers = net.conv_layers();
+    let busiest = layers
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, l)| l.macs())
+        .map(|(i, _)| i)
+        .unwrap();
+    let sched = schedule(&net, &dev, 4);
+    let budget = on_chip_feature_words(&dev);
+    println!("\n== layout ablation on conv{} (B=4, FP+BP+WU) ==", busiest + 1);
+    for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
+        let mut accel = 0u64;
+        let mut realloc = 0u64;
+        for p in Process::ALL {
+            if busiest == 0 && p == Process::Bp {
+                continue;
+            }
+            let spec = StreamSpec {
+                scheme,
+                process: p,
+                layer: layers[busiest],
+                tiling: sched.tilings[busiest],
+                batch: 4,
+                weight_reuse: scheme == Scheme::Reshaped,
+            };
+            let r = simulate_layer(&spec, &dev, busiest, budget);
+            accel += r.accel_cycles;
+            realloc += r.realloc_cycles;
+        }
+        println!(
+            "  {scheme:?}: accel {} + realloc {} = {} cycles",
+            commas(accel),
+            commas(realloc),
+            commas(accel + realloc)
+        );
+    }
+
+    // 4. Parallelism-level comparison at the device's PE budget (Table 1).
+    println!("\n== parallelism levels (256 PEs) on the busiest layer ==");
+    for p in equal_budget(256) {
+        for b in [1usize, 128] {
+            println!(
+                "  {:?} B={b}: utilization {:.2}",
+                p,
+                p.utilization(&layers[busiest], b)
+            );
+        }
+    }
+}

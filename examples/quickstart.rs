@@ -1,0 +1,79 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. load the AOT-compiled unified conv kernel (Pallas -> HLO text) and
+//!    run it through PJRT from rust;
+//! 2. ask the Algorithm-1 scheduler for a ZCU102 configuration of the
+//!    '1X' CNN and price a training step in FPGA cycles;
+//! 3. compare the three DRAM layouts on one AlexNet layer.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use ef_train::device::zcu102;
+use ef_train::layout::streams::{summarize_spec, StreamSpec};
+use ef_train::layout::{Process, Role, Scheme};
+use ef_train::model::scheduler::{network_training_cycles, schedule};
+use ef_train::nets::{alexnet, cnn1x, ConvShape};
+use ef_train::report::commas;
+use ef_train::runtime::{Runtime, Tensor};
+
+fn main() -> ef_train::Result<()> {
+    // --- 1. execute the unified conv kernel via PJRT ------------------
+    let rt = Runtime::open("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let conv = rt.compile_op("conv_fp")?;
+    let x_words: usize = conv.inputs[0].shape.iter().product();
+    let w_words: usize = conv.inputs[1].shape.iter().product();
+    // All-ones conv: every output pixel = N*K*K.
+    let out = conv.run(&[
+        Tensor::f32(vec![1.0; x_words], &conv.inputs[0].shape),
+        Tensor::f32(vec![1.0; w_words], &conv.inputs[1].shape),
+    ])?;
+    let y = out[0].as_f32()?;
+    println!(
+        "conv_fp({:?} x {:?}) -> {:?}, y[0] = {} (expect N*K*K = {})",
+        conv.inputs[0].shape,
+        conv.inputs[1].shape,
+        out[0].shape(),
+        y[0],
+        conv.inputs[0].shape[1] * conv.inputs[1].shape[2] * conv.inputs[1].shape[3],
+    );
+
+    // --- 2. schedule the '1X' CNN on ZCU102 ---------------------------
+    let dev = zcu102();
+    let net = cnn1x();
+    let sched = schedule(&net, &dev, 128);
+    let cycles = network_training_cycles(&net, &sched, &dev, 128);
+    println!(
+        "\n'1X' CNN on {}: Tm=Tn={}, one batch of 128 costs {} cycles \
+         = {:.1} ms on the modeled FPGA",
+        dev.name,
+        sched.tm,
+        commas(cycles),
+        dev.cycles_to_s(cycles) * 1e3
+    );
+
+    // --- 3. layouts compared on AlexNet conv2 --------------------------
+    let layer: ConvShape = alexnet().conv_layers()[1];
+    let tiling = schedule(&alexnet(), &dev, 4).tilings[1];
+    println!("\nDMA traffic of AlexNet conv2 FP (B=4) per layout:");
+    for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
+        let spec = StreamSpec {
+            scheme,
+            process: Process::Fp,
+            layer,
+            tiling,
+            batch: 4,
+            weight_reuse: scheme == Scheme::Reshaped,
+        };
+        let s = summarize_spec(&spec);
+        let total = s.total();
+        let ifm = s.summary(Role::Ifm);
+        println!(
+            "  {scheme:?}: {} bursts / {} words total (IFM mean burst = {} words)",
+            commas(total.bursts),
+            commas(total.words),
+            commas(ifm.words / ifm.bursts.max(1)),
+        );
+    }
+    Ok(())
+}

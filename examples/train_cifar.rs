@@ -1,0 +1,68 @@
+//! End-to-end driver (the repository's headline validation, Fig. 20):
+//! train the '1X' CNN on the synthetic CIFAR workload with BOTH
+//! train-step variants — the Pallas unified-kernel graph (the "FPGA"
+//! role) and the XLA-native reference (the "GPU" role) — from identical
+//! initialization, entirely through the rust PJRT runtime, then report
+//! the loss curves, their divergence, and eval accuracy.
+//!
+//! Run with: `make artifacts && cargo run --release --example train_cifar
+//! [steps]`   (default 60 steps; ~2 min on CPU)
+
+use ef_train::data::Dataset;
+use ef_train::report::figures::format_loss_curves;
+use ef_train::runtime::Runtime;
+use ef_train::train::{Evaluator, Trainer};
+
+fn main() -> ef_train::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let lr = 0.05f32;
+    let rt = Runtime::open("artifacts")?;
+    eprintln!("[e2e] compiling both train steps on {} ...", rt.platform());
+
+    let mut fpga = Trainer::new(&rt, "cnn1x", "train_step", lr)?;
+    let mut gpu = Trainer::new(&rt, "cnn1x", "train_step_ref", lr)?;
+
+    // Identical sample stream for both runs.
+    let mut ds_a = Dataset::new(42, 0.6, 0.0);
+    let mut ds_b = Dataset::new(42, 0.6, 0.0);
+
+    let t0 = std::time::Instant::now();
+    fpga.train(&mut ds_a, steps)?;
+    let fpga_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    gpu.train(&mut ds_b, steps)?;
+    let gpu_s = t0.elapsed().as_secs_f64();
+
+    let a: Vec<f32> = fpga.history.iter().map(|r| r.loss).collect();
+    let b: Vec<f32> = gpu.history.iter().map(|r| r.loss).collect();
+    println!(
+        "{}",
+        format_loss_curves("Pallas kernels", &a, "XLA-native", &b, (steps / 12).max(1))
+    );
+
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    println!("max |loss divergence| over {steps} steps: {max_diff:.5}");
+    println!(
+        "wall time: pallas {:.1}s ({:.0} ms/step), reference {:.1}s ({:.0} ms/step)",
+        fpga_s,
+        fpga_s * 1e3 / steps as f64,
+        gpu_s,
+        gpu_s * 1e3 / steps as f64
+    );
+
+    let ev = Evaluator::new(&rt, "cnn1x")?;
+    let mut eval_ds = Dataset::new(43, 0.6, 0.0);
+    let acc_a = ev.evaluate(&fpga.params, &mut eval_ds, 4)?;
+    let mut eval_ds = Dataset::new(43, 0.6, 0.0);
+    let acc_b = ev.evaluate(&gpu.params, &mut eval_ds, 4)?;
+    println!(
+        "eval accuracy: pallas {:.1}%, reference {:.1}% ({} samples each)",
+        100.0 * acc_a.accuracy,
+        100.0 * acc_b.accuracy,
+        acc_a.samples
+    );
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT compile path: lower L2/L1 to HLO **text** artifacts for the rust runtime.
+
+Python runs exactly once (``make artifacts``); the rust coordinator then
+loads ``artifacts/*.hlo.txt`` through PJRT and never touches python again.
+
+Interchange format is HLO *text*, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Emitted per network (default batch 32):
+  * ``<net>_train_step.hlo.txt``      — Pallas-kernel FP/BP/WU SGD step
+  * ``<net>_train_step_ref.hlo.txt``  — XLA-native reference step (the
+    "GPU" curve of Fig. 20)
+  * ``<net>_predict.hlo.txt``         — forward pass for eval
+  * ``params/<net>/*.bin``            — raw little-endian f32 initial params
+
+plus standalone unified-kernel ops (conv_fp/conv_bp/conv_wu/bn/pool/matmul)
+at demo shapes for the quickstart example and runtime integration tests,
+and ``manifest.json`` describing every artifact's I/O signature.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import conv
+from .kernels.bn import bn_fwd
+from .kernels.matmul import matmul as matmul_kernel
+from .kernels.pool import maxpool_fwd
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> List[Dict[str, Any]]:
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def lower_fn(fn, example_args, path: pathlib.Path) -> Dict[str, Any]:
+    """Lower `fn` at `example_args`, write HLO text, return signature."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    out_avals = jax.eval_shape(fn, *example_args)
+    flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+    flat_in, _ = jax.tree_util.tree_flatten(example_args)
+    return {
+        "file": path.name,
+        "inputs": _sig(flat_in),
+        "outputs": _sig(flat_out),
+        "hlo_bytes": len(text),
+    }
+
+
+def export_network(net: str, batch: int, out_dir: pathlib.Path,
+                   seed: int) -> Dict[str, Any]:
+    spec = model.NETWORKS[net]()
+    params = model.init_params(spec, seed=seed)
+    keys = list(params.keys())
+
+    pdir = out_dir / "params" / net
+    pdir.mkdir(parents=True, exist_ok=True)
+    params_meta = []
+    for k in keys:
+        arr = np.asarray(params[k], dtype=np.float32)
+        (pdir / f"{k}.bin").write_bytes(arr.tobytes())  # little-endian f32
+        params_meta.append({
+            "name": k,
+            "shape": list(arr.shape),
+            "file": f"params/{net}/{k}.bin",
+        })
+
+    x_spec = jax.ShapeDtypeStruct((batch, 3, 32, 32), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in keys]
+
+    def flat_step(impl):
+        step = model.make_train_step(spec, impl)
+
+        def f(*args):
+            ps = dict(zip(keys, args[:len(keys)]))
+            x, y, lr = args[len(keys):]
+            new_params, loss = step(ps, x, y, lr)
+            return tuple(new_params[k] for k in keys) + (loss,)
+
+        return f
+
+    def flat_predict(*args):
+        ps = dict(zip(keys, args[:len(keys)]))
+        return (model.make_predict(spec, "pallas")(ps, args[len(keys)]),)
+
+    step_args = tuple(p_specs) + (x_spec, y_spec, lr_spec)
+    meta = {
+        "spec": spec,
+        "params": params_meta,
+        "params_order": keys,
+        "input": list(x_spec.shape),
+        "labels": list(y_spec.shape),
+        "train_step": lower_fn(
+            flat_step("pallas"), step_args, out_dir / f"{net}_train_step.hlo.txt"),
+        "train_step_ref": lower_fn(
+            flat_step("ref"), step_args, out_dir / f"{net}_train_step_ref.hlo.txt"),
+        "predict": lower_fn(
+            flat_predict, tuple(p_specs) + (x_spec,),
+            out_dir / f"{net}_predict.hlo.txt"),
+    }
+    return meta
+
+
+def export_ops(out_dir: pathlib.Path) -> Dict[str, Any]:
+    """Standalone unified-kernel artifacts at demo shapes (quickstart)."""
+    f32 = jnp.float32
+    b, n, m, h, k, s = 4, 16, 32, 18, 3, 1
+    r = (h - k) // s + 1
+    x = jax.ShapeDtypeStruct((b, n, h, h), f32)
+    w = jax.ShapeDtypeStruct((m, n, k, k), f32)
+    loss = jax.ShapeDtypeStruct((b, m, r, r), f32)
+
+    ops = {}
+    ops["conv_fp"] = lower_fn(
+        lambda xx, ww: (conv.conv_fp(xx, ww, stride=s),), (x, w),
+        out_dir / "op_conv_fp.hlo.txt")
+    ops["conv_bp"] = lower_fn(
+        lambda ll, ww: (conv.conv_bp(ll, ww, stride=s),), (loss, w),
+        out_dir / "op_conv_bp.hlo.txt")
+    ops["conv_wu"] = lower_fn(
+        lambda xx, ll: (conv.conv_wu(xx, ll, stride=s),), (x, loss),
+        out_dir / "op_conv_wu.hlo.txt")
+
+    xb = jax.ShapeDtypeStruct((4, 16, 16, 16), f32)
+    gam = jax.ShapeDtypeStruct((16,), f32)
+    ops["bn_fwd"] = lower_fn(
+        lambda xx, g, bb: bn_fwd(xx, g, bb), (xb, gam, gam),
+        out_dir / "op_bn_fwd.hlo.txt")
+    ops["pool_fwd"] = lower_fn(
+        lambda xx: maxpool_fwd(xx), (xb,), out_dir / "op_pool_fwd.hlo.txt")
+
+    a = jax.ShapeDtypeStruct((8, 256), f32)
+    bmat = jax.ShapeDtypeStruct((256, 64), f32)
+    ops["matmul"] = lower_fn(
+        lambda aa, bb: (matmul_kernel(aa, bb),), (a, bmat),
+        out_dir / "op_matmul.hlo.txt")
+    return ops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--nets", nargs="*", default=["cnn1x", "cnn1x_bn", "lenet10"],
+                    choices=sorted(model.NETWORKS.keys()))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: Dict[str, Any] = {
+        "version": 1,
+        "batch": args.batch,
+        "seed": args.seed,
+        "networks": {},
+        "ops": export_ops(out_dir),
+    }
+    for net in args.nets:
+        print(f"[aot] lowering {net} (batch={args.batch}) ...", flush=True)
+        manifest["networks"][net] = export_network(
+            net, args.batch, out_dir, args.seed)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    total = sum(f.stat().st_size for f in out_dir.rglob("*") if f.is_file())
+    print(f"[aot] wrote {out_dir} ({total/1e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

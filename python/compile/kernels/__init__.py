@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the EF-Train reproduction.
+
+The paper's *unified channel-level-parallelism convolution kernel* (§3)
+processes FP, BP, and WU on one Tm x Tn MAC array. Here each process is a
+Pallas kernel whose grid/BlockSpec schedule mirrors the paper's tile
+dataflow (BRAM double buffers <-> VMEM blocks, AXI DMA bursts <-> HBM->VMEM
+block transfers) and whose inner loop is a (Tm x Tn) channel contraction —
+a matmul, i.e. MXU-shaped work on a real TPU.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client that
+the rust runtime embeds cannot execute Mosaic custom-calls, so interpret
+mode (which lowers to plain HLO) is the correctness path; real-TPU
+performance is *estimated* analytically in DESIGN.md.
+"""
+
+from .conv import conv_fp, conv_bp, conv_wu  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .pool import maxpool_fwd, maxpool_bwd  # noqa: F401
+from .bn import bn_fwd, bn_bwd  # noqa: F401

@@ -1,0 +1,125 @@
+"""Pallas batch-normalization kernels (paper §3.5–3.6, Eqs. 6–14).
+
+Full-precision training BN, unlike prior accelerators' FP16 BN [35]: the
+forward pass computes per-channel batch statistics E(X), V(X), the
+inverse-stddev ``lambda`` (Eq. 9), the normalized activation ``A_hat``
+(Eq. 10) and the scaled output (Eq. 11); the backward pass produces
+``dgamma`` (Eq. 12), ``dbeta`` (Eq. 13) and the propagated loss (Eq. 14).
+
+The grid walks channel tiles; each grid step owns a full-batch block for
+its ``tc`` channels — the paper's two-sweep DRAM schedule (statistics
+sweep, then normalize sweep) collapses into one VMEM-resident block
+because the evaluated feature maps fit (B*tc*H*W words << VMEM). The BN
+Parameters buffer of Fig. 4 is the ``(tc,)`` parameter block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import pad_channels
+
+TC = 8
+EPS = 1e-5
+
+
+def _bn_fwd_kernel(x_ref, g_ref, b_ref, y_ref, xhat_ref, lam_ref, *, eps: float):
+    x = x_ref[...]                      # (B, tc, H, W)
+    mean = jnp.mean(x, axis=(0, 2, 3))  # Eq. (6)
+    var = jnp.mean(x * x, axis=(0, 2, 3)) - mean * mean  # Eq. (7)-(8)
+    lam = jax.lax.rsqrt(var + eps)      # Eq. (9)
+    xhat = (x - mean[None, :, None, None]) * lam[None, :, None, None]  # Eq. (10)
+    y_ref[...] = xhat * g_ref[...][None, :, None, None] + \
+        b_ref[...][None, :, None, None]  # Eq. (11)
+    xhat_ref[...] = xhat
+    lam_ref[...] = lam
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "eps", "interpret"))
+def bn_fwd(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
+           tc: int = TC, eps: float = EPS, interpret: bool = True):
+    """BN forward. Returns ``(y, x_hat, lam)`` — Eqs. (6)–(11)."""
+    b, ch, h, w = x.shape
+    xp = pad_channels(x, 1, tc)
+    gp = pad_channels(gamma, 0, tc)
+    bp = pad_channels(beta, 0, tc)
+    chp = xp.shape[1]
+
+    y, xhat, lam = pl.pallas_call(
+        functools.partial(_bn_fwd_kernel, eps=eps),
+        grid=(chp // tc,),
+        in_specs=[
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, chp, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((b, chp, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((chp,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(xp, gp, bp)
+    return y[:, :ch], xhat[:, :ch], lam[:ch]
+
+
+def _bn_bwd_kernel(dy_ref, xhat_ref, lam_ref, g_ref, dx_ref, dg_ref, db_ref):
+    dy = dy_ref[...]        # (B, tc, H, W)
+    xhat = xhat_ref[...]
+    lam = lam_ref[...]      # (tc,)
+    g = g_ref[...]
+    nelem = dy.shape[0] * dy.shape[2] * dy.shape[3]
+    dg = jnp.sum(dy * xhat, axis=(0, 2, 3))  # Eq. (12)
+    db = jnp.sum(dy, axis=(0, 2, 3))         # Eq. (13)
+    # Eq. (14)
+    dx = (g * lam)[None, :, None, None] * (
+        dy - (db / nelem)[None, :, None, None]
+        - xhat * (dg / nelem)[None, :, None, None])
+    dx_ref[...] = dx
+    dg_ref[...] = dg
+    db_ref[...] = db
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "interpret"))
+def bn_bwd(dy: jnp.ndarray, xhat: jnp.ndarray, lam: jnp.ndarray,
+           gamma: jnp.ndarray, *, tc: int = TC, interpret: bool = True):
+    """BN backward. Returns ``(dx, dgamma, dbeta)`` — Eqs. (12)–(14)."""
+    b, ch, h, w = dy.shape
+    dyp = pad_channels(dy, 1, tc)
+    xhp = pad_channels(xhat, 1, tc)
+    # Pad lambda with ones to avoid 0-division noise in dead channels.
+    lamp = jnp.concatenate([lam, jnp.ones(dyp.shape[1] - ch, lam.dtype)])
+    gp = pad_channels(gamma, 0, tc)
+    chp = dyp.shape[1]
+
+    dx, dg, db = pl.pallas_call(
+        _bn_bwd_kernel,
+        grid=(chp // tc,),
+        in_specs=[
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((b, tc, h, w), lambda ci: (0, ci, 0, 0)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+            pl.BlockSpec((tc,), lambda ci: (ci,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, chp, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((chp,), jnp.float32),
+            jax.ShapeDtypeStruct((chp,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(dyp, xhp, lamp, gp)
+    return dx[:, :ch], dg[:ch], db[:ch]

@@ -1,0 +1,249 @@
+"""The unified channel-level-parallelism convolution kernel (paper §3).
+
+One MAC-array dataflow serves all three training processes:
+
+* **FP** (Eq. 1):  ``A_{i+1}[b,m,r,c] = sum_{n,kr,kc} A_i[b,n,Sr+kr,Sc+kc] W[m,n,kr,kc]``
+* **BP** (Eq. 2):  the same convolution applied to the (stride-dilated,
+  K-1 zero-padded) loss with the channel-transposed, spatially-flipped
+  weight tensor — :func:`conv_bp` performs the tensor transform in jnp and
+  reuses :func:`conv_fp`, exactly as the paper reuses the Conv kernel.
+* **WU** (Eq. 4):  ``dW[m,n,kr,kc] = sum_{b,r,c} L_{i+1}[b,m,r,c] A_i[b,n,Sr+kr,Sc+kc]``
+  — :func:`conv_wu`, a distinct grid/accumulation order over the same
+  channel-contraction primitive (the paper's ② PE wiring).
+
+Hardware-adaptation notes (FPGA -> TPU, DESIGN.md §2):
+
+* the paper's ``Tm x Tn`` DSP array == the ``(tm, tn)`` channel contraction
+  here, expressed as ``dot(w_tile[tm,tn], x_patch[tn, R*C])`` so the hot
+  loop is an MXU matmul rather than scalar MACs;
+* the paper's BRAM double buffers + DMA tile schedule == the BlockSpec
+  index maps: the grid walks output-channel tiles then input-channel
+  tiles, revisiting the output block to accumulate — the OFM-buffer
+  accumulation of Fig. 5;
+* the paper's burst-friendly reshaped DRAM layout == keeping the
+  channel dimension tiled to ``tm``/``tn`` so each block transfer is a
+  contiguous VMEM copy.
+
+VMEM footprint per grid step (fp32 words):
+``tn*H*W + tm*tn*K*K + tm*R*C`` — sized far below the ~16 MB VMEM budget
+for every layer shape in the paper's nets (see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: a 8x8 channel tile keeps the interpret-mode HLO small
+# while preserving the paper's Tm=Tn constraint (required so that weight
+# tiles stay layout-compatible between FP and BP — paper §4.2).
+TM = 16
+TN = 16
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return (x + t - 1) // t * t
+
+
+def pad_channels(x: jnp.ndarray, axis: int, tile: int) -> jnp.ndarray:
+    """Zero-pad dimension `axis` up to a multiple of `tile`.
+
+    Channel zero-padding is exact for convolution: padded input channels
+    contribute 0 to every MAC, and padded output channels are sliced off.
+    """
+    n = x.shape[axis]
+    target = _ceil_to(n, tile)
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads)
+
+
+def _conv_fp_kernel(x_ref, w_ref, o_ref, *, stride: int, k: int, r: int, c: int,
+                    tm: int, tn: int, tb: int):
+    """Grid step: accumulate one (tm x tn) channel tile into the OFM block.
+
+    Mirrors Fig. 5(a)'s on-chip loop: the OFM buffer is revisited across
+    the input-channel grid axis (innermost), zeroed on the first visit.
+    `tb` images share each grid step (§Perf: batch-blocking widens the
+    contraction to (tn, tb*r*c), amortizing grid overhead — ~1.2x on the
+    interpret path, deeper MXU pipelining on real hardware).
+    """
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]        # (tb, tn, H, W) input-feature tiles
+    w = w_ref[...]        # (tm, tn, k, k) weight tile
+    acc = o_ref[...]      # (tb, tm, r, c) OFM accumulation buffer
+    for kr in range(k):
+        for kc in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, 0, kr, kc),
+                (tb, tn, kr + stride * (r - 1) + 1, kc + stride * (c - 1) + 1),
+                (1, 1, stride, stride),
+            ).transpose(1, 0, 2, 3).reshape(tn, tb * r * c)
+            # The paper's Tm x Tn MAC array: one channel contraction per
+            # (kr, kc) tap, shaped as a matmul for the MXU.
+            acc = acc + jnp.dot(
+                w[:, :, kr, kc], patch,
+                preferred_element_type=jnp.float32,
+            ).reshape(tm, tb, r, c).transpose(1, 0, 2, 3)
+    o_ref[...] = acc
+
+
+def _batch_block(b: int) -> int:
+    """Largest divisor of `b` in {8, 4, 2, 1} — the per-grid-step image
+    count (the paper's channel parallelism is batch-agnostic, so blocking
+    is purely a grid-overhead amortization)."""
+    for tb in (8, 4, 2):
+        if b % tb == 0:
+            return tb
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tm", "tn", "interpret"))
+def conv_fp(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+            tm: int = TM, tn: int = TN, interpret: bool = True) -> jnp.ndarray:
+    """Forward convolution (VALID padding), paper Eq. (1).
+
+    Args:
+      x: input activations ``(B, N, H, W)`` (pre-padded spatially by caller).
+      w: weights ``(M, N, K, K)``.
+      stride: convolution stride ``S``.
+
+    Returns:
+      Output activations ``(B, M, R, C)`` with ``R=(H-K)//S+1``.
+    """
+    b, n, h, wd = x.shape
+    m, n2, k, k2 = w.shape
+    assert n == n2 and k == k2, (x.shape, w.shape)
+    r = (h - k) // stride + 1
+    c = (wd - k) // stride + 1
+
+    xp = pad_channels(x, 1, tn)
+    wp = pad_channels(pad_channels(w, 0, tm), 1, tn)
+    np_, mp = xp.shape[1], wp.shape[0]
+    tb = _batch_block(b)
+
+    grid = (b // tb, mp // tm, np_ // tn)
+    out = pl.pallas_call(
+        functools.partial(_conv_fp_kernel, stride=stride, k=k, r=r, c=c,
+                          tm=tm, tn=tn, tb=tb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tn, h, wd), lambda bi, mi, ni: (bi, ni, 0, 0)),
+            pl.BlockSpec((tm, tn, k, k), lambda bi, mi, ni: (mi, ni, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tm, r, c), lambda bi, mi, ni: (bi, mi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, mp, r, c), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :m]
+
+
+def dilate_spatial(x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Insert ``stride-1`` zeros between spatial elements (BP of stride)."""
+    if stride == 1:
+        return x
+    b, ch, r, c = x.shape
+    out = jnp.zeros((b, ch, (r - 1) * stride + 1, (c - 1) * stride + 1), x.dtype)
+    return out.at[:, :, ::stride, ::stride].set(x)
+
+
+def transpose_flip(w: jnp.ndarray) -> jnp.ndarray:
+    """Paper §2.1: W' — transpose in/out channels and flip the K x K taps."""
+    return jnp.flip(w.transpose(1, 0, 2, 3), axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tm", "tn", "interpret"))
+def conv_bp(loss: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+            tm: int = TM, tn: int = TN, interpret: bool = True) -> jnp.ndarray:
+    """Backward (input-gradient) convolution, paper Eq. (2).
+
+    The unified kernel in action: dilate the loss by the stride, pad by
+    K-1, and run the *same* :func:`conv_fp` with the transposed+flipped
+    weight tensor. Returns the gradient w.r.t. the (spatially padded)
+    forward input of shape ``(B, N, H, W)``.
+    """
+    k = w.shape[2]
+    ld = dilate_spatial(loss, stride)
+    lp = jnp.pad(ld, ((0, 0), (0, 0), (k - 1, k - 1), (k - 1, k - 1)))
+    return conv_fp(lp, transpose_flip(w), stride=1, tm=tm, tn=tn,
+                   interpret=interpret)
+
+
+def _conv_wu_kernel(x_ref, l_ref, o_ref, *, stride: int, k: int, r: int, c: int,
+                    tm: int, tn: int):
+    """Grid step for WU: accumulate one image's contribution to a dW tile.
+
+    Mirrors Fig. 5(b): the WEI buffer is revisited across the batch grid
+    axis, accumulating gradients across the mini-batch (paper §3.3).
+    """
+    b_idx = pl.program_id(2)
+
+    @pl.when(b_idx == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]          # (tn, H, W) activation tile
+    ls = l_ref[0]         # (tm, R, C) loss tile
+    lmat = ls.reshape(tm, r * c)
+    acc = o_ref[...]      # (tm, tn, k, k) gradient tile
+    for kr in range(k):
+        for kc in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, kr, kc),
+                (tn, kr + stride * (r - 1) + 1, kc + stride * (c - 1) + 1),
+                (1, stride, stride),
+            ).reshape(tn, r * c)
+            # ② wiring of Fig. 4: loss x activation contraction over R*C.
+            acc = acc.at[:, :, kr, kc].add(jnp.dot(
+                lmat, patch.T, preferred_element_type=jnp.float32))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tm", "tn", "interpret"))
+def conv_wu(x: jnp.ndarray, loss: jnp.ndarray, *, stride: int = 1,
+            tm: int = TM, tn: int = TN, interpret: bool = True) -> jnp.ndarray:
+    """Weight-gradient convolution, paper Eq. (4).
+
+    Args:
+      x: forward input activations ``(B, N, H, W)`` (spatially padded).
+      loss: output-side loss ``(B, M, R, C)``.
+
+    Returns:
+      ``dW`` of shape ``(M, N, K, K)`` accumulated over the whole batch.
+    """
+    b, n, h, wd = x.shape
+    b2, m, r, c = loss.shape
+    assert b == b2
+    k = h - stride * (r - 1)
+    assert k == wd - stride * (c - 1), "inconsistent WU geometry"
+
+    xp = pad_channels(x, 1, tn)
+    lp = pad_channels(loss, 1, tm)
+    np_, mp = xp.shape[1], lp.shape[1]
+
+    grid = (mp // tm, np_ // tn, b)
+    out = pl.pallas_call(
+        functools.partial(_conv_wu_kernel, stride=stride, k=k, r=r, c=c,
+                          tm=tm, tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tn, h, wd), lambda mi, ni, bi: (bi, ni, 0, 0)),
+            pl.BlockSpec((1, tm, r, c), lambda mi, ni, bi: (bi, mi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn, k, k), lambda mi, ni, bi: (mi, ni, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_, k, k), jnp.float32),
+        interpret=interpret,
+    )(xp, lp)
+    return out[:m, :n]

@@ -1,0 +1,63 @@
+"""Pallas matmul kernel — the FC layer's compute primitive.
+
+The paper folds FC layers into the same channel-parallel story (an FC
+layer is a 1x1 convolution over a 1x1 feature map, Table 1's "small
+feature map" case where channel-level parallelism keeps the array busy).
+Here the FC forward/backward are tiled matmuls: grid over (row-tile,
+col-tile, reduction-tile) with the output block revisited along the
+reduction axis — the same OFM-accumulation dataflow as the Conv kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import pad_channels
+
+TB = 8     # row tile (batch)
+TO = 8     # column tile (output features / channels)
+TF = 128   # reduction tile (input features)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, tb: int, to: int, tf: int):
+    f_idx = pl.program_id(2)
+
+    @pl.when(f_idx == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "to", "tf", "interpret"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, tb: int = TB, to: int = TO,
+           tf: int = TF, interpret: bool = True) -> jnp.ndarray:
+    """Tiled ``x @ w`` for ``x: (B, F)``, ``w: (F, O)`` -> ``(B, O)``."""
+    b, f = x.shape
+    f2, o = w.shape
+    assert f == f2, (x.shape, w.shape)
+
+    tf = min(tf, max(8, f))
+    xp = pad_channels(pad_channels(x, 0, tb), 1, tf)
+    wp = pad_channels(pad_channels(w, 0, tf), 1, to)
+    bp, fp = xp.shape
+    op = wp.shape[1]
+
+    grid = (bp // tb, op // to, fp // tf)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, tb=tb, to=to, tf=tf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tf), lambda bi, oi, fi: (bi, fi)),
+            pl.BlockSpec((tf, to), lambda bi, oi, fi: (fi, oi)),
+        ],
+        out_specs=pl.BlockSpec((tb, to), lambda bi, oi, fi: (bi, oi)),
+        out_shape=jax.ShapeDtypeStruct((bp, op), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:b, :o]

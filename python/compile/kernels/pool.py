@@ -1,0 +1,142 @@
+"""Pallas max-pooling kernel (paper §3.4).
+
+Forward records a 2-bit index per output pixel (which of the 2x2 window
+elements won) into the Pooling Indexes buffer; backward scatters the loss
+to the winning position — paper Eq. (5). We store the index as int32 for
+XLA-friendliness (the paper packs it into 2 bits of BRAM; the *information
+content* is identical and the rust DMA model charges it at 2 bits).
+
+Only the 2x2/stride-2 window is implemented — the only pooling shape in
+every network the paper evaluates ('1X' CNN, LeNet-10, AlexNet's 3x3/2
+pooling is approximated as 2x2/2 in our AlexNet config; analytic
+experiments use the paper's published layer shapes directly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import pad_channels
+
+TC = 8  # channel tile
+
+
+def _pool_fwd_kernel(x_ref, y_ref, idx_ref, *, tc: int, r: int, c: int):
+    x = x_ref[0]  # (tc, 2r, 2c)
+    win = x.reshape(tc, r, 2, c, 2).transpose(0, 1, 3, 2, 4).reshape(tc, r, c, 4)
+    y_ref[0] = jnp.max(win, axis=-1)
+    idx_ref[0] = jnp.argmax(win, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "interpret"))
+def maxpool_fwd(x: jnp.ndarray, *, tc: int = TC, interpret: bool = True):
+    """2x2/stride-2 max pool. Returns ``(y, idx)`` with idx in {0,1,2,3}."""
+    b, ch, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (h, w)
+    r, c = h // 2, w // 2
+    xp = pad_channels(x, 1, tc)
+    chp = xp.shape[1]
+
+    y, idx = pl.pallas_call(
+        functools.partial(_pool_fwd_kernel, tc=tc, r=r, c=c),
+        grid=(b, chp // tc),
+        in_specs=[pl.BlockSpec((1, tc, h, w), lambda bi, ci: (bi, ci, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, chp, r, c), jnp.float32),
+            jax.ShapeDtypeStruct((b, chp, r, c), jnp.int32),
+        ),
+        interpret=interpret,
+    )(xp)
+    return y[:, :ch], idx[:, :ch]
+
+
+def _avgpool_fwd_kernel(x_ref, y_ref, *, tc: int, r: int, c: int):
+    x = x_ref[0]  # (tc, 2r, 2c)
+    win = x.reshape(tc, r, 2, c, 2).transpose(0, 1, 3, 2, 4).reshape(tc, r, c, 4)
+    y_ref[0] = jnp.mean(win, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "interpret"))
+def avgpool_fwd(x: jnp.ndarray, *, tc: int = TC, interpret: bool = True):
+    """2x2/stride-2 average pool (paper §3.4's second mode)."""
+    b, ch, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, (h, w)
+    r, c = h // 2, w // 2
+    xp = pad_channels(x, 1, tc)
+    chp = xp.shape[1]
+    y = pl.pallas_call(
+        functools.partial(_avgpool_fwd_kernel, tc=tc, r=r, c=c),
+        grid=(b, chp // tc),
+        in_specs=[pl.BlockSpec((1, tc, h, w), lambda bi, ci: (bi, ci, 0, 0))],
+        out_specs=pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, chp, r, c), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return y[:, :ch]
+
+
+def _avgpool_bwd_kernel(dy_ref, dx_ref, *, tc: int, r: int, c: int):
+    # "the loss values of a patch are directly accumulated" (§3.4): the
+    # mean's adjoint spreads dy/4 uniformly over the 2x2 window.
+    dy = dy_ref[0] * 0.25
+    planes = jnp.stack([dy, dy, dy, dy], axis=-1).reshape(tc, r, c, 2, 2)
+    dx_ref[0] = planes.transpose(0, 1, 3, 2, 4).reshape(tc, 2 * r, 2 * c)
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "interpret"))
+def avgpool_bwd(dy: jnp.ndarray, *, tc: int = TC, interpret: bool = True):
+    """Backward of 2x2/2 average pool."""
+    b, ch, r, c = dy.shape
+    dyp = pad_channels(dy, 1, tc)
+    chp = dyp.shape[1]
+    dx = pl.pallas_call(
+        functools.partial(_avgpool_bwd_kernel, tc=tc, r=r, c=c),
+        grid=(b, chp // tc),
+        in_specs=[pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0))],
+        out_specs=pl.BlockSpec((1, tc, 2 * r, 2 * c), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, chp, 2 * r, 2 * c), jnp.float32),
+        interpret=interpret,
+    )(dyp)
+    return dx[:, :ch]
+
+
+def _pool_bwd_kernel(dy_ref, idx_ref, dx_ref, *, tc: int, r: int, c: int):
+    dy = dy_ref[0]    # (tc, r, c)
+    idx = idx_ref[0]  # (tc, r, c)
+    # Scatter dy into the winning window slot: build the 4 candidate
+    # planes with masks, then fold (r, c, 2, 2) back to (2r, 2c).
+    planes = jnp.stack(
+        [jnp.where(idx == k, dy, 0.0) for k in range(4)], axis=-1,
+    ).reshape(tc, r, c, 2, 2)
+    dx_ref[0] = planes.transpose(0, 1, 3, 2, 4).reshape(tc, 2 * r, 2 * c)
+
+
+@functools.partial(jax.jit, static_argnames=("tc", "interpret"))
+def maxpool_bwd(dy: jnp.ndarray, idx: jnp.ndarray, *, tc: int = TC,
+                interpret: bool = True) -> jnp.ndarray:
+    """Backward of 2x2/2 max pool via the recorded indexes (paper Eq. 5)."""
+    b, ch, r, c = dy.shape
+    dyp = pad_channels(dy, 1, tc)
+    idxp = pad_channels(idx, 1, tc)
+    chp = dyp.shape[1]
+
+    dx = pl.pallas_call(
+        functools.partial(_pool_bwd_kernel, tc=tc, r=r, c=c),
+        grid=(b, chp // tc),
+        in_specs=[
+            pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, tc, r, c), lambda bi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, 2 * r, 2 * c), lambda bi, ci: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, chp, 2 * r, 2 * c), jnp.float32),
+        interpret=interpret,
+    )(dyp, idxp)
+    return dx[:, :ch]

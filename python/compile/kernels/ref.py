@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+Each function computes the same mathematical object as its Pallas
+counterpart using only ``jax.lax`` / ``jnp`` primitives (XLA-native convs
+and reductions). ``python/tests`` asserts allclose between the two, and
+``aot.py`` also exports a *reference* train step built entirely from these
+oracles — the "GPU" curve of the paper's Fig. 20.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def conv_fp_ref(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """VALID conv, NCHW/OIHW — oracle for ``conv.conv_fp`` (Eq. 1)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def conv_bp_ref(loss: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """Input-gradient conv — oracle for ``conv.conv_bp`` (Eq. 2)."""
+    k = w.shape[2]
+    wt = jnp.flip(w.transpose(1, 0, 2, 3), axis=(2, 3))
+    return jax.lax.conv_general_dilated(
+        loss, wt, window_strides=(1, 1),
+        padding=[(k - 1, k - 1), (k - 1, k - 1)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def conv_wu_ref(x: jnp.ndarray, loss: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """Weight gradient — oracle for ``conv.conv_wu`` (Eq. 4)."""
+    # dW[m,n,kr,kc] = sum_{b,r,c} L[b,m,r,c] * X[b,n,S r+kr, S c+kc]
+    # == conv(X^T, L^T) treating batch as the contraction channel.
+    b, n, h, wd = x.shape
+    _, m, r, c = loss.shape
+    out = jax.lax.conv_general_dilated(
+        x.transpose(1, 0, 2, 3),          # (N, B, H, W)
+        loss.transpose(1, 0, 2, 3),       # (M, B, R, C)
+        window_strides=(1, 1), padding="VALID",
+        rhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    # out: (N, M, K', K') -> crop to (M, N, K, K)
+    k = h - stride * (r - 1)
+    return out.transpose(1, 0, 2, 3)[:, :, :k, :k]
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x @ w
+
+
+def maxpool_fwd_ref(x: jnp.ndarray):
+    """2x2/2 max pool with window-local argmax index."""
+    b, ch, h, w = x.shape
+    win = x.reshape(b, ch, h // 2, 2, w // 2, 2).transpose(0, 1, 2, 4, 3, 5)
+    win = win.reshape(b, ch, h // 2, w // 2, 4)
+    return jnp.max(win, axis=-1), jnp.argmax(win, axis=-1).astype(jnp.int32)
+
+
+def maxpool_bwd_ref(dy: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    b, ch, r, c = dy.shape
+    planes = jnp.stack([jnp.where(idx == k, dy, 0.0) for k in range(4)], axis=-1)
+    planes = planes.reshape(b, ch, r, c, 2, 2).transpose(0, 1, 2, 4, 3, 5)
+    return planes.reshape(b, ch, 2 * r, 2 * c)
+
+
+def avgpool_fwd_ref(x: jnp.ndarray) -> jnp.ndarray:
+    b, ch, h, w = x.shape
+    return x.reshape(b, ch, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def avgpool_bwd_ref(dy: jnp.ndarray) -> jnp.ndarray:
+    b, ch, r, c = dy.shape
+    up = jnp.repeat(jnp.repeat(dy, 2, axis=2), 2, axis=3)
+    return up * 0.25
+
+
+def bn_fwd_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               *, eps: float = EPS):
+    mean = jnp.mean(x, axis=(0, 2, 3))
+    var = jnp.mean(x * x, axis=(0, 2, 3)) - mean * mean
+    lam = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mean[None, :, None, None]) * lam[None, :, None, None]
+    y = xhat * gamma[None, :, None, None] + beta[None, :, None, None]
+    return y, xhat, lam
+
+
+def bn_bwd_ref(dy: jnp.ndarray, xhat: jnp.ndarray, lam: jnp.ndarray,
+               gamma: jnp.ndarray):
+    nelem = dy.shape[0] * dy.shape[2] * dy.shape[3]
+    dg = jnp.sum(dy * xhat, axis=(0, 2, 3))
+    db = jnp.sum(dy, axis=(0, 2, 3))
+    dx = (gamma * lam)[None, :, None, None] * (
+        dy - (db / nelem)[None, :, None, None]
+        - xhat * (dg / nelem)[None, :, None, None])
+    return dx, dg, db

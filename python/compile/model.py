@@ -1,0 +1,292 @@
+"""Layer-2 JAX model: the paper's CNN training graphs (fwd/bwd/update).
+
+The networks the paper trains end-to-end — the CIFAR-10 **'1X' CNN**
+(§6.3, Table 7, Figs. 19–20) and **LeNet-10** (§6.4, Table 10) — are built
+here from the Layer-1 Pallas kernels. Crucially, backward propagation is
+*not* left to JAX autodiff of the forward kernel: every op carries a
+``jax.custom_vjp`` whose backward rule calls the paper's BP (Eq. 2) and WU
+(Eq. 4) kernels explicitly, so the lowered HLO contains exactly the three
+unified-kernel processes the accelerator executes — FP, BP, and WU.
+
+A parallel *reference* implementation (``impl="ref"``) uses XLA-native
+convolutions with native autodiff; it plays the role of the V100 baseline
+in Fig. 20 (two independent full-precision implementations whose loss
+curves must coincide).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import conv
+from .kernels.bn import bn_bwd, bn_fwd
+from .kernels.matmul import matmul as matmul_kernel
+from .kernels.pool import avgpool_bwd as avgpool_bwd_kernel
+from .kernels.pool import avgpool_fwd as avgpool_fwd_kernel
+from .kernels.pool import maxpool_bwd as pool_bwd_kernel
+from .kernels.pool import maxpool_fwd as pool_fwd_kernel
+
+Params = Dict[str, jnp.ndarray]
+LayerSpec = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Ops with explicit FP/BP/WU kernels (paper §3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int, padding: int):
+    """Conv layer forward via the unified Pallas kernel (Eq. 1)."""
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    return conv.conv_fp(xp, w, stride=stride)
+
+
+def _conv2d_fwd(x, w, stride, padding):
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    y = conv.conv_fp(xp, w, stride=stride)
+    return y, (xp, w)
+
+
+def _conv2d_bwd(stride, padding, res, dy):
+    xp, w = res
+    # BP — Eq. (2): same unified kernel on the dilated/padded loss with the
+    # transposed+flipped weights.
+    dxp = conv.conv_bp(dy, w, stride=stride)
+    if padding > 0:
+        dxp = dxp[:, :, padding:-padding, padding:-padding]
+    # WU — Eq. (4): gradient accumulation across the mini-batch.
+    dw = conv.conv_wu(xp, dy, stride=stride)
+    return dxp, dw
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def conv2d_ref(x, w, stride: int, padding: int):
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    return ref.conv_fp_ref(xp, w, stride=stride)
+
+
+@jax.custom_vjp
+def dense(x: jnp.ndarray, w: jnp.ndarray):
+    """FC layer forward via the Pallas matmul kernel."""
+    return matmul_kernel(x, w)
+
+
+def _dense_fwd(x, w):
+    return matmul_kernel(x, w), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    # FC BP / WU are the same tiled-matmul kernel with swapped operands.
+    return matmul_kernel(dy, w.T), matmul_kernel(x.T, dy)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@jax.custom_vjp
+def maxpool2x2(x: jnp.ndarray):
+    """2x2/2 max pool via the Pallas pooling kernel (§3.4)."""
+    y, _ = pool_fwd_kernel(x)
+    return y
+
+
+def _maxpool_fwd(x):
+    y, idx = pool_fwd_kernel(x)
+    return y, idx
+
+
+def _maxpool_bwd(idx, dy):
+    return (pool_bwd_kernel(dy, idx),)
+
+
+maxpool2x2.defvjp(_maxpool_fwd, _maxpool_bwd)
+
+
+def maxpool2x2_ref(x):
+    y, _ = ref.maxpool_fwd_ref(x)
+    return y
+
+
+@jax.custom_vjp
+def avgpool2x2(x: jnp.ndarray):
+    """2x2/2 average pool via the Pallas pooling kernel (§3.4)."""
+    return avgpool_fwd_kernel(x)
+
+
+def _avgpool_fwd(x):
+    return avgpool_fwd_kernel(x), None
+
+
+def _avgpool_bwd(_res, dy):
+    return (avgpool_bwd_kernel(dy),)
+
+
+avgpool2x2.defvjp(_avgpool_fwd, _avgpool_bwd)
+
+
+@jax.custom_vjp
+def batchnorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray):
+    """Training-mode BN via the Pallas BN kernel (§3.5–3.6)."""
+    y, _, _ = bn_fwd(x, gamma, beta)
+    return y
+
+
+def _batchnorm_fwd(x, gamma, beta):
+    y, xhat, lam = bn_fwd(x, gamma, beta)
+    return y, (xhat, lam, gamma)
+
+
+def _batchnorm_bwd(res, dy):
+    xhat, lam, gamma = res
+    dx, dg, db = bn_bwd(dy, xhat, lam, gamma)
+    return dx, dg, db
+
+
+batchnorm.defvjp(_batchnorm_fwd, _batchnorm_bwd)
+
+
+def batchnorm_ref(x, gamma, beta):
+    y, _, _ = ref.bn_fwd_ref(x, gamma, beta)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Network zoo (paper §6 structures)
+# ---------------------------------------------------------------------------
+
+def cnn1x_spec(with_bn: bool = False) -> List[LayerSpec]:
+    """The '1X' CNN of [22]/§6.3: six 3x3 convs, three pools, one FC."""
+    def cv(m, n):
+        out: List[LayerSpec] = [
+            {"type": "conv", "m": m, "n": n, "k": 3, "s": 1, "p": 1}]
+        if with_bn:
+            out.append({"type": "bn", "m": m})
+        out.append({"type": "relu"})
+        return out
+
+    spec: List[LayerSpec] = []
+    spec += cv(16, 3) + cv(16, 16) + [{"type": "pool"}]
+    spec += cv(32, 16) + cv(32, 32) + [{"type": "pool"}]
+    spec += cv(64, 32) + cv(64, 64) + [{"type": "pool"}]
+    spec += [{"type": "flatten"}, {"type": "fc", "f": 64 * 4 * 4, "o": 10}]
+    return spec
+
+
+def lenet10_spec() -> List[LayerSpec]:
+    """LeNet-10 of Chow et al. [36] (§6.4, Table 10)."""
+    return [
+        {"type": "conv", "m": 32, "n": 3, "k": 3, "s": 1, "p": 1},
+        {"type": "relu"}, {"type": "pool"},
+        {"type": "conv", "m": 32, "n": 32, "k": 3, "s": 1, "p": 1},
+        {"type": "relu"}, {"type": "pool"},
+        {"type": "conv", "m": 64, "n": 32, "k": 3, "s": 1, "p": 1},
+        {"type": "relu"}, {"type": "pool"},
+        {"type": "flatten"},
+        {"type": "fc", "f": 64 * 4 * 4, "o": 64}, {"type": "relu"},
+        {"type": "fc", "f": 64, "o": 10},
+    ]
+
+
+NETWORKS = {
+    "cnn1x": cnn1x_spec,
+    "cnn1x_bn": lambda: cnn1x_spec(with_bn=True),
+    "lenet10": lenet10_spec,
+}
+
+
+def init_params(spec: List[LayerSpec], seed: int = 0) -> Params:
+    """He-normal init, deterministic in `seed` (shared with the ref model)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for i, layer in enumerate(spec):
+        if layer["type"] == "conv":
+            key, sub = jax.random.split(key)
+            fan_in = layer["n"] * layer["k"] * layer["k"]
+            params[f"w{i}"] = jax.random.normal(
+                sub, (layer["m"], layer["n"], layer["k"], layer["k"]),
+                jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        elif layer["type"] == "fc":
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = jax.random.normal(
+                sub, (layer["f"], layer["o"]), jnp.float32) * \
+                jnp.sqrt(2.0 / layer["f"])
+        elif layer["type"] == "bn":
+            params[f"g{i}"] = jnp.ones((layer["m"],), jnp.float32)
+            params[f"b{i}"] = jnp.zeros((layer["m"],), jnp.float32)
+    return params
+
+
+def forward(params: Params, x: jnp.ndarray, spec: List[LayerSpec],
+            impl: str = "pallas") -> jnp.ndarray:
+    """Run the network; ``impl`` selects Pallas kernels or the jnp oracle."""
+    pal = impl == "pallas"
+    for i, layer in enumerate(spec):
+        t = layer["type"]
+        if t == "conv":
+            f = conv2d if pal else conv2d_ref
+            x = f(x, params[f"w{i}"], layer["s"], layer["p"])
+        elif t == "fc":
+            x = dense(x, params[f"w{i}"]) if pal else x @ params[f"w{i}"]
+        elif t == "bn":
+            f = batchnorm if pal else batchnorm_ref
+            x = f(x, params[f"g{i}"], params[f"b{i}"])
+        elif t == "relu":
+            x = jnp.maximum(x, 0.0)  # Eq. (3) under autodiff
+        elif t == "pool":
+            x = maxpool2x2(x) if pal else maxpool2x2_ref(x)
+        elif t == "avgpool":
+            x = avgpool2x2(x) if pal else ref.avgpool_fwd_ref(x)
+        elif t == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise ValueError(f"unknown layer type {t}")
+    return x
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy with integer labels (the paper's loss, computed
+    on the ARM core; here it is part of the lowered graph and the rust
+    coordinator reads the scalar back)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(spec: List[LayerSpec], impl: str):
+    def loss_fn(params: Params, x: jnp.ndarray, y: jnp.ndarray):
+        return cross_entropy(forward(params, x, spec, impl), y)
+    return loss_fn
+
+
+def make_train_step(spec: List[LayerSpec], impl: str = "pallas"):
+    """One SGD step: returns ``(new_params..., loss)``.
+
+    Plain SGD with constant learning rate — exactly the paper's §2.1
+    update rule ``W -= lr * dW`` with gradients accumulated over the
+    mini-batch (our WU kernel sums over the batch; cross-entropy takes the
+    mean, so lr is interpreted per-mean-gradient like every framework).
+    """
+    loss_fn = make_loss_fn(spec, impl)
+
+    def train_step(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+                   lr: jnp.ndarray):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: p - lr * g, params, grads)
+        return new_params, loss
+
+    return train_step
+
+
+def make_predict(spec: List[LayerSpec], impl: str = "pallas"):
+    def predict(params: Params, x: jnp.ndarray):
+        return forward(params, x, spec, impl)
+    return predict

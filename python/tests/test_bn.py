@@ -1,0 +1,94 @@
+"""BN kernel (Eqs. 6-14) vs oracle, plus statistical invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bn, ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("f4"))
+
+
+SHAPES = [(2, 8, 4, 4), (4, 16, 8, 8), (1, 3, 6, 6), (3, 20, 5, 7)]
+
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_bn_fwd_matches_ref(b, ch, h, w):
+    x = rand((b, ch, h, w), 0)
+    g = rand((ch,), 1) * 0.1 + 1.0
+    bt = rand((ch,), 2)
+    y, xh, lam = bn.bn_fwd(x, g, bt)
+    yr, xhr, lamr = ref.bn_fwd_ref(x, g, bt)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(xh, xhr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(lam, lamr, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_bn_bwd_matches_ref(b, ch, h, w):
+    x = rand((b, ch, h, w), 3)
+    g = rand((ch,), 4) * 0.1 + 1.0
+    bt = rand((ch,), 5)
+    dy = rand((b, ch, h, w), 6)
+    _, xh, lam = bn.bn_fwd(x, g, bt)
+    dx, dg, db = bn.bn_bwd(dy, xh, lam, g)
+    dxr, dgr, dbr = ref.bn_bwd_ref(dy, xh, lam, g)
+    np.testing.assert_allclose(dx, dxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dg, dgr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, dbr, rtol=1e-4, atol=1e-4)
+
+
+def test_bn_normalizes():
+    """x_hat must have ~zero mean and ~unit variance per channel (Eq. 10)."""
+    x = rand((8, 4, 16, 16), 7) * 5.0 + 3.0
+    _, xh, _ = bn.bn_fwd(x, jnp.ones(4), jnp.zeros(4))
+    mean = np.asarray(jnp.mean(xh, axis=(0, 2, 3)))
+    var = np.asarray(jnp.var(xh, axis=(0, 2, 3)))
+    np.testing.assert_allclose(mean, 0.0, atol=1e-4)
+    np.testing.assert_allclose(var, 1.0, atol=1e-3)
+
+
+def test_bn_gamma_beta_affine():
+    """Output is an affine map of x_hat (Eq. 11)."""
+    x = rand((2, 8, 4, 4), 8)
+    g = jnp.full((8,), 2.0)
+    bt = jnp.full((8,), -1.0)
+    y, xh, _ = bn.bn_fwd(x, g, bt)
+    np.testing.assert_allclose(y, 2.0 * xh - 1.0, rtol=1e-5, atol=1e-5)
+
+
+def test_bn_bwd_matches_autodiff():
+    """The explicit Eqs. 12-14 must equal jax.grad of the reference BN."""
+    x = rand((3, 6, 5, 5), 9)
+    g = rand((6,), 10) * 0.1 + 1.0
+    bt = rand((6,), 11)
+    dy = rand((3, 6, 5, 5), 12)
+
+    def f(x, g, bt):
+        y, _, _ = ref.bn_fwd_ref(x, g, bt)
+        return jnp.sum(y * dy)
+
+    dxa, dga, dba = jax.grad(f, argnums=(0, 1, 2))(x, g, bt)
+    _, xh, lam = bn.bn_fwd(x, g, bt)
+    dx, dg, db = bn.bn_bwd(dy, xh, lam, g)
+    np.testing.assert_allclose(dg, dga, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db, dba, rtol=1e-3, atol=1e-3)
+    # dx: Eq. 14 treats batch statistics as constants *except* through the
+    # normalization — identical to autodiff of BN with stop-grad-free stats.
+    np.testing.assert_allclose(dx, dxa, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 4), ch=st.integers(1, 12),
+       h=st.integers(2, 8), w=st.integers(2, 8))
+def test_bn_fwd_hypothesis(b, ch, h, w):
+    x = rand((b, ch, h, w), b + ch)
+    g = jnp.ones(ch)
+    bt = jnp.zeros(ch)
+    y, _, _ = bn.bn_fwd(x, g, bt)
+    yr, _, _ = ref.bn_fwd_ref(x, g, bt)
+    np.testing.assert_allclose(y, yr, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,141 @@
+"""Unified conv kernel (FP/BP/WU) vs the pure-jnp oracle — paper Eqs. 1/2/4.
+
+The parametrized grid covers every conv shape family in the paper's nets:
+3x3/s1 ('1X', LeNet, VGG), 5x5/s1 and 11x11/s4 (AlexNet), 1x1 (FC-as-conv),
+plus non-square maps and channel counts that are not tile multiples.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("f4"))
+
+
+SHAPES = [
+    # (b, n, m, h, w, k, s)
+    (2, 3, 16, 12, 12, 3, 1),     # first layer: n < tile
+    (1, 16, 16, 8, 8, 3, 1),      # exact tile
+    (2, 16, 32, 10, 14, 3, 1),    # non-square
+    (1, 32, 16, 6, 6, 1, 1),      # 1x1 kernel
+    (2, 8, 8, 13, 13, 5, 2),      # k=5 stride 2
+    (1, 3, 8, 47, 47, 11, 4),     # AlexNet conv1 geometry
+    (3, 5, 7, 9, 9, 3, 2),        # ragged channels
+]
+
+
+@pytest.mark.parametrize("b,n,m,h,w,k,s", SHAPES)
+def test_conv_fp_matches_ref(b, n, m, h, w, k, s):
+    x = rand((b, n, h, w), 0)
+    wt = rand((m, n, k, k), 1)
+    got = conv.conv_fp(x, wt, stride=s)
+    want = ref.conv_fp_ref(x, wt, stride=s)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,n,m,h,w,k,s", SHAPES)
+def test_conv_bp_matches_ref(b, n, m, h, w, k, s):
+    r = (h - k) // s + 1
+    c = (w - k) // s + 1
+    loss = rand((b, m, r, c), 2)
+    wt = rand((m, n, k, k), 3)
+    got = conv.conv_bp(loss, wt, stride=s)
+    want = ref.conv_bp_ref(loss, wt, stride=s)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,n,m,h,w,k,s", SHAPES)
+def test_conv_wu_matches_ref(b, n, m, h, w, k, s):
+    r = (h - k) // s + 1
+    c = (w - k) // s + 1
+    # WU geometry requires an exactly-covered input: crop h, w.
+    hh, ww = s * (r - 1) + k, s * (c - 1) + k
+    x = rand((b, n, hh, ww), 4)
+    loss = rand((b, m, r, c), 5)
+    got = conv.conv_wu(x, loss, stride=s)
+    want = ref.conv_wu_ref(x, loss, stride=s)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=2e-4)
+
+
+def test_conv_fp_zero_weights_gives_zero():
+    x = rand((1, 4, 8, 8), 0)
+    wt = jnp.zeros((8, 4, 3, 3), jnp.float32)
+    assert float(jnp.abs(conv.conv_fp(x, wt)).max()) == 0.0
+
+
+def test_conv_fp_identity_kernel():
+    # 1x1 kernel with identity channel matrix must reproduce the input.
+    x = rand((2, 16, 6, 6), 7)
+    wt = jnp.eye(16, dtype=jnp.float32).reshape(16, 16, 1, 1)
+    np.testing.assert_allclose(conv.conv_fp(x, wt), x, rtol=1e-6, atol=1e-6)
+
+
+def test_conv_fp_linearity():
+    x = rand((1, 8, 8, 8), 8)
+    w1 = rand((8, 8, 3, 3), 9)
+    w2 = rand((8, 8, 3, 3), 10)
+    lhs = conv.conv_fp(x, w1 + w2)
+    rhs = conv.conv_fp(x, w1) + conv.conv_fp(x, w2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_transpose_flip_involution():
+    wt = rand((8, 4, 3, 3), 11)
+    back = conv.transpose_flip(conv.transpose_flip(wt))
+    np.testing.assert_allclose(back, wt)
+
+
+def test_dilate_spatial_roundtrip():
+    x = rand((1, 2, 5, 5), 12)
+    d = conv.dilate_spatial(x, 3)
+    assert d.shape == (1, 2, 13, 13)
+    np.testing.assert_allclose(d[:, :, ::3, ::3], x)
+    assert float(jnp.abs(d).sum()) == pytest.approx(
+        float(jnp.abs(x).sum()), rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    n=st.integers(1, 9),
+    m=st.integers(1, 9),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.integers(1, 2),
+    extra=st.integers(0, 5),
+)
+def test_conv_fp_hypothesis_sweep(b, n, m, k, s, extra):
+    """Property: pallas FP == XLA conv for arbitrary small geometries."""
+    r = 2 + extra
+    h = s * (r - 1) + k
+    x = rand((b, n, h, h), b * 100 + n)
+    wt = rand((m, n, k, k), m)
+    got = conv.conv_fp(x, wt, stride=s)
+    want = ref.conv_fp_ref(x, wt, stride=s)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    n=st.integers(1, 6),
+    m=st.integers(1, 6),
+    k=st.sampled_from([1, 3]),
+    s=st.integers(1, 2),
+    extra=st.integers(0, 4),
+)
+def test_conv_wu_hypothesis_sweep(b, n, m, k, s, extra):
+    """Property: pallas WU == XLA weight-gradient for arbitrary geometries."""
+    r = 2 + extra
+    h = s * (r - 1) + k
+    x = rand((b, n, h, h), n * 7 + 1)
+    loss = rand((b, m, r, r), m * 13 + 2)
+    got = conv.conv_wu(x, loss, stride=s)
+    want = ref.conv_wu_ref(x, loss, stride=s)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,45 @@
+"""FC matmul kernel vs jnp, including ragged (non-tile-multiple) shapes."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("f4"))
+
+
+SHAPES = [(8, 128, 64), (1, 1024, 10), (5, 100, 10), (32, 64, 64), (3, 7, 11)]
+
+
+@pytest.mark.parametrize("b,f,o", SHAPES)
+def test_matmul_matches_jnp(b, f, o):
+    x = rand((b, f), 0)
+    w = rand((f, o), 1)
+    np.testing.assert_allclose(matmul(x, w), x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = rand((4, 16), 2)
+    eye = jnp.eye(16, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_transpose_consistency():
+    """The FC BP/WU path uses transposed operands of the same kernel."""
+    x = rand((6, 20), 3)
+    w = rand((20, 9), 4)
+    dy = rand((6, 9), 5)
+    np.testing.assert_allclose(matmul(dy, w.T), dy @ w.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(matmul(x.T, dy), x.T @ dy, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 12), f=st.integers(1, 200), o=st.integers(1, 40))
+def test_matmul_hypothesis(b, f, o):
+    x = rand((b, f), b + f)
+    w = rand((f, o), o)
+    np.testing.assert_allclose(matmul(x, w), x @ w, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,109 @@
+"""L2 model tests: pallas-vs-ref agreement, gradient fidelity, learning."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+def data(b=8, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, 3, 32, 32).astype("f4"))
+    y = jnp.asarray(rng.randint(0, 10, b).astype("i4"))
+    return x, y
+
+
+@pytest.mark.parametrize("net", sorted(model.NETWORKS.keys()))
+def test_forward_shapes(net):
+    spec = model.NETWORKS[net]()
+    params = model.init_params(spec)
+    x, _ = data(4)
+    logits = model.forward(params, x, spec, "pallas")
+    assert logits.shape == (4, 10)
+
+
+@pytest.mark.parametrize("net", ["cnn1x", "lenet10"])
+def test_pallas_forward_matches_ref(net):
+    spec = model.NETWORKS[net]()
+    params = model.init_params(spec)
+    x, _ = data(4)
+    got = model.forward(params, x, spec, "pallas")
+    want = model.forward(params, x, spec, "ref")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bn_net_forward_matches_ref():
+    spec = model.NETWORKS["cnn1x_bn"]()
+    params = model.init_params(spec)
+    x, _ = data(4)
+    got = model.forward(params, x, spec, "pallas")
+    want = model.forward(params, x, spec, "ref")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("net", ["cnn1x", "cnn1x_bn"])
+def test_gradients_match_ref_autodiff(net):
+    """custom_vjp (explicit BP/WU kernels) == autodiff of the XLA model."""
+    spec = model.NETWORKS[net]()
+    params = model.init_params(spec)
+    x, y = data(4, seed=1)
+    gp = jax.grad(model.make_loss_fn(spec, "pallas"))(params, x, y)
+    gr = jax.grad(model.make_loss_fn(spec, "ref"))(params, x, y)
+    for k in gp:
+        np.testing.assert_allclose(gp[k], gr[k], rtol=1e-3, atol=1e-3,
+                                   err_msg=f"grad mismatch at {k}")
+
+
+def test_cross_entropy_uniform():
+    logits = jnp.zeros((5, 10))
+    y = jnp.arange(5, dtype=jnp.int32)
+    assert float(model.cross_entropy(logits, y)) == pytest.approx(
+        np.log(10.0), rel=1e-5)
+
+
+def test_train_step_decreases_loss():
+    spec = model.cnn1x_spec()
+    params = model.init_params(spec)
+    x, y = data(16, seed=2)
+    step = jax.jit(model.make_train_step(spec, "pallas"))
+    lr = jnp.float32(0.05)
+    _, loss0 = step(params, x, y, lr)
+    p = params
+    for _ in range(8):
+        p, loss = step(p, x, y, lr)
+    assert float(loss) < float(loss0)
+
+
+def test_train_step_pallas_ref_agree_over_steps():
+    """Fig. 20's premise: two full-precision implementations track each
+    other step-for-step from identical init."""
+    spec = model.cnn1x_spec()
+    params = model.init_params(spec)
+    x, y = data(8, seed=3)
+    sp = jax.jit(model.make_train_step(spec, "pallas"))
+    sr = jax.jit(model.make_train_step(spec, "ref"))
+    pp, pr = params, params
+    lr = jnp.float32(0.01)
+    for i in range(3):
+        pp, lp = sp(pp, x, y, lr)
+        pr, lrr = sr(pr, x, y, lr)
+        assert abs(float(lp) - float(lrr)) < 1e-3, f"step {i}"
+
+
+def test_init_params_deterministic():
+    spec = model.cnn1x_spec()
+    p1 = model.init_params(spec, seed=0)
+    p2 = model.init_params(spec, seed=0)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_relu_backward_is_eq3():
+    """jnp.maximum autodiff implements the paper's Eq. 3 mask."""
+    x = jnp.asarray(np.random.RandomState(0).randn(32).astype("f4"))
+    dy = jnp.ones_like(x)
+    _, vjp = jax.vjp(lambda t: jnp.maximum(t, 0.0), x)
+    (dx,) = vjp(dy)
+    np.testing.assert_array_equal(np.asarray(dx), (np.asarray(x) > 0) * 1.0)

@@ -1,0 +1,108 @@
+"""Pooling kernel (§3.4, Eq. 5) vs oracle + scatter invariants."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pool, ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("f4"))
+
+
+SHAPES = [(1, 4, 4, 4), (2, 16, 8, 8), (3, 5, 6, 10), (1, 64, 8, 8)]
+
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_pool_fwd_matches_ref(b, ch, h, w):
+    x = rand((b, ch, h, w), 0)
+    y, idx = pool.maxpool_fwd(x)
+    yr, idxr = ref.maxpool_fwd_ref(x)
+    np.testing.assert_allclose(y, yr)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idxr))
+
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_pool_bwd_matches_ref(b, ch, h, w):
+    x = rand((b, ch, h, w), 1)
+    _, idx = pool.maxpool_fwd(x)
+    dy = rand((b, ch, h // 2, w // 2), 2)
+    got = pool.maxpool_bwd(dy, idx)
+    want = ref.maxpool_bwd_ref(dy, idx)
+    np.testing.assert_allclose(got, want)
+
+
+def test_pool_fwd_is_max():
+    x = rand((2, 8, 8, 8), 3)
+    y, _ = pool.maxpool_fwd(x)
+    win = np.asarray(x).reshape(2, 8, 4, 2, 4, 2).max(axis=(3, 5))
+    np.testing.assert_allclose(y, win)
+
+
+def test_pool_bwd_scatter_conserves_sum():
+    """Eq. 5 scatters each loss value to exactly one input position."""
+    x = rand((2, 8, 8, 8), 4)
+    _, idx = pool.maxpool_fwd(x)
+    dy = rand((2, 8, 4, 4), 5)
+    dx = pool.maxpool_bwd(dy, idx)
+    np.testing.assert_allclose(
+        float(jnp.sum(dx)), float(jnp.sum(dy)), rtol=1e-5)
+    # exactly one nonzero per 2x2 window (dy has no exact zeros a.s.)
+    nz = (np.asarray(dx).reshape(2, 8, 4, 2, 4, 2) != 0).sum(axis=(3, 5))
+    assert (nz == 1).all()
+
+
+def test_pool_idx_range():
+    x = rand((1, 3, 6, 6), 6)
+    _, idx = pool.maxpool_fwd(x)
+    assert int(jnp.min(idx)) >= 0 and int(jnp.max(idx)) <= 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), ch=st.integers(1, 10),
+       r=st.integers(1, 5), c=st.integers(1, 5))
+def test_pool_roundtrip_hypothesis(b, ch, r, c):
+    x = rand((b, ch, 2 * r, 2 * c), b * 31 + ch)
+    y, idx = pool.maxpool_fwd(x)
+    yr, idxr = ref.maxpool_fwd_ref(x)
+    np.testing.assert_allclose(y, yr)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idxr))
+
+
+# ---------------------------------------------------------------------------
+# Average pooling (paper §3.4's second mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_avgpool_fwd_matches_ref(b, ch, h, w):
+    x = rand((b, ch, h, w), 10)
+    got = pool.avgpool_fwd(x)
+    want = ref.avgpool_fwd_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,ch,h,w", SHAPES)
+def test_avgpool_bwd_matches_ref(b, ch, h, w):
+    dy = rand((b, ch, h // 2, w // 2), 11)
+    got = pool.avgpool_bwd(dy)
+    want = ref.avgpool_bwd_ref(dy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_avgpool_bwd_matches_autodiff():
+    import jax
+    x = rand((2, 6, 8, 8), 12)
+    dy = rand((2, 6, 4, 4), 13)
+    _, vjp = jax.vjp(ref.avgpool_fwd_ref, x)
+    (want,) = vjp(dy)
+    got = pool.avgpool_bwd(dy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_avgpool_conserves_mean():
+    x = rand((1, 4, 8, 8), 14)
+    y = pool.avgpool_fwd(x)
+    np.testing.assert_allclose(
+        float(jnp.mean(y)), float(jnp.mean(x)), rtol=1e-5)

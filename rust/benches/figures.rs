@@ -1,0 +1,26 @@
+//! One bench per paper figure (18, 19, 21; figure 20 is the e2e training
+//! bench in `train_e2e.rs`), plus the per-point sweeps behind them.
+
+use ef_train::device::zcu102;
+use ef_train::nets::{alexnet, vgg16};
+use ef_train::report::figures;
+use ef_train::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::from_env(2000);
+    r.run("fig18_latency_vs_batch_weight_reuse", figures::figure18);
+    r.run("fig19_latency_breakdown_1x", figures::figure19);
+    r.run("fig21_throughput_vs_batch_all_nets", figures::figure21);
+
+    // Individual sweep points (the expensive inner pieces of fig 21).
+    let dev = zcu102();
+    r.run("fig21_point_alexnet_b128", || {
+        figures::net_throughput(&alexnet(), &dev, 128)
+    });
+    r.run("fig21_point_vgg16_b16", || {
+        figures::net_throughput(&vgg16(false), &dev, 16)
+    });
+    r.run("fig21_point_vgg16bn_b8", || {
+        figures::net_throughput(&vgg16(true), &dev, 8)
+    });
+}

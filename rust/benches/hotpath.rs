@@ -1,0 +1,56 @@
+//! Hot-path microbenchmarks for the analytic stack — the targets of the
+//! EXPERIMENTS.md §Perf pass. The summaries/simulations here run inside
+//! every table, figure, and scheduler call, so their constants dominate
+//! the whole report layer.
+
+use ef_train::device::zcu102;
+use ef_train::layout::streams::{costs_for_spec, summarize_spec, StreamSpec};
+use ef_train::layout::{Process, Scheme, Tiling};
+use ef_train::model::perf::conv_latency;
+use ef_train::model::scheduler::schedule;
+use ef_train::nets::{alexnet, vgg16, ConvShape};
+use ef_train::sim::{on_chip_feature_words, simulate_layer, BurstMode};
+use ef_train::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::from_env(1200);
+    let dev = zcu102();
+    let budget = on_chip_feature_words(&dev);
+
+    // The streaming summarizer on the paper's biggest layer sweep.
+    let conv2 = ConvShape::new(256, 96, 27, 27, 5, 1);
+    let tiling = Tiling::new(16, 16, 27, 27, 128);
+    let spec = |process, batch| StreamSpec {
+        scheme: Scheme::Reshaped,
+        process,
+        layer: conv2,
+        tiling,
+        batch,
+        weight_reuse: true,
+    };
+    r.run("summarize_conv2_fp_b4", || summarize_spec(&spec(Process::Fp, 4)));
+    r.run("summarize_conv2_wu_b128", || summarize_spec(&spec(Process::Wu, 128)));
+    r.run("cost_trace_conv2_wu_b128", || costs_for_spec(&spec(Process::Wu, 128)));
+
+    // Discrete-event pipeline at Fig-18 scale (the figure's hot loop).
+    r.run("simulate_conv2_wu_b128", || {
+        simulate_layer(&spec(Process::Wu, 128), &dev, 1, budget)
+    });
+    let bchw = StreamSpec { scheme: Scheme::Bchw, weight_reuse: false, ..spec(Process::Fp, 4) };
+    r.run("simulate_conv2_bchw_fp_b4", || simulate_layer(&bchw, &dev, 1, budget));
+
+    // Closed-form model: thousands of calls per schedule() search.
+    r.run("conv_latency_closed_form", || {
+        conv_latency(&conv2, &tiling, &dev, Process::Wu, 128)
+    });
+
+    // Whole-scheduler runs (the CLI's `schedule` command).
+    r.run("schedule_alexnet_b128", || schedule(&alexnet(), &dev, 128));
+    r.run("schedule_vgg16_b16", || schedule(&vgg16(false), &dev, 16));
+
+    // Raw pipeline recurrence on a synthetic long trace.
+    let costs = costs_for_spec(&spec(Process::Wu, 128));
+    r.run("pipeline_recurrence_350k_iters", || {
+        ef_train::sim::pipeline_cycles(&costs.iters, dev.t_start, dev.p_words(), BurstMode::Layout)
+    });
+}

@@ -1,0 +1,24 @@
+//! One bench per paper table: each regenerates the table end-to-end
+//! (workload -> layout streams -> simulation/model -> formatted rows)
+//! and reports how fast the harness can do it. `cargo bench tables`.
+
+use ef_train::report::tables;
+use ef_train::util::bench::Runner;
+use std::time::Duration;
+
+fn main() {
+    let mut r = Runner::from_env(1500);
+    r.run("table1_parallelism_levels", tables::table1);
+    r.run("table3_bchw_baseline", tables::table3);
+    r.run("table4_bhwc_baseline", tables::table4);
+    r.run("table5_data_reshaping", tables::table5);
+    r.run("table6_model_vs_onboard", tables::table6);
+    r.run("table7_1x_cnn_vs_baseline", tables::table7);
+    r.run("table8_alexnet_vgg16", tables::table8);
+    r.run("table9_sota_comparison", tables::table9);
+    r.run("table10_lenet10_vs_chow", tables::table10);
+    r.run("table11_alexnet_vs_fecaffe", tables::table11);
+
+    let total: Duration = r.results.iter().map(|b| b.mean).sum();
+    println!("\nall tables regenerate in {total:?} (mean of means)");
+}

@@ -1,0 +1,59 @@
+//! End-to-end PJRT benches (the Fig. 20 workload): per-step latency of
+//! the Pallas train step, the XLA-native reference step, and prediction.
+//! Skipped (with a message) when artifacts are missing.
+
+use ef_train::data::Dataset;
+use ef_train::runtime::{Runtime, Tensor};
+use ef_train::train::Trainer;
+use ef_train::util::bench::Runner;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("train_e2e: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::open(dir).expect("runtime");
+    let mut r = Runner::from_env(6000);
+
+    let mut ds = Dataset::new(1, 0.6, 0.0);
+
+    let mut pallas = Trainer::new(&rt, "cnn1x", "train_step", 0.01).expect("pallas step");
+    let batch = pallas.batch;
+    r.run("train_step_pallas_b32", || {
+        let (x, y) = ds.batch(batch);
+        pallas.step(x, y).unwrap()
+    });
+
+    let mut reference =
+        Trainer::new(&rt, "cnn1x", "train_step_ref", 0.01).expect("ref step");
+    r.run("train_step_xla_native_b32", || {
+        let (x, y) = ds.batch(batch);
+        reference.step(x, y).unwrap()
+    });
+
+    let predict = rt.compile_network_fn("cnn1x", "predict").expect("predict");
+    let params = rt.load_params("cnn1x").expect("params");
+    let x_sig = predict.inputs.last().unwrap().clone();
+    r.run("predict_b32", || {
+        let (x, _) = ds.batch(batch);
+        let mut args = params.clone();
+        args.push(Tensor::f32(x, &x_sig.shape));
+        predict.run(&args).unwrap()
+    });
+
+    let conv = rt.compile_op("conv_fp").expect("conv_fp");
+    let xw: usize = conv.inputs[0].shape.iter().product();
+    let ww: usize = conv.inputs[1].shape.iter().product();
+    let x = Tensor::f32(vec![0.5; xw], &conv.inputs[0].shape);
+    let w = Tensor::f32(vec![0.5; ww], &conv.inputs[1].shape);
+    r.run("unified_conv_kernel_op", || conv.run(&[x.clone(), w.clone()]).unwrap());
+
+    if let Some(rec) = r.results.first() {
+        println!(
+            "\npallas step at ~{:.0} ms vs the paper's modeled FPGA batch (see \
+             EXPERIMENTS.md for the cycle comparison)",
+            rec.mean.as_secs_f64() * 1e3
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! Layer-3 coordinator: the on-device **online adaptation loop**.
+//!
+//! The paper's deployment story (§1, §2.3): an edge FPGA runs inference
+//! until the environment or user changes; then the device switches to
+//! the EF-Train bitstream and learns from *locally arriving* data. This
+//! module is that control plane:
+//!
+//! * samples arrive on an async stream (sensor callbacks, user
+//!   interactions) and are assembled into fixed-size mini-batches by the
+//!   [`Batcher`] (with a drop-oldest backpressure policy — training is
+//!   best-effort on stale data);
+//! * the training executor runs the AOT-compiled train step (PJRT) per
+//!   batch and publishes loss/throughput metrics;
+//! * an [`AdaptationMonitor`] watches the loss to decide when the model
+//!   has (re)converged — the signal to switch back to inference mode;
+//! * the analytic stack prices each step in *FPGA cycles* (scheduler +
+//!   performance model), so the coordinator reports what the step would
+//!   cost on the paper's hardware next to the wall-clock it measures.
+
+use std::collections::VecDeque;
+
+use crate::data::Dataset;
+use crate::device::Device;
+use crate::model::scheduler::{network_training_cycles, schedule};
+use crate::nets::Network;
+use crate::train::Trainer;
+
+/// Mini-batch assembly with bounded buffering.
+///
+/// Samples beyond `capacity` evict the oldest pending sample: an
+/// adaptation loop prefers fresh data over completeness (the device
+/// cannot stall its sensors while the accelerator trains).
+pub struct Batcher {
+    batch: usize,
+    capacity: usize,
+    xs: VecDeque<Vec<f32>>,
+    ys: VecDeque<i32>,
+    pub dropped: u64,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, capacity_batches: usize) -> Self {
+        let capacity = batch * capacity_batches.max(1);
+        Self { batch, capacity, xs: VecDeque::new(), ys: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn push(&mut self, x: Vec<f32>, y: i32) {
+        if self.xs.len() == self.capacity {
+            self.xs.pop_front();
+            self.ys.pop_front();
+            self.dropped += 1;
+        }
+        self.xs.push_back(x);
+        self.ys.push_back(y);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Pop a full mini-batch if one is ready.
+    pub fn pop_batch(&mut self) -> Option<(Vec<f32>, Vec<i32>)> {
+        if self.xs.len() < self.batch {
+            return None;
+        }
+        let mut x = Vec::with_capacity(self.batch * self.xs[0].len());
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            x.extend(self.xs.pop_front().unwrap());
+            y.push(self.ys.pop_front().unwrap());
+        }
+        Some((x, y))
+    }
+}
+
+/// Loss-plateau detector: adaptation is "done" when the windowed mean
+/// loss stops improving by more than `rel_improvement`.
+pub struct AdaptationMonitor {
+    window: usize,
+    rel_improvement: f64,
+    losses: Vec<f32>,
+}
+
+impl AdaptationMonitor {
+    pub fn new(window: usize, rel_improvement: f64) -> Self {
+        Self { window, rel_improvement, losses: Vec::new() }
+    }
+
+    pub fn observe(&mut self, loss: f32) {
+        self.losses.push(loss);
+    }
+
+    fn window_mean(&self, end: usize) -> f64 {
+        let lo = end.saturating_sub(self.window);
+        let slice = &self.losses[lo..end];
+        slice.iter().map(|&x| x as f64).sum::<f64>() / slice.len().max(1) as f64
+    }
+
+    /// Converged when the last window improves on the previous one by
+    /// less than `rel_improvement` (and we have two full windows).
+    pub fn converged(&self) -> bool {
+        if self.losses.len() < 2 * self.window {
+            return false;
+        }
+        let cur = self.window_mean(self.losses.len());
+        let prev = self.window_mean(self.losses.len() - self.window);
+        prev - cur < self.rel_improvement * prev.abs().max(1e-9)
+    }
+}
+
+/// Summary of one adaptation session.
+#[derive(Debug, Clone)]
+pub struct AdaptationReport {
+    pub steps: usize,
+    pub samples_seen: u64,
+    pub samples_dropped: u64,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+    pub wall_s: f64,
+    /// What the same work costs on the modeled FPGA (per step / total).
+    pub fpga_cycles_per_step: u64,
+    pub fpga_s_total: f64,
+    pub loss_curve: Vec<f32>,
+}
+
+/// The adaptation session: wires Batcher -> Trainer -> Monitor.
+pub struct Coordinator<'a> {
+    pub trainer: Trainer,
+    pub batcher: Batcher,
+    pub monitor: AdaptationMonitor,
+    net: &'a Network,
+    dev: &'a Device,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(trainer: Trainer, net: &'a Network, dev: &'a Device) -> Self {
+        let batch = trainer.batch;
+        Self {
+            trainer,
+            batcher: Batcher::new(batch, 4),
+            monitor: AdaptationMonitor::new(10, 0.01),
+            net,
+            dev,
+        }
+    }
+
+    /// Modeled FPGA cost of one training step (batch) — scheduler +
+    /// Eq. (15)–(27) + aux layers.
+    pub fn fpga_cycles_per_step(&self) -> u64 {
+        let sched = schedule(self.net, self.dev, self.trainer.batch);
+        network_training_cycles(self.net, &sched, self.dev, self.trainer.batch)
+    }
+
+    /// Drive adaptation on a synthetic sample stream until the monitor
+    /// declares convergence or `max_steps` is hit.
+    pub fn adapt(
+        &mut self,
+        ds: &mut Dataset,
+        max_steps: usize,
+    ) -> crate::Result<AdaptationReport> {
+        let t0 = std::time::Instant::now();
+        let mut samples_seen = 0u64;
+        let mut steps = 0usize;
+        let mut initial_loss = f32::NAN;
+        while steps < max_steps && !self.monitor.converged() {
+            // Samples "arrive" one by one — the stream the device sees.
+            while self.batcher.pending() < self.trainer.batch {
+                let (x, y) = ds.sample();
+                self.batcher.push(x, y);
+                samples_seen += 1;
+            }
+            let (x, y) = self.batcher.pop_batch().expect("full batch");
+            let loss = self.trainer.step(x, y)?;
+            if steps == 0 {
+                initial_loss = loss;
+            }
+            self.monitor.observe(loss);
+            steps += 1;
+        }
+        let cycles = self.fpga_cycles_per_step();
+        let curve: Vec<f32> = self.trainer.history.iter().map(|r| r.loss).collect();
+        Ok(AdaptationReport {
+            steps,
+            samples_seen,
+            samples_dropped: self.batcher.dropped,
+            final_loss: curve.last().copied().unwrap_or(f32::NAN),
+            initial_loss,
+            wall_s: t0.elapsed().as_secs_f64(),
+            fpga_cycles_per_step: cycles,
+            fpga_s_total: self.dev.cycles_to_s(cycles) * steps as f64,
+            loss_curve: curve,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batcher_assembles_in_order() {
+        let mut b = Batcher::new(2, 2);
+        b.push(vec![1.0], 1);
+        assert!(b.pop_batch().is_none());
+        b.push(vec![2.0], 2);
+        let (x, y) = b.pop_batch().unwrap();
+        assert_eq!(x, vec![1.0, 2.0]);
+        assert_eq!(y, vec![1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batcher_drops_oldest_under_pressure() {
+        let mut b = Batcher::new(2, 1); // capacity 2 samples
+        b.push(vec![1.0], 1);
+        b.push(vec![2.0], 2);
+        b.push(vec![3.0], 3); // evicts sample 1
+        assert_eq!(b.dropped, 1);
+        let (x, y) = b.pop_batch().unwrap();
+        assert_eq!(x, vec![2.0, 3.0]);
+        assert_eq!(y, vec![2, 3]);
+    }
+
+    #[test]
+    fn monitor_detects_plateau() {
+        let mut m = AdaptationMonitor::new(5, 0.01);
+        for i in 0..10 {
+            m.observe(2.0 - 0.15 * i as f32); // steadily improving
+        }
+        assert!(!m.converged());
+        for _ in 0..10 {
+            m.observe(0.5); // flat
+        }
+        assert!(m.converged());
+    }
+
+    #[test]
+    fn monitor_needs_two_windows() {
+        let mut m = AdaptationMonitor::new(10, 0.01);
+        for _ in 0..15 {
+            m.observe(1.0);
+        }
+        assert!(!m.converged());
+    }
+}

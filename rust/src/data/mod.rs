@@ -1,0 +1,175 @@
+//! Synthetic CIFAR-like dataset, generated deterministically in rust —
+//! the on-device adaptation workload (no python, no downloads at run
+//! time; see DESIGN.md's substitution table).
+//!
+//! Classes are separable but noisy: each class owns a random template in
+//! a low-dimensional latent space projected through a fixed random map
+//! into the 3x32x32 image space, plus per-sample Gaussian noise. A '1X'
+//! CNN trained with SGD drives the cross-entropy from ~ln(10) toward
+//! zero — the Fig. 20 regime — and a *domain shift* can be applied to
+//! emulate the paper's online-adaptation scenario.
+
+const IMG: usize = 3 * 32 * 32;
+pub const NUM_CLASSES: usize = 10;
+
+/// Deterministic xorshift64* PRNG (stable across platforms).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard normal (Box-Muller).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-7);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// The synthetic task: class templates + noise level.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    templates: Vec<Vec<f32>>, // NUM_CLASSES x IMG
+    noise: f32,
+    rng: Rng,
+}
+
+impl Dataset {
+    /// Same task (templates) as `new(seed, ..)` but an independent sample
+    /// stream — use for held-out evaluation of the *same* domain.
+    pub fn with_stream(seed: u64, stream_seed: u64, noise: f32, shift: f32) -> Self {
+        let mut ds = Self::new(seed, noise, shift);
+        ds.rng = Rng::new(stream_seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        ds
+    }
+
+    /// `shift` rotates class templates (a domain change): `0.0` keeps the
+    /// source domain, `1.0` replaces templates entirely.
+    pub fn new(seed: u64, noise: f32, shift: f32) -> Self {
+        let mut trng = Rng::new(seed);
+        let mut templates: Vec<Vec<f32>> = (0..NUM_CLASSES)
+            .map(|_| (0..IMG).map(|_| trng.normal() * 0.8).collect())
+            .collect();
+        if shift > 0.0 {
+            let mut srng = Rng::new(seed ^ 0xD1F7_3A5C);
+            for t in &mut templates {
+                for v in t.iter_mut() {
+                    *v = (1.0 - shift) * *v + shift * srng.normal() * 0.8;
+                }
+            }
+        }
+        Self { templates, noise, rng: Rng::new(seed.wrapping_add(17)) }
+    }
+
+    /// Sample one `(image, label)`.
+    pub fn sample(&mut self) -> (Vec<f32>, i32) {
+        let label = self.rng.below(NUM_CLASSES);
+        let mut img = self.templates[label].clone();
+        for v in img.iter_mut() {
+            *v += self.rng.normal() * self.noise;
+        }
+        (img, label as i32)
+    }
+
+    /// Sample a batch: `(images [b * 3*32*32], labels [b])`.
+    pub fn batch(&mut self, b: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(b * IMG);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (x, y) = self.sample();
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, la) = Dataset::new(7, 0.5, 0.0).batch(4);
+        let (b, lb) = Dataset::new(7, 0.5, 0.0).batch(4);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let (x, y) = Dataset::new(1, 0.5, 0.0).batch(8);
+        assert_eq!(x.len(), 8 * IMG);
+        assert_eq!(y.len(), 8);
+        assert!(y.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-template classification must beat chance by a lot.
+        let mut ds = Dataset::new(3, 0.5, 0.0);
+        let templates = ds.templates.clone();
+        let mut correct = 0;
+        let n = 200;
+        for _ in 0..n {
+            let (x, y) = ds.sample();
+            let best = templates
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da: f32 = a.iter().zip(&x).map(|(p, q)| (p - q).powi(2)).sum();
+                    let db: f32 = b.iter().zip(&x).map(|(p, q)| (p - q).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            if best == y {
+                correct += 1;
+            }
+        }
+        assert!(correct > n * 8 / 10, "{correct}/{n}");
+    }
+
+    #[test]
+    fn domain_shift_moves_templates() {
+        let a = Dataset::new(5, 0.1, 0.0);
+        let b = Dataset::new(5, 0.1, 0.8);
+        let d: f32 = a.templates[0]
+            .iter()
+            .zip(&b.templates[0])
+            .map(|(p, q)| (p - q).abs())
+            .sum();
+        assert!(d > 10.0, "{d}");
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut rng = Rng::new(42);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.1, "{var}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Device zoo: the edge FPGAs the paper deploys on, plus the calibrated
+//! power model (DESIGN.md §6).
+
+/// An FPGA platform as the analytic models see it.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    /// Total DSP slices.
+    pub dsps: usize,
+    /// Total BRAM36 banks.
+    pub brams: usize,
+    /// One BRAM bank capacity in bits (36 Kbit on Xilinx).
+    pub bram_bits: usize,
+    /// DMA stream width in bits (AXI).
+    pub dma_bits: usize,
+    /// Working clock in MHz.
+    pub freq_mhz: usize,
+    /// DMA restart penalty in cycles (paper §5.1: ~400 @ 100 MHz).
+    pub t_start: u64,
+    /// DSPs per fp32 MAC (paper §5.2: q = 5 on Xilinx).
+    pub q: usize,
+    /// Static power in watts (calibrated, DESIGN.md §6).
+    pub p_static_w: f64,
+    /// Dynamic power per active DSP in watts.
+    pub p_dsp_w: f64,
+    /// Dynamic power per active BRAM bank in watts.
+    pub p_bram_w: f64,
+    /// Paper's published tile choice, if any (`Tm = Tn`); the scheduler
+    /// uses it when present so experiments reproduce the published
+    /// configurations exactly (routing/BRAM constraints the analytic 80%
+    /// rule cannot see drove the authors' picks).
+    pub tile_override: Option<usize>,
+}
+
+impl Device {
+    /// Words moved per cycle per DMA transaction beat: `p` of §5.1
+    /// (stream width / 32-bit fp32 words).
+    pub fn p_words(&self) -> u64 {
+        (self.dma_bits / 32).max(1) as u64
+    }
+
+    /// Cycles -> seconds at this device's clock.
+    pub fn cycles_to_s(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz as f64 * 1e6)
+    }
+
+    /// Calibrated total on-chip power for a utilization point.
+    pub fn power_w(&self, used_dsps: usize, used_brams: usize) -> f64 {
+        self.p_static_w + used_dsps as f64 * self.p_dsp_w + used_brams as f64 * self.p_bram_w
+    }
+}
+
+/// PYNQ-Z1 (Zynq-7020): 220 DSP48, 140 BRAM36, 32-bit DMA stream (§6.3).
+pub fn pynq_z1() -> Device {
+    Device {
+        name: "PYNQ-Z1",
+        dsps: 220,
+        brams: 140,
+        bram_bits: 36 * 1024,
+        dma_bits: 32,
+        freq_mhz: 100,
+        t_start: 400,
+        q: 5,
+        p_static_w: 1.23,
+        p_dsp_w: 0.0025,
+        p_bram_w: 0.0007,
+        tile_override: Some(6), // paper Table 7: D_Conv = 180 = 5*6*6
+    }
+}
+
+/// ZCU102 (Zynq UltraScale+): 2520 DSP, 912 BRAM36, 128-bit DMA (§6).
+pub fn zcu102() -> Device {
+    Device {
+        name: "ZCU102",
+        dsps: 2520,
+        brams: 912,
+        bram_bits: 36 * 1024,
+        dma_bits: 128,
+        freq_mhz: 100,
+        t_start: 400,
+        q: 5,
+        p_static_w: 3.40,
+        p_dsp_w: 0.0025,
+        p_bram_w: 0.0007,
+        tile_override: Some(16), // paper §6.1: [Tm, Tn] = [16, 16]
+    }
+}
+
+pub fn device_by_name(name: &str) -> Option<Device> {
+    match name.to_ascii_lowercase().as_str() {
+        "pynq" | "pynq-z1" | "pynq_z1" => Some(pynq_z1()),
+        "zcu102" => Some(zcu102()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dma_word_widths() {
+        assert_eq!(zcu102().p_words(), 4); // 128-bit -> p = 4 (paper §5.1)
+        assert_eq!(pynq_z1().p_words(), 1);
+    }
+
+    #[test]
+    fn power_model_matches_published_operating_points() {
+        // Table 7: PYNQ 212 DSP / 123 BRAM -> 1.85 W.
+        let p = pynq_z1().power_w(212, 123);
+        assert!((p - 1.85).abs() < 0.15, "pynq power {p}");
+        // Table 7: ZCU102 1315 DSP / 324 BRAM -> 6.89 W.
+        let p = zcu102().power_w(1315, 324);
+        assert!((p - 6.89).abs() < 0.30, "zcu 1x power {p}");
+        // Table 8: VGG-16 1508 DSP / 787 BRAM -> 7.71 W.
+        let p = zcu102().power_w(1508, 787);
+        assert!((p - 7.71).abs() < 0.35, "zcu vgg power {p}");
+        // Table 8: VGG-16+BN 1680 DSP / 812 BRAM -> 8.21 W.
+        let p = zcu102().power_w(1680, 812);
+        assert!((p - 8.21).abs() < 0.40, "zcu vgg-bn power {p}");
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(device_by_name("ZCU102").is_some());
+        assert!(device_by_name("pynq-z1").is_some());
+        assert!(device_by_name("stratix").is_none());
+    }
+}

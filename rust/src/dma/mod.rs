@@ -1,0 +1,168 @@
+//! DMA/AXI-stream cost model (paper §5.1).
+//!
+//! The AXI-stream bus pipelines data as long as DRAM addresses are
+//! *consecutive* ("burst"). Every discontinuity restarts the DMA at a
+//! cost of `t_start` (~400 cycles @ 100 MHz, measured by the authors on
+//! both boards). A burst of `len` fp32 words through a `p`-word-wide
+//! stream takes `ceil(len / p)` beats.
+//!
+//! Two representations cooperate:
+//! * [`merge_bursts`] turns an exact element-address stream (from
+//!   [`crate::layout`]'s generators) into bursts — ground truth, used by
+//!   tests and small-layer simulations;
+//! * [`StreamSummary`] carries the analytic form `(bursts, words)` that
+//!   the performance model and the large-layer simulator use without
+//!   materializing addresses.
+
+/// One contiguous DMA transaction: `len` words starting at `addr`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Burst {
+    pub addr: u64,
+    pub len: u64,
+}
+
+/// Merge an in-order element-address stream into maximal bursts.
+///
+/// Consecutive addresses (`a, a+1, a+2, ...`) extend the current burst;
+/// any other step (including backwards) starts a new one, exactly like
+/// the AXI DMA in the paper's measurement.
+pub fn merge_bursts(addrs: impl IntoIterator<Item = u64>) -> Vec<Burst> {
+    let mut out: Vec<Burst> = Vec::new();
+    for a in addrs {
+        match out.last_mut() {
+            Some(b) if b.addr + b.len == a => b.len += 1,
+            _ => out.push(Burst { addr: a, len: 1 }),
+        }
+    }
+    out
+}
+
+/// Analytic summary of a transfer stream: how many DMA restarts it pays
+/// and how many words it moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StreamSummary {
+    /// Number of bursts (== number of `t_start` penalties).
+    pub bursts: u64,
+    /// Total fp32 words transferred.
+    pub words: u64,
+}
+
+impl StreamSummary {
+    pub fn new(bursts: u64, words: u64) -> Self {
+        Self { bursts, words }
+    }
+
+    /// A stream of `count` equal bursts of `len` words.
+    pub fn uniform(count: u64, len: u64) -> Self {
+        Self { bursts: count, words: count * len }
+    }
+
+    /// Cycles to move this stream: `bursts * t_start + sum ceil(len/p)`.
+    ///
+    /// The per-burst `ceil` is approximated from the mean burst length;
+    /// exact when all bursts share one length (true of every pattern in
+    /// Figs. 6-17, which is why the paper can speak of "the burst
+    /// length" per pattern).
+    pub fn cycles(&self, t_start: u64, p: u64) -> u64 {
+        if self.bursts == 0 {
+            return 0;
+        }
+        let mean_len = self.words.div_ceil(self.bursts);
+        self.bursts * (t_start + mean_len.div_ceil(p))
+    }
+
+    /// Effective bandwidth in words/cycle (the §2.2 "8 GB/s -> 1 GB/s
+    /// degradation" effect made quantitative).
+    pub fn bandwidth(&self, t_start: u64, p: u64) -> f64 {
+        let cyc = self.cycles(t_start, p);
+        if cyc == 0 {
+            return 0.0;
+        }
+        self.words as f64 / cyc as f64
+    }
+
+    pub fn merge(self, other: Self) -> Self {
+        Self {
+            bursts: self.bursts + other.bursts,
+            words: self.words + other.words,
+        }
+    }
+}
+
+/// Summarize an exact burst list (bridge from ground truth to analytics).
+pub fn summarize(bursts: &[Burst]) -> StreamSummary {
+    StreamSummary {
+        bursts: bursts.len() as u64,
+        words: bursts.iter().map(|b| b.len).sum(),
+    }
+}
+
+/// Exact cycle cost of a burst list.
+pub fn exact_cycles(bursts: &[Burst], t_start: u64, p: u64) -> u64 {
+    bursts
+        .iter()
+        .map(|b| t_start + b.len.div_ceil(p))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_contiguous() {
+        let b = merge_bursts([0, 1, 2, 3]);
+        assert_eq!(b, vec![Burst { addr: 0, len: 4 }]);
+    }
+
+    #[test]
+    fn merge_with_gaps_and_jumps_back() {
+        let b = merge_bursts([0, 1, 5, 6, 7, 2]);
+        assert_eq!(
+            b,
+            vec![
+                Burst { addr: 0, len: 2 },
+                Burst { addr: 5, len: 3 },
+                Burst { addr: 2, len: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn summary_cycles_exact_for_uniform() {
+        let s = StreamSummary::uniform(10, 64);
+        // 10 restarts + 10 * 64/4 beats
+        assert_eq!(s.cycles(400, 4), 10 * (400 + 16));
+    }
+
+    #[test]
+    fn exact_matches_summary_on_uniform_bursts() {
+        let bursts: Vec<Burst> = (0..7)
+            .map(|i| Burst { addr: i * 100, len: 33 })
+            .collect();
+        let exact = exact_cycles(&bursts, 400, 4);
+        let summ = summarize(&bursts).cycles(400, 4);
+        assert_eq!(exact, summ);
+    }
+
+    #[test]
+    fn long_bursts_beat_short_bursts() {
+        // Same words, different continuity — the paper's whole point.
+        let contiguous = StreamSummary::uniform(1, 4096);
+        let scattered = StreamSummary::uniform(64, 64);
+        assert!(
+            contiguous.cycles(400, 4) < scattered.cycles(400, 4) / 5,
+            "reshaping must win by a lot"
+        );
+    }
+
+    #[test]
+    fn bandwidth_degradation_factor_matches_paper_cite_26() {
+        // [26]: discontinuity degrades DMA from ~8 GB/s to ~1 GB/s.
+        // With t_start=400, p=4: burst of 16K words vs bursts of 256.
+        let good = StreamSummary::uniform(1, 16384).bandwidth(400, 4);
+        let bad = StreamSummary::uniform(64, 256).bandwidth(400, 4);
+        let ratio = good / bad;
+        assert!(ratio > 5.0 && ratio < 10.0, "degradation ratio {ratio}");
+    }
+}

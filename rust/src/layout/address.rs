@@ -1,0 +1,356 @@
+//! Exact DRAM placements — ground truth for every layout claim.
+//!
+//! [`Features`] and [`Weights`] map tensor coordinates to DRAM word
+//! addresses for each placement scheme (Figs. 6–17), and enumerate the
+//! address set of one *granule* (a tile, a channel superblock, or a
+//! weight-reuse group) in storage order. The loop drivers in
+//! [`super::streams`] chain granules into full per-channel DMA streams.
+//!
+//! Transfer-order convention: a granule's element set is streamed in
+//! *storage order* (ascending address) — on-chip buffers reorder for
+//! free (the paper's on-chip flip/transpose note, §4.1), so DMA
+//! efficiency is decided purely by how fragmented the granule's address
+//! set is and by the inter-granule sequence of the loop schedule.
+
+use super::Scheme;
+
+/// A feature tensor (`batch x ch x h x w`) placed in DRAM by `scheme`.
+///
+/// For [`Scheme::Reshaped`], placement is the nested channel-tiled
+/// layout of Figs. 12/17: `[m_on-group][image][tm-tile][row][col][ch%tm]`
+/// (degenerates to Fig. 12 when `m_on >= ch` and `batch == 1`).
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    pub scheme: Scheme,
+    pub batch: usize,
+    pub ch: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Channel tile of the layout (producer's `Tm`); unused for BCHW/BHWC.
+    pub tm: usize,
+    /// Weight-reuse group (producer's `M_on`); unused for BCHW/BHWC.
+    pub m_on: usize,
+}
+
+impl Features {
+    pub fn words(&self) -> u64 {
+        (self.batch * self.ch * self.h * self.w) as u64
+    }
+
+    /// Effective lane-block size: `tm`, except that a tensor with fewer
+    /// channels than one block is stored *packed* (the paper's conv1
+    /// input with N = 3 streams contiguously — its Eq. 15 latency table
+    /// back-solves to 3-lane transfers, not Tn-padded ones).
+    pub fn lane_block(&self) -> usize {
+        self.tm.min(self.ch.max(1))
+    }
+
+    /// Effective weight-reuse group for placement: clamped to the channel
+    /// count and rounded up to a whole number of lane blocks (a ragged
+    /// group would otherwise overlap the next image's block).
+    pub fn m_on_eff(&self) -> usize {
+        let blk = self.lane_block();
+        let m_on = self.m_on.clamp(blk, self.ch.max(blk));
+        m_on.div_ceil(blk) * blk
+    }
+
+    /// DRAM word address of element `(b, c, r, col)`.
+    pub fn addr(&self, b: usize, c: usize, r: usize, col: usize) -> u64 {
+        debug_assert!(b < self.batch && c < self.ch && r < self.h && col < self.w);
+        let (cc, hh, ww) = (self.ch as u64, self.h as u64, self.w as u64);
+        let (b, c, r, col) = (b as u64, c as u64, r as u64, col as u64);
+        match self.scheme {
+            Scheme::Bchw => ((b * cc + c) * hh + r) * ww + col,
+            Scheme::Bhwc => ((b * hh + r) * ww + col) * cc + c,
+            Scheme::Reshaped => {
+                let blk = self.lane_block() as u64;
+                let m_on = self.m_on_eff() as u64;
+                let group = c / m_on;
+                let in_group = c % m_on;
+                let tile = in_group / blk;
+                let lane = in_group % blk;
+                let plane = hh * ww;
+                group * (self.batch as u64 * plane * m_on)
+                    + b * (plane * m_on)
+                    + tile * (plane * blk)
+                    + (r * ww + col) * blk
+                    + lane
+            }
+        }
+    }
+
+    /// Addresses of one granule `(b, channels [c0, c0+tc), rows
+    /// [r0, r0+trr), cols [col0, col0+tcc))`, clipped to the tensor,
+    /// in storage order.
+    pub fn granule_addrs(
+        &self,
+        b: usize,
+        c0: usize,
+        tc: usize,
+        r0: usize,
+        trr: usize,
+        col0: usize,
+        tcc: usize,
+    ) -> Vec<u64> {
+        let mut v = Vec::with_capacity(tc * trr * tcc);
+        for c in c0..(c0 + tc).min(self.ch) {
+            for r in r0..(r0 + trr).min(self.h) {
+                for col in col0..(col0 + tcc).min(self.w) {
+                    v.push(self.addr(b, c, r, col));
+                }
+            }
+        }
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Weight DRAM placements (Figs. 8, 11, 14/16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightPlacement {
+    /// Standard OIHW `[m][n][kr][kc]` — the BCHW baseline.
+    Oihw,
+    /// Pre-allocated tile-by-tile in *inference* fetch order (Fig. 11):
+    /// fully contiguous for FP, fragmented for BP's transposed tiling.
+    InferenceTiled,
+    /// The paper's layout (Fig. 14): `(to, ti)`-major tile blocks, each
+    /// block holding its `Tm x Tn x K x K` weights contiguously. With
+    /// `Tm = Tn` the same blocks serve FP, BP (on-chip transpose), and WU.
+    ReshapedTiled,
+}
+
+impl WeightPlacement {
+    pub fn for_scheme(scheme: Scheme) -> Self {
+        match scheme {
+            Scheme::Bchw => WeightPlacement::Oihw,
+            Scheme::Bhwc => WeightPlacement::InferenceTiled,
+            Scheme::Reshaped => WeightPlacement::ReshapedTiled,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Weights {
+    pub placement: WeightPlacement,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub tm: usize,
+    pub tn: usize,
+}
+
+impl Weights {
+    pub fn words(&self) -> u64 {
+        (self.m * self.n * self.k * self.k) as u64
+    }
+
+    pub fn mt(&self) -> usize {
+        self.m.div_ceil(self.tm)
+    }
+
+    pub fn nt(&self) -> usize {
+        self.n.div_ceil(self.tn)
+    }
+
+    /// DRAM word address of weight `(m, n, kr, kc)`.
+    ///
+    /// Ragged edge tiles leave holes in the tiled placements (blocks are
+    /// allocated at full `Tm x Tn x K x K` pitch), exactly as an
+    /// address-generator in HLS would.
+    pub fn addr(&self, m: usize, n: usize, kr: usize, kc: usize) -> u64 {
+        debug_assert!(m < self.m && n < self.n && kr < self.k && kc < self.k);
+        let k = self.k as u64;
+        match self.placement {
+            WeightPlacement::Oihw => {
+                (((m * self.n + n) as u64) * k + kr as u64) * k + kc as u64
+            }
+            WeightPlacement::InferenceTiled | WeightPlacement::ReshapedTiled => {
+                let (tm, tn) = (self.tm as u64, self.tn as u64);
+                let tile_words = tm * tn * k * k;
+                let (to, ti) = ((m / self.tm) as u64, (n / self.tn) as u64);
+                let (lm, ln) = ((m % self.tm) as u64, (n % self.tn) as u64);
+                let tile_id = to * self.nt() as u64 + ti;
+                tile_id * tile_words + ((kr as u64 * k + kc as u64) * tn + ln) * tm + lm
+            }
+        }
+    }
+
+    /// Storage-order addresses of weight tile `(to, ti)` (clipped).
+    pub fn granule_addrs(&self, to: usize, ti: usize) -> Vec<u64> {
+        let mut v = Vec::new();
+        for m in to * self.tm..((to + 1) * self.tm).min(self.m) {
+            for n in ti * self.tn..((ti + 1) * self.tn).min(self.n) {
+                for kr in 0..self.k {
+                    for kc in 0..self.k {
+                        v.push(self.addr(m, n, kr, kc));
+                    }
+                }
+            }
+        }
+        v.sort_unstable();
+        v
+    }
+
+    /// Storage-order addresses of a whole `m_on` weight group
+    /// (`[m0, m0+m_on) x all n`): the weight-reuse load of Fig. 16.
+    pub fn group_addrs(&self, m0: usize, m_on: usize) -> Vec<u64> {
+        let mut v = Vec::new();
+        for to in m0 / self.tm..((m0 + m_on).min(self.m)).div_ceil(self.tm) {
+            for ti in 0..self.nt() {
+                v.extend(self.granule_addrs(to, ti));
+            }
+        }
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dma::merge_bursts;
+
+    #[test]
+    fn bchw_addr_is_row_major() {
+        let f = Features { scheme: Scheme::Bchw, batch: 2, ch: 3, h: 4, w: 5, tm: 2, m_on: 2 };
+        assert_eq!(f.addr(0, 0, 0, 0), 0);
+        assert_eq!(f.addr(0, 0, 0, 1), 1);
+        assert_eq!(f.addr(0, 0, 1, 0), 5);
+        assert_eq!(f.addr(0, 1, 0, 0), 20);
+        assert_eq!(f.addr(1, 0, 0, 0), 60);
+    }
+
+    #[test]
+    fn bhwc_addr_is_channel_last() {
+        let f = Features { scheme: Scheme::Bhwc, batch: 1, ch: 3, h: 4, w: 5, tm: 2, m_on: 2 };
+        assert_eq!(f.addr(0, 0, 0, 0), 0);
+        assert_eq!(f.addr(0, 1, 0, 0), 1);
+        assert_eq!(f.addr(0, 0, 0, 1), 3);
+    }
+
+    #[test]
+    fn reshaped_addr_is_bijective() {
+        let f = Features {
+            scheme: Scheme::Reshaped, batch: 2, ch: 8, h: 3, w: 3, tm: 2, m_on: 4,
+        };
+        let mut seen: Vec<u64> = Vec::new();
+        for b in 0..2 {
+            for c in 0..8 {
+                for r in 0..3 {
+                    for col in 0..3 {
+                        seen.push(f.addr(b, c, r, col));
+                    }
+                }
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len() as u64, f.words());
+        assert_eq!(*seen.last().unwrap(), f.words() - 1);
+    }
+
+    #[test]
+    fn reshaped_ifm_tile_is_one_burst() {
+        // §4.2: after reshaping, an input tile's burst length equals the
+        // tile size (Fig. 13).
+        let f = Features {
+            scheme: Scheme::Reshaped, batch: 1, ch: 8, h: 6, w: 6, tm: 2, m_on: 8,
+        };
+        let tile = f.granule_addrs(0, 2, 2, 0, 4, 0, 6);
+        let bursts = merge_bursts(tile);
+        assert_eq!(bursts.len(), 1);
+        assert_eq!(bursts[0].len, 2 * 4 * 6);
+    }
+
+    #[test]
+    fn bchw_ifm_tile_fragments_per_row() {
+        let f = Features { scheme: Scheme::Bchw, batch: 1, ch: 8, h: 6, w: 6, tm: 2, m_on: 8 };
+        let tile = f.granule_addrs(0, 2, 2, 0, 4, 0, 4); // 4 of 6 cols
+        let bursts = merge_bursts(tile);
+        assert_eq!(bursts.len(), 2 * 4); // one burst per (channel, row)
+        assert!(bursts.iter().all(|b| b.len == 4));
+    }
+
+    #[test]
+    fn bhwc_superblock_bursts_are_channel_rows() {
+        // Fig. 10(b): fetching all channels of a (rows x cols) window in
+        // BHWC gives bursts of N x window_cols per row.
+        let f = Features { scheme: Scheme::Bhwc, batch: 1, ch: 8, h: 6, w: 6, tm: 2, m_on: 8 };
+        let sb = f.granule_addrs(0, 0, 8, 1, 3, 0, 6); // full cols
+        let bursts = merge_bursts(sb);
+        assert_eq!(bursts.len(), 1); // full rows x full cols x all ch merge
+        let sb = f.granule_addrs(0, 0, 8, 1, 3, 0, 4); // partial cols
+        let bursts = merge_bursts(sb);
+        assert_eq!(bursts.len(), 3);
+        assert!(bursts.iter().all(|b| b.len == 4 * 8));
+    }
+
+    #[test]
+    fn weights_addr_bijective_all_placements() {
+        for placement in [
+            WeightPlacement::Oihw,
+            WeightPlacement::InferenceTiled,
+            WeightPlacement::ReshapedTiled,
+        ] {
+            let w = Weights { placement, m: 4, n: 4, k: 3, tm: 2, tn: 2 };
+            let mut seen = Vec::new();
+            for m in 0..4 {
+                for n in 0..4 {
+                    for kr in 0..3 {
+                        for kc in 0..3 {
+                            seen.push(w.addr(m, n, kr, kc));
+                        }
+                    }
+                }
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len() as u64, w.words(), "{placement:?}");
+        }
+    }
+
+    #[test]
+    fn reshaped_weight_tile_is_one_burst() {
+        let w = Weights {
+            placement: WeightPlacement::ReshapedTiled, m: 8, n: 8, k: 3, tm: 4, tn: 4,
+        };
+        let bursts = merge_bursts(w.granule_addrs(1, 1));
+        assert_eq!(bursts.len(), 1);
+        assert_eq!(bursts[0].len, 4 * 4 * 9);
+    }
+
+    #[test]
+    fn reshaped_weight_group_is_one_burst_when_aligned() {
+        let w = Weights {
+            placement: WeightPlacement::ReshapedTiled, m: 8, n: 8, k: 3, tm: 4, tn: 4,
+        };
+        let bursts = merge_bursts(w.group_addrs(0, 8));
+        assert_eq!(bursts.len(), 1);
+        assert_eq!(bursts[0].len, 8 * 8 * 9);
+    }
+
+    #[test]
+    fn oihw_tile_fragments_by_input_channels() {
+        let w = Weights { placement: WeightPlacement::Oihw, m: 8, n: 8, k: 3, tm: 4, tn: 4 };
+        let bursts = merge_bursts(w.granule_addrs(0, 0));
+        // one run of Tn*K*K per m in the tile
+        assert_eq!(bursts.len(), 4);
+        assert!(bursts.iter().all(|b| b.len == 4 * 9));
+    }
+
+    #[test]
+    fn ragged_tiles_leave_holes_but_cover_all_weights() {
+        let w = Weights {
+            placement: WeightPlacement::ReshapedTiled, m: 8, n: 3, k: 3, tm: 4, tn: 4,
+        };
+        let mut all = Vec::new();
+        for to in 0..w.mt() {
+            for ti in 0..w.nt() {
+                all.extend(w.granule_addrs(to, ti));
+            }
+        }
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, w.words());
+    }
+}

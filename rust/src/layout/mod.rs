@@ -1,0 +1,176 @@
+//! DRAM data layouts and their access behaviour — the paper's §4.
+//!
+//! Three schemes compete (Figs. 6–17):
+//!
+//! * [`Scheme::Bchw`] — the cuDNN-style batch-channel-height-width layout
+//!   used by the *isolated accelerator* baseline (Table 3);
+//! * [`Scheme::Bhwc`] — the channel-last layout of inference-oriented
+//!   end-to-end designs [26, 30], with on-chip feature reuse and weights
+//!   pre-allocated tile-by-tile in inference fetch order (Table 4);
+//! * [`Scheme::Reshaped`] — the paper's contribution: nested channel-tiled
+//!   feature layout `[M_on-group][image][Tm-tile][row][col][ch%Tm]`, tiled
+//!   weights compatible with both FP and BP thanks to `Tm = Tn`, loop-order
+//!   scheduling (Fig. 15), and mini-batch weight reuse (Fig. 16–17).
+//!
+//! Ground truth lives in [`address`]: exact element-address streams for
+//! every (scheme, process, role), which [`crate::dma::merge_bursts`] turns
+//! into real burst lists. [`analytic`] provides the closed-form
+//! [`crate::dma::StreamSummary`] equivalents used at scale; property tests
+//! (`rust/tests/layout_properties.rs`) pin the two against each other.
+
+pub mod address;
+pub mod realloc;
+pub mod streams;
+
+use crate::nets::ConvShape;
+
+/// DRAM placement scheme for features + weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Bchw,
+    Bhwc,
+    Reshaped,
+}
+
+/// The three training processes the unified kernel serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Process {
+    Fp,
+    Bp,
+    Wu,
+}
+
+impl Process {
+    pub const ALL: [Process; 3] = [Process::Fp, Process::Bp, Process::Wu];
+    pub fn label(&self) -> &'static str {
+        match self {
+            Process::Fp => "FP",
+            Process::Bp => "BP",
+            Process::Wu => "WU",
+        }
+    }
+}
+
+/// DMA stream roles (the four channels of Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// IFM DMA: activations (FP/WU) or incoming loss (BP).
+    Ifm,
+    /// OFM DMA: loss tiles in WU (and ReLU-compare activations in BP).
+    Ofm,
+    /// WEI DMA: weights (FP/BP), pooling indexes, BN parameters.
+    Wei,
+    /// OUT DMA: results — output features (FP/BP) or updated weights (WU).
+    Out,
+}
+
+/// Per-layer tile configuration (paper Table 2's `Tm, Tn, Tr^i, Tc^i,
+/// M^i_on`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    pub tm: usize,
+    pub tn: usize,
+    pub tr: usize,
+    pub tc: usize,
+    /// Output channels of weights held on-chip (weight reuse granule);
+    /// a multiple of `tm`. `m_on = m` means the whole layer's weights fit.
+    pub m_on: usize,
+}
+
+impl Tiling {
+    pub fn new(tm: usize, tn: usize, tr: usize, tc: usize, m_on: usize) -> Self {
+        Self { tm, tn, tr, tc, m_on }
+    }
+
+    /// Tile grid extents for a layer: (m-tiles, n-tiles, row-tiles, col-tiles).
+    pub fn grid(&self, l: &ConvShape) -> (usize, usize, usize, usize) {
+        (
+            l.m.div_ceil(self.tm),
+            l.n.div_ceil(self.tn),
+            l.r.div_ceil(self.tr),
+            l.c.div_ceil(self.tc),
+        )
+    }
+
+    /// Input-feature tile extent (rows) the accelerator streams per tile.
+    pub fn tr_in(&self, l: &ConvShape) -> usize {
+        (self.tr - 1) * l.s + l.k
+    }
+
+    /// Input-feature tile extent (cols).
+    pub fn tc_in(&self, l: &ConvShape) -> usize {
+        (self.tc - 1) * l.s + l.k
+    }
+
+    /// Number of `m_on` weight groups in this layer.
+    pub fn m_groups(&self, l: &ConvShape) -> usize {
+        l.m.div_ceil(self.m_on)
+    }
+}
+
+/// Burst structure of one rectangular tile ("slab") of a row-major
+/// tensor: returns `(bursts_per_tile, words_per_tile)`.
+///
+/// `dims` lists `(tile_extent, full_extent)` from outermost to innermost
+/// axis. A run extends through every trailing axis whose tile covers the
+/// full extent; the first partial axis going outward fragments the slab.
+pub fn slab_summary(dims: &[(usize, usize)]) -> (u64, u64) {
+    let words: u64 = dims.iter().map(|&(t, _)| t as u64).product();
+    if words == 0 {
+        return (0, 0);
+    }
+    // Find longest suffix with tile == full.
+    let mut run: u64 = 1;
+    let mut idx = dims.len();
+    while idx > 0 && dims[idx - 1].0 == dims[idx - 1].1 {
+        run *= dims[idx - 1].0 as u64;
+        idx -= 1;
+    }
+    if idx == 0 {
+        return (1, words); // whole slab contiguous
+    }
+    run *= dims[idx - 1].0 as u64; // partial axis contributes its tile extent
+    (words / run, words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_fully_contiguous() {
+        assert_eq!(slab_summary(&[(4, 4), (5, 5)]), (1, 20));
+    }
+
+    #[test]
+    fn slab_partial_inner_axis() {
+        // tile 3 of 10 in the innermost axis: every row restarts.
+        assert_eq!(slab_summary(&[(2, 8), (3, 10)]), (2, 6));
+    }
+
+    #[test]
+    fn slab_full_inner_partial_outer() {
+        // rows fully covered, channels partial: run = 1 channel-row block.
+        assert_eq!(slab_summary(&[(2, 16), (5, 5), (7, 7)]), (1 * 2 / 2, 70));
+        let (b, w) = slab_summary(&[(2, 16), (5, 5), (7, 7)]);
+        assert_eq!((b, w), (1, 70));
+    }
+
+    #[test]
+    fn slab_matches_bchw_tile_example() {
+        // Paper Fig. 6: OFM tile (Tm, Tr, Tc) in BCHW with Tc < C:
+        // burst length Tc -> bursts = Tm * Tr.
+        let (b, w) = slab_summary(&[(16, 96), (11, 55), (11, 55)]);
+        assert_eq!(w, 16 * 11 * 11);
+        assert_eq!(b, 16 * 11);
+    }
+
+    #[test]
+    fn tiling_grid_and_halos() {
+        let l = ConvShape::new(96, 3, 55, 55, 11, 4);
+        let t = Tiling::new(16, 16, 11, 55, 96);
+        assert_eq!(t.grid(&l), (6, 1, 5, 1));
+        assert_eq!(t.tr_in(&l), 51);
+        assert_eq!(t.tc_in(&l), 227);
+    }
+}

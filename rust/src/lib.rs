@@ -1,0 +1,39 @@
+//! # EF-Train reproduction library
+//!
+//! Rust implementation of *EF-Train: Enable Efficient On-device CNN
+//! Training on FPGA Through Data Reshaping for Online Adaptation or
+//! Personalization* (Tang et al., 2022), as the Layer-3 coordinator of a
+//! rust + JAX + Pallas three-layer stack (see DESIGN.md).
+//!
+//! The crate contains two cooperating halves:
+//!
+//! * the **analytic half** — a faithful software model of the paper's
+//!   accelerator: network/device zoos ([`nets`], [`device`]), DRAM data
+//!   layouts and their DMA burst behaviour ([`layout`], [`dma`]), the
+//!   closed-form performance/resource models and the Algorithm-1
+//!   scheduling tool ([`model`]), a discrete-event double-buffered tile
+//!   simulator ([`sim`]), and throughput/energy metrics ([`metrics`]).
+//!   Every table and figure of the paper's §6 is regenerated from these
+//!   ([`report`]).
+//! * the **executable half** — a PJRT runtime ([`runtime`]) that loads
+//!   the AOT-lowered JAX/Pallas training graphs from `artifacts/` and an
+//!   online-adaptation coordinator ([`coordinator`], [`train`]) that
+//!   actually trains the paper's '1X' CNN on streaming data, with loss
+//!   curves reproducing Fig. 20.
+
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod dma;
+pub mod layout;
+pub mod metrics;
+pub mod model;
+pub mod nets;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,221 @@
+//! EF-Train CLI — the leader entrypoint.
+//!
+//! Analytic experiments (tables/figures, scheduler, simulation) need no
+//! artifacts; `train` / `adapt` / `figure 20` execute the AOT-compiled
+//! JAX/Pallas graphs via PJRT (run `make artifacts` first).
+
+use ef_train::coordinator::Coordinator;
+use ef_train::data::Dataset;
+use ef_train::device::{device_by_name, zcu102};
+use ef_train::model::scheduler::{network_training_cycles, schedule};
+use ef_train::nets::{network_by_name, NETWORK_NAMES};
+use ef_train::report::{ablations, commas, figures, tables};
+use ef_train::runtime::Runtime;
+use ef_train::train::{Evaluator, Trainer};
+use ef_train::util::cli;
+
+const USAGE: &str = "\
+ef-train — EF-Train reproduction (on-device CNN training via data reshaping)
+
+USAGE:
+  ef-train table <1|3|4|5|6|7|8|9|10|11>
+  ef-train figure <18|19|20|21> [--steps N] [--every N]
+  ef-train report
+  ef-train ablate
+  ef-train schedule [--net NET] [--device zcu102|pynq-z1] [--batch N]
+  ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
+  ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
+
+GLOBAL:
+  --artifacts DIR   artifacts directory (default: artifacts)
+
+Networks: cnn1x, lenet10, alexnet, vgg16, vgg16_bn (train/adapt need
+AOT artifacts, available for cnn1x and lenet10 by default).";
+
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
+    "max-steps", "shift",
+];
+
+fn main() {
+    let args = cli::parse(std::env::args().skip(1), VALUE_FLAGS);
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
+    let artifacts = args.flag_or("artifacts", "artifacts");
+    match args.subcommand.as_deref() {
+        Some("table") => {
+            let n: usize = args
+                .positionals
+                .first()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("usage: ef-train table <number>"))?;
+            let t = tables::table_by_number(n)
+                .ok_or_else(|| anyhow::anyhow!("no table {n} (have 1, 3-11)"))?;
+            println!("{t}");
+        }
+        Some("figure") => {
+            let n: usize = args
+                .positionals
+                .first()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("usage: ef-train figure <number>"))?;
+            match n {
+                20 => figure20(
+                    &artifacts,
+                    args.parse_flag("steps", 60usize),
+                    args.parse_flag("every", 5usize),
+                )?,
+                n => {
+                    let t = figures::figure_by_number(n).ok_or_else(|| {
+                        anyhow::anyhow!("no figure {n} (have 18, 19, 20, 21)")
+                    })?;
+                    println!("{t}");
+                }
+            }
+        }
+        Some("ablate") => {
+            for t in ablations::all() {
+                println!("{t}");
+            }
+        }
+        Some("report") => {
+            for n in [1, 3, 4, 5, 6, 7, 8, 9, 10, 11] {
+                println!("{}", tables::table_by_number(n).unwrap());
+            }
+            for n in [18, 19, 21] {
+                println!("{}", figures::figure_by_number(n).unwrap());
+            }
+        }
+        Some("schedule") => {
+            let net = args.flag_or("net", "alexnet");
+            let device = args.flag_or("device", "zcu102");
+            let batch = args.parse_flag("batch", 4usize);
+            let network = network_by_name(&net).ok_or_else(|| {
+                anyhow::anyhow!("unknown network `{net}` (have {NETWORK_NAMES:?})")
+            })?;
+            let dev = device_by_name(&device)
+                .ok_or_else(|| anyhow::anyhow!("unknown device `{device}`"))?;
+            let s = schedule(&network, &dev, batch);
+            println!(
+                "schedule for {net} on {} (batch {batch}): Tm=Tn={}",
+                dev.name, s.tm
+            );
+            println!(
+                "  D_Conv={} B_Conv={} (B_IFM={} B_OFM={} B_WEI={})",
+                s.d_conv, s.b_conv, s.b_ifm, s.b_ofm, s.b_wei
+            );
+            for (i, t) in s.tilings.iter().enumerate() {
+                println!(
+                    "  conv{}: Tr={} Tc={} M_on={}",
+                    i + 1,
+                    t.tr,
+                    t.tc,
+                    t.m_on
+                );
+            }
+            let cycles = network_training_cycles(&network, &s, &dev, batch);
+            let secs = dev.cycles_to_s(cycles);
+            println!(
+                "modeled training latency: {} cycles = {:.2} ms/batch ({:.2} GFLOPS)",
+                commas(cycles),
+                secs * 1e3,
+                network.training_flops(batch) as f64 / secs / 1e9
+            );
+        }
+        Some("train") => {
+            let net = args.flag_or("net", "cnn1x");
+            let steps = args.parse_flag("steps", 100usize);
+            let lr = args.parse_flag("lr", 0.05f32);
+            let seed = args.parse_flag("seed", 0u64);
+            let rt = Runtime::open(&artifacts)?;
+            let variant = if args.has("reference") { "train_step_ref" } else { "train_step" };
+            eprintln!("[train] compiling {net}.{variant} on {}", rt.platform());
+            let mut trainer = Trainer::new(&rt, &net, variant, lr)?;
+            let mut ds = Dataset::new(seed, 0.6, 0.0);
+            let mut done = 0usize;
+            while done < steps {
+                let chunk = 10.min(steps - done);
+                let recs = trainer.train(&mut ds, chunk)?;
+                done += chunk;
+                if let Some(last) = recs.last() {
+                    eprintln!(
+                        "step {:>4}  loss {:.4}  ({:.0} ms/step)",
+                        last.step, last.loss, last.wall_ms
+                    );
+                }
+            }
+            let ev = Evaluator::new(&rt, &net)?;
+            let result = ev.evaluate(&trainer.params, &mut ds, 4)?;
+            println!(
+                "final: loss {:.4}, eval accuracy {:.1}% over {} samples",
+                trainer.history.last().map(|r| r.loss).unwrap_or(f32::NAN),
+                100.0 * result.accuracy,
+                result.samples
+            );
+        }
+        Some("adapt") => {
+            let net = args.flag_or("net", "cnn1x");
+            let max_steps = args.parse_flag("max-steps", 300usize);
+            let lr = args.parse_flag("lr", 0.05f32);
+            let shift = args.parse_flag("shift", 0.7f32);
+            let rt = Runtime::open(&artifacts)?;
+            let network = network_by_name(&net)
+                .ok_or_else(|| anyhow::anyhow!("unknown network `{net}`"))?;
+            let dev = zcu102();
+            let trainer = Trainer::new(&rt, &net, "train_step", lr)?;
+            let mut coord = Coordinator::new(trainer, &network, &dev);
+            // The device was trained for the source domain; a new user /
+            // environment shifts the data distribution.
+            let mut shifted = Dataset::new(1, 0.6, shift);
+            let report = coord.adapt(&mut shifted, max_steps)?;
+            println!(
+                "adaptation: {} steps, loss {:.3} -> {:.3} ({} samples, {} dropped)",
+                report.steps,
+                report.initial_loss,
+                report.final_loss,
+                report.samples_seen,
+                report.samples_dropped
+            );
+            println!(
+                "wall {:.1}s; modeled FPGA cost: {} cycles/step, {:.2}s total on ZCU102",
+                report.wall_s,
+                commas(report.fpga_cycles_per_step),
+                report.fpga_s_total
+            );
+        }
+        _ => println!("{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Fig. 20: run both train-step variants from identical init and print
+/// the loss curves side by side.
+fn figure20(artifacts: &str, steps: usize, every: usize) -> ef_train::Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let net = "cnn1x";
+    eprintln!("[fig20] compiling pallas + reference train steps ...");
+    let mut pallas = Trainer::new(&rt, net, "train_step", 0.05)?;
+    let mut reference = Trainer::new(&rt, net, "train_step_ref", 0.05)?;
+    // Identical data stream for both (same seed).
+    let mut ds_a = Dataset::new(42, 0.6, 0.0);
+    let mut ds_b = Dataset::new(42, 0.6, 0.0);
+    pallas.train(&mut ds_a, steps)?;
+    reference.train(&mut ds_b, steps)?;
+    let a: Vec<f32> = pallas.history.iter().map(|r| r.loss).collect();
+    let b: Vec<f32> = reference.history.iter().map(|r| r.loss).collect();
+    let t =
+        figures::format_loss_curves("Pallas (FPGA role)", &a, "XLA-native (GPU role)", &b, every);
+    println!("{t}");
+    let max_diff = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |loss diff| over {} steps: {max_diff:.5}", a.len());
+    Ok(())
+}

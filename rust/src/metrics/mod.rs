@@ -1,0 +1,101 @@
+//! Throughput / power / energy metrics (§6's reporting conventions).
+
+use crate::device::Device;
+
+/// A throughput/efficiency operating point, the unit of Tables 7–11.
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPoint {
+    pub flops: u64,
+    pub cycles: u64,
+    pub freq_mhz: usize,
+    pub power_w: f64,
+    pub precision_bits: usize,
+}
+
+impl OperatingPoint {
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / (self.freq_mhz as f64 * 1e6)
+    }
+
+    /// GFLOPS (or GOPS for fixed-point designs).
+    pub fn throughput_gflops(&self) -> f64 {
+        self.flops as f64 / self.seconds() / 1e9
+    }
+
+    /// GFLOPS/W.
+    pub fn efficiency(&self) -> f64 {
+        self.throughput_gflops() / self.power_w
+    }
+
+    /// The paper's cross-precision normalization: GOPS x precision.
+    pub fn nominal_throughput(&self) -> f64 {
+        self.throughput_gflops() * self.precision_bits as f64
+    }
+
+    /// GOPS x precision / W.
+    pub fn nominal_efficiency(&self) -> f64 {
+        self.nominal_throughput() / self.power_w
+    }
+
+    /// Latency per image in milliseconds for a batch of `b`.
+    pub fn latency_per_image_ms(&self, b: usize) -> f64 {
+        self.seconds() * 1e3 / b as f64
+    }
+}
+
+/// Build an operating point from modeled cycles + utilization.
+pub fn operating_point(
+    dev: &Device,
+    flops: u64,
+    cycles: u64,
+    used_dsps: usize,
+    used_brams: usize,
+) -> OperatingPoint {
+    OperatingPoint {
+        flops,
+        cycles,
+        freq_mhz: dev.freq_mhz,
+        power_w: dev.power_w(used_dsps, used_brams),
+        precision_bits: 32,
+    }
+}
+
+/// Theoretical peak of a `Tm x Tn` fp32 MAC array at `freq` (the §6.3
+/// "60.3 GFLOPS with 1508 DSPs" style roofline).
+pub fn peak_gflops(dev: &Device, tm: usize, tn: usize) -> f64 {
+    2.0 * (tm * tn) as f64 * dev.freq_mhz as f64 * 1e6 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::zcu102;
+
+    #[test]
+    fn peak_matches_paper_formula() {
+        // §6.3: 1508 DSPs -> 1508/5 MACs -> x2 x 0.1 GHz = 60.3 GFLOPS.
+        let dev = zcu102();
+        let macs = 1508 / dev.q;
+        let peak = 2.0 * macs as f64 * 0.1;
+        assert!((peak - 60.3).abs() < 0.2);
+        // our Tm x Tn formulation: 16x16 = 51.2 GFLOPS
+        assert!((peak_gflops(&dev, 16, 16) - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn operating_point_arithmetic() {
+        let dev = zcu102();
+        let op = operating_point(&dev, 2_000_000_000, 100_000_000, 1315, 324);
+        assert!((op.seconds() - 1.0).abs() < 1e-12);
+        assert!((op.throughput_gflops() - 2.0).abs() < 1e-12);
+        assert!((op.nominal_throughput() - 64.0).abs() < 1e-9);
+        assert!(op.efficiency() > 0.25 && op.efficiency() < 0.31);
+    }
+
+    #[test]
+    fn latency_per_image_scales() {
+        let dev = zcu102();
+        let op = operating_point(&dev, 1, 1_000_000, 100, 100);
+        assert!((op.latency_per_image_ms(10) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytic models of §5: closed-form latency (Eq. 15–27), on-chip
+//! resources (Eq. 28–32), the Algorithm-1 scheduling tool, and the §2.3
+//! parallelism-level comparison.
+
+pub mod parallelism;
+pub mod perf;
+pub mod resource;
+pub mod scheduler;
+
+pub use perf::{conv_latency, LatencyBreakdown};
+pub use resource::{ConvResources, ResourceModel};
+pub use scheduler::{schedule, Schedule};

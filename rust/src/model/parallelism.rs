@@ -1,0 +1,120 @@
+//! The §2.3 parallelism-level comparison (Table 1 + the DarkFPGA
+//! discussion): cycles to finish a conv layer under batch-level,
+//! feature-map-level, and channel-level parallelism with an equal
+//! compute-unit budget.
+
+use crate::nets::ConvShape;
+
+/// A parallelism strategy with its unroll configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// `Tb` images processed in parallel (DarkFPGA [23]).
+    Batch { tb: usize },
+    /// `Tf x Tf` output pixels in parallel ([22]).
+    FeatureMap { tf: usize },
+    /// `Tm x Tn` channels in parallel (this paper, [16, 24]).
+    Channel { tm: usize, tn: usize },
+}
+
+impl Parallelism {
+    /// Compute units this strategy unrolls (MACs per cycle).
+    pub fn units(&self) -> usize {
+        match *self {
+            Parallelism::Batch { tb } => tb,
+            Parallelism::FeatureMap { tf } => tf * tf,
+            Parallelism::Channel { tm, tn } => tm * tn,
+        }
+    }
+
+    /// Cycles to complete one conv layer at batch `b` (§2.3 formulas).
+    pub fn layer_cycles(&self, l: &ConvShape, b: usize) -> u64 {
+        let (m, n, r, c, k) = (l.m as u64, l.n as u64, l.r as u64, l.c as u64, l.k as u64);
+        let b = b as u64;
+        match *self {
+            Parallelism::Batch { tb } => {
+                b.div_ceil(tb as u64) * m * n * r * c * k * k
+            }
+            Parallelism::FeatureMap { tf } => {
+                b * m * n * r.div_ceil(tf as u64) * c.div_ceil(tf as u64) * k * k
+            }
+            Parallelism::Channel { tm, tn } => {
+                b * m.div_ceil(tm as u64) * n.div_ceil(tn as u64) * r * c * k * k
+            }
+        }
+    }
+
+    /// Fraction of compute units doing useful work on this layer.
+    pub fn utilization(&self, l: &ConvShape, b: usize) -> f64 {
+        let total = l.macs() * b as u64;
+        let cycles = self.layer_cycles(l, b);
+        total as f64 / (cycles as f64 * self.units() as f64)
+    }
+}
+
+/// Equal-budget trio for a PE budget of `units` MACs/cycle.
+pub fn equal_budget(units: usize) -> [Parallelism; 3] {
+    let tf = (units as f64).sqrt() as usize;
+    let tm = tf;
+    [
+        Parallelism::Batch { tb: units },
+        Parallelism::FeatureMap { tf },
+        Parallelism::Channel { tm, tn: units / tm },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONV: ConvShape = ConvShape::new(64, 64, 8, 8, 3, 1);
+    const FIRST: ConvShape = ConvShape::new(16, 3, 32, 32, 3, 1);
+
+    #[test]
+    fn units_are_equal_in_budget_trio() {
+        for p in equal_budget(256) {
+            assert_eq!(p.units(), 256, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn batch_parallelism_idles_at_small_batch() {
+        // The paper's core argument against DarkFPGA for online learning.
+        let bp = Parallelism::Batch { tb: 128 };
+        let cp = Parallelism::Channel { tm: 16, tn: 8 };
+        assert!(bp.utilization(&CONV, 1) < 0.02);
+        assert!(cp.utilization(&CONV, 1) > 0.9);
+    }
+
+    #[test]
+    fn batch_parallelism_wins_nothing_at_large_batch_vs_channel() {
+        let bp = Parallelism::Batch { tb: 128 };
+        let cp = Parallelism::Channel { tm: 16, tn: 8 };
+        let rb = bp.utilization(&CONV, 128);
+        let rc = cp.utilization(&CONV, 128);
+        assert!((rb - rc).abs() < 0.1, "{rb} vs {rc}");
+    }
+
+    #[test]
+    fn feature_map_parallelism_idles_on_small_maps() {
+        let fp = Parallelism::FeatureMap { tf: 16 };
+        let small = ConvShape::new(512, 512, 7, 7, 3, 1);
+        assert!(fp.utilization(&small, 4) < 0.25);
+        let big = ConvShape::new(64, 64, 64, 64, 3, 1);
+        assert!(fp.utilization(&big, 4) > 0.9);
+    }
+
+    #[test]
+    fn channel_parallelism_only_suffers_on_first_layer() {
+        let cp = Parallelism::Channel { tm: 16, tn: 16 };
+        assert!(cp.utilization(&FIRST, 4) < 0.25); // N = 3 << Tn
+        assert!(cp.utilization(&CONV, 4) > 0.9);
+    }
+
+    #[test]
+    fn cycles_match_tmops_when_saturated() {
+        let cp = Parallelism::Channel { tm: 16, tn: 16 };
+        let cycles = cp.layer_cycles(&CONV, 4);
+        let tmops = CONV.macs() * 4;
+        assert_eq!(cycles, tmops / 256);
+    }
+}

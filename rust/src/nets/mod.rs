@@ -1,0 +1,209 @@
+//! Network zoo: layer-shape configurations for every CNN the paper
+//! evaluates (§6) plus FLOP accounting.
+//!
+//! Shapes follow the paper's convention `[M, N, R, C, K, S]`: `M` output
+//! channels, `N` input channels, `R x C` **output** feature map, `K x K`
+//! kernel, stride `S`. Input feature-map sizes derive as
+//! `R_in = S*(R-1) + K` (the padded extent the accelerator actually
+//! streams — the paper's `R^j_in`).
+
+mod zoo;
+
+pub use zoo::{alexnet, cnn1x, lenet10, network_by_name, vgg16, NETWORK_NAMES};
+
+/// A convolution layer's shape, the unit every analytic model consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Output channels `M`.
+    pub m: usize,
+    /// Input channels `N`.
+    pub n: usize,
+    /// Output rows `R`.
+    pub r: usize,
+    /// Output columns `C`.
+    pub c: usize,
+    /// Kernel size `K`.
+    pub k: usize,
+    /// Stride `S`.
+    pub s: usize,
+}
+
+impl ConvShape {
+    pub const fn new(m: usize, n: usize, r: usize, c: usize, k: usize, s: usize) -> Self {
+        Self { m, n, r, c, k, s }
+    }
+
+    /// Input rows as streamed by the accelerator: `S*(R-1) + K`.
+    pub fn r_in(&self) -> usize {
+        self.s * (self.r - 1) + self.k
+    }
+
+    /// Input columns as streamed by the accelerator.
+    pub fn c_in(&self) -> usize {
+        self.s * (self.c - 1) + self.k
+    }
+
+    /// Multiply operations for one image, one process (paper §2.3 `Tmops/B`).
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n * self.r * self.c * self.k * self.k) as u64
+    }
+
+    /// Words in this layer's weight tensor.
+    pub fn weight_words(&self) -> u64 {
+        (self.m * self.n * self.k * self.k) as u64
+    }
+
+    /// Words in one image's output feature map.
+    pub fn ofm_words(&self) -> u64 {
+        (self.m * self.r * self.c) as u64
+    }
+
+    /// Words in one image's (padded) input feature map.
+    pub fn ifm_words(&self) -> u64 {
+        (self.n * self.r_in() * self.c_in()) as u64
+    }
+}
+
+/// Non-conv layers, needed for end-to-end latency and the BN experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution (optionally fused with ReLU on the OUT path — paper §3.1).
+    Conv(ConvShape),
+    /// Fully connected `(out_features, in_features)`; treated as a 1x1
+    /// conv over a 1x1 map by the channel-parallel accelerator.
+    Fc { o: usize, f: usize },
+    /// 2x2/2 max pooling over `channels x (2r x 2c) -> (r x c)`.
+    Pool { ch: usize, r: usize, c: usize },
+    /// Batch normalization over `ch` channels of an `r x c` map.
+    Bn { ch: usize, r: usize, c: usize },
+}
+
+impl LayerKind {
+    /// FLOPs for one image in the forward pass (MAC = 2 FLOPs; pooling
+    /// comparisons and BN transforms counted at 1 FLOP/elem like the paper's
+    /// "including pooling and ReLU operations" accounting).
+    pub fn fwd_flops(&self) -> u64 {
+        match self {
+            LayerKind::Conv(cs) => 2 * cs.macs(),
+            LayerKind::Fc { o, f } => 2 * (o * f) as u64,
+            LayerKind::Pool { ch, r, c } => (ch * r * c * 4) as u64,
+            LayerKind::Bn { ch, r, c } => (ch * r * c * 2) as u64,
+        }
+    }
+}
+
+/// A whole network: an ordered stack of layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<LayerKind>,
+}
+
+impl Network {
+    /// The conv layers only — what the conv-kernel experiments sweep.
+    pub fn conv_layers(&self) -> Vec<ConvShape> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                LayerKind::Conv(c) => Some(*c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total training operations for a batch, the paper's §6.4 formula:
+    /// `2 x (3 x sum_i MACs_i - MACs_1)` — every layer does FP+BP+WU
+    /// except the first conv which skips BP (Table 3's "N/A").
+    pub fn training_flops(&self, batch: usize) -> u64 {
+        let convs = self.conv_layers();
+        let sum: u64 = convs.iter().map(|c| c.macs()).sum();
+        let first = convs.first().map(|c| c.macs()).unwrap_or(0);
+        let conv_ops = 2 * (3 * sum - first);
+        let aux: u64 = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerKind::Conv(_) => 0,
+                // FC trains with FP+BP+WU; pool/BN roughly 2x fwd cost.
+                LayerKind::Fc { .. } => 3 * l.fwd_flops(),
+                _ => 2 * l.fwd_flops(),
+            })
+            .sum();
+        (conv_ops + aux) * batch as u64
+    }
+
+    /// The paper's §6.4 operation count restricted to the conv stack plus
+    /// pooling/BN streaming ops (its throughput tables exclude the FC
+    /// weight streaming, which would swamp AlexNet/VGG at small batch).
+    pub fn conv_training_flops(&self, batch: usize) -> u64 {
+        let convs = self.conv_layers();
+        let sum: u64 = convs.iter().map(|c| c.macs()).sum();
+        let first = convs.first().map(|c| c.macs()).unwrap_or(0);
+        let aux: u64 = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerKind::Pool { .. } | LayerKind::Bn { .. } => 2 * l.fwd_flops(),
+                _ => 0,
+            })
+            .sum();
+        (2 * (3 * sum - first) + aux) * batch as u64
+    }
+
+    /// Inference (FP-only) FLOPs for a batch.
+    pub fn inference_flops(&self, batch: usize) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops()).sum::<u64>() * batch as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_geometry() {
+        // AlexNet conv1: 227 -> 55 with K=11, S=4.
+        let c = ConvShape::new(96, 3, 55, 55, 11, 4);
+        assert_eq!(c.r_in(), 227);
+        assert_eq!(c.c_in(), 227);
+        // '1X' conv2 (padded input 34 -> 32 out with K=3 S=1).
+        let c = ConvShape::new(16, 16, 32, 32, 3, 1);
+        assert_eq!(c.r_in(), 34);
+    }
+
+    #[test]
+    fn macs_match_paper_formula() {
+        let c = ConvShape::new(16, 3, 32, 32, 3, 1);
+        assert_eq!(c.macs(), 16 * 3 * 32 * 32 * 9);
+    }
+
+    #[test]
+    fn lenet10_training_flops_match_paper() {
+        // §6.4: "the actual number of operations that we obtain is only
+        // 25.17 MFLOPs" for LeNet-10's conv stack (B=1, convs only).
+        let net = lenet10();
+        let convs = net.conv_layers();
+        let sum: u64 = convs.iter().map(|c| c.macs()).sum();
+        let first = convs[0].macs();
+        let flops = 2 * (3 * sum - first);
+        assert!(
+            (24_000_000..27_000_000).contains(&flops),
+            "got {flops} (want ~25.17 MFLOPs)"
+        );
+    }
+
+    #[test]
+    fn network_zoo_is_complete() {
+        for name in NETWORK_NAMES {
+            let net = network_by_name(name).unwrap();
+            assert!(!net.conv_layers().is_empty(), "{name}");
+        }
+        assert!(network_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn training_flops_scale_with_batch() {
+        let net = cnn1x();
+        assert_eq!(net.training_flops(4), 4 * net.training_flops(1));
+    }
+}

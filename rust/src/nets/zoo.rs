@@ -1,0 +1,163 @@
+//! Concrete network definitions — the exact structures named in §6.
+
+use super::{ConvShape, LayerKind, Network};
+
+pub const NETWORK_NAMES: &[&str] = &["cnn1x", "lenet10", "alexnet", "vgg16", "vgg16_bn"];
+
+pub fn network_by_name(name: &str) -> Option<Network> {
+    match name {
+        "cnn1x" => Some(cnn1x()),
+        "lenet10" => Some(lenet10()),
+        "alexnet" => Some(alexnet()),
+        "vgg16" => Some(vgg16(false)),
+        "vgg16_bn" => Some(vgg16(true)),
+        _ => None,
+    }
+}
+
+/// The '1X' CNN of [22] (§6.3): CIFAR-10, six 3x3 convs + 3 pools + FC.
+///
+/// Structure verbatim from the paper: Conv1 [16,3,32,32,3,1] - Conv2
+/// [16,16,32,32,3,1] - Pool - Conv3 [32,16,16,16,3,1] - Conv4
+/// [32,32,16,16,3,1] - Pool - Conv5 [64,32,8,8,3,1] - Conv6
+/// [64,64,8,8,3,1] - Pool - FC [10,1024].
+pub fn cnn1x() -> Network {
+    Network {
+        name: "cnn1x",
+        layers: vec![
+            LayerKind::Conv(ConvShape::new(16, 3, 32, 32, 3, 1)),
+            LayerKind::Conv(ConvShape::new(16, 16, 32, 32, 3, 1)),
+            LayerKind::Pool { ch: 16, r: 16, c: 16 },
+            LayerKind::Conv(ConvShape::new(32, 16, 16, 16, 3, 1)),
+            LayerKind::Conv(ConvShape::new(32, 32, 16, 16, 3, 1)),
+            LayerKind::Pool { ch: 32, r: 8, c: 8 },
+            LayerKind::Conv(ConvShape::new(64, 32, 8, 8, 3, 1)),
+            LayerKind::Conv(ConvShape::new(64, 64, 8, 8, 3, 1)),
+            LayerKind::Pool { ch: 64, r: 4, c: 4 },
+            LayerKind::Fc { o: 10, f: 1024 },
+        ],
+    }
+}
+
+/// LeNet-10 of Chow et al. [36] (§6.4 / Table 10).
+///
+/// Conv1 [32,3,32,32,3,1] - Pool - Conv2 [32,32,16,16,3,1] - Pool -
+/// Conv3 [64,32,8,8,3,1] - Pool - FC [64,1024] - FC [10,64].
+pub fn lenet10() -> Network {
+    Network {
+        name: "lenet10",
+        layers: vec![
+            LayerKind::Conv(ConvShape::new(32, 3, 32, 32, 3, 1)),
+            LayerKind::Pool { ch: 32, r: 16, c: 16 },
+            LayerKind::Conv(ConvShape::new(32, 32, 16, 16, 3, 1)),
+            LayerKind::Pool { ch: 32, r: 8, c: 8 },
+            LayerKind::Conv(ConvShape::new(64, 32, 8, 8, 3, 1)),
+            LayerKind::Pool { ch: 64, r: 4, c: 4 },
+            LayerKind::Fc { o: 64, f: 1024 },
+            LayerKind::Fc { o: 10, f: 64 },
+        ],
+    }
+}
+
+/// AlexNet for ImageNet (227x227 input) — Tables 3-6, Fig. 21(a), Table 11.
+///
+/// The five conv layers (the BP of Conv1 is skipped — paper Table 3 "N/A"):
+/// [96,3,55,55,11,4], [256,96,27,27,5,1], [384,256,13,13,3,1],
+/// [384,384,13,13,3,1], [256,384,13,13,3,1]; pools use the published
+/// output sizes; three FC layers.
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet",
+        layers: vec![
+            LayerKind::Conv(ConvShape::new(96, 3, 55, 55, 11, 4)),
+            LayerKind::Pool { ch: 96, r: 27, c: 27 },
+            LayerKind::Conv(ConvShape::new(256, 96, 27, 27, 5, 1)),
+            LayerKind::Pool { ch: 256, r: 13, c: 13 },
+            LayerKind::Conv(ConvShape::new(384, 256, 13, 13, 3, 1)),
+            LayerKind::Conv(ConvShape::new(384, 384, 13, 13, 3, 1)),
+            LayerKind::Conv(ConvShape::new(256, 384, 13, 13, 3, 1)),
+            LayerKind::Pool { ch: 256, r: 6, c: 6 },
+            LayerKind::Fc { o: 4096, f: 256 * 6 * 6 },
+            LayerKind::Fc { o: 4096, f: 4096 },
+            LayerKind::Fc { o: 1000, f: 4096 },
+        ],
+    }
+}
+
+/// VGG-16 for ImageNet (224x224), optionally with BN after each conv —
+/// Table 8, Fig. 21(b)/(c). Thirteen 3x3 convs in five blocks.
+pub fn vgg16(with_bn: bool) -> Network {
+    let blocks: &[(usize, usize, usize)] = &[
+        // (convs in block, channels, output map size)
+        (2, 64, 224),
+        (2, 128, 112),
+        (3, 256, 56),
+        (3, 512, 28),
+        (3, 512, 14),
+    ];
+    let mut layers = Vec::new();
+    let mut in_ch = 3usize;
+    for &(convs, ch, map) in blocks {
+        for _ in 0..convs {
+            layers.push(LayerKind::Conv(ConvShape::new(ch, in_ch, map, map, 3, 1)));
+            if with_bn {
+                layers.push(LayerKind::Bn { ch, r: map, c: map });
+            }
+            in_ch = ch;
+        }
+        layers.push(LayerKind::Pool { ch, r: map / 2, c: map / 2 });
+    }
+    layers.push(LayerKind::Fc { o: 4096, f: 512 * 7 * 7 });
+    layers.push(LayerKind::Fc { o: 4096, f: 4096 });
+    layers.push(LayerKind::Fc { o: 1000, f: 4096 });
+    Network {
+        name: if with_bn { "vgg16_bn" } else { "vgg16" },
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn1x_structure_matches_paper() {
+        let net = cnn1x();
+        let convs = net.conv_layers();
+        assert_eq!(convs.len(), 6);
+        assert_eq!(convs[0], ConvShape::new(16, 3, 32, 32, 3, 1));
+        assert_eq!(convs[5], ConvShape::new(64, 64, 8, 8, 3, 1));
+    }
+
+    #[test]
+    fn alexnet_conv_geometry() {
+        let net = alexnet();
+        let convs = net.conv_layers();
+        assert_eq!(convs.len(), 5);
+        assert_eq!(convs[0].r_in(), 227);
+        assert_eq!(convs[1].k, 5);
+    }
+
+    #[test]
+    fn vgg16_has_thirteen_convs() {
+        assert_eq!(vgg16(false).conv_layers().len(), 13);
+        assert_eq!(vgg16(true).conv_layers().len(), 13);
+        // BN variant adds one BN per conv.
+        let bn_count = vgg16(true)
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerKind::Bn { .. }))
+            .count();
+        assert_eq!(bn_count, 13);
+    }
+
+    #[test]
+    fn vgg16_channel_chaining() {
+        let convs = vgg16(false).conv_layers();
+        for pair in convs.windows(2) {
+            // input channels of layer i+1 == output channels of i, except
+            // across pools where channel count is preserved anyway.
+            assert!(pair[1].n == pair[0].m);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Figure generators (paper Figs. 18–21), rendered as data tables plus
+//! ASCII sparklines — the *series* the paper plots.
+
+use crate::device::{zcu102, Device};
+use crate::layout::streams::StreamSpec;
+use crate::layout::{Process, Scheme};
+use crate::model::perf::conv_latency;
+use crate::model::scheduler::{network_conv_training_cycles, schedule};
+use crate::nets::{alexnet, cnn1x, vgg16, Network};
+use crate::report::{commas, Table};
+use crate::sim::{on_chip_feature_words, simulate_layer};
+
+/// Fig. 18: AlexNet conv-stack training latency vs batch size, without
+/// and with weight reuse (reshaped layout).
+pub fn figure18() -> Table {
+    let dev = zcu102();
+    let net = alexnet();
+    let layers = net.conv_layers();
+    let budget = on_chip_feature_words(&dev);
+    let mut t = Table::new(
+        "Fig 18: latency (cycles) vs batch size, data reshaping ± weight reuse (AlexNet)",
+        &["Batch", "Without Weight Reuse", "After Weight Reuse", "Saving"],
+    );
+    for b in [2usize, 4, 8, 16, 32, 64, 128] {
+        let sched = schedule(&net, &dev, b);
+        let total = |reuse: bool| -> u64 {
+            let mut sum = 0u64;
+            for (i, (l, tl)) in layers.iter().zip(&sched.tilings).enumerate() {
+                for p in Process::ALL {
+                    if i == 0 && p == Process::Bp {
+                        continue;
+                    }
+                    let spec = StreamSpec {
+                        scheme: Scheme::Reshaped,
+                        process: p,
+                        layer: *l,
+                        tiling: *tl,
+                        batch: b,
+                        weight_reuse: reuse,
+                    };
+                    sum += simulate_layer(&spec, &dev, i, budget).total();
+                }
+            }
+            sum
+        };
+        let (no, yes) = (total(false), total(true));
+        t.push(vec![
+            b.to_string(),
+            commas(no),
+            commas(yes),
+            format!("{:.1}%", 100.0 * (no - yes) as f64 / no as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig. 19: latency breakdown of the '1X' CNN at B=128 — total vs pure
+/// MAC cycles per process.
+pub fn figure19() -> Table {
+    let dev = zcu102();
+    let net = cnn1x();
+    let sched = schedule(&net, &dev, 128);
+    let mut t = Table::new(
+        "Fig 19: latency breakdown, CIFAR-10 '1X' CNN, B=128 (conv layers)",
+        &["Process", "Total (cycles)", "MAC (cycles)", "MAC share"],
+    );
+    for p in Process::ALL {
+        let mut total = 0u64;
+        let mut mac = 0u64;
+        for (i, (l, tl)) in net.conv_layers().iter().zip(&sched.tilings).enumerate() {
+            if i == 0 && p == Process::Bp {
+                continue;
+            }
+            let lat = conv_latency(l, tl, &dev, p, 128);
+            total += lat.cycles;
+            mac += lat.mac_cycles;
+        }
+        t.push(vec![
+            p.label().into(),
+            commas(total),
+            commas(mac),
+            format!("{:.0}%", 100.0 * mac as f64 / total as f64),
+        ]);
+    }
+    t
+}
+
+/// Fig. 20 companion: format a recorded loss curve (the actual curves
+/// come from the e2e trainer — see `examples/train_cifar.rs` and the
+/// `figure 20` CLI command).
+pub fn format_loss_curves(
+    label_a: &str,
+    a: &[f32],
+    label_b: &str,
+    b: &[f32],
+    every: usize,
+) -> Table {
+    let mut t = Table::new(
+        "Fig 20: training loss curves (paper: FPGA vs GPU; here: Pallas-kernel \
+         vs XLA-native train step, both executed by the rust runtime)",
+        &["Step", label_a, label_b, "|diff|"],
+    );
+    let n = a.len().min(b.len());
+    let mut i = 0;
+    while i < n {
+        t.push(vec![
+            i.to_string(),
+            format!("{:.4}", a[i]),
+            format!("{:.4}", b[i]),
+            format!("{:.5}", (a[i] - b[i]).abs()),
+        ]);
+        i += every.max(1);
+    }
+    if n > 0 && (n - 1) % every.max(1) != 0 {
+        t.push(vec![
+            (n - 1).to_string(),
+            format!("{:.4}", a[n - 1]),
+            format!("{:.4}", b[n - 1]),
+            format!("{:.5}", (a[n - 1] - b[n - 1]).abs()),
+        ]);
+    }
+    t
+}
+
+/// Fig. 21: throughput + per-batch latency vs batch size for AlexNet,
+/// VGG-16, and VGG-16+BN on ZCU102.
+pub fn figure21() -> Table {
+    let dev = zcu102();
+    let mut t = Table::new(
+        "Fig 21: throughput (GFLOPS) and batch latency (ms) vs batch size, ZCU102",
+        &["Network", "Batch", "Throughput (GFLOPS)", "Latency/batch (ms)"],
+    );
+    let sweep: &[(&str, Network, &[usize])] = &[
+        ("AlexNet", alexnet(), &[2, 4, 8, 16, 32, 64, 128]),
+        ("Vgg-16", vgg16(false), &[2, 4, 8, 16]),
+        ("Vgg-16+BN", vgg16(true), &[2, 4, 8]),
+    ];
+    for (name, net, batches) in sweep {
+        for &b in *batches {
+            let (gflops, ms) = net_throughput(net, &dev, b);
+            t.push(vec![
+                name.to_string(),
+                b.to_string(),
+                format!("{gflops:.2}"),
+                format!("{ms:.2}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Modeled throughput of a network at a batch size.
+pub fn net_throughput(net: &Network, dev: &Device, batch: usize) -> (f64, f64) {
+    let sched = schedule(net, dev, batch);
+    let cycles = network_conv_training_cycles(net, &sched, dev, batch);
+    let secs = dev.cycles_to_s(cycles);
+    let gflops = net.conv_training_flops(batch) as f64 / secs / 1e9;
+    (gflops, secs * 1e3)
+}
+
+pub fn figure_by_number(n: usize) -> Option<Table> {
+    match n {
+        18 => Some(figure18()),
+        19 => Some(figure19()),
+        21 => Some(figure21()),
+        _ => None, // 20 needs the runtime — CLI handles it
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig18_reuse_gain_grows_with_batch() {
+        let t = figure18();
+        let saving = |row: &[String]| -> f64 {
+            row[3].trim_end_matches('%').parse().unwrap()
+        };
+        let first = saving(&t.rows[0]);
+        let last = saving(t.rows.last().unwrap());
+        assert!(last >= first, "saving should grow with batch: {first} -> {last}");
+        assert!(last > 1.0, "saving at B=128 should be visible: {last}%");
+    }
+
+    #[test]
+    fn fig19_mac_share_majority() {
+        // §6.3: "our computation latency is still much more than 50% of
+        // the total latency in FP, BP, or WU".
+        let t = figure19();
+        for row in &t.rows {
+            let share: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(share > 40.0, "{} share {share}%", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig21_throughput_stable_across_batch() {
+        // The channel-parallelism claim: "throughput when the batch size
+        // is 2 is still above 32 GFLOPS" (vs 34.5 at 128) — ratio ~0.93.
+        let t = figure21();
+        let alex: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "AlexNet")
+            .map(|r| r[2].parse().unwrap())
+            .collect();
+        let min = alex.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = alex.iter().cloned().fold(0.0, f64::max);
+        assert!(min / max > 0.7, "batch sensitivity too high: {min}..{max}");
+    }
+
+    #[test]
+    fn fig21_vgg_beats_alexnet() {
+        let t = figure21();
+        let get = |name: &str, b: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name && r[1] == b)
+                .map(|r| r[2].parse().unwrap())
+                .unwrap()
+        };
+        assert!(get("Vgg-16", "16") > get("AlexNet", "16"));
+    }
+
+    #[test]
+    fn loss_curve_table_subsamples() {
+        let a: Vec<f32> = (0..100).map(|i| 2.3 - 0.02 * i as f32).collect();
+        let t = format_loss_curves("a", &a, "b", &a, 10);
+        assert!(t.rows.len() >= 10 && t.rows.len() <= 12);
+    }
+}

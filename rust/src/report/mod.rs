@@ -1,0 +1,101 @@
+//! Regenerates every table and figure of the paper's evaluation (§6).
+//!
+//! Each `table_*` / `figure_*` function returns a [`Table`] (formatted,
+//! printable, and machine-readable for the benches). Published numbers
+//! from other systems (Tables 7/9/10/11 comparison columns) are encoded
+//! as constants from the paper; *our* columns come from the analytic
+//! stack (scheduler + perf/resource models + DMA simulation).
+
+pub mod ablations;
+pub mod figures;
+pub mod published;
+pub mod tables;
+
+/// A printable table: the common currency of the report layer.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    /// Column widths for aligned rendering.
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let w = self.widths();
+        writeln!(f, "\n== {} ==", self.title)?;
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                write!(f, "| {:width$} ", c, width = w[i])?;
+            }
+            writeln!(f, "|")
+        };
+        line(f, &self.header)?;
+        let total: usize = w.iter().map(|x| x + 3).sum::<usize>() + 1;
+        writeln!(f, "{}", "-".repeat(total))?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
+    }
+}
+
+/// Pretty-print a cycle count like the paper (comma separators).
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_format() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(151846336), "151,846,336");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| 1 | 2  |"));
+    }
+}

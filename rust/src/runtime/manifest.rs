@@ -1,0 +1,241 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct OpMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub hlo_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct NetworkMeta {
+    pub params: Vec<ParamMeta>,
+    pub params_order: Vec<String>,
+    pub input: Vec<usize>,
+    pub labels: Vec<usize>,
+    pub train_step: OpMeta,
+    pub train_step_ref: OpMeta,
+    pub predict: OpMeta,
+}
+
+impl NetworkMeta {
+    pub fn function(&self, name: &str) -> Option<&OpMeta> {
+        match name {
+            "train_step" => Some(&self.train_step),
+            "train_step_ref" => Some(&self.train_step_ref),
+            "predict" => Some(&self.predict),
+            _ => None,
+        }
+    }
+
+    pub const FUNCTIONS: [&'static str; 3] = ["train_step", "train_step_ref", "predict"];
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub batch: usize,
+    pub seed: u64,
+    pub networks: BTreeMap<String, NetworkMeta>,
+    pub ops: BTreeMap<String, OpMeta>,
+}
+
+fn sig(v: &Json) -> anyhow::Result<TensorSig> {
+    Ok(TensorSig {
+        shape: v
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("bad tensor shape"))?,
+        dtype: v
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("bad tensor dtype"))?
+            .to_string(),
+    })
+}
+
+fn sigs(v: Option<&Json>) -> anyhow::Result<Vec<TensorSig>> {
+    v.and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("missing signature array"))?
+        .iter()
+        .map(sig)
+        .collect()
+}
+
+fn op_meta(v: &Json) -> anyhow::Result<OpMeta> {
+    Ok(OpMeta {
+        file: v
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("op missing file"))?
+            .to_string(),
+        inputs: sigs(v.get("inputs"))?,
+        outputs: sigs(v.get("outputs"))?,
+        hlo_bytes: v.get("hlo_bytes").and_then(|b| b.as_f64()).unwrap_or(0.0) as u64,
+    })
+}
+
+fn network_meta(v: &Json) -> anyhow::Result<NetworkMeta> {
+    let params = v
+        .get("params")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| anyhow!("network missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(|s| s.as_usize_vec())
+                    .ok_or_else(|| anyhow!("param missing shape"))?,
+                file: p
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("param missing file"))?
+                    .to_string(),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let order = v
+        .get("params_order")
+        .and_then(|o| o.as_arr())
+        .ok_or_else(|| anyhow!("network missing params_order"))?
+        .iter()
+        .map(|s| s.as_str().map(String::from).ok_or_else(|| anyhow!("bad key")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let field = |name: &str| -> anyhow::Result<OpMeta> {
+        op_meta(v.get(name).ok_or_else(|| anyhow!("network missing {name}"))?)
+    };
+    Ok(NetworkMeta {
+        params,
+        params_order: order,
+        input: v
+            .get("input")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("network missing input shape"))?,
+        labels: v
+            .get("labels")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("network missing labels shape"))?,
+        train_step: field("train_step")?,
+        train_step_ref: field("train_step_ref")?,
+        predict: field("predict")?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let networks = v
+            .get("networks")
+            .and_then(|n| n.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing networks"))?
+            .iter()
+            .map(|(k, nv)| Ok((k.clone(), network_meta(nv)?)))
+            .collect::<anyhow::Result<BTreeMap<_, _>>>()?;
+        let ops = v
+            .get("ops")
+            .and_then(|n| n.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing ops"))?
+            .iter()
+            .map(|(k, ov)| Ok((k.clone(), op_meta(ov)?)))
+            .collect::<anyhow::Result<BTreeMap<_, _>>>()?;
+        Ok(Manifest {
+            version: v.get("version").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            batch: v
+                .get("batch")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing batch"))?,
+            seed: v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            networks,
+            ops,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "batch": 32, "seed": 0,
+        "networks": {
+            "n": {
+                "params": [{"name": "w0", "shape": [2, 2], "file": "p/w0.bin"}],
+                "params_order": ["w0"],
+                "input": [32, 3, 32, 32], "labels": [32],
+                "train_step": {"file": "a.hlo.txt",
+                    "inputs": [{"shape": [2, 2], "dtype": "float32"}],
+                    "outputs": [{"shape": [], "dtype": "float32"}],
+                    "hlo_bytes": 5},
+                "train_step_ref": {"file": "b.hlo.txt", "inputs": [], "outputs": []},
+                "predict": {"file": "c.hlo.txt", "inputs": [], "outputs": []}
+            }
+        },
+        "ops": {
+            "conv_fp": {"file": "op.hlo.txt",
+                "inputs": [{"shape": [1, 2], "dtype": "float32"}],
+                "outputs": [{"shape": [1, 2], "dtype": "float32"}]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.networks["n"].params[0].shape, vec![2, 2]);
+        assert_eq!(m.networks["n"].train_step.inputs[0].shape, vec![2, 2]);
+        assert_eq!(m.ops["conv_fp"].inputs[0].dtype, "float32");
+        assert!(m.networks["n"].function("predict").is_some());
+        assert!(m.networks["n"].function("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"networks": {}, "ops": {}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_repo_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.networks.contains_key("cnn1x"));
+            assert!(m.ops.contains_key("conv_fp"));
+        }
+    }
+}

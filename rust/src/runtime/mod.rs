@@ -1,0 +1,238 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, and
+//! execute them from the rust hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit instruction ids) but the text parser reassigns ids cleanly —
+//! see /opt/xla-example/README.md and DESIGN.md.
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+pub use manifest::{Manifest, NetworkMeta, OpMeta, TensorSig};
+
+/// A compiled executable plus its I/O signature.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl Executable {
+    /// Execute on host buffers; returns one [`Tensor`] per output.
+    pub fn run(&self, args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        if args.len() != self.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&self.inputs)
+            .map(|(t, sig)| t.to_literal(sig))
+            .collect::<crate::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let elems = tuple.to_tuple()?;
+        if elems.len() != self.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs.len(),
+                elems.len()
+            ));
+        }
+        elems
+            .iter()
+            .zip(&self.outputs)
+            .map(|(lit, sig)| Tensor::from_literal(lit, sig))
+            .collect()
+    }
+}
+
+/// A host tensor: flat data + shape. Covers the two dtypes the artifacts
+/// use (f32 activations/params, i32 labels/indexes).
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            Tensor::I32(..) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> crate::Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(anyhow!("expected scalar, got {} elements", d.len()));
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self, sig: &TensorSig) -> crate::Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+            Tensor::I32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> crate::Result<Tensor> {
+        let out = match sig.dtype.as_str() {
+            "int32" => Tensor::I32(lit.to_vec::<i32>()?, sig.shape.clone()),
+            _ => Tensor::F32(lit.to_vec::<f32>()?, sig.shape.clone()),
+        };
+        Ok(out)
+    }
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open `artifacts_dir` (must contain `manifest.json`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts_dir: dir, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile(
+        &self,
+        file: &str,
+        name: &str,
+        inputs: Vec<TensorSig>,
+        outputs: Vec<TensorSig>,
+    ) -> crate::Result<Executable> {
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { name: name.to_string(), exe, inputs, outputs })
+    }
+
+    /// Compile a named standalone op from the manifest.
+    pub fn compile_op(&self, op: &str) -> crate::Result<Executable> {
+        let meta = self
+            .manifest
+            .ops
+            .get(op)
+            .ok_or_else(|| anyhow!("op `{op}` not in manifest"))?;
+        self.compile(&meta.file, op, meta.inputs.clone(), meta.outputs.clone())
+    }
+
+    /// Compile a network function (`train_step`, `train_step_ref`,
+    /// `predict`) from the manifest.
+    pub fn compile_network_fn(&self, net: &str, func: &str) -> crate::Result<Executable> {
+        let meta = self
+            .manifest
+            .networks
+            .get(net)
+            .ok_or_else(|| anyhow!("network `{net}` not in manifest"))?;
+        let f = meta
+            .function(func)
+            .ok_or_else(|| anyhow!("function `{func}` not in manifest for `{net}`"))?;
+        self.compile(
+            &f.file,
+            &format!("{net}.{func}"),
+            f.inputs.clone(),
+            f.outputs.clone(),
+        )
+    }
+
+    /// Read the initial parameters of `net` (raw little-endian f32 dumps).
+    pub fn load_params(&self, net: &str) -> crate::Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .networks
+            .get(net)
+            .ok_or_else(|| anyhow!("network `{net}` not in manifest"))?;
+        meta.params
+            .iter()
+            .map(|p| {
+                let bytes = std::fs::read(self.artifacts_dir.join(&p.file))
+                    .with_context(|| format!("reading {}", p.file))?;
+                if bytes.len() % 4 != 0 {
+                    return Err(anyhow!("{}: truncated f32 dump", p.file));
+                }
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let expect: usize = p.shape.iter().product();
+                if data.len() != expect {
+                    return Err(anyhow!(
+                        "{}: {} elements, shape wants {expect}",
+                        p.file,
+                        data.len()
+                    ));
+                }
+                Ok(Tensor::f32(data, &p.shape))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(Tensor::i32(vec![1], &[1]).as_f32().is_err());
+        assert_eq!(Tensor::scalar(3.0).scalar_f32().unwrap(), 3.0);
+        assert!(Tensor::f32(vec![1.0, 2.0], &[2]).scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Discrete-event simulation of the accelerator's double-buffered tile
+//! pipeline — the "on-board" column of Table 6 and the acceleration-time
+//! columns of Tables 3–5.
+//!
+//! Independent of the closed-form model: it steps through the *actual*
+//! tile iteration sequence produced by the layout drivers
+//! ([`crate::layout::streams::CostVisitor`]), applying the double-buffer
+//! recurrence per iteration. The closed-form Eq. (15)–(27) makes
+//! algebraic uniformity assumptions (identical iterations, amortized
+//! starts); the simulator does not — the small deviation between the two
+//! reproduces the paper's Table 6 point.
+
+use crate::device::Device;
+use crate::layout::realloc::realloc_cycles;
+use crate::layout::streams::{costs_for_spec, IterCost, StreamSpec};
+use crate::layout::{Process, Scheme, Tiling};
+use crate::nets::ConvShape;
+
+/// Outcome of simulating one layer-process.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    /// On-chip acceleration cycles (double-buffered pipeline).
+    pub accel_cycles: u64,
+    /// Host-side reallocation cycles (baselines only).
+    pub realloc_cycles: u64,
+    /// Pure MAC cycles (lower bound).
+    pub mac_cycles: u64,
+}
+
+impl SimResult {
+    pub fn total(&self) -> u64 {
+        self.accel_cycles + self.realloc_cycles
+    }
+}
+
+/// How per-granule DMA restarts are counted by the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstMode {
+    /// Use the layout's real burst structure (the reshaped design runs
+    /// directly on DRAM).
+    Layout,
+    /// Assume a host-side reallocation made every granule contiguous —
+    /// the baselines' operating assumption (they pay `realloc_cycles`).
+    ReallocatedGranules,
+}
+
+/// Double-buffered pipeline over a sequence of tile iterations.
+///
+/// Per iteration: `load(i)` may overlap `compute(i-1)` (ping-pong input
+/// buffers), `compute(i)` waits for its load, `store(i)` (when present)
+/// overlaps the next compute through the OFM double buffer.
+pub fn pipeline_cycles(iters: &[IterCost], t_start: u64, p: u64, mode: BurstMode) -> u64 {
+    let mut load_done: u64 = 0;
+    let mut comp_done: u64 = 0;
+    let mut store_done: u64 = 0;
+    // compute completion two iterations back — frees the ping-pong buffer
+    let mut comp_hist = [0u64; 2];
+
+    let chan_cycles = |c: &crate::layout::streams::ChanCost| -> u64 {
+        let bursts = match mode {
+            BurstMode::Layout => c.bursts,
+            BurstMode::ReallocatedGranules => c.granules,
+        };
+        bursts * t_start + c.words.div_ceil(p)
+    };
+
+    for (i, it) in iters.iter().enumerate() {
+        // The IFM/OFM/WEI DMA channels of Fig. 4 are independent and run
+        // in parallel: the load phase lasts as long as the slowest one.
+        let load_cycles = chan_cycles(&it.ifm)
+            .max(chan_cycles(&it.ofm))
+            .max(chan_cycles(&it.wei));
+        let load_start = load_done.max(comp_hist[i % 2]);
+        load_done = load_start + load_cycles;
+
+        let comp_start = load_done.max(comp_done);
+        comp_done = comp_start + it.compute;
+        comp_hist[i % 2] = comp_done;
+
+        if it.out.words > 0 {
+            let store_cycles = chan_cycles(&it.out);
+            let store_start = comp_done.max(store_done);
+            store_done = store_start + store_cycles;
+        }
+    }
+    comp_done.max(store_done).max(load_done)
+}
+
+/// Simulate one (scheme, process) of a conv layer on `dev`.
+pub fn simulate_layer(
+    spec: &StreamSpec,
+    dev: &Device,
+    layer_index: usize,
+    on_chip_words: u64,
+) -> SimResult {
+    let costs = costs_for_spec(spec);
+    let mode = match spec.scheme {
+        Scheme::Reshaped => BurstMode::Layout,
+        // Baselines shuffle data host-side so each granule streams as one
+        // burst — and are billed for it in `realloc_cycles`.
+        Scheme::Bchw | Scheme::Bhwc => BurstMode::ReallocatedGranules,
+    };
+    let accel = pipeline_cycles(&costs.iters, dev.t_start, dev.p_words(), mode);
+    let realloc = realloc_cycles(spec, layer_index, on_chip_words);
+    let mac: u64 = costs.iters.iter().map(|i| i.compute).sum();
+    SimResult { accel_cycles: accel, realloc_cycles: realloc, mac_cycles: mac }
+}
+
+/// Feature-buffer capacity (words) implied by a device's BRAM budget —
+/// used by the BHWC hold-all-features rule (Table 4's WU column).
+pub fn on_chip_feature_words(dev: &Device) -> u64 {
+    // 75% of BRAM for buffers, half of it usable for features.
+    ((dev.brams * 3 / 4) as u64 * dev.bram_bits as u64) / 32 / 2
+}
+
+/// Simulate a whole conv stack for one process under one scheme.
+pub fn simulate_network(
+    layers: &[ConvShape],
+    tilings: &[Tiling],
+    scheme: Scheme,
+    process: Process,
+    batch: usize,
+    dev: &Device,
+    weight_reuse: bool,
+) -> Vec<SimResult> {
+    let budget = on_chip_feature_words(dev);
+    layers
+        .iter()
+        .zip(tilings)
+        .enumerate()
+        .map(|(i, (l, t))| {
+            if i == 0 && process == Process::Bp {
+                // Layer 1 produces no input gradient (Table 3 "N/A").
+                return SimResult { accel_cycles: 0, realloc_cycles: 0, mac_cycles: 0 };
+            }
+            let spec = StreamSpec {
+                scheme,
+                process,
+                layer: *l,
+                tiling: *t,
+                batch,
+                weight_reuse,
+            };
+            simulate_layer(&spec, dev, i, budget)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::zcu102;
+    use crate::layout::streams::{ChanCost, IterCost};
+
+    fn chan(bursts: u64, words: u64) -> ChanCost {
+        ChanCost { bursts, words, granules: bursts }
+    }
+
+    #[test]
+    fn pipeline_overlaps_load_and_compute() {
+        let iters: Vec<IterCost> = (0..10)
+            .map(|_| IterCost {
+                compute: 100,
+                ifm: chan(1, 100),
+                ..Default::default()
+            })
+            .collect();
+        // load = 400 + 25 = 425 > compute -> load-bound: ~10 * 425.
+        let c = pipeline_cycles(&iters, 400, 4, BurstMode::Layout);
+        assert!(c >= 10 * 425 && c < 10 * 425 + 200, "{c}");
+        // compute-bound case: big compute, loads hidden after the first.
+        let iters: Vec<IterCost> = (0..10)
+            .map(|_| IterCost {
+                compute: 1000,
+                ifm: chan(1, 100),
+                ..Default::default()
+            })
+            .collect();
+        let c = pipeline_cycles(&iters, 400, 4, BurstMode::Layout);
+        assert!(c >= 10_000 && c < 10_000 + 500, "{c}");
+    }
+
+    #[test]
+    fn store_tail_counts_once() {
+        let iters = vec![IterCost {
+            compute: 100,
+            ifm: chan(1, 40),
+            out: chan(1, 40),
+            ..Default::default()
+        }];
+        let c = pipeline_cycles(&iters, 400, 4, BurstMode::Layout);
+        assert_eq!(c, (400 + 10) + 100 + (400 + 10));
+    }
+
+    #[test]
+    fn reshaped_beats_bchw_end_to_end() {
+        // The Table 3 vs Table 5 headline on a mid-sized layer.
+        let dev = zcu102();
+        let l = ConvShape::new(96, 3, 55, 55, 11, 4);
+        let t = Tiling::new(16, 16, 2, 55, 96);
+        let t_bchw = Tiling::new(16, 16, 11, 11, 96);
+        let mk = |scheme, tiling, reuse| StreamSpec {
+            scheme,
+            process: Process::Fp,
+            layer: l,
+            tiling,
+            batch: 4,
+            weight_reuse: reuse,
+        };
+        let budget = on_chip_feature_words(&dev);
+        let bchw = simulate_layer(&mk(Scheme::Bchw, t_bchw, false), &dev, 0, budget);
+        let resh = simulate_layer(&mk(Scheme::Reshaped, t, true), &dev, 0, budget);
+        assert!(resh.realloc_cycles == 0);
+        assert!(bchw.realloc_cycles > 0);
+        assert!(
+            resh.total() * 3 < bchw.total(),
+            "reshaped {} vs bchw {}",
+            resh.total(),
+            bchw.total()
+        );
+    }
+
+    #[test]
+    fn mac_cycles_are_a_lower_bound() {
+        let dev = zcu102();
+        let l = ConvShape::new(64, 64, 8, 8, 3, 1);
+        let t = Tiling::new(16, 16, 8, 8, 64);
+        for p in Process::ALL {
+            let spec = StreamSpec {
+                scheme: Scheme::Reshaped,
+                process: p,
+                layer: l,
+                tiling: t,
+                batch: 2,
+                weight_reuse: true,
+            };
+            let r = simulate_layer(&spec, &dev, 1, on_chip_feature_words(&dev));
+            assert!(r.accel_cycles >= r.mac_cycles, "{p:?}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! End-to-end on-device training driver (the Fig. 20 experiment).
+//!
+//! Owns a compiled `train_step` executable and the parameter state,
+//! feeds mini-batches, records the loss curve, and evaluates accuracy
+//! via the `predict` artifact. The cross-entropy *evaluation* happens
+//! host-side (the paper computes the loss function on the ARM core);
+//! the training-step gradient math is inside the lowered graph.
+
+use crate::data::{Dataset, NUM_CLASSES};
+use crate::runtime::{Executable, Runtime, Tensor};
+use anyhow::anyhow;
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub wall_ms: f64,
+}
+
+/// Training state: parameters + the compiled step function.
+pub struct Trainer {
+    step_fn: Executable,
+    pub params: Vec<Tensor>,
+    pub batch: usize,
+    pub lr: f32,
+    pub history: Vec<StepRecord>,
+}
+
+impl Trainer {
+    /// Build from a runtime: `variant` is `train_step` (Pallas kernels)
+    /// or `train_step_ref` (XLA-native reference — the "GPU" curve).
+    pub fn new(rt: &Runtime, net: &str, variant: &str, lr: f32) -> crate::Result<Self> {
+        let step_fn = rt.compile_network_fn(net, variant)?;
+        let params = rt.load_params(net)?;
+        let batch = rt.manifest.batch;
+        Ok(Self { step_fn, params, batch, lr, history: Vec::new() })
+    }
+
+    /// Run one SGD step on `(x, y)`; returns the loss.
+    pub fn step(&mut self, x: Vec<f32>, y: Vec<i32>) -> crate::Result<f32> {
+        let n_params = self.params.len();
+        let x_shape = &self.step_fn.inputs[n_params].shape;
+        if x.len() != x_shape.iter().product::<usize>() {
+            return Err(anyhow!(
+                "batch size mismatch: got {} values, step wants {:?}",
+                x.len(),
+                x_shape
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let mut args: Vec<Tensor> = self.params.clone();
+        args.push(Tensor::f32(x, x_shape));
+        args.push(Tensor::i32(y, &self.step_fn.inputs[n_params + 1].shape));
+        args.push(Tensor::scalar(self.lr));
+        let mut out = self.step_fn.run(&args)?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| anyhow!("train step returned nothing"))?
+            .scalar_f32()?;
+        self.params = out;
+        let rec = StepRecord {
+            step: self.history.len(),
+            loss,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        self.history.push(rec);
+        Ok(loss)
+    }
+
+    /// Train for `steps` mini-batches drawn from `ds`.
+    pub fn train(&mut self, ds: &mut Dataset, steps: usize) -> crate::Result<Vec<StepRecord>> {
+        let start = self.history.len();
+        for _ in 0..steps {
+            let (x, y) = ds.batch(self.batch);
+            self.step(x, y)?;
+        }
+        Ok(self.history[start..].to_vec())
+    }
+}
+
+/// Host-side evaluation: accuracy + mean cross-entropy over `batches`
+/// mini-batches (logits from the `predict` artifact, loss on the host —
+/// the paper's ARM-core split).
+pub struct Evaluator {
+    predict: Executable,
+    batch: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, net: &str) -> crate::Result<Self> {
+        Ok(Self { predict: rt.compile_network_fn(net, "predict")?, batch: rt.manifest.batch })
+    }
+
+    pub fn evaluate(
+        &self,
+        params: &[Tensor],
+        ds: &mut Dataset,
+        batches: usize,
+    ) -> crate::Result<EvalResult> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut loss_sum = 0f64;
+        for _ in 0..batches {
+            let (x, y) = ds.batch(self.batch);
+            let n_params = params.len();
+            let mut args: Vec<Tensor> = params.to_vec();
+            args.push(Tensor::f32(x, &self.predict.inputs[n_params].shape));
+            let out = self.predict.run(&args)?;
+            let logits = out[0].as_f32()?;
+            for (i, &label) in y.iter().enumerate() {
+                let row = &logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                if pred == label {
+                    correct += 1;
+                }
+                loss_sum += host_cross_entropy(row, label as usize);
+                total += 1;
+            }
+        }
+        Ok(EvalResult {
+            accuracy: correct as f64 / total as f64,
+            mean_loss: loss_sum / total as f64,
+            samples: total,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub mean_loss: f64,
+    pub samples: usize,
+}
+
+/// Numerically-stable cross-entropy of one logits row (host side).
+pub fn host_cross_entropy(logits: &[f32], label: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let logz =
+        max as f64 + logits.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln();
+    logz - logits[label] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_cross_entropy_uniform() {
+        let row = [0.0f32; 10];
+        assert!((host_cross_entropy(&row, 3) - (10.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_cross_entropy_confident() {
+        let mut row = [0.0f32; 10];
+        row[2] = 20.0;
+        assert!(host_cross_entropy(&row, 2) < 1e-6);
+        assert!(host_cross_entropy(&row, 3) > 10.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro benchmark harness (criterion is outside the vendored crate
+//! set). Used by the `rust/benches/*` targets (`harness = false`).
+//!
+//! Methodology: warm up, then run timed batches until the total budget
+//! elapses; report mean / p50 / p95 over per-iteration times.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` of wall time (after one
+/// warm-up call). Use `std::hint::black_box` inside `f` as needed.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+
+    let target_iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(1.0, 10_000.0) as usize;
+    let mut times = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let p50 = times[times.len() / 2];
+    let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+    BenchResult { name: name.to_string(), iters: times.len(), mean, p50, p95 }
+}
+
+/// Run + print a group of benches with a shared per-bench budget.
+pub struct Runner {
+    budget: Duration,
+    pub results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Runner {
+    /// Honors the `--bench <filter>` convention and `EF_BENCH_BUDGET_MS`.
+    pub fn from_env(default_budget_ms: u64) -> Self {
+        let budget_ms = std::env::var("EF_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default_budget_ms);
+        // cargo bench passes `--bench`; a bare non-flag arg is a filter.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        Self {
+            budget: Duration::from_millis(budget_ms),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    pub fn run<T>(&mut self, name: &str, f: impl FnMut() -> T) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        let r = bench(name, self.budget, f);
+        println!("{r}");
+        self.results.push(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", Duration::from_millis(5), || 1 + 1);
+        assert!(r.iters >= 1);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_scales_iterations() {
+        let r = bench("sleepy", Duration::from_millis(4), || {
+            std::thread::sleep(Duration::from_millis(1))
+        });
+        assert!(r.iters <= 8, "{}", r.iters);
+    }
+}

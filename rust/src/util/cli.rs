@@ -1,0 +1,94 @@
+//! Tiny CLI argument reader (clap is outside the vendored crate set).
+//!
+//! Grammar: `ef-train [--flag value]... <subcommand> [positional]...
+//! [--flag value | --switch]...` — flags may appear anywhere.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Flags that always take a value (everything else with no following
+/// value is a switch).
+pub fn parse(argv: impl IntoIterator<Item = String>, value_flags: &[&str]) -> Args {
+    let mut out = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if value_flags.contains(&name) {
+                match it.next() {
+                    Some(v) => {
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    None => {
+                        out.switches.push(name.to_string());
+                    }
+                }
+            } else {
+                out.switches.push(name.to_string());
+            }
+        } else if out.subcommand.is_none() {
+            out.subcommand = Some(arg);
+        } else {
+            out.positionals.push(arg);
+        }
+    }
+    out
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse(argv("table 5 --artifacts art"), &["artifacts"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.positionals, vec!["5"]);
+        assert_eq!(a.flag("artifacts"), Some("art"));
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = parse(argv("train --steps=20 --reference"), &["steps"]);
+        assert_eq!(a.parse_flag("steps", 0usize), 20);
+        assert!(a.has("reference"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(argv("x"), &[]);
+        assert_eq!(a.flag_or("net", "cnn1x"), "cnn1x");
+        assert_eq!(a.parse_flag("lr", 0.05f32), 0.05);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline against a minimal vendored crate set
+//! (xla + anyhow), so the small generic pieces a project would normally
+//! pull from crates.io are implemented here: a JSON parser ([`json`]),
+//! a micro benchmark harness ([`bench`]), a property-testing loop
+//! ([`proptest`]), and a tiny CLI argument reader ([`cli`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;

@@ -1,0 +1,88 @@
+//! Property-testing loop (proptest is outside the vendored crate set).
+//!
+//! [`run`] drives a property over `cases` random inputs produced by a
+//! generator on the crate's deterministic [`crate::data::Rng`]; on
+//! failure it reports the seed and the failing case's `Debug` so the
+//! case can be replayed exactly (set `EF_PROPTEST_SEED`).
+
+use crate::data::Rng;
+
+/// Environment-tunable case count (`EF_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("EF_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn seed_from_env() -> u64 {
+    std::env::var("EF_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xEF7_2A17)
+}
+
+/// Run `prop` over `cases` inputs from `gen`. Panics with the seed and
+/// case index on the first failure (assert inside `prop`).
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T),
+) {
+    let seed = seed_from_env();
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&input);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (EF_PROPTEST_SEED={seed})\ninput: {input:#?}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Inclusive-range helper on the deterministic RNG.
+pub fn range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(hi >= lo);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Pick one element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+    &items[rng.below(items.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        run("count", 10, |r| r.below(5), |_| {})
+            ;
+        run("count2", 10, |r| r.below(5), |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn surfaces_failures() {
+        run("fails", 10, |r| r.below(5), |&x| assert!(x > 10));
+    }
+
+    #[test]
+    fn range_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = range(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration tests over the PJRT runtime: every artifact in the
+//! manifest must load, compile, and execute with manifest-shaped inputs,
+//! and the standalone unified-kernel ops must produce correct numerics
+//! against host-side references.
+//!
+//! Skipped gracefully when `make artifacts` has not run.
+
+use ef_train::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime opens"))
+}
+
+fn filled(sig: &ef_train::runtime::TensorSig, seed: u64) -> Tensor {
+    let n: usize = sig.shape.iter().product();
+    let mut rng = ef_train::data::Rng::new(seed);
+    match sig.dtype.as_str() {
+        "int32" => Tensor::i32((0..n).map(|_| rng.below(4) as i32).collect(), &sig.shape),
+        _ => Tensor::f32((0..n).map(|_| rng.normal() * 0.5).collect(), &sig.shape),
+    }
+}
+
+#[test]
+fn every_manifest_op_executes_with_correct_shapes() {
+    let Some(rt) = runtime() else { return };
+    for (name, meta) in rt.manifest.ops.clone() {
+        let exe = rt.compile_op(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let args: Vec<Tensor> = meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, sig)| filled(sig, 7 + i as u64))
+            .collect();
+        let out = exe.run(&args).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), meta.outputs.len(), "{name}");
+        for (o, sig) in out.iter().zip(&meta.outputs) {
+            assert_eq!(o.shape(), &sig.shape[..], "{name} output shape");
+        }
+    }
+}
+
+#[test]
+fn conv_fp_matches_host_reference() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile_op("conv_fp").unwrap();
+    let (b, n, m, h, k, s) = (4usize, 16usize, 32usize, 18usize, 3usize, 1usize);
+    let r = (h - k) / s + 1;
+    let x = filled(&exe.inputs[0], 11);
+    let w = filled(&exe.inputs[1], 12);
+    let out = exe.run(&[x.clone(), w.clone()]).unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // Naive host conv (Eq. 1).
+    let xv = x.as_f32().unwrap();
+    let wv = w.as_f32().unwrap();
+    let mut worst = 0f32;
+    for bi in 0..b {
+        for mi in 0..m {
+            for ri in 0..r {
+                for ci in 0..r {
+                    let mut acc = 0f32;
+                    for ni in 0..n {
+                        for kr in 0..k {
+                            for kc in 0..k {
+                                let xi = ((bi * n + ni) * h + (s * ri + kr)) * h
+                                    + (s * ci + kc);
+                                let wi = ((mi * n + ni) * k + kr) * k + kc;
+                                acc += xv[xi] * wv[wi];
+                            }
+                        }
+                    }
+                    let gi = ((bi * m + mi) * r + ri) * r + ci;
+                    worst = worst.max((acc - got[gi]).abs());
+                }
+            }
+        }
+    }
+    assert!(worst < 1e-3, "conv_fp max abs err {worst}");
+}
+
+#[test]
+fn matmul_op_matches_host() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile_op("matmul").unwrap();
+    let a = filled(&exe.inputs[0], 21);
+    let b = filled(&exe.inputs[1], 22);
+    let out = exe.run(&[a.clone(), b.clone()]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let (rows, inner) = (exe.inputs[0].shape[0], exe.inputs[0].shape[1]);
+    let cols = exe.inputs[1].shape[1];
+    let av = a.as_f32().unwrap();
+    let bv = b.as_f32().unwrap();
+    let mut worst = 0f32;
+    for i in 0..rows {
+        for j in 0..cols {
+            let acc: f32 = (0..inner).map(|t| av[i * inner + t] * bv[t * cols + j]).sum();
+            worst = worst.max((acc - got[i * cols + j]).abs());
+        }
+    }
+    assert!(worst < 1e-3, "matmul max abs err {worst}");
+}
+
+#[test]
+fn pool_fwd_indices_in_range() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile_op("pool_fwd").unwrap();
+    let x = filled(&exe.inputs[0], 31);
+    let out = exe.run(&[x]).unwrap();
+    match &out[1] {
+        Tensor::I32(idx, _) => {
+            assert!(idx.iter().all(|&v| (0..4).contains(&v)));
+        }
+        _ => panic!("pool indexes must be i32"),
+    }
+}
+
+#[test]
+fn bn_fwd_normalizes_on_device() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile_op("bn_fwd").unwrap();
+    let x = filled(&exe.inputs[0], 41);
+    let ch = exe.inputs[1].shape[0];
+    let gamma = Tensor::f32(vec![1.0; ch], &[ch]);
+    let beta = Tensor::f32(vec![0.0; ch], &[ch]);
+    let out = exe.run(&[x, gamma, beta]).unwrap();
+    // xhat output: near-zero mean per channel.
+    let xhat = out[1].as_f32().unwrap();
+    let dims = &exe.outputs[1].shape;
+    let (b, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+    for ci in 0..c {
+        let mut sum = 0f64;
+        for bi in 0..b {
+            for i in 0..h * w {
+                sum += xhat[(bi * c + ci) * h * w + i] as f64;
+            }
+        }
+        let mean = sum / (b * h * w) as f64;
+        assert!(mean.abs() < 1e-3, "channel {ci} mean {mean}");
+    }
+}
+
+#[test]
+fn params_match_manifest_shapes() {
+    let Some(rt) = runtime() else { return };
+    for (net, meta) in rt.manifest.networks.clone() {
+        let params = rt.load_params(&net).unwrap();
+        assert_eq!(params.len(), meta.params.len(), "{net}");
+        for (p, pm) in params.iter().zip(&meta.params) {
+            assert_eq!(p.shape(), &pm.shape[..], "{net}/{}", pm.name);
+        }
+        // train_step signature: params..., x, y, lr -> params..., loss
+        assert_eq!(meta.train_step.inputs.len(), params.len() + 3, "{net}");
+        assert_eq!(meta.train_step.outputs.len(), params.len() + 1, "{net}");
+    }
+}
+
+#[test]
+fn predict_executes_for_every_network() {
+    let Some(rt) = runtime() else { return };
+    for net in rt.manifest.networks.keys().cloned().collect::<Vec<_>>() {
+        let exe = rt.compile_network_fn(&net, "predict").unwrap();
+        let params = rt.load_params(&net).unwrap();
+        let mut args = params;
+        let x_sig = exe.inputs.last().unwrap().clone();
+        args.push(filled(&x_sig, 51));
+        let out = exe.run(&args).unwrap_or_else(|e| panic!("{net}: {e}"));
+        let logits = out[0].as_f32().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()), "{net}: non-finite logits");
+    }
+}
+
+#[test]
+fn runtime_errors_are_actionable() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.compile_op("not_an_op").is_err());
+    assert!(rt.compile_network_fn("cnn1x", "not_a_fn").is_err());
+    assert!(rt.compile_network_fn("not_a_net", "predict").is_err());
+    // wrong arity
+    let exe = rt.compile_op("matmul").unwrap();
+    assert!(exe.run(&[]).is_err());
+}

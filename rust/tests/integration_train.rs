@@ -1,0 +1,104 @@
+//! End-to-end training integration: the Fig. 20 premise (Pallas and
+//! XLA-native steps track each other), loss decreases, and the
+//! adaptation coordinator converges on a shifted domain.
+//!
+//! Skipped gracefully when artifacts are missing.
+
+use ef_train::coordinator::Coordinator;
+use ef_train::data::Dataset;
+use ef_train::device::zcu102;
+use ef_train::nets::cnn1x;
+use ef_train::runtime::Runtime;
+use ef_train::train::{Evaluator, Trainer};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime opens"))
+}
+
+#[test]
+fn pallas_and_reference_steps_agree() {
+    let Some(rt) = runtime() else { return };
+    let mut a = Trainer::new(&rt, "cnn1x", "train_step", 0.05).unwrap();
+    let mut b = Trainer::new(&rt, "cnn1x", "train_step_ref", 0.05).unwrap();
+    let mut ds_a = Dataset::new(3, 0.6, 0.0);
+    let mut ds_b = Dataset::new(3, 0.6, 0.0);
+    a.train(&mut ds_a, 3).unwrap();
+    b.train(&mut ds_b, 3).unwrap();
+    for (ra, rb) in a.history.iter().zip(&b.history) {
+        assert!(
+            (ra.loss - rb.loss).abs() < 2e-2,
+            "step {}: pallas {} vs ref {}",
+            ra.step,
+            ra.loss,
+            rb.loss
+        );
+    }
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(&rt, "cnn1x", "train_step_ref", 0.05).unwrap();
+    let mut ds = Dataset::new(9, 0.5, 0.0);
+    let recs = t.train(&mut ds, 25).unwrap();
+    let first: f32 = recs[..5].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    let last: f32 = recs[recs.len() - 5..].iter().map(|r| r.loss).sum::<f32>() / 5.0;
+    assert!(
+        last < first,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn evaluator_beats_chance_after_training() {
+    // Conservative lr: the synthetic task can blow up SGD at 0.05+.
+    let Some(rt) = runtime() else { return };
+    let mut t = Trainer::new(&rt, "cnn1x", "train_step_ref", 0.03).unwrap();
+    let mut ds = Dataset::new(5, 0.5, 0.0);
+    t.train(&mut ds, 90).unwrap();
+    let ev = Evaluator::new(&rt, "cnn1x").unwrap();
+    let result = ev.evaluate(&t.params, &mut ds, 4).unwrap();
+    assert!(
+        result.accuracy > 0.2,
+        "accuracy {} not above chance after training",
+        result.accuracy
+    );
+}
+
+#[test]
+fn lenet10_trains_too() {
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.networks.contains_key("lenet10") {
+        return;
+    }
+    let mut t = Trainer::new(&rt, "lenet10", "train_step_ref", 0.05).unwrap();
+    let mut ds = Dataset::new(2, 0.5, 0.0);
+    let recs = t.train(&mut ds, 5).unwrap();
+    assert!(recs.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn coordinator_adapts_to_domain_shift() {
+    let Some(rt) = runtime() else { return };
+    let net = cnn1x();
+    let dev = zcu102();
+    let trainer = Trainer::new(&rt, "cnn1x", "train_step_ref", 0.05).unwrap();
+    let mut coord = Coordinator::new(trainer, &net, &dev);
+    let mut shifted = Dataset::new(1, 0.5, 0.8);
+    let report = coord.adapt(&mut shifted, 40).unwrap();
+    assert!(report.steps > 0);
+    assert!(report.final_loss.is_finite());
+    assert!(
+        report.final_loss < report.initial_loss,
+        "no adaptation progress: {} -> {}",
+        report.initial_loss,
+        report.final_loss
+    );
+    assert!(report.fpga_cycles_per_step > 0);
+    assert_eq!(report.loss_curve.len(), report.steps);
+}

@@ -1,0 +1,279 @@
+//! Property tests on the layout machinery: the analytic summaries must
+//! be *exactly* the merged exact address streams, address maps must be
+//! bijections, and the reshaping invariants of §4 must hold for random
+//! layer geometries.
+
+use ef_train::data::Rng;
+use ef_train::dma::{merge_bursts, summarize};
+use ef_train::layout::address::{Features, WeightPlacement, Weights};
+use ef_train::layout::streams::{enumerate_spec, summarize_spec, StreamSpec};
+use ef_train::layout::{Process, Role, Scheme, Tiling};
+use ef_train::nets::ConvShape;
+use ef_train::util::proptest::{pick, range, run};
+
+/// Random small conv layer + compatible tiling (kept small so the exact
+/// enumeration stays fast).
+fn random_case(rng: &mut Rng) -> (ConvShape, Tiling, usize, bool) {
+    let t = *pick(rng, &[2usize, 4]);
+    let k = *pick(rng, &[1usize, 3]);
+    let s = range(rng, 1, 2);
+    let r = range(rng, 2, 7);
+    let c = range(rng, 2, 7);
+    let m = range(rng, 1, 3) * t + range(rng, 0, 1) * range(rng, 1, t - 1);
+    let n = range(rng, 1, 3) * t + range(rng, 0, 1) * range(rng, 1, t - 1);
+    let layer = ConvShape::new(m, n, r, c, k, s);
+    let tr = range(rng, 1, r);
+    let m_on = (range(rng, 1, m.div_ceil(t)) * t).min(m.div_ceil(t) * t);
+    let tiling = Tiling::new(t, t, tr, c, m_on);
+    let batch = range(rng, 1, 3);
+    let reuse = rng.below(2) == 1;
+    (layer, tiling, batch, reuse)
+}
+
+#[test]
+fn summary_equals_merged_exact_streams() {
+    let cases = ef_train::util::proptest::default_cases();
+    run(
+        "summary == exact",
+        cases,
+        |rng| {
+            let (layer, tiling, batch, reuse) = random_case(rng);
+            let scheme = *pick(rng, &[Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped]);
+            let process = *pick(rng, &[Process::Fp, Process::Bp, Process::Wu]);
+            StreamSpec { scheme, process, layer, tiling, batch, weight_reuse: reuse }
+        },
+        |spec| {
+            let exact = enumerate_spec(spec);
+            let summ = summarize_spec(spec);
+            for role in [Role::Ifm, Role::Ofm, Role::Wei, Role::Out] {
+                let merged = summarize(&merge_bursts(exact.stream(role).iter().copied()));
+                let got = summ.summary(role);
+                assert_eq!(got.words, merged.words, "{spec:?} {role:?} words");
+                assert_eq!(got.bursts, merged.bursts, "{spec:?} {role:?} bursts");
+            }
+        },
+    );
+}
+
+#[test]
+fn feature_addr_is_bijective_for_all_schemes() {
+    run(
+        "feature bijection",
+        ef_train::util::proptest::default_cases(),
+        |rng| {
+            let tm = *pick(rng, &[2usize, 3, 4]);
+            Features {
+                scheme: *pick(rng, &[Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped]),
+                batch: range(rng, 1, 3),
+                ch: range(rng, 1, 12),
+                h: range(rng, 1, 6),
+                w: range(rng, 1, 6),
+                tm,
+                m_on: tm * range(rng, 1, 3),
+            }
+        },
+        |f| {
+            let mut seen: Vec<u64> = Vec::new();
+            for b in 0..f.batch {
+                for c in 0..f.ch {
+                    for r in 0..f.h {
+                        for col in 0..f.w {
+                            seen.push(f.addr(b, c, r, col));
+                        }
+                    }
+                }
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(
+                seen.len(),
+                f.batch * f.ch * f.h * f.w,
+                "collisions in {f:?}"
+            );
+        },
+    );
+}
+
+#[test]
+fn weight_addr_is_injective_for_all_placements() {
+    run(
+        "weight injection",
+        ef_train::util::proptest::default_cases(),
+        |rng| {
+            let tm = *pick(rng, &[2usize, 4]);
+            Weights {
+                placement: *pick(
+                    rng,
+                    &[
+                        WeightPlacement::Oihw,
+                        WeightPlacement::InferenceTiled,
+                        WeightPlacement::ReshapedTiled,
+                    ],
+                ),
+                m: range(rng, 1, 10),
+                n: range(rng, 1, 10),
+                k: *pick(rng, &[1usize, 3, 5]),
+                tm,
+                tn: tm,
+            }
+        },
+        |w| {
+            let mut seen = Vec::new();
+            for m in 0..w.m {
+                for n in 0..w.n {
+                    for kr in 0..w.k {
+                        for kc in 0..w.k {
+                            seen.push(w.addr(m, n, kr, kc));
+                        }
+                    }
+                }
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len() as u64, w.words(), "collisions in {w:?}");
+        },
+    );
+}
+
+#[test]
+fn fp_streams_cover_tensors_exactly() {
+    run(
+        "FP coverage",
+        ef_train::util::proptest::default_cases() / 2,
+        |rng| {
+            let (layer, tiling, batch, reuse) = random_case(rng);
+            let scheme = *pick(rng, &[Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped]);
+            StreamSpec {
+                scheme,
+                process: Process::Fp,
+                layer,
+                tiling,
+                batch,
+                weight_reuse: reuse,
+            }
+        },
+        |spec| {
+            let exact = enumerate_spec(spec);
+            // OUT writes every output word exactly once per image.
+            let mut out = exact.out.clone();
+            out.sort_unstable();
+            out.dedup();
+            assert_eq!(
+                out.len() as u64,
+                spec.batch as u64 * spec.layer.ofm_words(),
+                "OUT coverage {spec:?}"
+            );
+            // IFM touches every input word (halo re-reads dedup away) —
+            // except when S > K, where the stride legitimately skips
+            // rows/columns between windows.
+            let mut ifm = exact.ifm.clone();
+            ifm.sort_unstable();
+            ifm.dedup();
+            let input_words = spec.batch as u64 * spec.layer.ifm_words();
+            if spec.layer.k >= spec.layer.s {
+                assert_eq!(ifm.len() as u64, input_words, "IFM coverage {spec:?}");
+            } else {
+                assert!(ifm.len() as u64 <= input_words, "IFM overrun {spec:?}");
+            }
+            // WEI touches every weight word.
+            let mut wei = exact.wei.clone();
+            wei.sort_unstable();
+            wei.dedup();
+            assert_eq!(wei.len() as u64, spec.layer.weight_words(), "WEI {spec:?}");
+        },
+    );
+}
+
+#[test]
+fn reshaped_ifm_tiles_are_single_bursts() {
+    // §4.2's headline: after reshaping, intra-tile access is contiguous.
+    run(
+        "reshaped tile contiguity",
+        ef_train::util::proptest::default_cases(),
+        |rng| {
+            let tm = *pick(rng, &[2usize, 4]);
+            let ch = tm * range(rng, 1, 4);
+            let f = Features {
+                scheme: Scheme::Reshaped,
+                batch: range(rng, 1, 2),
+                ch,
+                h: range(rng, 2, 8),
+                w: range(rng, 2, 8),
+                tm,
+                m_on: tm * range(rng, 1, ch / tm),
+            };
+            let tile_c = rng.below(ch / tm) * tm;
+            let r0 = rng.below(f.h);
+            let rows = range(rng, 1, f.h - r0);
+            (f, tile_c, r0, rows)
+        },
+        |(f, c0, r0, rows)| {
+            let addrs = f.granule_addrs(0, *c0, f.tm, *r0, *rows, 0, f.w);
+            let bursts = merge_bursts(addrs);
+            assert_eq!(bursts.len(), 1, "tile fragmented: {f:?} c0={c0} r0={r0}");
+        },
+    );
+}
+
+#[test]
+fn weight_reuse_reduces_weight_traffic_monotonically() {
+    run(
+        "weight reuse monotone",
+        ef_train::util::proptest::default_cases() / 2,
+        |rng| {
+            let (layer, tiling, _, _) = random_case(rng);
+            let batch = range(rng, 2, 4);
+            (layer, tiling, batch)
+        },
+        |(layer, tiling, batch)| {
+            let spec = |reuse| StreamSpec {
+                scheme: Scheme::Reshaped,
+                process: Process::Fp,
+                layer: *layer,
+                tiling: *tiling,
+                batch: *batch,
+                weight_reuse: reuse,
+            };
+            let no = summarize_spec(&spec(false)).summary(Role::Wei);
+            let yes = summarize_spec(&spec(true)).summary(Role::Wei);
+            assert!(yes.words <= no.words, "{layer:?} {tiling:?} b={batch}");
+            assert_eq!(yes.words, layer.weight_words(), "reuse loads once");
+            assert_eq!(no.words, *batch as u64 * layer.weight_words());
+        },
+    );
+}
+
+#[test]
+fn reshaped_total_bursts_never_exceed_baseline() {
+    // The whole point of §4: reshaping cannot fragment more than BCHW
+    // under the same tiling. Restricted to tile-aligned channel counts:
+    // on ragged N the tiled weight blocks legitimately fragment per tap
+    // (holes in the block), which the paper's Tn | N assumption avoids.
+    run(
+        "reshaped <= bchw bursts",
+        ef_train::util::proptest::default_cases() / 2,
+        |rng| {
+            let (mut layer, tiling, batch, _) = random_case(rng);
+            layer.m = layer.m.div_ceil(tiling.tm) * tiling.tm;
+            layer.n = layer.n.div_ceil(tiling.tn) * tiling.tn;
+            let process = *pick(rng, &[Process::Fp, Process::Wu]);
+            (layer, tiling, batch, process)
+        },
+        |(layer, tiling, batch, process)| {
+            let spec = |scheme| StreamSpec {
+                scheme,
+                process: *process,
+                layer: *layer,
+                tiling: *tiling,
+                batch: *batch,
+                weight_reuse: false,
+            };
+            let bchw = summarize_spec(&spec(Scheme::Bchw)).total();
+            let resh = summarize_spec(&spec(Scheme::Reshaped)).total();
+            assert!(
+                resh.bursts <= bchw.bursts,
+                "reshaped {resh:?} vs bchw {bchw:?} for {layer:?} {tiling:?}"
+            );
+        },
+    );
+}

@@ -1,0 +1,185 @@
+//! The Table-6 invariant at property scale: the closed-form performance
+//! model (Eq. 15–27) and the discrete-event simulator must agree within
+//! a modest tolerance across random layer geometries — they are two
+//! independent implementations of the same accelerator.
+
+use ef_train::data::Rng;
+use ef_train::device::{pynq_z1, zcu102};
+use ef_train::layout::streams::StreamSpec;
+use ef_train::layout::{Process, Scheme, Tiling};
+use ef_train::model::perf::conv_latency;
+use ef_train::nets::ConvShape;
+use ef_train::sim::{on_chip_feature_words, simulate_layer};
+use ef_train::util::proptest::{pick, range, run};
+
+fn random_layer(rng: &mut Rng) -> (ConvShape, Tiling) {
+    let t = 16usize;
+    let k = *pick(rng, &[1usize, 3, 5]);
+    let s = range(rng, 1, 2);
+    let r = range(rng, 4, 28);
+    let c = r;
+    // m, n >= 2 tiles: with a single channel tile the paper's closed
+    // form serializes loads against compute (see the note on n below);
+    // BP transposes channels, so the same caveat applies to m.
+    let m = t * range(rng, 2, 8);
+    // n >= 2*Tn: with a single input-channel tile the paper's closed form
+    // (Eq. 15-16) has no `(N/Tn - 1) * t_prod` overlap term and
+    // serializes row-tile loads against compute — a known pessimism of
+    // the published equations (up to ~2x on compute-bound layers; the
+    // paper's own nets only hit n_tiles == 1 on the load-bound AlexNet
+    // conv1, where the equations stay accurate).
+    let n = t * range(rng, 2, 8);
+    let layer = ConvShape::new(m, n, r, c, k, s);
+    // Balanced row tiles like the scheduler produces.
+    let tr = ef_train::model::perf::balanced_rows(r, range(rng, 2, r));
+    let m_on = t * range(rng, 1, m / t);
+    (layer, Tiling::new(t, t, tr, c, m_on))
+}
+
+#[test]
+fn model_tracks_sim_within_tolerance() {
+    let dev = zcu102();
+    let budget = on_chip_feature_words(&dev);
+    run(
+        "model ~ sim",
+        ef_train::util::proptest::default_cases() / 2,
+        |rng| {
+            let (layer, tiling) = random_layer(rng);
+            let process = *pick(rng, &[Process::Fp, Process::Bp, Process::Wu]);
+            let batch = *pick(rng, &[1usize, 2, 4]);
+            (layer, tiling, process, batch)
+        },
+        |(layer, tiling, process, batch)| {
+            let model = conv_latency(layer, tiling, &dev, *process, *batch).cycles;
+            let spec = StreamSpec {
+                scheme: Scheme::Reshaped,
+                process: *process,
+                layer: *layer,
+                tiling: *tiling,
+                batch: *batch,
+                weight_reuse: true,
+            };
+            let sim = simulate_layer(&spec, &dev, 1, budget).accel_cycles;
+            let ratio = model as f64 / sim as f64;
+            assert!(
+                (0.6..1.7).contains(&ratio),
+                "model {model} vs sim {sim} (ratio {ratio:.2}) for {layer:?} \
+                 {tiling:?} {process:?} b={batch}"
+            );
+        },
+    );
+}
+
+#[test]
+fn sim_never_beats_pure_mac_lower_bound() {
+    let dev = zcu102();
+    let budget = on_chip_feature_words(&dev);
+    run(
+        "sim >= MAC bound",
+        ef_train::util::proptest::default_cases() / 2,
+        |rng| {
+            let (layer, tiling) = random_layer(rng);
+            let scheme = *pick(rng, &[Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped]);
+            let process = *pick(rng, &[Process::Fp, Process::Wu]);
+            (layer, tiling, scheme, process)
+        },
+        |(layer, tiling, scheme, process)| {
+            let spec = StreamSpec {
+                scheme: *scheme,
+                process: *process,
+                layer: *layer,
+                tiling: *tiling,
+                batch: 2,
+                weight_reuse: false,
+            };
+            let r = simulate_layer(&spec, &dev, 1, budget);
+            assert!(
+                r.accel_cycles >= r.mac_cycles,
+                "{layer:?} {scheme:?} {process:?}: accel {} < mac {}",
+                r.accel_cycles,
+                r.mac_cycles
+            );
+        },
+    );
+}
+
+#[test]
+fn narrower_dma_is_never_faster() {
+    // PYNQ's 32-bit stream can't beat ZCU102's 128-bit stream.
+    let zcu = zcu102();
+    let pynq = pynq_z1();
+    run(
+        "dma width monotone",
+        ef_train::util::proptest::default_cases() / 4,
+        |rng| random_layer(rng),
+        |(layer, tiling)| {
+            for p in Process::ALL {
+                let z = conv_latency(layer, tiling, &zcu, p, 2).cycles;
+                let q = conv_latency(layer, tiling, &pynq, p, 2).cycles;
+                assert!(q >= z, "{layer:?} {p:?}: pynq {q} < zcu {z}");
+            }
+        },
+    );
+}
+
+#[test]
+fn latency_is_monotone_in_batch() {
+    let dev = zcu102();
+    run(
+        "batch monotone",
+        ef_train::util::proptest::default_cases() / 4,
+        |rng| random_layer(rng),
+        |(layer, tiling)| {
+            for p in Process::ALL {
+                let mut prev = 0u64;
+                for b in [1usize, 2, 4, 8] {
+                    let cur = conv_latency(layer, tiling, &dev, p, b).cycles;
+                    assert!(cur > prev, "{layer:?} {p:?} b={b}: {cur} <= {prev}");
+                    prev = cur;
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn weight_reuse_never_hurts_total_in_sim() {
+    let dev = zcu102();
+    let budget = on_chip_feature_words(&dev);
+    run(
+        "reuse helps sim",
+        ef_train::util::proptest::default_cases() / 4,
+        |rng| {
+            let (layer, tiling) = random_layer(rng);
+            let batch = *pick(rng, &[2usize, 4, 8]);
+            (layer, tiling, batch)
+        },
+        |(layer, tiling, batch)| {
+            // Whole conv-stack story: sum FP+BP+WU.
+            let total = |reuse: bool| -> u64 {
+                Process::ALL
+                    .iter()
+                    .map(|&p| {
+                        let spec = StreamSpec {
+                            scheme: Scheme::Reshaped,
+                            process: p,
+                            layer: *layer,
+                            tiling: *tiling,
+                            batch: *batch,
+                            weight_reuse: reuse,
+                        };
+                        simulate_layer(&spec, &dev, 1, budget).total()
+                    })
+                    .sum()
+            };
+            let no = total(false);
+            let yes = total(true);
+            // Small tolerance: reuse changes pipeline interleaving and can
+            // lose a hair on pathological shapes, but never meaningfully.
+            assert!(
+                yes as f64 <= no as f64 * 1.02,
+                "{layer:?} {tiling:?} b={batch}: reuse {yes} vs {no}"
+            );
+        },
+    );
+}

@@ -1,0 +1,140 @@
+//! Algorithm-1 scheduler invariants across the full (network x device x
+//! batch) grid, plus randomized synthetic networks.
+
+use ef_train::data::Rng;
+use ef_train::layout::Tiling;
+use ef_train::device::{pynq_z1, zcu102, Device};
+use ef_train::model::resource::ResourceModel;
+use ef_train::model::scheduler::{network_training_cycles, pick_tile, schedule};
+use ef_train::nets::{network_by_name, ConvShape, LayerKind, Network, NETWORK_NAMES};
+use ef_train::util::proptest::{pick, range, run};
+
+fn assert_schedule_valid(net: &Network, dev: &Device, batch: usize) {
+    let s = schedule(net, dev, batch);
+    let layers = net.conv_layers();
+    assert_eq!(s.tilings.len(), layers.len());
+    assert_eq!(s.tm, s.tn, "the paper's Tm = Tn constraint");
+    assert!(s.d_conv <= dev.dsps, "DSP budget on {}", dev.name);
+    let rm = ResourceModel::new(dev);
+    for (l, t) in layers.iter().zip(&s.tilings) {
+        assert_eq!(t.tc, l.c, "Tc = C by construction (§4.2)");
+        assert!(t.tr >= 1 && t.tr <= l.r);
+        assert_eq!(t.m_on % s.tm, 0, "M_on must be a multiple of Tm");
+        assert!(t.m_on >= s.tm);
+        // Every layer individually respects the BRAM bound (Eq. 32):
+        // the 75% boundary when feasible, never the hard device capacity
+        // (ImageNet-scale layers on PYNQ-Z1 exceed the boundary even at
+        // Tr = 1 / minimal M_on — the paper never deploys those there).
+        let banks = 2 * (rm.b_ifm(l, t) + rm.b_ofm(l, t) + s.b_wei);
+        let minimal = 2 * (rm.b_ifm(l, &Tiling::new(s.tm, s.tn, 1, l.c, s.tm))
+            + rm.b_ofm(l, &Tiling::new(s.tm, s.tn, 1, l.c, s.tm))
+            + s.b_wei);
+        let bound = ((dev.brams * 3) / 4).max(minimal);
+        assert!(
+            banks <= bound && banks <= dev.brams.max(minimal),
+            "{}: layer {l:?} uses {banks} banks (bound {bound})",
+            dev.name
+        );
+    }
+}
+
+#[test]
+fn zoo_schedules_are_valid_everywhere() {
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).unwrap();
+        for dev in [zcu102(), pynq_z1()] {
+            for batch in [1usize, 8, 128] {
+                assert_schedule_valid(&net, &dev, batch);
+            }
+        }
+    }
+}
+
+#[test]
+fn random_networks_schedule_validly() {
+    run(
+        "random nets schedule",
+        ef_train::util::proptest::default_cases() / 4,
+        |rng| random_net(rng),
+        |net| {
+            assert_schedule_valid(net, &zcu102(), 4);
+        },
+    );
+}
+
+fn random_net(rng: &mut Rng) -> Network {
+    let depth = range(rng, 1, 5);
+    let mut layers = Vec::new();
+    let mut ch = *pick(rng, &[3usize, 16]);
+    let mut map = *pick(rng, &[16usize, 32, 64]);
+    for _ in 0..depth {
+        let m = *pick(rng, &[16usize, 32, 64, 96]);
+        let k = *pick(rng, &[1usize, 3, 5]);
+        layers.push(LayerKind::Conv(ConvShape::new(m, ch, map, map, k, 1)));
+        ch = m;
+        if map >= 8 && rng.below(2) == 1 {
+            map /= 2;
+            layers.push(LayerKind::Pool { ch, r: map, c: map });
+        }
+    }
+    // Leak the name: fine for tests.
+    Network { name: "random", layers }
+}
+
+#[test]
+fn tile_override_vs_rule() {
+    // Published picks are honored; without them the 80% rule binds.
+    assert_eq!(pick_tile(&zcu102()), 16);
+    assert_eq!(pick_tile(&pynq_z1()), 6);
+    run(
+        "80% rule",
+        16,
+        |rng| range(rng, 100, 4000),
+        |&dsps| {
+            let mut dev = zcu102();
+            dev.dsps = dsps;
+            dev.tile_override = None;
+            let t = pick_tile(&dev);
+            assert!(dev.q * t * t <= (dsps * 4) / 5, "dsps={dsps} t={t}");
+            assert!(dev.q * (t + 1) * (t + 1) > (dsps * 4) / 5, "dsps={dsps} t={t}");
+        },
+    );
+}
+
+#[test]
+fn bigger_devices_never_schedule_slower() {
+    run(
+        "device monotone",
+        ef_train::util::proptest::default_cases() / 8,
+        |rng| random_net(rng),
+        |net| {
+            let zcu = zcu102();
+            let pynq = pynq_z1();
+            let sz = schedule(net, &zcu, 4);
+            let sp = schedule(net, &pynq, 4);
+            let cz = network_training_cycles(net, &sz, &zcu, 4);
+            let cp = network_training_cycles(net, &sp, &pynq, 4);
+            assert!(cz <= cp, "{net:?}: zcu {cz} > pynq {cp}");
+        },
+    );
+}
+
+#[test]
+fn schedule_scales_m_on_down_for_dense_layers() {
+    // VGG-16's densest layers cannot keep all weights on-chip: the
+    // scheduler must shrink M_on below M somewhere.
+    let net = network_by_name("vgg16").unwrap();
+    let s = schedule(&net, &zcu102(), 4);
+    let convs = net.conv_layers();
+    let shrunk = convs
+        .iter()
+        .zip(&s.tilings)
+        .any(|(l, t)| t.m_on < l.m);
+    assert!(shrunk, "expected some M_on < M on VGG-16");
+    // ... and the '1X' CNN keeps everything resident.
+    let net = network_by_name("cnn1x").unwrap();
+    let s = schedule(&net, &zcu102(), 4);
+    for (l, t) in net.conv_layers().iter().zip(&s.tilings) {
+        assert!(t.m_on >= l.m, "1X should keep weights resident");
+    }
+}
