@@ -1,100 +1,87 @@
 //! Design-space exploration with the analytic stack (no artifacts
-//! needed): sweep devices, batch sizes, and layouts for any network in
-//! the zoo, and show what the Algorithm-1 scheduler picks and why.
+//! needed), driven by the `ef_train::explore` subsystem: sweep the
+//! (network x device x batch x layout scheme) cross product in parallel,
+//! print each network's Pareto frontier, and show what the shared
+//! stream-summary cache saves when a sweep is repeated.
 //!
-//! Run with: `cargo run --release --example design_explorer [network]`
+//! Run with: `cargo run --release --example design_explorer [networks]`
+//! where `[networks]` is a comma-separated zoo subset
+//! (default: cnn1x,lenet10,alexnet).
 
-use ef_train::device::{pynq_z1, zcu102};
-use ef_train::layout::streams::StreamSpec;
-use ef_train::layout::{Process, Scheme};
+use std::time::Instant;
+
+use ef_train::explore::{run_sweep, scheme_name, SweepConfig};
+use ef_train::layout::cache;
 use ef_train::model::parallelism::equal_budget;
-use ef_train::model::scheduler::{network_conv_training_cycles, schedule};
 use ef_train::nets::network_by_name;
-use ef_train::report::commas;
-use ef_train::sim::{on_chip_feature_words, simulate_layer};
 
-fn main() {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet".into());
-    let net = network_by_name(&name).unwrap_or_else(|| {
-        eprintln!("unknown network `{name}`");
-        std::process::exit(1);
-    });
+fn main() -> ef_train::Result<()> {
+    let nets = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "cnn1x,lenet10,alexnet".into());
+    let cfg = SweepConfig::from_args(&nets, "zcu102,pynq-z1", "4,16", "bchw,bhwc,reshaped")?;
 
-    // 1. What the scheduler picks per device.
-    for dev in [zcu102(), pynq_z1()] {
-        let s = schedule(&net, &dev, 8);
-        println!("== {} on {} (B=8): Tm=Tn={} ==", net.name, dev.name, s.tm);
-        for (i, (l, t)) in net.conv_layers().iter().zip(&s.tilings).enumerate() {
-            println!(
-                "  conv{:<2} [M={:<4} N={:<4} R={:<3} K={}] -> Tr={:<3} Tc={:<3} M_on={}",
-                i + 1, l.m, l.n, l.r, l.k, t.tr, t.tc, t.m_on
-            );
-        }
-        let cycles = network_conv_training_cycles(&net, &s, &dev, 8);
-        let gflops = net.conv_training_flops(8) as f64 / dev.cycles_to_s(cycles) / 1e9;
+    // 1. The parallel sweep + per-network Pareto frontiers.
+    let report = run_sweep(&cfg, true)?;
+    println!("{}", report.summary_table());
+
+    // 2. What the frontier says per network: the best configuration and
+    //    how far the baselines land from it.
+    for (net, idxs) in &report.frontiers {
+        let best = idxs
+            .iter()
+            .map(|&i| &report.points[i])
+            .min_by(|a, b| a.latency_ms_per_image().total_cmp(&b.latency_ms_per_image()))
+            .expect("non-empty frontier");
+        let worst = report
+            .points
+            .iter()
+            .filter(|p| p.point.net == *net)
+            .max_by(|a, b| a.latency_ms_per_image().total_cmp(&b.latency_ms_per_image()))
+            .unwrap();
         println!(
-            "  conv-stack training: {} cycles/batch, {gflops:.2} GFLOPS\n",
-            commas(cycles)
+            "{net}: best = {} B={} {} ({:.3} ms/img, {:.2} GFLOPS); worst swept point \
+             ({} {}) is {:.1}x slower",
+            best.point.device,
+            best.point.batch,
+            scheme_name(best.point.scheme),
+            best.latency_ms_per_image(),
+            best.throughput_gflops,
+            worst.point.device,
+            scheme_name(worst.point.scheme),
+            worst.latency_ms_per_image() / best.latency_ms_per_image(),
         );
     }
 
-    // 2. Throughput vs batch (the paper's channel-parallelism stability).
-    let dev = zcu102();
-    println!("== throughput vs batch on {} ==", dev.name);
-    for b in [1usize, 2, 4, 8, 16] {
-        let s = schedule(&net, &dev, b);
-        let cycles = network_conv_training_cycles(&net, &s, &dev, b);
-        let gflops = net.conv_training_flops(b) as f64 / dev.cycles_to_s(cycles) / 1e9;
-        println!("  B={b:<3} {gflops:.2} GFLOPS");
-    }
+    // 3. Repeat the sweep: every stream summary is already cached, so the
+    //    second pass is nearly free — the same reuse every table/figure
+    //    regeneration now gets.
+    let (h0, m0) = cache::counters();
+    let t0 = Instant::now();
+    run_sweep(&cfg, true)?;
+    let (h1, m1) = cache::counters();
+    println!(
+        "\nsecond sweep: {:.3}s (first: {:.3}s) — cache {} hits / {} new misses",
+        t0.elapsed().as_secs_f64(),
+        report.wall_s,
+        h1 - h0,
+        m1 - m0
+    );
 
-    // 3. Layout ablation on the busiest layer.
-    let layers = net.conv_layers();
-    let busiest = layers
-        .iter()
-        .enumerate()
-        .max_by_key(|(_, l)| l.macs())
-        .map(|(i, _)| i)
-        .unwrap();
-    let sched = schedule(&net, &dev, 4);
-    let budget = on_chip_feature_words(&dev);
-    println!("\n== layout ablation on conv{} (B=4, FP+BP+WU) ==", busiest + 1);
-    for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
-        let mut accel = 0u64;
-        let mut realloc = 0u64;
-        for p in Process::ALL {
-            if busiest == 0 && p == Process::Bp {
-                continue;
+    // 4. Context from §2.3: why channel parallelism underpins every swept
+    //    point (Table 1's argument at the device's PE budget).
+    if let Some(net) = network_by_name(cfg.nets.first().unwrap()) {
+        let busiest = net
+            .conv_layers()
+            .into_iter()
+            .max_by_key(|l| l.macs())
+            .unwrap();
+        println!("\nparallelism levels on {}'s busiest layer (256 PEs):", net.name);
+        for p in equal_budget(256) {
+            for b in [1usize, 128] {
+                println!("  {:?} B={b}: utilization {:.2}", p, p.utilization(&busiest, b));
             }
-            let spec = StreamSpec {
-                scheme,
-                process: p,
-                layer: layers[busiest],
-                tiling: sched.tilings[busiest],
-                batch: 4,
-                weight_reuse: scheme == Scheme::Reshaped,
-            };
-            let r = simulate_layer(&spec, &dev, busiest, budget);
-            accel += r.accel_cycles;
-            realloc += r.realloc_cycles;
-        }
-        println!(
-            "  {scheme:?}: accel {} + realloc {} = {} cycles",
-            commas(accel),
-            commas(realloc),
-            commas(accel + realloc)
-        );
-    }
-
-    // 4. Parallelism-level comparison at the device's PE budget (Table 1).
-    println!("\n== parallelism levels (256 PEs) on the busiest layer ==");
-    for p in equal_budget(256) {
-        for b in [1usize, 128] {
-            println!(
-                "  {:?} B={b}: utilization {:.2}",
-                p,
-                p.utilization(&layers[busiest], b)
-            );
         }
     }
+    Ok(())
 }

@@ -1,0 +1,70 @@
+//! Design-space sweep benchmark: the rayon fan-out vs the serial loop on
+//! an identical cold cache, then a warm second pass demonstrating the
+//! shared stream-summary cache absorbing the whole workload.
+
+use std::time::Instant;
+
+use ef_train::explore::{run_sweep, SweepConfig};
+use ef_train::layout::cache;
+use ef_train::model::perf::reset_latency_memo;
+
+/// Both process-wide memo layers back to cold: the stream-summary cache
+/// and the closed-form latency memo the scheduler leans on.
+fn reset_all_caches() {
+    cache::global().reset();
+    reset_latency_memo();
+}
+
+fn main() {
+    let cfg = SweepConfig::from_args(
+        "cnn1x,lenet10,alexnet",
+        "zcu102,pynq-z1",
+        "4,8",
+        "bchw,bhwc,reshaped",
+    )
+    .expect("valid sweep axes");
+    let n_points = cfg.points().len();
+
+    // Serial sweep, cold caches.
+    reset_all_caches();
+    let t0 = Instant::now();
+    let serial = run_sweep(&cfg, false).expect("serial sweep");
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    // Rayon sweep, cold caches again (fair comparison).
+    reset_all_caches();
+    let t0 = Instant::now();
+    let parallel = run_sweep(&cfg, true).expect("rayon sweep");
+    let parallel_s = t0.elapsed().as_secs_f64();
+
+    // Second rayon pass on the warm cache: stream summaries all hit.
+    let (h0, m0) = cache::counters();
+    let t0 = Instant::now();
+    run_sweep(&cfg, true).expect("warm sweep");
+    let warm_s = t0.elapsed().as_secs_f64();
+    let (h1, m1) = cache::counters();
+    let (warm_hits, warm_misses) = (h1 - h0, m1 - m0);
+
+    println!("design-space sweep: {n_points} points, {} cached specs", cache::global().len());
+    println!("  serial (cold cache):     {serial_s:>8.3}s");
+    println!(
+        "  rayon  (cold cache):     {parallel_s:>8.3}s  ({:.2}x vs serial)",
+        serial_s / parallel_s
+    );
+    println!(
+        "  rayon  (warm cache):     {warm_s:>8.3}s  ({:.2}x vs cold, {warm_hits} hits / \
+         {warm_misses} misses)",
+        parallel_s / warm_s
+    );
+
+    assert_eq!(serial.points.len(), parallel.points.len());
+    assert!(
+        serial
+            .points
+            .iter()
+            .zip(&parallel.points)
+            .all(|(a, b)| a.cycles == b.cycles),
+        "serial and rayon sweeps must price identically"
+    );
+    assert!(warm_hits > 0, "second pass must hit the stream cache");
+}

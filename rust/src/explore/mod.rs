@@ -1,0 +1,506 @@
+//! Parallel design-space exploration — the §5 scheduling tool at
+//! production scale.
+//!
+//! The paper's Algorithm 1 answers "what is the best configuration of
+//! *one* network on *one* device?". Deployment-scale questions (which
+//! board to buy, which batch size to run, what the baselines would have
+//! cost — the perf4sight/LoCO-PDA toolflow questions of PAPERS.md) need
+//! the full cross product of the [`crate::nets`] zoo, the
+//! [`crate::device`] zoo, batch sizes, and layout [`Scheme`]s. This
+//! module sweeps that grid:
+//!
+//! * every [`DesignPoint`] is priced through `schedule()` + the
+//!   discrete-event simulator (plus aux-layer streaming and the
+//!   [`crate::metrics`] power model) into a [`PricedPoint`];
+//! * pricing fans out over rayon ([`sweep_parallel`]); the shared
+//!   [`crate::layout::cache`] deduplicates stream summaries across
+//!   points, so schemes/devices revisiting a layer pay once;
+//! * per network, the (latency/image, BRAM, energy/image) Pareto
+//!   frontier is extracted ([`pareto`]) and the whole report serializes
+//!   to JSON through [`crate::util::json`].
+//!
+//! Driven by `ef-train explore`, `examples/design_explorer.rs`, and
+//! `benches/explore.rs` (rayon-vs-serial + cache-hit evidence).
+
+pub mod pareto;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::anyhow;
+use rayon::prelude::*;
+
+use crate::device::device_by_name;
+use crate::layout::streams::StreamSpec;
+use crate::layout::{Process, Scheme};
+use crate::model::perf::aux_latency;
+use crate::model::resource::ResourceModel;
+use crate::model::scheduler::schedule;
+use crate::nets::network_by_name;
+use crate::report::Table;
+use crate::sim::{on_chip_feature_words, simulate_layer};
+use crate::util::json::Json;
+
+/// Canonical lowercase name of a layout scheme (CLI + JSON currency).
+pub fn scheme_name(s: Scheme) -> &'static str {
+    match s {
+        Scheme::Bchw => "bchw",
+        Scheme::Bhwc => "bhwc",
+        Scheme::Reshaped => "reshaped",
+    }
+}
+
+pub fn scheme_by_name(name: &str) -> Option<Scheme> {
+    match name.to_ascii_lowercase().as_str() {
+        "bchw" => Some(Scheme::Bchw),
+        "bhwc" => Some(Scheme::Bhwc),
+        "reshaped" | "ef" | "ef-train" => Some(Scheme::Reshaped),
+        _ => None,
+    }
+}
+
+/// One coordinate of the sweep grid.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub net: String,
+    pub device: String,
+    pub batch: usize,
+    pub scheme: Scheme,
+}
+
+/// A design point priced end to end (conv stack simulated under the
+/// point's layout, aux layers streamed, resources/power modeled).
+#[derive(Debug, Clone)]
+pub struct PricedPoint {
+    pub point: DesignPoint,
+    /// The scheduler's `Tm = Tn` pick for the (network, device, batch).
+    pub tm: usize,
+    /// Total training cycles per batch (acceleration + host realloc).
+    pub cycles: u64,
+    /// Host-side reallocation share of `cycles` (zero for reshaped).
+    pub realloc_cycles: u64,
+    pub latency_ms: f64,
+    pub throughput_gflops: f64,
+    pub used_dsps: usize,
+    pub used_brams: usize,
+    pub power_w: f64,
+    /// Energy per batch in millijoules.
+    pub energy_mj: f64,
+}
+
+impl PricedPoint {
+    pub fn latency_ms_per_image(&self) -> f64 {
+        self.latency_ms / self.point.batch as f64
+    }
+
+    pub fn energy_mj_per_image(&self) -> f64 {
+        self.energy_mj / self.point.batch as f64
+    }
+
+    /// The frontier objective vector: all minimized.
+    fn objectives(&self) -> Vec<f64> {
+        vec![
+            self.latency_ms_per_image(),
+            self.used_brams as f64,
+            self.energy_mj_per_image(),
+        ]
+    }
+}
+
+/// Price one design point. Safe to call from any thread; all stream
+/// summaries go through the shared [`crate::layout::cache`].
+pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
+    let net = network_by_name(&p.net)
+        .ok_or_else(|| anyhow!("unknown network `{}` in sweep", p.net))?;
+    let dev = device_by_name(&p.device)
+        .ok_or_else(|| anyhow!("unknown device `{}` in sweep", p.device))?;
+    let sched = schedule(&net, &dev, p.batch);
+    let layers = net.conv_layers();
+    let budget = on_chip_feature_words(&dev);
+
+    let mut cycles = 0u64;
+    let mut realloc = 0u64;
+    for (i, (l, t)) in layers.iter().zip(&sched.tilings).enumerate() {
+        for process in Process::ALL {
+            if i == 0 && process == Process::Bp {
+                continue; // layer 1 produces no input gradient
+            }
+            let spec = StreamSpec {
+                scheme: p.scheme,
+                process,
+                layer: *l,
+                tiling: *t,
+                batch: p.batch,
+                weight_reuse: p.scheme == Scheme::Reshaped,
+            };
+            let r = simulate_layer(&spec, &dev, i, budget);
+            cycles += r.total();
+            realloc += r.realloc_cycles;
+        }
+    }
+    for kind in &net.layers {
+        cycles += aux_latency(kind, &dev, p.batch);
+    }
+
+    let rm = ResourceModel::new(&dev);
+    let conv = rm.conv_resources(&layers, &sched.tilings);
+    let (used_dsps, used_brams) = rm.end_to_end_utilization(&net, &conv);
+    let secs = dev.cycles_to_s(cycles);
+    let power_w = dev.power_w(used_dsps, used_brams);
+    Ok(PricedPoint {
+        point: p.clone(),
+        tm: sched.tm,
+        cycles,
+        realloc_cycles: realloc,
+        latency_ms: secs * 1e3,
+        throughput_gflops: net.conv_training_flops(p.batch) as f64 / secs / 1e9,
+        used_dsps,
+        used_brams,
+        power_w,
+        energy_mj: power_w * secs * 1e3,
+    })
+}
+
+/// The sweep grid: the cross product of its four axes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepConfig {
+    pub nets: Vec<String>,
+    pub devices: Vec<String>,
+    pub batches: Vec<usize>,
+    pub schemes: Vec<Scheme>,
+}
+
+impl SweepConfig {
+    /// The CLI default: every zoo network that fits a quick sweep, both
+    /// devices, two batch regimes, all three layouts.
+    pub fn default_sweep() -> Self {
+        Self {
+            nets: ["cnn1x", "lenet10", "alexnet"].map(String::from).to_vec(),
+            devices: ["zcu102", "pynq-z1"].map(String::from).to_vec(),
+            batches: vec![4, 16],
+            schemes: vec![Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped],
+        }
+    }
+
+    /// The axes as the comma-separated strings [`Self::from_args`]
+    /// accepts: `[nets, devices, batches, schemes]`. Lets the CLI
+    /// surface [`Self::default_sweep`] as its flag defaults without
+    /// re-spelling the axis lists.
+    pub fn axes_csv(&self) -> [String; 4] {
+        [
+            self.nets.join(","),
+            self.devices.join(","),
+            self.batches.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(","),
+            self.schemes
+                .iter()
+                .map(|&s| scheme_name(s).to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        ]
+    }
+
+    /// Parse comma-separated axis lists, validating every name eagerly
+    /// so a bad sweep fails before any pricing starts.
+    pub fn from_args(
+        nets: &str,
+        devices: &str,
+        batches: &str,
+        schemes: &str,
+    ) -> crate::Result<Self> {
+        let split = |s: &str| -> Vec<String> {
+            s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+        };
+        let nets = split(nets);
+        let devices = split(devices);
+        for n in &nets {
+            network_by_name(n).ok_or_else(|| anyhow!("unknown network `{n}`"))?;
+        }
+        for d in &devices {
+            device_by_name(d).ok_or_else(|| anyhow!("unknown device `{d}`"))?;
+        }
+        let batches = split(batches)
+            .iter()
+            .map(|b| b.parse::<usize>().map_err(|_| anyhow!("bad batch size `{b}`")))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let schemes = split(schemes)
+            .iter()
+            .map(|s| scheme_by_name(s).ok_or_else(|| anyhow!("unknown scheme `{s}`")))
+            .collect::<crate::Result<Vec<_>>>()?;
+        if nets.is_empty() || devices.is_empty() || batches.is_empty() || schemes.is_empty() {
+            return Err(anyhow!("every sweep axis needs at least one value"));
+        }
+        Ok(Self { nets, devices, batches, schemes })
+    }
+
+    /// Materialize the cross product.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut out =
+            Vec::with_capacity(self.nets.len() * self.devices.len() * self.batches.len() * self.schemes.len());
+        for net in &self.nets {
+            for device in &self.devices {
+                for &batch in &self.batches {
+                    for &scheme in &self.schemes {
+                        out.push(DesignPoint {
+                            net: net.clone(),
+                            device: device.clone(),
+                            batch,
+                            scheme,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Price every point on the calling thread, in grid order.
+pub fn sweep_serial(points: &[DesignPoint]) -> crate::Result<Vec<PricedPoint>> {
+    points.iter().map(price_point).collect()
+}
+
+/// Price every point across the rayon pool. Results keep grid order.
+pub fn sweep_parallel(points: &[DesignPoint]) -> crate::Result<Vec<PricedPoint>> {
+    points.par_iter().map(price_point).collect()
+}
+
+/// A finished sweep: priced points plus per-network Pareto frontiers.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<PricedPoint>,
+    /// Per network: indices into `points` on the (latency/image, BRAM,
+    /// energy/image) frontier.
+    pub frontiers: BTreeMap<String, Vec<usize>>,
+    pub wall_s: f64,
+    pub parallel: bool,
+}
+
+fn compute_frontiers(points: &[PricedPoint]) -> BTreeMap<String, Vec<usize>> {
+    let mut by_net: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, p) in points.iter().enumerate() {
+        by_net.entry(p.point.net.clone()).or_default().push(i);
+    }
+    by_net
+        .into_iter()
+        .map(|(net, idxs)| {
+            let rows: Vec<Vec<f64>> = idxs.iter().map(|&i| points[i].objectives()).collect();
+            let frontier = pareto::frontier_indices(&rows)
+                .into_iter()
+                .map(|local| idxs[local])
+                .collect();
+            (net, frontier)
+        })
+        .collect()
+}
+
+/// Run the whole sweep and extract frontiers.
+pub fn run_sweep(cfg: &SweepConfig, parallel: bool) -> crate::Result<SweepReport> {
+    let points = cfg.points();
+    let t0 = Instant::now();
+    let priced = if parallel { sweep_parallel(&points)? } else { sweep_serial(&points)? };
+    let frontiers = compute_frontiers(&priced);
+    Ok(SweepReport {
+        points: priced,
+        frontiers,
+        wall_s: t0.elapsed().as_secs_f64(),
+        parallel,
+    })
+}
+
+impl SweepReport {
+    /// Is point `i` on its network's frontier?
+    pub fn on_frontier(&self, i: usize) -> bool {
+        self.frontiers
+            .get(&self.points[i].point.net)
+            .map(|f| f.contains(&i))
+            .unwrap_or(false)
+    }
+
+    /// The lowest-cycle point for a (network, device) pair, if swept.
+    pub fn best_for(&self, net: &str, device: &str) -> Option<&PricedPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.point.net == net && p.point.device == device)
+            .min_by_key(|p| p.cycles)
+    }
+
+    /// Frontier summary as a printable [`Table`].
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Design-space frontier: {} points in {:.2}s ({})",
+                self.points.len(),
+                self.wall_s,
+                if self.parallel { "rayon" } else { "serial" }
+            ),
+            &[
+                "Net", "Device", "B", "Scheme", "Tm", "ms/img", "GFLOPS", "DSPs", "BRAMs",
+                "W", "mJ/img",
+            ],
+        );
+        for idxs in self.frontiers.values() {
+            for &i in idxs {
+                let p = &self.points[i];
+                t.push(vec![
+                    p.point.net.clone(),
+                    p.point.device.clone(),
+                    p.point.batch.to_string(),
+                    scheme_name(p.point.scheme).to_string(),
+                    p.tm.to_string(),
+                    format!("{:.3}", p.latency_ms_per_image()),
+                    format!("{:.2}", p.throughput_gflops),
+                    p.used_dsps.to_string(),
+                    p.used_brams.to_string(),
+                    format!("{:.2}", p.power_w),
+                    format!("{:.3}", p.energy_mj_per_image()),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Serialize the full report (every point + frontier indices) to
+    /// JSON via [`crate::util::json`].
+    pub fn to_json(&self) -> Json {
+        let point_json = |(i, p): (usize, &PricedPoint)| -> Json {
+            let mut m = BTreeMap::new();
+            m.insert("net".into(), Json::Str(p.point.net.clone()));
+            m.insert("device".into(), Json::Str(p.point.device.clone()));
+            m.insert("batch".into(), Json::Num(p.point.batch as f64));
+            m.insert("scheme".into(), Json::Str(scheme_name(p.point.scheme).into()));
+            m.insert("tm".into(), Json::Num(p.tm as f64));
+            m.insert("cycles".into(), Json::Num(p.cycles as f64));
+            m.insert("realloc_cycles".into(), Json::Num(p.realloc_cycles as f64));
+            m.insert("latency_ms".into(), Json::Num(p.latency_ms));
+            m.insert("latency_ms_per_image".into(), Json::Num(p.latency_ms_per_image()));
+            m.insert("throughput_gflops".into(), Json::Num(p.throughput_gflops));
+            m.insert("dsps".into(), Json::Num(p.used_dsps as f64));
+            m.insert("brams".into(), Json::Num(p.used_brams as f64));
+            m.insert("power_w".into(), Json::Num(p.power_w));
+            m.insert("energy_mj".into(), Json::Num(p.energy_mj));
+            m.insert("energy_mj_per_image".into(), Json::Num(p.energy_mj_per_image()));
+            m.insert("pareto".into(), Json::Bool(self.on_frontier(i)));
+            Json::Obj(m)
+        };
+        let mut root = BTreeMap::new();
+        root.insert(
+            "points".into(),
+            Json::Arr(self.points.iter().enumerate().map(point_json).collect()),
+        );
+        root.insert(
+            "frontiers".into(),
+            Json::Obj(
+                self.frontiers
+                    .iter()
+                    .map(|(net, idxs)| {
+                        (
+                            net.clone(),
+                            Json::Arr(idxs.iter().map(|&i| Json::Num(i as f64)).collect()),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert("wall_s".into(), Json::Num(self.wall_s));
+        root.insert("parallel".into(), Json::Bool(self.parallel));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,reshaped").unwrap()
+    }
+
+    #[test]
+    fn cross_product_has_expected_size_and_order() {
+        let cfg = SweepConfig::from_args("cnn1x,lenet10", "zcu102,pynq-z1", "2,8", "reshaped")
+            .unwrap();
+        let points = cfg.points();
+        assert_eq!(points.len(), 2 * 2 * 2);
+        assert_eq!(points[0].net, "cnn1x");
+        assert_eq!(points.last().unwrap().net, "lenet10");
+    }
+
+    #[test]
+    fn default_sweep_round_trips_through_its_csv_axes() {
+        let def = SweepConfig::default_sweep();
+        let [nets, devices, batches, schemes] = def.axes_csv();
+        let reparsed = SweepConfig::from_args(&nets, &devices, &batches, &schemes).unwrap();
+        assert_eq!(reparsed, def);
+        assert!(def.points().len() >= 3 * 2 * 2, "default sweep meets the 3x2x2 floor");
+    }
+
+    #[test]
+    fn bad_axis_values_fail_eagerly() {
+        assert!(SweepConfig::from_args("nope", "zcu102", "4", "reshaped").is_err());
+        assert!(SweepConfig::from_args("cnn1x", "stratix", "4", "reshaped").is_err());
+        assert!(SweepConfig::from_args("cnn1x", "zcu102", "four", "reshaped").is_err());
+        assert!(SweepConfig::from_args("cnn1x", "zcu102", "4", "nchw").is_err());
+        assert!(SweepConfig::from_args("", "zcu102", "4", "reshaped").is_err());
+    }
+
+    #[test]
+    fn serial_and_parallel_sweeps_agree() {
+        let points = tiny_cfg().points();
+        let a = sweep_serial(&points).unwrap();
+        let b = sweep_parallel(&points).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.point, y.point);
+            assert_eq!(x.cycles, y.cycles);
+            assert_eq!(x.used_brams, y.used_brams);
+            assert!((x.energy_mj - y.energy_mj).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reshaped_dominates_bchw_on_the_same_coordinates() {
+        // Same net/device/batch: identical resources, so the cheaper
+        // scheme dominates outright and BCHW cannot be on the frontier.
+        let report = run_sweep(&tiny_cfg(), true).unwrap();
+        let resh = report
+            .points
+            .iter()
+            .find(|p| p.point.scheme == Scheme::Reshaped)
+            .unwrap();
+        let bchw = report
+            .points
+            .iter()
+            .find(|p| p.point.scheme == Scheme::Bchw)
+            .unwrap();
+        assert!(resh.cycles < bchw.cycles, "reshaping must win");
+        assert_eq!(resh.realloc_cycles, 0);
+        assert!(bchw.realloc_cycles > 0);
+        let frontier = &report.frontiers["cnn1x"];
+        assert!(frontier
+            .iter()
+            .all(|&i| report.points[i].point.scheme == Scheme::Reshaped));
+    }
+
+    #[test]
+    fn report_serializes_and_reparses() {
+        let report = run_sweep(&tiny_cfg(), false).unwrap();
+        let text = report.to_json().to_string();
+        let v = Json::parse(&text).unwrap();
+        let pts = v.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), report.points.len());
+        assert!(v.get("frontiers").and_then(|f| f.get("cnn1x")).is_some());
+        let cycles = pts[0].get("cycles").and_then(|c| c.as_f64()).unwrap();
+        assert_eq!(cycles as u64, report.points[0].cycles);
+    }
+
+    #[test]
+    fn best_for_matches_min_cycles() {
+        let report = run_sweep(&tiny_cfg(), true).unwrap();
+        let best = report.best_for("cnn1x", "zcu102").unwrap();
+        assert!(report
+            .points
+            .iter()
+            .all(|p| best.cycles <= p.cycles));
+        assert!(report.best_for("cnn1x", "pynq-z1").is_none());
+    }
+}

@@ -1,0 +1,76 @@
+//! Pareto-dominance over minimization objectives.
+//!
+//! The explorer's objective vectors are small (latency/image, BRAM
+//! banks, energy/image), and sweep sizes are in the tens to thousands,
+//! so the O(n²) pairwise frontier is the right tool — no tree machinery.
+
+/// `a` dominates `b` when it is no worse in every objective and strictly
+/// better in at least one (all objectives minimized).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated rows, in input order. Ties (identical
+/// rows) are all kept: neither dominates the other.
+pub fn frontier_indices(rows: &[Vec<f64>]) -> Vec<usize> {
+    (0..rows.len())
+        .filter(|&i| {
+            !rows
+                .iter()
+                .enumerate()
+                .any(|(j, other)| j != i && dominates(other, &rows[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]), "equal rows don't dominate");
+        assert!(!dominates(&[1.0, 4.0], &[2.0, 3.0]), "trade-offs don't dominate");
+        assert!(!dominates(&[2.0, 3.0], &[1.0, 4.0]));
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_drops_dominated() {
+        let rows = vec![
+            vec![1.0, 10.0], // frontier (best first objective)
+            vec![5.0, 5.0],  // frontier (trade-off)
+            vec![10.0, 1.0], // frontier (best second objective)
+            vec![6.0, 6.0],  // dominated by [5, 5]
+            vec![1.0, 10.0], // duplicate of row 0 — kept
+        ];
+        assert_eq!(frontier_indices(&rows), vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn single_point_is_its_own_frontier() {
+        assert_eq!(frontier_indices(&[vec![3.0, 3.0, 3.0]]), vec![0]);
+        assert!(frontier_indices(&[]).is_empty());
+    }
+
+    #[test]
+    fn three_objectives() {
+        let rows = vec![
+            vec![1.0, 1.0, 9.0],
+            vec![1.0, 1.0, 1.0], // dominates row 0
+            vec![9.0, 0.5, 9.0], // trade-off on objective 2
+        ];
+        assert_eq!(frontier_indices(&rows), vec![1, 2]);
+    }
+}

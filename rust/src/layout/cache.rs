@@ -1,0 +1,206 @@
+//! Concurrency-safe memoized stream summaries and cost traces.
+//!
+//! Every table, figure, scheduler refinement, and simulation ultimately
+//! reduces a [`StreamSpec`] to the same two artifacts: per-channel
+//! [`StreamSummary`]s (the analytic burst/word counts) and the
+//! per-tile-iteration cost trace the discrete-event simulator consumes.
+//! Before this cache each caller re-drove the loop schedule from scratch
+//! — `rust/benches/hotpath.rs` notes those constants dominate the whole
+//! report layer. [`stream_stats`] now drives each distinct spec **once**
+//! (a single pass feeding both visitors), stores the result in a sharded
+//! [`ShardedMemo`], and hands out `Arc`s — safe to share across the
+//! rayon workers of [`crate::explore`].
+
+use std::sync::{Arc, OnceLock};
+
+use super::address::{Features, Weights};
+use super::streams::{
+    drive, CostVisitor, FeatGranule, IterCost, StreamSpec, SummaryVisitor, Visitor,
+};
+use super::Role;
+use crate::dma::StreamSummary;
+use crate::util::memo::ShardedMemo;
+
+/// The cached reduction of one [`StreamSpec`]: channel summaries plus
+/// the simulator's iteration cost trace.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub ifm: StreamSummary,
+    pub ofm: StreamSummary,
+    pub wei: StreamSummary,
+    pub out: StreamSummary,
+    /// Per-tile-iteration costs, shared with every simulation of the spec.
+    pub iters: Arc<Vec<IterCost>>,
+}
+
+impl StreamStats {
+    pub fn summary(&self, role: Role) -> StreamSummary {
+        match role {
+            Role::Ifm => self.ifm,
+            Role::Ofm => self.ofm,
+            Role::Wei => self.wei,
+            Role::Out => self.out,
+        }
+    }
+
+    pub fn total(&self) -> StreamSummary {
+        [Role::Ifm, Role::Ofm, Role::Wei, Role::Out]
+            .into_iter()
+            .fold(StreamSummary::default(), |acc, r| acc.merge(self.summary(r)))
+    }
+}
+
+/// Feeds one schedule traversal to the summary and cost visitors at once
+/// — halves the miss cost versus running `summarize_spec` and
+/// `costs_for_spec` back to back.
+struct BothVisitor {
+    summary: SummaryVisitor,
+    cost: CostVisitor,
+}
+
+impl Visitor for BothVisitor {
+    fn begin_iter(&mut self, compute_cycles: u64) {
+        self.summary.begin_iter(compute_cycles);
+        self.cost.begin_iter(compute_cycles);
+    }
+
+    fn feature(&mut self, role: Role, f: &Features, g: FeatGranule) {
+        self.summary.feature(role, f, g);
+        self.cost.feature(role, f, g);
+    }
+
+    fn weight_tile(&mut self, role: Role, w: &Weights, to: usize, ti: usize) {
+        self.summary.weight_tile(role, w, to, ti);
+        self.cost.weight_tile(role, w, to, ti);
+    }
+
+    fn weight_group(&mut self, role: Role, w: &Weights, m0: usize, m_on: usize) {
+        self.summary.weight_group(role, w, m0, m_on);
+        self.cost.weight_group(role, w, m0, m_on);
+    }
+}
+
+fn compute_stats(spec: &StreamSpec) -> StreamStats {
+    let mut v = BothVisitor { summary: SummaryVisitor::default(), cost: CostVisitor::default() };
+    drive(spec, &mut v);
+    StreamStats {
+        ifm: v.summary.summary(Role::Ifm),
+        ofm: v.summary.summary(Role::Ofm),
+        wei: v.summary.summary(Role::Wei),
+        out: v.summary.summary(Role::Out),
+        iters: Arc::new(v.cost.iters),
+    }
+}
+
+/// The process-wide stream cache.
+pub struct StreamCache {
+    memo: ShardedMemo<StreamSpec, Arc<StreamStats>>,
+}
+
+impl StreamCache {
+    pub fn new() -> Self {
+        Self { memo: ShardedMemo::new() }
+    }
+
+    pub fn stats_for(&self, spec: &StreamSpec) -> Arc<StreamStats> {
+        self.memo.get_or_compute(spec, || Arc::new(compute_stats(spec)))
+    }
+
+    /// `(hits, misses)` since construction or the last [`Self::reset`].
+    pub fn counters(&self) -> (u64, u64) {
+        self.memo.counters()
+    }
+
+    pub fn len(&self) -> usize {
+        self.memo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.memo.is_empty()
+    }
+
+    pub fn reset(&self) {
+        self.memo.reset()
+    }
+}
+
+impl Default for StreamCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The global cache shared by the sim, report, and explore layers.
+pub fn global() -> &'static StreamCache {
+    static GLOBAL: OnceLock<StreamCache> = OnceLock::new();
+    GLOBAL.get_or_init(StreamCache::new)
+}
+
+/// Cached equivalent of running `summarize_spec` + `costs_for_spec`.
+pub fn stream_stats(spec: &StreamSpec) -> Arc<StreamStats> {
+    global().stats_for(spec)
+}
+
+/// Global cache `(hits, misses)` counters.
+pub fn counters() -> (u64, u64) {
+    global().counters()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::streams::{costs_for_spec, summarize_spec};
+    use crate::layout::{Process, Scheme, Tiling};
+    use crate::nets::ConvShape;
+
+    fn spec(scheme: Scheme, process: Process, batch: usize) -> StreamSpec {
+        StreamSpec {
+            scheme,
+            process,
+            layer: ConvShape::new(8, 4, 6, 6, 3, 1),
+            tiling: Tiling::new(2, 2, 3, 6, 4),
+            batch,
+            weight_reuse: scheme == Scheme::Reshaped,
+        }
+    }
+
+    #[test]
+    fn cached_stats_match_direct_visitors() {
+        for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
+            for process in Process::ALL {
+                let s = spec(scheme, process, 2);
+                let cache = StreamCache::new();
+                let got = cache.stats_for(&s);
+                let summ = summarize_spec(&s);
+                for role in [Role::Ifm, Role::Ofm, Role::Wei, Role::Out] {
+                    assert_eq!(got.summary(role), summ.summary(role), "{scheme:?} {process:?}");
+                }
+                assert_eq!(got.total(), summ.total());
+                assert_eq!(*got.iters, costs_for_spec(&s).iters, "{scheme:?} {process:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares() {
+        let cache = StreamCache::new();
+        let s = spec(Scheme::Reshaped, Process::Fp, 2);
+        let a = cache.stats_for(&s);
+        let b = cache.stats_for(&s);
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the cached Arc");
+        assert_eq!(cache.counters(), (1, 1));
+        assert_eq!(cache.len(), 1);
+        cache.reset();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn global_cache_accumulates_hits() {
+        let s = spec(Scheme::Bchw, Process::Wu, 3);
+        let (h0, _) = counters();
+        let _ = stream_stats(&s);
+        let _ = stream_stats(&s);
+        let (h1, _) = counters();
+        assert!(h1 > h0, "second identical lookup must hit");
+    }
+}

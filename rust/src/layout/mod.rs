@@ -19,6 +19,7 @@
 //! (`rust/tests/layout_properties.rs`) pin the two against each other.
 
 pub mod address;
+pub mod cache;
 pub mod realloc;
 pub mod streams;
 
@@ -66,7 +67,7 @@ pub enum Role {
 
 /// Per-layer tile configuration (paper Table 2's `Tm, Tn, Tr^i, Tc^i,
 /// M^i_on`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Tiling {
     pub tm: usize,
     pub tn: usize,

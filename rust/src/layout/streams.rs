@@ -40,7 +40,11 @@ pub trait Visitor {
 }
 
 /// Full specification of one layer-process traversal.
-#[derive(Debug, Clone, Copy)]
+///
+/// `Hash`/`Eq` make the spec the key of the concurrency-safe result
+/// cache in [`crate::layout::cache`]: two equal specs produce identical
+/// streams, so their summaries and cost traces are shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StreamSpec {
     pub scheme: Scheme,
     pub process: Process,
@@ -775,7 +779,7 @@ pub struct CostVisitor {
 }
 
 /// Traffic of one DMA channel within one tile iteration.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct ChanCost {
     pub bursts: u64,
     pub words: u64,
@@ -797,7 +801,7 @@ impl ChanCost {
 /// independent and run in parallel; the pipeline takes the max of the
 /// load-side channels (IFM/OFM/WEI) against compute, and streams OUT
 /// through the store stage.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct IterCost {
     pub compute: u64,
     pub ifm: ChanCost,

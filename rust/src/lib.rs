@@ -19,12 +19,26 @@
 //!   the AOT-lowered JAX/Pallas training graphs from `artifacts/` and an
 //!   online-adaptation coordinator ([`coordinator`], [`train`]) that
 //!   actually trains the paper's '1X' CNN on streaming data, with loss
-//!   curves reproducing Fig. 20.
+//!   curves reproducing Fig. 20. (PJRT execution needs the vendored
+//!   `xla` crate and is gated behind the off-by-default `pjrt` feature;
+//!   without it the runtime is a type-compatible stub.)
+//!
+//! On top of the analytic half sits the **design-space explorer**
+//! ([`explore`]): a rayon-parallel sweep of the full (network x device x
+//! batch x layout scheme) cross product that prices every point through
+//! the Algorithm-1 scheduler and the discrete-event simulator, extracts
+//! per-network Pareto frontiers over (latency/image, BRAM, energy/image),
+//! and emits JSON reports (`ef-train explore`). Its hot path — reducing a
+//! [`layout::streams::StreamSpec`] to burst summaries and cost traces —
+//! is memoized in the concurrency-safe [`layout::cache`], which the sim
+//! and report layers share, so the paper-reproduction paths reuse the
+//! explorer's work (and vice versa) for free.
 
 pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod dma;
+pub mod explore;
 pub mod layout;
 pub mod metrics;
 pub mod model;

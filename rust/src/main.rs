@@ -7,6 +7,8 @@
 use ef_train::coordinator::Coordinator;
 use ef_train::data::Dataset;
 use ef_train::device::{device_by_name, zcu102};
+use ef_train::explore;
+use ef_train::layout::cache;
 use ef_train::model::scheduler::{network_training_cycles, schedule};
 use ef_train::nets::{network_by_name, NETWORK_NAMES};
 use ef_train::report::{ablations, commas, figures, tables};
@@ -23,6 +25,8 @@ USAGE:
   ef-train report
   ef-train ablate
   ef-train schedule [--net NET] [--device zcu102|pynq-z1] [--batch N]
+  ef-train explore [--nets A,B] [--devices D,E] [--batches N,M]
+                   [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
@@ -30,11 +34,15 @@ GLOBAL:
   --artifacts DIR   artifacts directory (default: artifacts)
 
 Networks: cnn1x, lenet10, alexnet, vgg16, vgg16_bn (train/adapt need
-AOT artifacts, available for cnn1x and lenet10 by default).";
+AOT artifacts, available for cnn1x and lenet10 by default).
+
+`explore` sweeps the (network x device x batch x scheme) cross product
+in parallel, prints the per-network Pareto frontier (latency/image,
+BRAM, energy/image), and writes the full priced grid as JSON.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
-    "max-steps", "shift",
+    "max-steps", "shift", "nets", "devices", "batches", "schemes", "out",
 ];
 
 fn main() {
@@ -126,6 +134,31 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 secs * 1e3,
                 network.training_flops(batch) as f64 / secs / 1e9
             );
+        }
+        Some("explore") => {
+            let [nets_d, devices_d, batches_d, schemes_d] =
+                explore::SweepConfig::default_sweep().axes_csv();
+            let cfg = explore::SweepConfig::from_args(
+                &args.flag_or("nets", &nets_d),
+                &args.flag_or("devices", &devices_d),
+                &args.flag_or("batches", &batches_d),
+                &args.flag_or("schemes", &schemes_d),
+            )?;
+            let parallel = !args.has("serial");
+            let report = explore::run_sweep(&cfg, parallel)?;
+            println!("{}", report.summary_table());
+            let (hits, misses) = cache::counters();
+            println!(
+                "swept {} design points in {:.2}s ({}); stream cache: {} hits / {} misses",
+                report.points.len(),
+                report.wall_s,
+                if parallel { "rayon" } else { "serial" },
+                hits,
+                misses
+            );
+            let out = args.flag_or("out", "explore_report.json");
+            std::fs::write(&out, report.to_json().to_string())?;
+            println!("wrote {out}");
         }
         Some("train") => {
             let net = args.flag_or("net", "cnn1x");

@@ -209,6 +209,56 @@ pub fn conv_latency(
     LatencyBreakdown { cycles, mac_cycles }
 }
 
+/// Memo key for [`conv_latency_cached`]: the closed form reads the
+/// device only through `t_start` and the DMA word width, so those two
+/// numbers (not the whole [`Device`]) identify the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct LatencyKey {
+    layer: ConvShape,
+    tiling: Tiling,
+    process: Process,
+    batch: usize,
+    t_start: u64,
+    p_words: u64,
+}
+
+static LATENCY_MEMO: std::sync::OnceLock<
+    crate::util::memo::ShardedMemo<LatencyKey, LatencyBreakdown>,
+> = std::sync::OnceLock::new();
+
+fn latency_memo() -> &'static crate::util::memo::ShardedMemo<LatencyKey, LatencyBreakdown> {
+    LATENCY_MEMO.get_or_init(crate::util::memo::ShardedMemo::new)
+}
+
+/// Memoized [`conv_latency`]. One `schedule()` run evaluates the closed
+/// form thousands of times across its `Tr` search, and the explorer
+/// re-schedules the same (network, device, batch) under every layout
+/// scheme — the sharded memo makes the repeats free and is safe under
+/// rayon.
+pub fn conv_latency_cached(
+    l: &ConvShape,
+    t: &Tiling,
+    dev: &Device,
+    process: Process,
+    batch: usize,
+) -> LatencyBreakdown {
+    let key = LatencyKey {
+        layer: *l,
+        tiling: *t,
+        process,
+        batch,
+        t_start: dev.t_start,
+        p_words: dev.p_words(),
+    };
+    latency_memo().get_or_compute(&key, || conv_latency(l, t, dev, process, batch))
+}
+
+/// Drop every memoized closed-form latency — the cold-start hook for
+/// benchmarks that compare against uncached runs.
+pub fn reset_latency_memo() {
+    latency_memo().reset()
+}
+
 /// End-to-end latency of a non-conv layer (pooling / BN / FC), modeled
 /// as DMA-dominated streaming plus elementwise work (§3.4–3.6).
 pub fn aux_latency(kind: &crate::nets::LayerKind, dev: &Device, batch: usize) -> u64 {
@@ -289,6 +339,27 @@ mod tests {
             "conv3 WU {}",
             lat.cycles
         );
+    }
+
+    #[test]
+    fn cached_latency_matches_direct_and_sees_t_start() {
+        let mut dev = zcu102();
+        let l = ConvShape::new(256, 96, 27, 27, 5, 1);
+        let t = Tiling::new(16, 16, 27, 27, 112);
+        for p in Process::ALL {
+            for b in [1usize, 4] {
+                let direct = conv_latency(&l, &t, &dev, p, b);
+                let cached = conv_latency_cached(&l, &t, &dev, p, b);
+                assert_eq!(cached.cycles, direct.cycles, "{p:?} b={b}");
+                assert_eq!(cached.mac_cycles, direct.mac_cycles, "{p:?} b={b}");
+            }
+        }
+        // A different DMA restart penalty must not alias the cached entry
+        // (the t_start ablation mutates the device in place).
+        dev.t_start = 2000;
+        let direct = conv_latency(&l, &t, &dev, Process::Fp, 4);
+        let cached = conv_latency_cached(&l, &t, &dev, Process::Fp, 4);
+        assert_eq!(cached.cycles, direct.cycles);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use crate::device::Device;
 use crate::layout::{Process, Tiling};
-use crate::model::perf::conv_latency;
+use crate::model::perf::conv_latency_cached;
 use crate::model::resource::ResourceModel;
 use crate::nets::Network;
 
@@ -113,7 +113,7 @@ pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
             }
             let lat: u64 = Process::ALL
                 .iter()
-                .map(|&p| conv_latency(l, &cand, dev, p, batch).cycles)
+                .map(|&p| conv_latency_cached(l, &cand, dev, p, batch).cycles)
                 .sum();
             candidates.push((lat, cand));
         }
@@ -204,7 +204,7 @@ fn network_cycles_inner(
                     if conv_idx == 0 && p == Process::Bp {
                         continue; // layer 1 needs no input gradient
                     }
-                    cycles += conv_latency(l, t, dev, p, batch).cycles;
+                    cycles += conv_latency_cached(l, t, dev, p, batch).cycles;
                 }
                 conv_idx += 1;
             }

@@ -12,7 +12,7 @@ mod zoo;
 pub use zoo::{alexnet, cnn1x, lenet10, network_by_name, vgg16, NETWORK_NAMES};
 
 /// A convolution layer's shape, the unit every analytic model consumes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ConvShape {
     /// Output channels `M`.
     pub m: usize,

@@ -4,7 +4,7 @@
 use crate::device::{zcu102, Device};
 use crate::layout::streams::StreamSpec;
 use crate::layout::{Process, Scheme};
-use crate::model::perf::conv_latency;
+use crate::model::perf::conv_latency_cached;
 use crate::model::scheduler::{network_conv_training_cycles, schedule};
 use crate::nets::{alexnet, cnn1x, vgg16, Network};
 use crate::report::{commas, Table};
@@ -71,7 +71,7 @@ pub fn figure19() -> Table {
             if i == 0 && p == Process::Bp {
                 continue;
             }
-            let lat = conv_latency(l, tl, &dev, p, 128);
+            let lat = conv_latency_cached(l, tl, &dev, p, 128);
             total += lat.cycles;
             mac += lat.mac_cycles;
         }

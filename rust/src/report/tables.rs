@@ -4,7 +4,7 @@ use crate::device::{pynq_z1, zcu102, Device};
 use crate::layout::{Process, Scheme, Tiling};
 use crate::metrics::{operating_point, peak_gflops};
 use crate::model::parallelism::equal_budget;
-use crate::model::perf::conv_latency;
+use crate::model::perf::conv_latency_cached;
 use crate::model::resource::ResourceModel;
 use crate::model::scheduler::{network_conv_training_cycles, schedule, Schedule};
 use crate::nets::{alexnet, cnn1x, lenet10, vgg16, ConvShape, Network};
@@ -211,7 +211,7 @@ pub fn table6() -> Table {
                 ]);
                 continue;
             }
-            let model = conv_latency(l, tl, &dev, p, 4).cycles;
+            let model = conv_latency_cached(l, tl, &dev, p, 4).cycles;
             let spec = StreamSpec {
                 scheme: Scheme::Reshaped,
                 process: p,

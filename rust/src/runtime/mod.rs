@@ -6,6 +6,13 @@
 //! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
 //! (64-bit instruction ids) but the text parser reassigns ids cleanly —
 //! see /opt/xla-example/README.md and DESIGN.md.
+//!
+//! The `xla` crate is only present in some build environments, so the
+//! PJRT backend is gated behind the off-by-default `pjrt` cargo feature.
+//! Without it this module still parses manifests, loads parameters, and
+//! type-checks every caller; `compile`/`run` return actionable errors
+//! instead of executing, and the integration suites (which skip when
+//! `artifacts/` is absent) are unaffected.
 
 pub mod manifest;
 
@@ -18,6 +25,7 @@ pub use manifest::{Manifest, NetworkMeta, OpMeta, TensorSig};
 /// A compiled executable plus its I/O signature.
 pub struct Executable {
     pub name: String,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
@@ -25,6 +33,7 @@ pub struct Executable {
 
 impl Executable {
     /// Execute on host buffers; returns one [`Tensor`] per output.
+    #[cfg(feature = "pjrt")]
     pub fn run(&self, args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
         if args.len() != self.inputs.len() {
             return Err(anyhow!(
@@ -56,6 +65,18 @@ impl Executable {
             .zip(&self.outputs)
             .map(|(lit, sig)| Tensor::from_literal(lit, sig))
             .collect()
+    }
+
+    /// Stub: execution needs the PJRT backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(&self, _args: &[Tensor]) -> crate::Result<Vec<Tensor>> {
+        Err(anyhow!(
+            "{}: ef_train was built without the `pjrt` feature (the vendored \
+             `xla` crate is not wired in), so AOT artifacts cannot execute; \
+             the analytic stack (tables, figures, scheduler, sim, explore) \
+             works without it",
+            self.name
+        ))
     }
 }
 
@@ -103,6 +124,7 @@ impl Tensor {
         Ok(d[0])
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self, sig: &TensorSig) -> crate::Result<xla::Literal> {
         let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -112,6 +134,7 @@ impl Tensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> crate::Result<Tensor> {
         let out = match sig.dtype.as_str() {
             "int32" => Tensor::I32(lit.to_vec::<i32>()?, sig.shape.clone()),
@@ -123,6 +146,7 @@ impl Tensor {
 
 /// The PJRT runtime: one CPU client, many compiled executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     pub manifest: Manifest,
@@ -134,15 +158,26 @@ impl Runtime {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .context("loading artifacts manifest (run `make artifacts`)")?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, artifacts_dir: dir, manifest })
+        Ok(Self {
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()?,
+            artifacts_dir: dir,
+            manifest,
+        })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
     /// Load + compile one HLO-text artifact.
+    #[cfg(feature = "pjrt")]
     pub fn compile(
         &self,
         file: &str,
@@ -158,6 +193,23 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
         Ok(Executable { name: name.to_string(), exe, inputs, outputs })
+    }
+
+    /// Stub: compilation needs the PJRT backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compile(
+        &self,
+        file: &str,
+        name: &str,
+        _inputs: Vec<TensorSig>,
+        _outputs: Vec<TensorSig>,
+    ) -> crate::Result<Executable> {
+        Err(anyhow!(
+            "cannot compile `{name}` from {}: ef_train was built without the \
+             `pjrt` feature (the vendored `xla` crate is not wired in); \
+             rebuild with `--features pjrt` in an environment that has it",
+            self.artifacts_dir.join(file).display()
+        ))
     }
 
     /// Compile a named standalone op from the manifest.

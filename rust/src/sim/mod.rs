@@ -11,8 +11,9 @@
 //! reproduces the paper's Table 6 point.
 
 use crate::device::Device;
+use crate::layout::cache::stream_stats;
 use crate::layout::realloc::realloc_cycles;
-use crate::layout::streams::{costs_for_spec, IterCost, StreamSpec};
+use crate::layout::streams::{IterCost, StreamSpec};
 use crate::layout::{Process, Scheme, Tiling};
 use crate::nets::ConvShape;
 
@@ -87,22 +88,26 @@ pub fn pipeline_cycles(iters: &[IterCost], t_start: u64, p: u64, mode: BurstMode
 }
 
 /// Simulate one (scheme, process) of a conv layer on `dev`.
+///
+/// The per-iteration cost trace comes from the shared
+/// [`crate::layout::cache`] — repeated simulations of one spec (tables,
+/// figures, ablations, explorer sweeps) drive the loop schedule once.
 pub fn simulate_layer(
     spec: &StreamSpec,
     dev: &Device,
     layer_index: usize,
     on_chip_words: u64,
 ) -> SimResult {
-    let costs = costs_for_spec(spec);
+    let stats = stream_stats(spec);
     let mode = match spec.scheme {
         Scheme::Reshaped => BurstMode::Layout,
         // Baselines shuffle data host-side so each granule streams as one
         // burst — and are billed for it in `realloc_cycles`.
         Scheme::Bchw | Scheme::Bhwc => BurstMode::ReallocatedGranules,
     };
-    let accel = pipeline_cycles(&costs.iters, dev.t_start, dev.p_words(), mode);
+    let accel = pipeline_cycles(&stats.iters, dev.t_start, dev.p_words(), mode);
     let realloc = realloc_cycles(spec, layer_index, on_chip_words);
-    let mac: u64 = costs.iters.iter().map(|i| i.compute).sum();
+    let mac: u64 = stats.iters.iter().map(|i| i.compute).sum();
     SimResult { accel_cycles: accel, realloc_cycles: realloc, mac_cycles: mac }
 }
 

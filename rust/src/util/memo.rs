@@ -1,0 +1,137 @@
+//! Generic concurrency-safe sharded memo table.
+//!
+//! Backs the stream-summary cache ([`crate::layout::cache`]) and the
+//! closed-form latency memo ([`crate::model::perf::conv_latency_cached`]).
+//! Keys are hashed onto a fixed set of `Mutex<HashMap>` shards so rayon
+//! workers touching different keys rarely contend; values are cloned out
+//! (callers cache `Arc`s when the payload is large).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const SHARDS: usize = 16;
+
+pub struct ShardedMemo<K, V> {
+    shards: [Mutex<HashMap<K, V>>; SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> ShardedMemo<K, V> {
+    pub fn new() -> Self {
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<HashMap<K, V>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[h.finish() as usize % SHARDS]
+    }
+
+    /// Clone the cached value for `key`, computing it with `compute` on a
+    /// miss. `compute` runs outside the shard lock: concurrent misses on
+    /// the same key may compute twice, but the first insert wins and
+    /// readers of other keys never block on a computation.
+    pub fn get_or_compute(&self, key: &K, compute: impl FnOnce() -> V) -> V {
+        if let Some(v) = self.shard(key).lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = compute();
+        self.shard(key)
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert(v)
+            .clone()
+    }
+
+    /// `(hits, misses)` since construction or the last [`Self::reset`].
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Number of cached entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry and zero the hit/miss counters.
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Default for ShardedMemo<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn memoizes_and_counts() {
+        let memo: ShardedMemo<u64, u64> = ShardedMemo::new();
+        let calls = AtomicUsize::new(0);
+        let f = |k: u64| {
+            memo.get_or_compute(&k, || {
+                calls.fetch_add(1, Ordering::SeqCst);
+                k * 2
+            })
+        };
+        assert_eq!(f(3), 6);
+        assert_eq!(f(3), 6);
+        assert_eq!(f(4), 8);
+        assert_eq!(calls.load(Ordering::SeqCst), 2);
+        assert_eq!(memo.counters(), (1, 2));
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn reset_clears_entries_and_counters() {
+        let memo: ShardedMemo<u64, u64> = ShardedMemo::new();
+        memo.get_or_compute(&1, || 1);
+        memo.get_or_compute(&1, || 1);
+        memo.reset();
+        assert!(memo.is_empty());
+        assert_eq!(memo.counters(), (0, 0));
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let memo: ShardedMemo<u64, u64> = ShardedMemo::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for k in 0..256u64 {
+                        assert_eq!(memo.get_or_compute(&k, || k + 1), k + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(memo.len(), 256);
+        let (hits, misses) = memo.counters();
+        assert_eq!(hits + misses, 4 * 256);
+        assert!(misses >= 256);
+    }
+}

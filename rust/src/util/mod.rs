@@ -1,12 +1,15 @@
 //! In-tree utility substrates.
 //!
 //! The build is fully offline against a minimal vendored crate set
-//! (xla + anyhow), so the small generic pieces a project would normally
-//! pull from crates.io are implemented here: a JSON parser ([`json`]),
-//! a micro benchmark harness ([`bench`]), a property-testing loop
-//! ([`proptest`]), and a tiny CLI argument reader ([`cli`]).
+//! (anyhow + rayon, plus xla behind the `pjrt` feature), so the small
+//! generic pieces a project would normally pull from crates.io are
+//! implemented here: a JSON parser/emitter ([`json`]), a micro benchmark
+//! harness ([`bench`]), a property-testing loop ([`proptest`]), a tiny
+//! CLI argument reader ([`cli`]), and a sharded concurrent memo table
+//! ([`memo`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod memo;
 pub mod proptest;

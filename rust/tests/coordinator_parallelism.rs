@@ -1,0 +1,163 @@
+//! Unit + property tests for the coordinator's mini-batch assembly
+//! (`Batcher`: drop-oldest eviction, `dropped` accounting, partial-batch
+//! behavior) and for `Parallelism::layer_cycles` against hand-computed
+//! Table-1 cases.
+
+use ef_train::coordinator::Batcher;
+use ef_train::model::parallelism::{equal_budget, Parallelism};
+use ef_train::nets::ConvShape;
+use ef_train::util::proptest::{pick, range, run};
+
+// --------------------------------------------------------------------------
+// Batcher
+// --------------------------------------------------------------------------
+
+#[test]
+fn batcher_partial_batch_never_pops() {
+    let mut b = Batcher::new(4, 2);
+    for i in 0..3 {
+        b.push(vec![i as f32], i);
+        assert!(b.pop_batch().is_none(), "partial batch must not pop");
+    }
+    assert_eq!(b.pending(), 3);
+    assert_eq!(b.dropped, 0);
+    b.push(vec![3.0], 3);
+    let (x, y) = b.pop_batch().expect("full batch");
+    assert_eq!(x, vec![0.0, 1.0, 2.0, 3.0]);
+    assert_eq!(y, vec![0, 1, 2, 3]);
+    assert_eq!(b.pending(), 0);
+}
+
+#[test]
+fn batcher_drop_oldest_keeps_the_freshest_window() {
+    // Capacity 2 batches of 2 = 4 samples; push 10, keep the last 4.
+    let mut b = Batcher::new(2, 2);
+    for i in 0..10 {
+        b.push(vec![i as f32], i);
+    }
+    assert_eq!(b.dropped, 6);
+    assert_eq!(b.pending(), 4);
+    let (x, y) = b.pop_batch().unwrap();
+    assert_eq!(x, vec![6.0, 7.0]);
+    assert_eq!(y, vec![6, 7]);
+    let (x, y) = b.pop_batch().unwrap();
+    assert_eq!(x, vec![8.0, 9.0]);
+    assert_eq!(y, vec![8, 9]);
+}
+
+#[test]
+fn batcher_accounting_properties() {
+    run(
+        "batcher accounting",
+        ef_train::util::proptest::default_cases(),
+        |rng| {
+            let batch = range(rng, 1, 6);
+            let capacity_batches = range(rng, 1, 4);
+            let pushes = range(rng, 0, 40);
+            (batch, capacity_batches, pushes)
+        },
+        |&(batch, capacity_batches, pushes)| {
+            let mut b = Batcher::new(batch, capacity_batches);
+            let capacity = batch * capacity_batches;
+            for i in 0..pushes {
+                b.push(vec![i as f32], i as i32);
+            }
+            // Drop-oldest: dropped + pending == pushes, pending <= capacity.
+            assert_eq!(b.dropped as usize, pushes.saturating_sub(capacity));
+            assert_eq!(b.pending(), pushes.min(capacity));
+            // Every popped batch is full, in order, and starts at the
+            // oldest *surviving* sample.
+            let mut expect = pushes.saturating_sub(pushes.min(capacity)) as i32;
+            while let Some((x, y)) = b.pop_batch() {
+                assert_eq!(x.len(), batch);
+                assert_eq!(y.len(), batch);
+                for &label in &y {
+                    assert_eq!(label, expect);
+                    expect += 1;
+                }
+            }
+            assert!(b.pending() < batch, "pop must drain all full batches");
+        },
+    );
+}
+
+// --------------------------------------------------------------------------
+// Parallelism::layer_cycles — hand-computed Table-1 cases
+// --------------------------------------------------------------------------
+
+/// The mid-network layer Table 1 reasons about.
+const CONV: ConvShape = ConvShape::new(64, 64, 8, 8, 3, 1);
+/// The first layer (N = 3) that starves channel parallelism.
+const FIRST: ConvShape = ConvShape::new(16, 3, 32, 32, 3, 1);
+
+#[test]
+fn layer_cycles_hand_computed_batch_level() {
+    let bp = Parallelism::Batch { tb: 128 };
+    // B=1: ceil(1/128)=1 full sequential layer: 64*64*8*8*9 = 2,359,296.
+    assert_eq!(bp.layer_cycles(&CONV, 1), 2_359_296);
+    // B=128 fills the unroll: same cycle count as one image.
+    assert_eq!(bp.layer_cycles(&CONV, 128), 2_359_296);
+    // B=129 spills into a second pass.
+    assert_eq!(bp.layer_cycles(&CONV, 129), 2 * 2_359_296);
+}
+
+#[test]
+fn layer_cycles_hand_computed_feature_map_level() {
+    let fp = Parallelism::FeatureMap { tf: 16 };
+    // 8x8 map under a 16x16 unroll: one tile, 64*64*1*1*9 = 36,864.
+    assert_eq!(fp.layer_cycles(&CONV, 1), 36_864);
+    // 32x32 map: ceil(32/16)^2 = 4 tiles -> 16*3*4*9 = weights times map
+    // tiles: 16*3*2*2*9 = 1,728 per image.
+    assert_eq!(fp.layer_cycles(&FIRST, 1), 16 * 3 * 2 * 2 * 9);
+}
+
+#[test]
+fn layer_cycles_hand_computed_channel_level() {
+    let cp = Parallelism::Channel { tm: 16, tn: 16 };
+    // ceil(64/16)=4 tiles each way: 4*4*8*8*9 = 9,216 per image.
+    assert_eq!(cp.layer_cycles(&CONV, 1), 9_216);
+    assert_eq!(cp.layer_cycles(&CONV, 4), 4 * 9_216);
+    // First layer: N=3 rounds up to one Tn tile -> 1*1*32*32*9 = 9,216.
+    assert_eq!(cp.layer_cycles(&FIRST, 1), 9_216);
+}
+
+#[test]
+fn utilization_is_consistent_with_cycles() {
+    run(
+        "utilization identity",
+        ef_train::util::proptest::default_cases(),
+        |rng| {
+            let l = ConvShape::new(
+                range(rng, 1, 128),
+                range(rng, 1, 128),
+                range(rng, 1, 32),
+                range(rng, 1, 32),
+                *pick(rng, &[1usize, 3, 5]),
+                1,
+            );
+            let b = range(rng, 1, 16);
+            (l, b)
+        },
+        |&(l, b)| {
+            for p in equal_budget(256) {
+                let cycles = p.layer_cycles(&l, b);
+                let util = p.utilization(&l, b);
+                // utilization == total MACs / (cycles * units), in (0, 1].
+                let expect = (l.macs() * b as u64) as f64 / (cycles as f64 * 256.0);
+                assert!((util - expect).abs() < 1e-12, "{p:?} {l:?}");
+                assert!(util > 0.0 && util <= 1.0 + 1e-12, "{p:?} {l:?} util {util}");
+            }
+        },
+    );
+}
+
+#[test]
+fn table1_ordering_claims_hold() {
+    // The §2.3 claims Table 1 encodes: batch-level starves at B=1,
+    // channel-level stays saturated on mid layers at any batch.
+    let [bp, fp, cp] = equal_budget(256);
+    assert!(bp.utilization(&CONV, 1) < fp.utilization(&CONV, 1));
+    assert!(bp.utilization(&CONV, 1) < cp.utilization(&CONV, 1));
+    assert!(cp.utilization(&CONV, 1) > 0.9);
+    assert!(cp.utilization(&CONV, 128) > 0.9);
+}

@@ -1,0 +1,120 @@
+//! Explorer correctness properties:
+//!
+//! * the explorer's best point for a (network, device) pair is never
+//!   worse than pricing the plain `schedule()` output directly under the
+//!   paper's reshaped layout — the sweep contains that exact point;
+//! * cached stream summaries / cost traces are bit-identical to the
+//!   uncached `summarize_spec` / `costs_for_spec` results on random
+//!   specs (the cache may only deduplicate, never change numbers).
+
+use ef_train::data::Rng;
+use ef_train::explore::{price_point, run_sweep, DesignPoint, SweepConfig};
+use ef_train::layout::cache::{counters, stream_stats};
+use ef_train::layout::streams::{costs_for_spec, summarize_spec, StreamSpec};
+use ef_train::layout::{Process, Role, Scheme, Tiling};
+use ef_train::nets::ConvShape;
+use ef_train::util::proptest::{pick, range, run};
+
+#[test]
+fn explorer_best_never_worse_than_plain_schedule() {
+    for (net, device) in [("cnn1x", "zcu102"), ("lenet10", "zcu102"), ("cnn1x", "pynq-z1")] {
+        let cfg = SweepConfig::from_args(net, device, "4", "bchw,bhwc,reshaped").unwrap();
+        let report = run_sweep(&cfg, true).unwrap();
+        let best = report.best_for(net, device).expect("swept pair");
+        let plain = price_point(&DesignPoint {
+            net: net.to_string(),
+            device: device.to_string(),
+            batch: 4,
+            scheme: Scheme::Reshaped,
+        })
+        .unwrap();
+        assert!(
+            best.cycles <= plain.cycles,
+            "{net}/{device}: explorer best {} worse than plain schedule {}",
+            best.cycles,
+            plain.cycles
+        );
+        // And the winner is the paper's scheme: reshaping dominates.
+        assert_eq!(best.point.scheme, Scheme::Reshaped, "{net}/{device}");
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> StreamSpec {
+    let t = *pick(rng, &[2usize, 4]);
+    let k = *pick(rng, &[1usize, 3]);
+    let s = range(rng, 1, 2);
+    let r = range(rng, 2, 7);
+    let c = range(rng, 2, 7);
+    let m = range(rng, 1, 3) * t + range(rng, 0, 1) * range(rng, 1, t - 1);
+    let n = range(rng, 1, 3) * t + range(rng, 0, 1) * range(rng, 1, t - 1);
+    let layer = ConvShape::new(m, n, r, c, k, s);
+    let tr = range(rng, 1, r);
+    let m_on = (range(rng, 1, m.div_ceil(t)) * t).min(m.div_ceil(t) * t);
+    StreamSpec {
+        scheme: *pick(rng, &[Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped]),
+        process: *pick(rng, &[Process::Fp, Process::Bp, Process::Wu]),
+        layer,
+        tiling: Tiling::new(t, t, tr, c, m_on),
+        batch: range(rng, 1, 3),
+        weight_reuse: rng.below(2) == 1,
+    }
+}
+
+#[test]
+fn cached_and_uncached_stream_results_are_bit_identical() {
+    run(
+        "cache == direct",
+        ef_train::util::proptest::default_cases(),
+        |rng| random_spec(rng),
+        |spec| {
+            let cached = stream_stats(spec);
+            let direct = summarize_spec(spec);
+            for role in [Role::Ifm, Role::Ofm, Role::Wei, Role::Out] {
+                assert_eq!(
+                    cached.summary(role),
+                    direct.summary(role),
+                    "{spec:?} {role:?}"
+                );
+            }
+            assert_eq!(cached.total(), direct.total(), "{spec:?}");
+            let costs = costs_for_spec(spec);
+            assert_eq!(*cached.iters, costs.iters, "{spec:?} cost trace");
+        },
+    );
+}
+
+#[test]
+fn repeated_lookups_hit_the_global_cache() {
+    // A spec distinctive enough not to collide with other tests in this
+    // binary; two lookups of the same key must add at least one hit.
+    let spec = StreamSpec {
+        scheme: Scheme::Reshaped,
+        process: Process::Wu,
+        layer: ConvShape::new(12, 8, 7, 5, 3, 1),
+        tiling: Tiling::new(4, 4, 3, 5, 8),
+        batch: 3,
+        weight_reuse: true,
+    };
+    let first = stream_stats(&spec);
+    let (h0, _) = counters();
+    let second = stream_stats(&spec);
+    let (h1, _) = counters();
+    assert!(h1 > h0, "identical spec must hit");
+    assert_eq!(first.total(), second.total());
+}
+
+#[test]
+fn sweep_prices_are_deterministic_across_modes_and_repeats() {
+    let cfg = SweepConfig::from_args("lenet10", "pynq-z1", "2,4", "bchw,reshaped").unwrap();
+    let a = run_sweep(&cfg, false).unwrap();
+    let b = run_sweep(&cfg, true).unwrap();
+    let c = run_sweep(&cfg, true).unwrap(); // warm-cache repeat
+    for ((x, y), z) in a.points.iter().zip(&b.points).zip(&c.points) {
+        assert_eq!(x.cycles, y.cycles);
+        assert_eq!(y.cycles, z.cycles);
+        assert_eq!(x.used_dsps, z.used_dsps);
+        assert_eq!(x.used_brams, z.used_brams);
+    }
+    assert_eq!(a.frontiers, b.frontiers);
+    assert_eq!(b.frontiers, c.frontiers);
+}

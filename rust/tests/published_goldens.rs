@@ -1,0 +1,145 @@
+//! Golden-value tests pinning the paper's headline numbers through
+//! `report::published` and the report layer, so refactors of the layout
+//! / model / sim stack cannot silently drift the reproduction.
+//!
+//! Two kinds of pins:
+//! * the published constants themselves (verbatim from the paper — any
+//!   edit to `published.rs` is a deliberate, reviewed change);
+//! * our modeled outputs, held inside the bands the paper's Tables 3–8
+//!   establish (wide enough for substrate differences, tight enough to
+//!   catch a broken layout or pipeline model).
+
+use ef_train::device::zcu102;
+use ef_train::nets::{alexnet, cnn1x, lenet10, vgg16};
+use ef_train::report::published::{efttrain_published as pubnum, table7_baseline, table9_baselines};
+use ef_train::report::tables::{net_point, table3, table5, table6};
+
+fn cell_u64(cell: &str) -> u64 {
+    cell.replace(',', "").parse().unwrap()
+}
+
+#[test]
+fn published_constants_are_verbatim() {
+    // Table 7 (ZCU102 / PYNQ-Z1 '1X' columns).
+    assert_eq!(pubnum::ZCU102_1X_THROUGHPUT_GFLOPS, 28.15);
+    assert_eq!(pubnum::ZCU102_1X_POWER_W, 6.89);
+    assert_eq!(pubnum::ZCU102_1X_LAT_PER_IMAGE_MS, 2.08);
+    assert_eq!(pubnum::PYNQ_1X_THROUGHPUT_GFLOPS, 4.08);
+    assert_eq!(pubnum::PYNQ_1X_POWER_W, 1.85);
+    // Table 8 — the headline 46.99 GFLOPS / 6.09 GFLOPS/W.
+    assert_eq!(pubnum::ALEXNET_THROUGHPUT_GFLOPS, 34.52);
+    assert_eq!(pubnum::VGG16_THROUGHPUT_GFLOPS, 46.99);
+    assert_eq!(pubnum::VGG16_BN_THROUGHPUT_GFLOPS, 40.08);
+    assert_eq!(pubnum::VGG16_EFFICIENCY, 6.09);
+    // Table 10.
+    assert_eq!(pubnum::LENET10_THROUGHPUT_GFLOPS, 15.47);
+    // Table 7 baseline [22] row.
+    let base = table7_baseline();
+    assert_eq!(base.throughput_gops, 163.0);
+    assert_eq!(base.power_w, 20.6);
+    assert_eq!(base.batch, 40);
+    // Table 9 comparison rows keep their published throughputs.
+    let rows = table9_baselines();
+    assert_eq!(rows.len(), 4);
+    assert_eq!(rows.iter().filter(|r| r.name.contains("DarkFPGA")).count(), 1);
+}
+
+#[test]
+fn vgg16_reproduces_the_headline_band() {
+    // Paper Table 8: 46.99 GFLOPS at 6.09 GFLOPS/W (B=16, ZCU102).
+    let p = net_point(&vgg16(false), &zcu102(), 16);
+    let gflops = p.op.throughput_gflops();
+    assert!(
+        (0.5 * pubnum::VGG16_THROUGHPUT_GFLOPS..1.35 * pubnum::VGG16_THROUGHPUT_GFLOPS)
+            .contains(&gflops),
+        "vgg16 throughput {gflops} vs published {}",
+        pubnum::VGG16_THROUGHPUT_GFLOPS
+    );
+    let eff = p.op.efficiency();
+    assert!(
+        (0.4 * pubnum::VGG16_EFFICIENCY..1.5 * pubnum::VGG16_EFFICIENCY).contains(&eff),
+        "vgg16 efficiency {eff} vs published {}",
+        pubnum::VGG16_EFFICIENCY
+    );
+}
+
+#[test]
+fn alexnet_and_smaller_nets_stay_in_their_bands() {
+    let dev = zcu102();
+    let alex = net_point(&alexnet(), &dev, 128).op.throughput_gflops();
+    assert!(
+        (0.4 * pubnum::ALEXNET_THROUGHPUT_GFLOPS..1.6 * pubnum::ALEXNET_THROUGHPUT_GFLOPS)
+            .contains(&alex),
+        "alexnet throughput {alex}"
+    );
+    let cnn = net_point(&cnn1x(), &dev, 128).op.throughput_gflops();
+    assert!(
+        (0.5 * pubnum::ZCU102_1X_THROUGHPUT_GFLOPS..1.8 * pubnum::ZCU102_1X_THROUGHPUT_GFLOPS)
+            .contains(&cnn),
+        "'1X' throughput {cnn}"
+    );
+    let lenet = net_point(&lenet10(), &dev, 128).op.throughput_gflops();
+    assert!(
+        (0.25 * pubnum::LENET10_THROUGHPUT_GFLOPS..4.0 * pubnum::LENET10_THROUGHPUT_GFLOPS)
+            .contains(&lenet),
+        "lenet10 throughput {lenet}"
+    );
+}
+
+#[test]
+fn table3_rows_keep_their_published_shape() {
+    // Paper Table 3: BCHW reallocation dwarfs acceleration (1,495M vs
+    // 67M) and conv3's FP reallocation row is the weights-only ~101M.
+    let t = table3();
+    let total = t.rows.last().unwrap();
+    let accel = cell_u64(&total[3]);
+    let realloc = cell_u64(&total[4]);
+    assert!(realloc > 5 * accel, "realloc {realloc} vs accel {accel}");
+    let grand = cell_u64(&total[5]);
+    assert!(
+        (400_000_000..5_000_000_000).contains(&grand),
+        "table 3 total {grand} outside the paper's order of magnitude"
+    );
+    let conv3_fp = t
+        .rows
+        .iter()
+        .find(|r| r[0] == "Conv 3" && r[1] == "FP")
+        .expect("conv3 FP row");
+    let conv3_realloc = cell_u64(&conv3_fp[4]);
+    assert!(
+        (90_000_000..115_000_000).contains(&conv3_realloc),
+        "conv3 FP realloc {conv3_realloc} (paper ~101M)"
+    );
+}
+
+#[test]
+fn table5_reuse_total_stays_in_the_paper_band() {
+    // Paper Table 5: ~70M cycles for the reshaped conv stack with weight
+    // reuse — held within the same band the in-tree table test uses.
+    let t = table5();
+    let total = t.rows.last().unwrap();
+    let with_reuse = cell_u64(&total[4]);
+    assert!(
+        (40_000_000..200_000_000).contains(&with_reuse),
+        "table 5 with-reuse total {with_reuse}"
+    );
+    let without = cell_u64(&total[3]);
+    assert!(with_reuse < without, "weight reuse must help");
+}
+
+#[test]
+fn table6_model_vs_sim_deviation_stays_small() {
+    // Paper Table 6's point: the closed form and the on-board numbers
+    // agree to a few percent in aggregate.
+    let t = table6();
+    let total = t.rows.last().unwrap();
+    let pct: f64 = total[5].trim_end_matches('%').parse().unwrap();
+    assert!(pct < 12.0, "model-vs-sim total deviation {pct}%");
+    let model = cell_u64(&total[3]);
+    let sim = cell_u64(&total[4]);
+    assert!(
+        (20_000_000..200_000_000).contains(&sim),
+        "table 6 sim total {sim} outside the paper's order of magnitude"
+    );
+    assert!(model > 0);
+}
