@@ -1,12 +1,21 @@
 //! Design-space sweep benchmark: the rayon fan-out vs the serial loop on
-//! an identical cold cache, then a warm second pass demonstrating the
-//! shared stream-summary cache absorbing the whole workload.
+//! an identical cold cache, a warm second pass demonstrating the shared
+//! stream-summary cache absorbing the whole workload, and the pruned vs
+//! exhaustive scheduler search (the >= 5x closed-form-work cut).
+//!
+//! Writes the numbers to `BENCH_explore.json` — the artifact the CI
+//! bench-smoke lane uploads as the first point of the perf trajectory.
+//! Pass `--fast` (or set `EF_BENCH_FAST=1`) to shrink the grid for CI.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use ef_train::explore::{run_sweep, SweepConfig};
 use ef_train::layout::cache;
 use ef_train::model::perf::reset_latency_memo;
+use ef_train::model::scheduler::{schedule_searched, SearchMode, SearchStats};
+use ef_train::nets::{network_by_name, NETWORK_NAMES};
+use ef_train::util::json::Json;
 
 /// Both process-wide memo layers back to cold: the stream-summary cache
 /// and the closed-form latency memo the scheduler leans on.
@@ -15,13 +24,42 @@ fn reset_all_caches() {
     reset_latency_memo();
 }
 
+fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast")
+        || std::env::var("EF_BENCH_FAST").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Sum the scheduler's search counters over the zoo grid in one mode.
+fn zoo_search(mode: SearchMode, batches: &[usize]) -> (SearchStats, f64) {
+    reset_all_caches();
+    let t0 = Instant::now();
+    let mut total = SearchStats::default();
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).expect("zoo name");
+        for dev in [ef_train::device::zcu102(), ef_train::device::pynq_z1()] {
+            for &batch in batches {
+                let (_, stats) = schedule_searched(&net, &dev, batch, mode);
+                total.priced_candidates += stats.priced_candidates;
+                total.pruned_candidates += stats.pruned_candidates;
+                total.latency_evals += stats.latency_evals;
+            }
+        }
+    }
+    (total, t0.elapsed().as_secs_f64())
+}
+
 fn main() {
-    let cfg = SweepConfig::from_args(
-        "cnn1x,lenet10,alexnet",
-        "zcu102,pynq-z1",
-        "4,8",
-        "bchw,bhwc,reshaped",
-    )
+    let fast = fast_mode();
+    let cfg = if fast {
+        SweepConfig::from_args("cnn1x,lenet10", "zcu102", "4", "bchw,reshaped")
+    } else {
+        SweepConfig::from_args(
+            "cnn1x,lenet10,alexnet",
+            "zcu102,pynq-z1",
+            "4,8",
+            "bchw,bhwc,reshaped",
+        )
+    }
     .expect("valid sweep axes");
     let n_points = cfg.points().len();
 
@@ -45,7 +83,16 @@ fn main() {
     let (h1, m1) = cache::counters();
     let (warm_hits, warm_misses) = (h1 - h0, m1 - m0);
 
-    println!("design-space sweep: {n_points} points, {} cached specs", cache::global().len());
+    // Scheduler search: pruned vs exhaustive closed-form work.
+    let batches: &[usize] = if fast { &[4] } else { &[1, 4, 16] };
+    let (ex_stats, ex_s) = zoo_search(SearchMode::Exhaustive, batches);
+    let (pr_stats, pr_s) = zoo_search(SearchMode::Pruned, batches);
+
+    println!(
+        "design-space sweep: {n_points} points, {} cached specs{}",
+        cache::global().len(),
+        if fast { " (fast mode)" } else { "" }
+    );
     println!("  serial (cold cache):     {serial_s:>8.3}s");
     println!(
         "  rayon  (cold cache):     {parallel_s:>8.3}s  ({:.2}x vs serial)",
@@ -55,6 +102,14 @@ fn main() {
         "  rayon  (warm cache):     {warm_s:>8.3}s  ({:.2}x vs cold, {warm_hits} hits / \
          {warm_misses} misses)",
         parallel_s / warm_s
+    );
+    println!(
+        "zoo scheduler search: exhaustive {} evals in {ex_s:.3}s, pruned {} evals in \
+         {pr_s:.3}s ({:.1}x fewer, {} candidates lower-bounded away)",
+        ex_stats.latency_evals,
+        pr_stats.latency_evals,
+        ex_stats.latency_evals as f64 / pr_stats.latency_evals as f64,
+        pr_stats.pruned_candidates
     );
 
     assert_eq!(serial.points.len(), parallel.points.len());
@@ -67,4 +122,35 @@ fn main() {
         "serial and rayon sweeps must price identically"
     );
     assert!(warm_hits > 0, "second pass must hit the stream cache");
+    assert!(
+        ex_stats.latency_evals >= 5 * pr_stats.latency_evals,
+        "pruning regressed below the 5x floor"
+    );
+
+    let mut out = BTreeMap::new();
+    out.insert("fast_mode".to_string(), Json::Bool(fast));
+    out.insert("points".to_string(), Json::Num(n_points as f64));
+    out.insert("serial_cold_s".to_string(), Json::Num(serial_s));
+    out.insert("rayon_cold_s".to_string(), Json::Num(parallel_s));
+    out.insert("rayon_warm_s".to_string(), Json::Num(warm_s));
+    out.insert("rayon_speedup".to_string(), Json::Num(serial_s / parallel_s));
+    out.insert("warm_cache_hits".to_string(), Json::Num(warm_hits as f64));
+    out.insert("warm_cache_misses".to_string(), Json::Num(warm_misses as f64));
+    out.insert(
+        "exhaustive_latency_evals".to_string(),
+        Json::Num(ex_stats.latency_evals as f64),
+    );
+    out.insert(
+        "pruned_latency_evals".to_string(),
+        Json::Num(pr_stats.latency_evals as f64),
+    );
+    out.insert(
+        "pruning_factor".to_string(),
+        Json::Num(ex_stats.latency_evals as f64 / pr_stats.latency_evals as f64),
+    );
+    out.insert("exhaustive_search_s".to_string(), Json::Num(ex_s));
+    out.insert("pruned_search_s".to_string(), Json::Num(pr_s));
+    std::fs::write("BENCH_explore.json", Json::Obj(out).to_string())
+        .expect("write BENCH_explore.json");
+    println!("wrote BENCH_explore.json");
 }

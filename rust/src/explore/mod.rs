@@ -17,14 +17,26 @@
 //!   points, so schemes/devices revisiting a layer pay once;
 //! * per network, the (latency/image, BRAM, energy/image) Pareto
 //!   frontier is extracted ([`pareto`]) and the whole report serializes
-//!   to JSON through [`crate::util::json`].
+//!   to JSON through [`crate::util::json`];
+//! * [`tiling_search`] optionally searches each cell's per-layer
+//!   `(Tr, M_on)` beyond Algorithm 1 (`--search-tilings`), reporting
+//!   the `beats_heuristic` delta per point;
+//! * [`sweep_cache`] persists priced points across runs
+//!   (`--cache-file`), so a warm sweep only prices new grid cells.
+//!
+//! Network/device names inside [`DesignPoint`]s are interned `Arc<str>`s
+//! — the sweep clones a point per priced row, per frontier-map key, and
+//! per JSON row, and reference bumps keep that churn off the allocator.
 //!
 //! Driven by `ef-train explore`, `examples/design_explorer.rs`, and
 //! `benches/explore.rs` (rayon-vs-serial + cache-hit evidence).
 
 pub mod pareto;
+pub mod sweep_cache;
+pub mod tiling_search;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::anyhow;
@@ -59,11 +71,12 @@ pub fn scheme_by_name(name: &str) -> Option<Scheme> {
     }
 }
 
-/// One coordinate of the sweep grid.
+/// One coordinate of the sweep grid. Names are interned (`Arc<str>`):
+/// every clone on the sweep hot path is a reference bump.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct DesignPoint {
-    pub net: String,
-    pub device: String,
+    pub net: Arc<str>,
+    pub device: Arc<str>,
     pub batch: usize,
     pub scheme: Scheme,
 }
@@ -86,6 +99,9 @@ pub struct PricedPoint {
     pub power_w: f64,
     /// Energy per batch in millijoules.
     pub energy_mj: f64,
+    /// `--search-tilings`: the per-layer `(Tr, M_on)` search outcome
+    /// for this point's (network, device, batch) cell.
+    pub search: Option<tiling_search::SearchedTilings>,
 }
 
 impl PricedPoint {
@@ -158,7 +174,18 @@ pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
         used_brams,
         power_w,
         energy_mj: power_w * secs * 1e3,
+        search: None,
     })
+}
+
+/// The `(Tr, M_on)` search for one (network, device, batch) cell —
+/// scheme-independent, so [`run_sweep_with`] runs it once per cell and
+/// shares the outcome across every scheme row.
+fn cell_search(cell: &(Arc<str>, Arc<str>, usize)) -> crate::Result<tiling_search::SearchedTilings> {
+    let (net, device, batch) = cell;
+    let n = network_by_name(net).ok_or_else(|| anyhow!("unknown network `{net}` in sweep"))?;
+    let d = device_by_name(device).ok_or_else(|| anyhow!("unknown device `{device}` in sweep"))?;
+    Ok(tiling_search::search_tilings(&n, &d, *batch))
 }
 
 /// The sweep grid: the cross product of its four axes.
@@ -232,12 +259,17 @@ impl SweepConfig {
         Ok(Self { nets, devices, batches, schemes })
     }
 
-    /// Materialize the cross product.
+    /// Materialize the cross product. Each axis name is interned once;
+    /// the grid only bumps reference counts.
     pub fn points(&self) -> Vec<DesignPoint> {
-        let mut out =
-            Vec::with_capacity(self.nets.len() * self.devices.len() * self.batches.len() * self.schemes.len());
-        for net in &self.nets {
-            for device in &self.devices {
+        let nets: Vec<Arc<str>> = self.nets.iter().map(|s| Arc::from(s.as_str())).collect();
+        let devices: Vec<Arc<str>> =
+            self.devices.iter().map(|s| Arc::from(s.as_str())).collect();
+        let mut out = Vec::with_capacity(
+            nets.len() * devices.len() * self.batches.len() * self.schemes.len(),
+        );
+        for net in &nets {
+            for device in &devices {
                 for &batch in &self.batches {
                     for &scheme in &self.schemes {
                         out.push(DesignPoint {
@@ -264,19 +296,41 @@ pub fn sweep_parallel(points: &[DesignPoint]) -> crate::Result<Vec<PricedPoint>>
     points.par_iter().map(price_point).collect()
 }
 
+/// Knobs for [`run_sweep_with`] beyond the grid itself.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepOptions {
+    /// Fan pricing out over the rayon pool.
+    pub parallel: bool,
+    /// Attach a [`tiling_search`] outcome to every point.
+    pub search_tilings: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self { parallel: true, search_tilings: false }
+    }
+}
+
 /// A finished sweep: priced points plus per-network Pareto frontiers.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub points: Vec<PricedPoint>,
     /// Per network: indices into `points` on the (latency/image, BRAM,
     /// energy/image) frontier.
-    pub frontiers: BTreeMap<String, Vec<usize>>,
+    pub frontiers: BTreeMap<Arc<str>, Vec<usize>>,
     pub wall_s: f64,
     pub parallel: bool,
+    /// Rayon workers available while pricing (1-effective when serial).
+    pub threads: usize,
+    /// Points answered by the persistent [`sweep_cache`], if one was
+    /// given.
+    pub cache_hits: usize,
+    /// Points priced fresh this run.
+    pub cache_misses: usize,
 }
 
-fn compute_frontiers(points: &[PricedPoint]) -> BTreeMap<String, Vec<usize>> {
-    let mut by_net: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+fn compute_frontiers(points: &[PricedPoint]) -> BTreeMap<Arc<str>, Vec<usize>> {
+    let mut by_net: BTreeMap<Arc<str>, Vec<usize>> = BTreeMap::new();
     for (i, p) in points.iter().enumerate() {
         by_net.entry(p.point.net.clone()).or_default().push(i);
     }
@@ -295,15 +349,80 @@ fn compute_frontiers(points: &[PricedPoint]) -> BTreeMap<String, Vec<usize>> {
 
 /// Run the whole sweep and extract frontiers.
 pub fn run_sweep(cfg: &SweepConfig, parallel: bool) -> crate::Result<SweepReport> {
+    run_sweep_with(cfg, &SweepOptions { parallel, search_tilings: false }, None)
+}
+
+/// [`run_sweep`] with explicit [`SweepOptions`] and an optional
+/// persistent cache: cached points are reused verbatim, only the
+/// missing grid cells are priced (in parallel when asked), and fresh
+/// prices are inserted back for the caller to save.
+pub fn run_sweep_with(
+    cfg: &SweepConfig,
+    opts: &SweepOptions,
+    mut cache: Option<&mut sweep_cache::SweepCache>,
+) -> crate::Result<SweepReport> {
     let points = cfg.points();
     let t0 = Instant::now();
-    let priced = if parallel { sweep_parallel(&points)? } else { sweep_serial(&points)? };
+    let mut priced: Vec<Option<PricedPoint>> = match &cache {
+        Some(c) => points.iter().map(|p| c.lookup(p, opts.search_tilings)).collect(),
+        None => vec![None; points.len()],
+    };
+    let cache_hits = priced.iter().filter(|p| p.is_some()).count();
+    let missing: Vec<(usize, DesignPoint)> = points
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| priced[*i].is_none())
+        .map(|(i, p)| (i, p.clone()))
+        .collect();
+    let mut fresh: Vec<(usize, PricedPoint)> = if opts.parallel {
+        missing
+            .par_iter()
+            .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
+            .collect::<crate::Result<Vec<_>>>()?
+    } else {
+        missing
+            .iter()
+            .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
+            .collect::<crate::Result<Vec<_>>>()?
+    };
+    if opts.search_tilings {
+        let mut cells: Vec<(Arc<str>, Arc<str>, usize)> = missing
+            .iter()
+            .map(|(_, p)| (p.net.clone(), p.device.clone(), p.batch))
+            .collect();
+        cells.sort();
+        cells.dedup();
+        let searched: Vec<tiling_search::SearchedTilings> = if opts.parallel {
+            cells.par_iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
+        } else {
+            cells.iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
+        };
+        let by_cell: BTreeMap<(Arc<str>, Arc<str>, usize), tiling_search::SearchedTilings> =
+            cells.into_iter().zip(searched).collect();
+        for (_, pp) in &mut fresh {
+            pp.search = by_cell
+                .get(&(pp.point.net.clone(), pp.point.device.clone(), pp.point.batch))
+                .cloned();
+        }
+    }
+    let cache_misses = fresh.len();
+    for (i, pp) in fresh {
+        if let Some(c) = cache.as_deref_mut() {
+            c.insert(&pp, opts.search_tilings);
+        }
+        priced[i] = Some(pp);
+    }
+    let priced: Vec<PricedPoint> =
+        priced.into_iter().map(|p| p.expect("every grid cell priced")).collect();
     let frontiers = compute_frontiers(&priced);
     Ok(SweepReport {
         points: priced,
         frontiers,
         wall_s: t0.elapsed().as_secs_f64(),
-        parallel,
+        parallel: opts.parallel,
+        threads: if opts.parallel { rayon::current_num_threads() } else { 1 },
+        cache_hits,
+        cache_misses,
     })
 }
 
@@ -320,7 +439,7 @@ impl SweepReport {
     pub fn best_for(&self, net: &str, device: &str) -> Option<&PricedPoint> {
         self.points
             .iter()
-            .filter(|p| p.point.net == net && p.point.device == device)
+            .filter(|p| &*p.point.net == net && &*p.point.device == device)
             .min_by_key(|p| p.cycles)
     }
 
@@ -328,10 +447,11 @@ impl SweepReport {
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(
             format!(
-                "Design-space frontier: {} points in {:.2}s ({})",
+                "Design-space frontier: {} points in {:.2}s ({}, {} threads)",
                 self.points.len(),
                 self.wall_s,
-                if self.parallel { "rayon" } else { "serial" }
+                if self.parallel { "rayon" } else { "serial" },
+                self.threads
             ),
             &[
                 "Net", "Device", "B", "Scheme", "Tm", "ms/img", "GFLOPS", "DSPs", "BRAMs",
@@ -342,8 +462,8 @@ impl SweepReport {
             for &i in idxs {
                 let p = &self.points[i];
                 t.push(vec![
-                    p.point.net.clone(),
-                    p.point.device.clone(),
+                    p.point.net.to_string(),
+                    p.point.device.to_string(),
                     p.point.batch.to_string(),
                     scheme_name(p.point.scheme).to_string(),
                     p.tm.to_string(),
@@ -364,8 +484,8 @@ impl SweepReport {
     pub fn to_json(&self) -> Json {
         let point_json = |(i, p): (usize, &PricedPoint)| -> Json {
             let mut m = BTreeMap::new();
-            m.insert("net".into(), Json::Str(p.point.net.clone()));
-            m.insert("device".into(), Json::Str(p.point.device.clone()));
+            m.insert("net".into(), Json::Str(p.point.net.to_string()));
+            m.insert("device".into(), Json::Str(p.point.device.to_string()));
             m.insert("batch".into(), Json::Num(p.point.batch as f64));
             m.insert("scheme".into(), Json::Str(scheme_name(p.point.scheme).into()));
             m.insert("tm".into(), Json::Num(p.tm as f64));
@@ -380,6 +500,20 @@ impl SweepReport {
             m.insert("energy_mj".into(), Json::Num(p.energy_mj));
             m.insert("energy_mj_per_image".into(), Json::Num(p.energy_mj_per_image()));
             m.insert("pareto".into(), Json::Bool(self.on_frontier(i)));
+            if let Some(s) = &p.search {
+                m.insert("searched_cycles".into(), Json::Num(s.searched_cycles as f64));
+                m.insert(
+                    "heuristic_model_cycles".into(),
+                    Json::Num(s.heuristic_cycles as f64),
+                );
+                m.insert("beats_heuristic".into(), Json::Bool(s.beats_heuristic()));
+                m.insert(
+                    "search_delta_cycles".into(),
+                    Json::Num(s.delta_cycles() as f64),
+                );
+                m.insert("search_delta_pct".into(), Json::Num(s.delta_pct()));
+                m.insert("search_levels".into(), Json::Num(s.levels_swept as f64));
+            }
             Json::Obj(m)
         };
         let mut root = BTreeMap::new();
@@ -394,7 +528,7 @@ impl SweepReport {
                     .iter()
                     .map(|(net, idxs)| {
                         (
-                            net.clone(),
+                            net.to_string(),
                             Json::Arr(idxs.iter().map(|&i| Json::Num(i as f64)).collect()),
                         )
                     })
@@ -403,6 +537,9 @@ impl SweepReport {
         );
         root.insert("wall_s".into(), Json::Num(self.wall_s));
         root.insert("parallel".into(), Json::Bool(self.parallel));
+        root.insert("threads".into(), Json::Num(self.threads as f64));
+        root.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        root.insert("cache_misses".into(), Json::Num(self.cache_misses as f64));
         Json::Obj(root)
     }
 }
@@ -421,8 +558,10 @@ mod tests {
             .unwrap();
         let points = cfg.points();
         assert_eq!(points.len(), 2 * 2 * 2);
-        assert_eq!(points[0].net, "cnn1x");
-        assert_eq!(points.last().unwrap().net, "lenet10");
+        assert_eq!(&*points[0].net, "cnn1x");
+        assert_eq!(&*points.last().unwrap().net, "lenet10");
+        // Interning: every point's name shares the axis allocation.
+        assert!(Arc::ptr_eq(&points[0].net, &points[1].net));
     }
 
     #[test]

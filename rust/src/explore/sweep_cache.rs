@@ -1,0 +1,299 @@
+//! Persistent priced-point cache — incremental sweeps (`--cache-file`).
+//!
+//! A nightly exploration job re-prices mostly the same grid; this cache
+//! makes the warm run free. On-disk format (via [`crate::util::json`]):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "entries": {
+//!     "cnn1x|zcu102|4|reshaped|plain": {
+//!       "tm": 16, "cycles": 151846336, "realloc_cycles": 0,
+//!       "latency_ms": 1518.46, "throughput_gflops": 2.08,
+//!       "dsps": 1315, "brams": 324, "power_w": 6.89, "energy_mj": 10.4
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! Keys are `net|device|batch|scheme|plain-or-searched` — a
+//! [`DesignPoint`] plus whether the entry carries a
+//! [`SearchedTilings`] outcome (stored under `"search"`, with the
+//! per-layer tilings as `[Tm, Tn, Tr, Tc, M_on]` rows). The schema
+//! version is bumped whenever pricing semantics or the entry layout
+//! change; a mismatched, unreadable, or partially-decodable file
+//! degrades to cache misses rather than an error, so a stale nightly
+//! cache can never wedge a sweep. Numbers round-trip bit-exactly:
+//! integers stay integral and `f64`s print in shortest-roundtrip form.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::tiling_search::SearchedTilings;
+use super::{scheme_name, DesignPoint, PricedPoint};
+use crate::layout::Tiling;
+use crate::util::json::Json;
+
+/// Bump when pricing semantics or the entry layout change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// An in-memory view of one cache file.
+#[derive(Debug, Clone, Default)]
+pub struct SweepCache {
+    entries: BTreeMap<String, Json>,
+}
+
+fn key(p: &DesignPoint, searched: bool) -> String {
+    format!(
+        "{}|{}|{}|{}|{}",
+        p.net,
+        p.device,
+        p.batch,
+        scheme_name(p.scheme),
+        if searched { "searched" } else { "plain" }
+    )
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn encode_search(s: &SearchedTilings) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("searched_cycles".into(), num(s.searched_cycles as f64));
+    m.insert("heuristic_cycles".into(), num(s.heuristic_cycles as f64));
+    m.insert("b_wei".into(), num(s.b_wei as f64));
+    m.insert("levels_swept".into(), num(s.levels_swept as f64));
+    m.insert(
+        "tilings".into(),
+        Json::Arr(
+            s.tilings
+                .iter()
+                .map(|t| {
+                    Json::Arr(
+                        [t.tm, t.tn, t.tr, t.tc, t.m_on]
+                            .into_iter()
+                            .map(|v| num(v as f64))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
+}
+
+fn decode_search(j: &Json) -> Option<SearchedTilings> {
+    let tilings = j
+        .get("tilings")?
+        .as_arr()?
+        .iter()
+        .map(|row| {
+            let v = row.as_usize_vec()?;
+            match v[..] {
+                [tm, tn, tr, tc, m_on] => Some(Tiling::new(tm, tn, tr, tc, m_on)),
+                _ => None,
+            }
+        })
+        .collect::<Option<Vec<_>>>()?;
+    Some(SearchedTilings {
+        tilings,
+        searched_cycles: j.get("searched_cycles")?.as_f64()? as u64,
+        heuristic_cycles: j.get("heuristic_cycles")?.as_f64()? as u64,
+        b_wei: j.get("b_wei")?.as_usize()?,
+        levels_swept: j.get("levels_swept")?.as_usize()?,
+    })
+}
+
+fn encode(p: &PricedPoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("tm".into(), num(p.tm as f64));
+    m.insert("cycles".into(), num(p.cycles as f64));
+    m.insert("realloc_cycles".into(), num(p.realloc_cycles as f64));
+    m.insert("latency_ms".into(), num(p.latency_ms));
+    m.insert("throughput_gflops".into(), num(p.throughput_gflops));
+    m.insert("dsps".into(), num(p.used_dsps as f64));
+    m.insert("brams".into(), num(p.used_brams as f64));
+    m.insert("power_w".into(), num(p.power_w));
+    m.insert("energy_mj".into(), num(p.energy_mj));
+    if let Some(s) = &p.search {
+        m.insert("search".into(), encode_search(s));
+    }
+    Json::Obj(m)
+}
+
+fn decode(point: DesignPoint, j: &Json, searched: bool) -> Option<PricedPoint> {
+    let search = match (searched, j.get("search")) {
+        (true, Some(s)) => Some(decode_search(s)?),
+        (true, None) => return None, // entry predates the search ask
+        (false, _) => None,
+    };
+    Some(PricedPoint {
+        point,
+        tm: j.get("tm")?.as_usize()?,
+        cycles: j.get("cycles")?.as_f64()? as u64,
+        realloc_cycles: j.get("realloc_cycles")?.as_f64()? as u64,
+        latency_ms: j.get("latency_ms")?.as_f64()?,
+        throughput_gflops: j.get("throughput_gflops")?.as_f64()?,
+        used_dsps: j.get("dsps")?.as_usize()?,
+        used_brams: j.get("brams")?.as_usize()?,
+        power_w: j.get("power_w")?.as_f64()?,
+        energy_mj: j.get("energy_mj")?.as_f64()?,
+        search,
+    })
+}
+
+impl SweepCache {
+    /// A cache with no entries (cold start).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Load `path`, degrading to an empty cache on a missing file, a
+    /// schema-version mismatch, or any parse failure.
+    pub fn load(path: &Path) -> Self {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return Self::empty();
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return Self::empty();
+        };
+        if root.get("schema_version").and_then(Json::as_f64) != Some(SCHEMA_VERSION as f64) {
+            return Self::empty();
+        }
+        let Some(entries) = root.get("entries").and_then(Json::as_obj) else {
+            return Self::empty();
+        };
+        Self { entries: entries.clone() }
+    }
+
+    /// Serialize every entry to `path`.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        let mut root = BTreeMap::new();
+        root.insert("schema_version".into(), num(SCHEMA_VERSION as f64));
+        root.insert("entries".into(), Json::Obj(self.entries.clone()));
+        std::fs::write(path, Json::Obj(root).to_string())?;
+        Ok(())
+    }
+
+    /// Cached pricing for `p`, if present and decodable at the current
+    /// schema (with a search outcome when `searched` asks for one). A
+    /// searched entry carries every plain field, so a plain lookup
+    /// falls back to it with the outcome stripped — dropping
+    /// `--search-tilings` between runs does not void the cache.
+    pub fn lookup(&self, p: &DesignPoint, searched: bool) -> Option<PricedPoint> {
+        if let Some(entry) = self.entries.get(&key(p, searched)) {
+            return decode(p.clone(), entry, searched);
+        }
+        if searched {
+            return None; // a plain entry cannot answer a searched ask
+        }
+        let entry = self.entries.get(&key(p, true))?;
+        let mut pp = decode(p.clone(), entry, true)?;
+        pp.search = None;
+        Some(pp)
+    }
+
+    /// Record a freshly priced point.
+    pub fn insert(&mut self, p: &PricedPoint, searched: bool) {
+        self.entries.insert(key(&p.point, searched), encode(p));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::price_point;
+    use crate::layout::Scheme;
+
+    fn point() -> DesignPoint {
+        DesignPoint {
+            net: "cnn1x".into(),
+            device: "zcu102".into(),
+            batch: 4,
+            scheme: Scheme::Reshaped,
+        }
+    }
+
+    #[test]
+    fn insert_then_lookup_round_trips_bit_exactly() {
+        let priced = price_point(&point()).unwrap();
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced, false);
+        let back = cache.lookup(&point(), false).expect("hit");
+        assert_eq!(back.point, priced.point);
+        assert_eq!(back.tm, priced.tm);
+        assert_eq!(back.cycles, priced.cycles);
+        assert_eq!(back.realloc_cycles, priced.realloc_cycles);
+        assert_eq!(back.used_dsps, priced.used_dsps);
+        assert_eq!(back.used_brams, priced.used_brams);
+        assert_eq!(back.latency_ms.to_bits(), priced.latency_ms.to_bits());
+        assert_eq!(back.power_w.to_bits(), priced.power_w.to_bits());
+        assert_eq!(back.energy_mj.to_bits(), priced.energy_mj.to_bits());
+        assert!(back.search.is_none());
+    }
+
+    #[test]
+    fn file_round_trip_preserves_entries() {
+        let priced = price_point(&point()).unwrap();
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced, false);
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_rt_{}.json", std::process::id()));
+        cache.save(&path).unwrap();
+        let reloaded = SweepCache::load(&path);
+        std::fs::remove_file(&path).ok();
+        assert_eq!(reloaded.len(), 1);
+        let back = reloaded.lookup(&point(), false).expect("hit after reload");
+        assert_eq!(back.cycles, priced.cycles);
+        assert_eq!(back.energy_mj.to_bits(), priced.energy_mj.to_bits());
+    }
+
+    #[test]
+    fn plain_entries_do_not_answer_searched_lookups() {
+        let priced = price_point(&point()).unwrap();
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced, false);
+        assert!(cache.lookup(&point(), true).is_none());
+    }
+
+    #[test]
+    fn searched_entries_answer_plain_lookups_without_the_outcome() {
+        let mut priced = price_point(&point()).unwrap();
+        priced.search = Some(crate::explore::tiling_search::search_tilings(
+            &crate::nets::network_by_name("cnn1x").unwrap(),
+            &crate::device::zcu102(),
+            4,
+        ));
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced, true);
+        // Dropping --search-tilings must still hit the cache ...
+        let back = cache.lookup(&point(), false).expect("plain fallback hit");
+        assert_eq!(back.cycles, priced.cycles);
+        assert_eq!(back.energy_mj.to_bits(), priced.energy_mj.to_bits());
+        assert!(back.search.is_none());
+        // ... and the searched view round-trips intact.
+        let full = cache.lookup(&point(), true).expect("searched hit");
+        assert_eq!(full.search, priced.search);
+    }
+
+    #[test]
+    fn garbage_and_stale_schemas_load_empty() {
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(SweepCache::load(&path).is_empty());
+        std::fs::write(&path, r#"{"schema_version": 999999, "entries": {}}"#).unwrap();
+        assert!(SweepCache::load(&path).is_empty());
+        std::fs::remove_file(&path).ok();
+        assert!(SweepCache::load(&path).is_empty(), "missing file is empty too");
+    }
+}

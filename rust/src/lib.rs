@@ -33,6 +33,15 @@
 //! is memoized in the concurrency-safe [`layout::cache`], which the sim
 //! and report layers share, so the paper-reproduction paths reuse the
 //! explorer's work (and vice versa) for free.
+//!
+//! The scheduler's own `Tr` enumeration is pruned (binary-searched
+//! BRAM ceiling + a provable latency lower bound,
+//! [`model::scheduler::SearchMode`]) and stays bit-identical to the
+//! exhaustive scan at >= 5x fewer closed-form evaluations; the explorer
+//! can additionally search per-layer `(Tr, M_on)` beyond Algorithm 1
+//! ([`explore::tiling_search`], `--search-tilings`) and persist priced
+//! points across runs ([`explore::sweep_cache`], `--cache-file`) so a
+//! warm sweep only prices new grid cells.
 
 pub mod coordinator;
 pub mod data;

@@ -27,6 +27,7 @@ USAGE:
   ef-train schedule [--net NET] [--device zcu102|pynq-z1] [--batch N]
   ef-train explore [--nets A,B] [--devices D,E] [--batches N,M]
                    [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
+                   [--jobs N] [--cache-file FILE] [--search-tilings]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
@@ -38,11 +39,16 @@ AOT artifacts, available for cnn1x and lenet10 by default).
 
 `explore` sweeps the (network x device x batch x scheme) cross product
 in parallel, prints the per-network Pareto frontier (latency/image,
-BRAM, energy/image), and writes the full priced grid as JSON.";
+BRAM, energy/image), and writes the full priced grid as JSON.
+`--jobs N` pins the rayon pool; `--cache-file F` persists priced points
+so a warm sweep only prices new grid cells; `--search-tilings` searches
+per-layer (Tr, M_on) beyond Algorithm 1 and reports where it beats the
+paper's heuristic.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
     "max-steps", "shift", "nets", "devices", "batches", "schemes", "out",
+    "jobs", "cache-file",
 ];
 
 fn main() {
@@ -144,18 +150,56 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 &args.flag_or("batches", &batches_d),
                 &args.flag_or("schemes", &schemes_d),
             )?;
-            let parallel = !args.has("serial");
-            let report = explore::run_sweep(&cfg, parallel)?;
+            let opts = explore::SweepOptions {
+                parallel: !args.has("serial"),
+                search_tilings: args.has("search-tilings"),
+            };
+            let jobs = args.parse_flag("jobs", 0usize);
+            let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
+            let mut point_cache =
+                cache_path.as_deref().map(explore::sweep_cache::SweepCache::load);
+            let report = if jobs > 0 {
+                let pool = rayon::ThreadPoolBuilder::new()
+                    .num_threads(jobs)
+                    .build()
+                    .map_err(|e| anyhow::anyhow!("building a {jobs}-thread pool: {e}"))?;
+                pool.install(|| explore::run_sweep_with(&cfg, &opts, point_cache.as_mut()))?
+            } else {
+                explore::run_sweep_with(&cfg, &opts, point_cache.as_mut())?
+            };
             println!("{}", report.summary_table());
             let (hits, misses) = cache::counters();
             println!(
-                "swept {} design points in {:.2}s ({}); stream cache: {} hits / {} misses",
+                "swept {} design points in {:.2}s ({}, {} threads); \
+                 stream cache: {} hits / {} misses",
                 report.points.len(),
                 report.wall_s,
-                if parallel { "rayon" } else { "serial" },
+                if opts.parallel { "rayon" } else { "serial" },
+                report.threads,
                 hits,
                 misses
             );
+            if let (Some(path), Some(pc)) = (&cache_path, &point_cache) {
+                pc.save(path)?;
+                println!(
+                    "point cache: {} hits / {} freshly priced -> {} ({} entries)",
+                    report.cache_hits,
+                    report.cache_misses,
+                    path.display(),
+                    pc.len()
+                );
+            }
+            if opts.search_tilings {
+                let improved = report
+                    .points
+                    .iter()
+                    .filter(|p| p.search.as_ref().is_some_and(|s| s.beats_heuristic()))
+                    .count();
+                println!(
+                    "tiling search: beat Algorithm 1 on {improved} of {} points",
+                    report.points.len()
+                );
+            }
             let out = args.flag_or("out", "explore_report.json");
             std::fs::write(&out, report.to_json().to_string())?;
             println!("wrote {out}");

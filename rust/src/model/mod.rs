@@ -7,6 +7,6 @@ pub mod perf;
 pub mod resource;
 pub mod scheduler;
 
-pub use perf::{conv_latency, LatencyBreakdown};
+pub use perf::{conv_latency, conv_latency_lower_bound, LatencyBreakdown};
 pub use resource::{ConvResources, ResourceModel};
-pub use scheduler::{schedule, Schedule};
+pub use scheduler::{schedule, schedule_searched, Schedule, SearchMode, SearchStats};

@@ -161,6 +161,103 @@ fn wu_latency(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
     total
 }
 
+/// Per-group floor of [`fp_like_latency`]: `batch x lat3` summed over
+/// weight groups. A true lower bound on both the FP and BP closed forms
+/// because the batch-tail terms only ever grow — `t_load >= t_ifm` and
+/// `t_prod2 >= t_prod1` give `latb1 >= lat1` and `latb2 >= lat2`, hence
+/// `latb3 >= lat3` in both tail variants of Eq. (17)/(20)/(21).
+fn fp_like_floor(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
+    let n_tiles = ceil_div(l.n as u64, t.tn as u64);
+    let r_tiles = ceil_div(l.r as u64, t.tr as u64);
+    let m_on = t.m_on.min(l.m) as u64;
+    let t_prod1 = tt.t_ifm.max(tt.t_comp);
+    let t_store = tt.t_comp.max(tt.t_out);
+    let lat1 = (n_tiles - 1) * t_prod1 + tt.t_ifm + tt.t_comp;
+    let lat2 = (n_tiles - 1) * t_prod1 + tt.t_ifm + t_store;
+    let mut total = 0u64;
+    let mut m_done = 0u64;
+    while m_done < l.m as u64 {
+        let g = m_on.min(l.m as u64 - m_done);
+        let m_on_tiles = ceil_div(g, t.tm as u64);
+        total += batch * ((m_on_tiles * r_tiles - 1) * lat2 + lat1 + tt.t_out + tt.t_start);
+        m_done += g;
+    }
+    total
+}
+
+/// Same floor for [`wu_latency`]: keeps the per-tile times exact and
+/// drops only the `latb1 >= lat1` batch tails (`t_store >= t_comp`, and
+/// the whole-map variant adds `t_out` terms on top of `lat1`) plus the
+/// trailing `t_out` flush.
+fn wu_floor(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
+    let n_tiles = ceil_div(l.n as u64, t.tn as u64);
+    let r_tiles = ceil_div(l.r as u64, t.tr as u64);
+    let m_on = t.m_on.min(l.m) as u64;
+    let mut total = 0u64;
+    let mut m_done = 0u64;
+    while m_done < l.m as u64 {
+        let g = m_on.min(l.m as u64 - m_done);
+        let m_on_tiles = ceil_div(g, t.tm as u64);
+        let t_load = tt.t_ifm.max(tt.t_ofm);
+        total += if (l.r as u64) <= t.tr as u64 {
+            let t_prod2 = tt.t_ifm.max(tt.t_comp);
+            let lat1 = (n_tiles - 1) * t_prod2 + t_load + tt.t_comp;
+            m_on_tiles * batch * lat1
+        } else {
+            let t_prod1 = t_load.max(tt.t_comp);
+            let lat1 = (r_tiles - 1) * t_prod1 + t_load + tt.t_comp;
+            batch * m_on_tiles * n_tiles * lat1
+        };
+        m_done += g;
+    }
+    total
+}
+
+/// A provable lower bound on the three-process latency sum
+/// `sum_p conv_latency(l, t, dev, p, batch).cycles` over FP + BP + WU,
+/// computed without touching the [`conv_latency_cached`] memo.
+///
+/// Every per-tile time is exact (the same [`TileTimes`] / [`bp_problem`]
+/// construction the real closed form uses); only the nonnegative
+/// batch-tail corrections (`latb* >= lat*`) are dropped, so the bound
+/// sits within a few percent of the true sum at training batch sizes —
+/// tight enough for the scheduler's dominated-candidate pruning, cheap
+/// enough to screen every `Tr` candidate. Validity (`bound <= actual`)
+/// is pinned by unit tests here and a property test over random layers
+/// in `rust/tests/scheduler_pruning.rs`.
+pub fn conv_latency_lower_bound(l: &ConvShape, t: &Tiling, dev: &Device, batch: usize) -> u64 {
+    let b = batch as u64;
+    let tt_fp = TileTimes::new(l, t, dev, Process::Fp);
+    let (bp_layer, bp_tiling, tt_bp) = bp_problem(l, t, dev);
+    let tt_wu = TileTimes::new(l, t, dev, Process::Wu);
+    fp_like_floor(l, t, &tt_fp, b)
+        + fp_like_floor(&bp_layer, &bp_tiling, &tt_bp, b)
+        + wu_floor(l, t, &tt_wu, b)
+}
+
+/// The BP pass as the accelerator sees it: the transposed problem
+/// (output channels `N` over the input map), its balanced row tiling,
+/// and tile times with the on-chip dilation correction applied to the
+/// loss stream. Shared by [`conv_latency`] and
+/// [`conv_latency_lower_bound`] so the two can never drift apart.
+fn bp_problem(l: &ConvShape, t: &Tiling, dev: &Device) -> (ConvShape, Tiling, TileTimes) {
+    let bp_layer = ConvShape::new(l.n, l.m, l.r_in(), l.c_in(), l.k, 1);
+    let bp_tiling = Tiling::new(
+        t.tn,
+        t.tm,
+        balanced_rows(bp_layer.r, t.tr),
+        bp_layer.c,
+        t.m_on,
+    );
+    let mut tt_bp = TileTimes::new(&bp_layer, &bp_tiling, dev, Process::Bp);
+    // The dilation zeros of a strided BP are generated on-chip:
+    // only the real loss words ([R x C] per channel) transfer.
+    let rows_loss = (bp_tiling.tr + 2 * (l.k - 1)).div_ceil(l.s).min(l.r) as u64;
+    let tm_eff = t.tm.min(l.m) as u64;
+    tt_bp.t_ifm = dev.t_start + tm_eff.div_ceil(dev.p_words()) * rows_loss * l.c as u64;
+    (bp_layer, bp_tiling, tt_bp)
+}
+
 /// Closed-form latency of (layer, process) on `dev` with tiling `t`.
 pub fn conv_latency(
     l: &ConvShape,
@@ -174,22 +271,7 @@ pub fn conv_latency(
     let cycles = match process {
         Process::Fp => fp_like_latency(l, t, &tt, batch, false),
         Process::Bp => {
-            // Transposed problem: output channels N over the input map.
-            let bp_layer = ConvShape::new(l.n, l.m, l.r_in(), l.c_in(), l.k, 1);
-            let bp_tiling = Tiling::new(
-                t.tn,
-                t.tm,
-                balanced_rows(bp_layer.r, t.tr),
-                bp_layer.c,
-                t.m_on,
-            );
-            let mut tt_bp = TileTimes::new(&bp_layer, &bp_tiling, dev, Process::Bp);
-            // The dilation zeros of a strided BP are generated on-chip:
-            // only the real loss words ([R x C] per channel) transfer.
-            let rows_loss = (bp_tiling.tr + 2 * (l.k - 1)).div_ceil(l.s).min(l.r) as u64;
-            let tm_eff = t.tm.min(l.m) as u64;
-            tt_bp.t_ifm = dev.t_start
-                + tm_eff.div_ceil(dev.p_words()) * rows_loss * l.c as u64;
+            let (bp_layer, bp_tiling, tt_bp) = bp_problem(l, t, dev);
             fp_like_latency(&bp_layer, &bp_tiling, &tt_bp, batch, true)
         }
         Process::Wu => wu_latency(l, t, &tt, batch),
@@ -253,10 +335,30 @@ pub fn conv_latency_cached(
     latency_memo().get_or_compute(&key, || conv_latency(l, t, dev, process, batch))
 }
 
+/// The three-process (FP + BP + WU) closed-form cycles of one
+/// (layer, tiling) — the per-layer objective the scheduler's `Tr`
+/// search and the explorer's tiling search share. Goes through
+/// [`conv_latency_cached`], so each distinct candidate is evaluated
+/// once per process across every caller.
+pub fn conv_process_sum(l: &ConvShape, t: &Tiling, dev: &Device, batch: usize) -> u64 {
+    Process::ALL
+        .iter()
+        .map(|&p| conv_latency_cached(l, t, dev, p, batch).cycles)
+        .sum()
+}
+
 /// Drop every memoized closed-form latency — the cold-start hook for
 /// benchmarks that compare against uncached runs.
 pub fn reset_latency_memo() {
     latency_memo().reset()
+}
+
+/// Global `(hits, misses)` of the closed-form latency memo. Their sum is
+/// the number of `conv_latency` evaluations requested through
+/// [`conv_latency_cached`] — the meter the scheduler-pruning evidence
+/// tests read (`rust/tests/pruning_memo_counters.rs`).
+pub fn latency_memo_counters() -> (u64, u64) {
+    latency_memo().counters()
 }
 
 /// End-to-end latency of a non-conv layer (pooling / BN / FC), modeled
@@ -360,6 +462,40 @@ mod tests {
         let direct = conv_latency(&l, &t, &dev, Process::Fp, 4);
         let cached = conv_latency_cached(&l, &t, &dev, Process::Fp, 4);
         assert_eq!(cached.cycles, direct.cycles);
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_the_true_sum_and_stays_tight() {
+        let dev = zcu102();
+        for l in [
+            ConvShape::new(96, 3, 55, 55, 11, 4),
+            ConvShape::new(384, 256, 13, 13, 3, 1),
+            ConvShape::new(64, 64, 8, 8, 3, 1),
+            ConvShape::new(16, 3, 32, 32, 3, 1),
+        ] {
+            for tr in [1usize, 2, 5, 13] {
+                let tr = tr.min(l.r);
+                let m_on = l.m.div_ceil(16).min(7) * 16;
+                let t = Tiling::new(16, 16, tr, l.c, m_on);
+                for batch in [1usize, 4, 16] {
+                    let actual: u64 = Process::ALL
+                        .iter()
+                        .map(|&p| conv_latency(&l, &t, &dev, p, batch).cycles)
+                        .sum();
+                    let floor = conv_latency_lower_bound(&l, &t, &dev, batch);
+                    assert!(
+                        floor <= actual,
+                        "floor {floor} > actual {actual} for {l:?} tr={tr} b={batch}"
+                    );
+                    if batch >= 4 {
+                        assert!(
+                            floor * 2 > actual,
+                            "floor {floor} uselessly loose vs {actual} for {l:?} tr={tr}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -5,15 +5,24 @@
 //! allocation, minimizing the modeled training latency under the
 //! Eq. (28)–(32) constraints with the 80%-DSP / 75%-BRAM boundary the
 //! paper recommends (§5.3).
+//!
+//! The per-layer `Tr` enumeration is *pruned*: the BRAM-feasibility
+//! ceiling is binary-searched (Eq. 29/30 grow monotonically in `Tr`)
+//! and candidates are priced best-first by their analytic floor
+//! ([`conv_latency_lower_bound`]), stopping as soon as the floor proves
+//! every remaining `Tr` can neither be the latency minimum nor enter
+//! the 3% tie-break band. The seed's exhaustive scan survives as
+//! [`SearchMode::Exhaustive`], the oracle the pruned search must match
+//! bit-for-bit (`rust/tests/scheduler_pruning.rs`).
 
 use crate::device::Device;
 use crate::layout::{Process, Tiling};
-use crate::model::perf::conv_latency_cached;
+use crate::model::perf::{conv_latency_cached, conv_latency_lower_bound, conv_process_sum};
 use crate::model::resource::ResourceModel;
-use crate::nets::Network;
+use crate::nets::{ConvShape, Network};
 
 /// Scheduler output for one network on one device.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Schedule {
     pub tm: usize,
     pub tn: usize,
@@ -32,31 +41,204 @@ impl Schedule {
 }
 
 /// DSP boundary: 80% of the device's DSPs (§5.3).
-fn dsp_boundary(dev: &Device) -> usize {
+pub fn dsp_boundary(dev: &Device) -> usize {
     (dev.dsps * 4) / 5
 }
 
 /// BRAM boundary: 75% of the device's banks (§5.3).
-fn bram_boundary(dev: &Device) -> usize {
+pub fn bram_boundary(dev: &Device) -> usize {
     (dev.brams * 3) / 4
 }
 
+/// Largest `v` with `v * v <= x` (`usize::isqrt` needs a newer
+/// toolchain than the crate's 1.73 floor). The float seed is exact for
+/// every on-chip budget that fits an `f64` mantissa; the two correction
+/// steps make it exact regardless.
+fn isqrt(x: usize) -> usize {
+    let mut r = (x as f64).sqrt() as usize;
+    while r > 0 && r * r > x {
+        r -= 1;
+    }
+    while (r + 1) * (r + 1) <= x {
+        r += 1;
+    }
+    r
+}
+
 /// Step 2: pick `Tm = Tn` from the DSP budget (Eq. 28), honoring the
-/// published per-device choice when one exists.
+/// published per-device choice when one exists. Closed form: the
+/// largest `t` with `q * t^2 <= budget` is `isqrt(budget / q)` —
+/// `t^2 <= floor(budget / q)` and `q * t^2 <= budget` select the same
+/// integers — clamped to the seed loop's floor of 1.
 pub fn pick_tile(dev: &Device) -> usize {
     if let Some(t) = dev.tile_override {
         return t;
     }
-    let budget = dsp_boundary(dev);
-    let mut t = 1;
-    while dev.q * (t + 1) * (t + 1) <= budget {
-        t += 1;
+    isqrt(dsp_boundary(dev) / dev.q).max(1)
+}
+
+/// How [`schedule_searched`] enumerates each layer's `Tr` candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Binary-searched feasibility ceiling + lower-bound pruning; the
+    /// default behind [`schedule`]. Returns bit-identical `Schedule`s
+    /// to [`SearchMode::Exhaustive`] with >= 5x fewer `conv_latency`
+    /// evaluations (asserted across the zoo by the tier-1 tests).
+    Pruned,
+    /// Price every BRAM-feasible `Tr` through the closed form — the
+    /// seed behaviour, kept as the test oracle.
+    Exhaustive,
+}
+
+/// Work counters for one [`schedule_searched`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// `Tr` candidates priced through the closed form.
+    pub priced_candidates: u64,
+    /// Candidates dismissed by the latency lower bound alone.
+    pub pruned_candidates: u64,
+    /// `conv_latency` evaluations requested (three processes per priced
+    /// candidate).
+    pub latency_evals: u64,
+}
+
+/// Largest `Tr <= R` whose double-buffered feature banks fit
+/// `bram_budget` next to `reserved_wei` weight banks (Eq. 29/30/32).
+/// Both bank counts grow monotonically in `Tr` (`Tr_in = S*(Tr-1)+K`
+/// and the OFM rows only grow), so feasibility is a prefix of `1..=R`
+/// and binary search finds its edge. `None` when even `Tr = 1` does
+/// not fit — the caller falls back exactly like the seed scan did.
+pub fn max_feasible_tr(
+    rm: &ResourceModel,
+    l: &ConvShape,
+    tm: usize,
+    m_on: usize,
+    reserved_wei: usize,
+    bram_budget: usize,
+) -> Option<usize> {
+    let fits = |tr: usize| {
+        let cand = Tiling::new(tm, tm, tr, l.c, m_on);
+        2 * (rm.b_ifm(l, &cand) + rm.b_ofm(l, &cand) + reserved_wei) <= bram_budget
+    };
+    if !fits(1) {
+        return None;
     }
-    t
+    let (mut lo, mut hi) = (1usize, l.r);
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
+/// One layer's `Tr` enumeration context (steps 13-16 of Algorithm 1).
+struct TrSearch<'a> {
+    rm: &'a ResourceModel<'a>,
+    l: &'a ConvShape,
+    dev: &'a Device,
+    batch: usize,
+    tm: usize,
+    m_on: usize,
+    b_wei: usize,
+    bram_budget: usize,
+}
+
+impl TrSearch<'_> {
+    fn price(&self, cand: &Tiling, stats: &mut SearchStats) -> u64 {
+        stats.priced_candidates += 1;
+        stats.latency_evals += Process::ALL.len() as u64;
+        conv_process_sum(self.l, cand, self.dev, self.batch)
+    }
+
+    /// The seed scan: price every feasible `Tr` in `1..=R`.
+    fn exhaustive(&self, stats: &mut SearchStats) -> Vec<(u64, Tiling)> {
+        let mut candidates = Vec::new();
+        for tr in 1..=self.l.r {
+            let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
+            let b_ifm = self.rm.b_ifm(self.l, &cand);
+            let b_ofm = self.rm.b_ofm(self.l, &cand);
+            if 2 * (b_ifm + b_ofm + self.b_wei) > self.bram_budget {
+                continue;
+            }
+            let lat = self.price(&cand, stats);
+            candidates.push((lat, cand));
+        }
+        candidates
+    }
+
+    /// The pruned scan: best-first branch-and-bound over `1..=Tr_max`.
+    /// Every candidate is floored first (cheap, memo-free), then priced
+    /// in ascending-floor order; once the next floor exceeds
+    /// `1.03 x best-so-far` the walk stops — the floors only grow from
+    /// there. Since `floor <= lat`, every unpriced candidate has
+    /// `lat > 1.03 x best >= 1.03 x min`: it can neither be the latency
+    /// minimum nor fall inside the 3% band [`select_tiling`] breaks
+    /// ties over, so dropping it cannot change the selection. With the
+    /// near-exact floor the first visit usually *is* the argmin, and
+    /// only the tie-break band gets priced at all.
+    fn pruned(&self, stats: &mut SearchStats) -> Vec<(u64, Tiling)> {
+        let Some(tr_max) =
+            max_feasible_tr(self.rm, self.l, self.tm, self.m_on, self.b_wei, self.bram_budget)
+        else {
+            return Vec::new();
+        };
+        let mut order: Vec<(u64, usize)> = (1..=tr_max)
+            .map(|tr| {
+                let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
+                (conv_latency_lower_bound(self.l, &cand, self.dev, self.batch), tr)
+            })
+            .collect();
+        // Ascending floor; the larger `Tr` first on ties (deterministic,
+        // and the tie-break prefers large tiles anyway).
+        order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+        let mut candidates = Vec::new();
+        let mut best: Option<u64> = None;
+        for (i, &(floor, tr)) in order.iter().enumerate() {
+            if let Some(b) = best {
+                if floor as f64 > b as f64 * 1.03 {
+                    stats.pruned_candidates += (order.len() - i) as u64;
+                    break;
+                }
+            }
+            let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
+            let lat = self.price(&cand, stats);
+            best = Some(best.map_or(lat, |b| b.min(lat)));
+            candidates.push((lat, cand));
+        }
+        candidates
+    }
+}
+
+/// The paper's pick among priced candidates: the latency-minimizing
+/// `Tr`, except that within 3% of the optimum the *largest* `Tr` wins
+/// (fewest DMA restarts and edge iterations — effects the closed form
+/// underweights but the discrete-event sim confirms).
+fn select_tiling(candidates: &[(u64, Tiling)]) -> Option<Tiling> {
+    let best = candidates.iter().map(|(lat, _)| *lat).min()?;
+    candidates
+        .iter()
+        .filter(|(lat, _)| *lat as f64 <= best as f64 * 1.03)
+        .max_by_key(|(_, c)| c.tr)
+        .map(|(_, c)| *c)
 }
 
 /// Run Algorithm 1 for `net` on `dev` with batch size `batch`.
 pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
+    schedule_searched(net, dev, batch, SearchMode::Pruned).0
+}
+
+/// Algorithm 1 with an explicit [`SearchMode`], returning the work
+/// counters alongside the schedule.
+pub fn schedule_searched(
+    net: &Network,
+    dev: &Device,
+    batch: usize,
+    mode: SearchMode,
+) -> (Schedule, SearchStats) {
     let layers = net.conv_layers();
     assert!(!layers.is_empty());
     let rm = ResourceModel::new(dev);
@@ -101,35 +283,16 @@ pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
 
     // Steps 13-16: per layer, Tc = C and the latency-minimizing Tr that
     // fits Eq. (29), (30), (32).
+    let mut stats = SearchStats::default();
     let mut tilings = Vec::with_capacity(layers.len());
     for (l, &m_on) in layers.iter().zip(&m_ons) {
-        let mut candidates: Vec<(u64, Tiling)> = Vec::new();
-        for tr in 1..=l.r {
-            let cand = Tiling::new(t, t, tr, l.c, m_on);
-            let b_ifm = rm.b_ifm(l, &cand);
-            let b_ofm = rm.b_ofm(l, &cand);
-            if 2 * (b_ifm + b_ofm + b_wei) > bram_budget {
-                continue;
-            }
-            let lat: u64 = Process::ALL
-                .iter()
-                .map(|&p| conv_latency_cached(l, &cand, dev, p, batch).cycles)
-                .sum();
-            candidates.push((lat, cand));
-        }
-        // Latency-minimizing Tr; among candidates within 3% of the
-        // optimum prefer the *largest* Tr (fewest DMA restarts and edge
-        // iterations — effects the closed form underweights but the
-        // discrete-event sim confirms).
-        let tiling = match candidates.iter().map(|(lat, _)| *lat).min() {
-            Some(best) => candidates
-                .iter()
-                .filter(|(lat, _)| *lat as f64 <= best as f64 * 1.03)
-                .max_by_key(|(_, c)| c.tr)
-                .map(|(_, c)| *c)
-                .unwrap(),
-            None => Tiling::new(t, t, 1, l.c, m_on),
+        let search = TrSearch { rm: &rm, l, dev, batch, tm: t, m_on, b_wei, bram_budget };
+        let candidates = match mode {
+            SearchMode::Pruned => search.pruned(&mut stats),
+            SearchMode::Exhaustive => search.exhaustive(&mut stats),
         };
+        let tiling =
+            select_tiling(&candidates).unwrap_or_else(|| Tiling::new(t, t, 1, l.c, m_on));
         tilings.push(tiling);
     }
 
@@ -147,7 +310,7 @@ pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
         .max()
         .unwrap();
 
-    Schedule {
+    let schedule = Schedule {
         tm: t,
         tn: t,
         tilings,
@@ -156,7 +319,8 @@ pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
         b_wei,
         d_conv: dev.q * t * t,
         b_conv: 2 * (b_ifm + b_ofm + b_wei),
-    }
+    };
+    (schedule, stats)
 }
 
 fn round_up_to(x: usize, t: usize) -> usize {
@@ -231,6 +395,46 @@ mod tests {
         let t = pick_tile(&dev);
         assert!(dev.q * t * t <= (dev.dsps * 4) / 5);
         assert!(dev.q * (t + 1) * (t + 1) > (dev.dsps * 4) / 5);
+    }
+
+    #[test]
+    fn closed_form_pick_tile_matches_the_seed_loop() {
+        // The incrementing loop the isqrt closed form replaced, kept as
+        // the oracle.
+        let loop_pick = |dev: &Device| -> usize {
+            if let Some(t) = dev.tile_override {
+                return t;
+            }
+            let budget = dsp_boundary(dev);
+            let mut t = 1;
+            while dev.q * (t + 1) * (t + 1) <= budget {
+                t += 1;
+            }
+            t
+        };
+        for mut dev in [zcu102(), pynq_z1()] {
+            assert_eq!(pick_tile(&dev), loop_pick(&dev), "{}", dev.name);
+            dev.tile_override = None;
+            assert_eq!(pick_tile(&dev), loop_pick(&dev), "{} sans override", dev.name);
+            // Including degenerate budgets where the loop's floor binds.
+            for dsps in [0usize, 1, 7, 19, 20, 21, 499, 500] {
+                dev.dsps = dsps;
+                assert_eq!(pick_tile(&dev), loop_pick(&dev), "dsps={dsps}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_and_exhaustive_schedules_agree_here_too() {
+        // The full-zoo sweep lives in tests/scheduler_pruning.rs; this
+        // smoke check keeps the invariant visible next to the code.
+        let net = alexnet();
+        let dev = zcu102();
+        let (fast, fs) = schedule_searched(&net, &dev, 4, SearchMode::Pruned);
+        let (full, xs) = schedule_searched(&net, &dev, 4, SearchMode::Exhaustive);
+        assert_eq!(fast, full);
+        assert!(fs.priced_candidates < xs.priced_candidates);
+        assert_eq!(fs.latency_evals, 3 * fs.priced_candidates);
     }
 
     #[test]

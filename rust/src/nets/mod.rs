@@ -156,6 +156,29 @@ impl Network {
     }
 }
 
+/// Random synthetic network on the crate's deterministic RNG — the
+/// shared generator behind the scheduler/pruning/tiling-search property
+/// tests (`rust/tests/scheduler_properties.rs` and friends). Shapes
+/// stay within the zoo's envelope so every analytic model applies.
+pub fn random_network(rng: &mut crate::data::Rng) -> Network {
+    use crate::util::proptest::{pick, range};
+    let depth = range(rng, 1, 5);
+    let mut layers = Vec::new();
+    let mut ch = *pick(rng, &[3usize, 16]);
+    let mut map = *pick(rng, &[16usize, 32, 64]);
+    for _ in 0..depth {
+        let m = *pick(rng, &[16usize, 32, 64, 96]);
+        let k = *pick(rng, &[1usize, 3, 5]);
+        layers.push(LayerKind::Conv(ConvShape::new(m, ch, map, map, k, 1)));
+        ch = m;
+        if map >= 8 && rng.below(2) == 1 {
+            map /= 2;
+            layers.push(LayerKind::Pool { ch, r: map, c: map });
+        }
+    }
+    Network { name: "random", layers }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,7 +8,10 @@
 //!   specs (the cache may only deduplicate, never change numbers).
 
 use ef_train::data::Rng;
-use ef_train::explore::{price_point, run_sweep, DesignPoint, SweepConfig};
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::explore::{
+    price_point, run_sweep, run_sweep_with, DesignPoint, SweepConfig, SweepOptions,
+};
 use ef_train::layout::cache::{counters, stream_stats};
 use ef_train::layout::streams::{costs_for_spec, summarize_spec, StreamSpec};
 use ef_train::layout::{Process, Role, Scheme, Tiling};
@@ -22,8 +25,8 @@ fn explorer_best_never_worse_than_plain_schedule() {
         let report = run_sweep(&cfg, true).unwrap();
         let best = report.best_for(net, device).expect("swept pair");
         let plain = price_point(&DesignPoint {
-            net: net.to_string(),
-            device: device.to_string(),
+            net: net.into(),
+            device: device.into(),
             batch: 4,
             scheme: Scheme::Reshaped,
         })
@@ -101,6 +104,91 @@ fn repeated_lookups_hit_the_global_cache() {
     let (h1, _) = counters();
     assert!(h1 > h0, "identical spec must hit");
     assert_eq!(first.total(), second.total());
+}
+
+#[test]
+fn persistent_cache_makes_warm_sweeps_free_and_bit_identical() {
+    let cfg = SweepConfig::from_args("cnn1x,lenet10", "zcu102", "4,8", "bchw,reshaped").unwrap();
+    let opts = SweepOptions { parallel: false, search_tilings: false };
+    let mut cache = SweepCache::empty();
+    let cold = run_sweep_with(&cfg, &opts, Some(&mut cache)).unwrap();
+    assert_eq!(cold.cache_hits, 0, "cold run answers nothing from the cache");
+    assert_eq!(cold.cache_misses, cold.points.len());
+    assert_eq!(cache.len(), cold.points.len());
+
+    // Round-trip through disk like the nightly job would.
+    let path = std::env::temp_dir()
+        .join(format!("ef_train_explore_cache_{}.json", std::process::id()));
+    cache.save(&path).unwrap();
+    let mut warm_cache = SweepCache::load(&path);
+    std::fs::remove_file(&path).ok();
+    assert_eq!(warm_cache.len(), cold.points.len());
+
+    let warm = run_sweep_with(&cfg, &opts, Some(&mut warm_cache)).unwrap();
+    assert_eq!(warm.cache_hits, warm.points.len(), "warm run must price 0 new points");
+    assert_eq!(warm.cache_misses, 0);
+    for (a, b) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.tm, b.tm);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.realloc_cycles, b.realloc_cycles);
+        assert_eq!(a.used_dsps, b.used_dsps);
+        assert_eq!(a.used_brams, b.used_brams);
+        assert_eq!(a.latency_ms.to_bits(), b.latency_ms.to_bits());
+        assert_eq!(a.throughput_gflops.to_bits(), b.throughput_gflops.to_bits());
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+    }
+    assert_eq!(cold.frontiers, warm.frontiers);
+
+    // A widened grid only prices the new cells.
+    let wider =
+        SweepConfig::from_args("cnn1x,lenet10", "zcu102", "4,8,16", "bchw,reshaped").unwrap();
+    let grown = run_sweep_with(&wider, &opts, Some(&mut warm_cache)).unwrap();
+    assert_eq!(grown.cache_hits, cold.points.len());
+    assert_eq!(grown.cache_misses, grown.points.len() - cold.points.len());
+}
+
+#[test]
+fn searched_tilings_beat_the_heuristic_somewhere_and_surface_in_json() {
+    let cfg =
+        SweepConfig::from_args("cnn1x,lenet10,alexnet", "zcu102,pynq-z1", "4,16", "reshaped")
+            .unwrap();
+    let opts = SweepOptions { parallel: true, search_tilings: true };
+    let report = run_sweep_with(&cfg, &opts, None).unwrap();
+    assert!(report.points.iter().all(|p| p.search.is_some()));
+    for p in &report.points {
+        let s = p.search.as_ref().unwrap();
+        assert!(s.searched_cycles <= s.heuristic_cycles);
+        assert_eq!(s.beats_heuristic(), s.delta_cycles() > 0);
+    }
+    let improved = report
+        .points
+        .iter()
+        .filter(|p| p.search.as_ref().unwrap().beats_heuristic())
+        .count();
+    assert!(
+        improved >= 1,
+        "the (Tr, M_on) search must beat Algorithm 1's modeled latency on >= 1 grid cell"
+    );
+    // ... and the JSON report surfaces the delta.
+    let json = report.to_json();
+    let pts = json.get("points").and_then(|p| p.as_arr()).unwrap();
+    assert_eq!(pts.len(), report.points.len());
+    assert!(pts
+        .iter()
+        .any(|p| p.get("beats_heuristic").and_then(|b| b.as_bool()) == Some(true)));
+    for (j, p) in pts.iter().zip(&report.points) {
+        let s = p.search.as_ref().unwrap();
+        assert_eq!(
+            j.get("searched_cycles").and_then(|v| v.as_f64()).unwrap() as u64,
+            s.searched_cycles
+        );
+        assert_eq!(
+            j.get("search_delta_cycles").and_then(|v| v.as_f64()).unwrap() as u64,
+            s.delta_cycles()
+        );
+    }
 }
 
 #[test]

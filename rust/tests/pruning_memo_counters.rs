@@ -1,0 +1,42 @@
+//! The >= 5x pruning claim measured the way the crate already counts
+//! closed-form work: through the `conv_latency_cached` memo's hit/miss
+//! counters (their sum is the number of evaluations *requested*; misses
+//! alone are the evaluations actually run). This file deliberately
+//! holds a single test so nothing else in the process touches the
+//! latency memo while it measures — other test binaries are separate
+//! processes with their own memo.
+
+use ef_train::device::{pynq_z1, zcu102};
+use ef_train::model::perf::{latency_memo_counters, reset_latency_memo};
+use ef_train::model::scheduler::{schedule_searched, SearchMode};
+use ef_train::nets::{network_by_name, NETWORK_NAMES};
+
+fn requests_for(mode: SearchMode) -> (u64, u64) {
+    reset_latency_memo();
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).unwrap();
+        for dev in [zcu102(), pynq_z1()] {
+            for batch in [1usize, 4, 16] {
+                let _ = schedule_searched(&net, &dev, batch, mode);
+            }
+        }
+    }
+    latency_memo_counters()
+}
+
+#[test]
+fn pruned_search_requests_5x_fewer_latency_evaluations() {
+    let (xh, xm) = requests_for(SearchMode::Exhaustive);
+    let (ph, pm) = requests_for(SearchMode::Pruned);
+    let exhaustive = xh + xm;
+    let pruned = ph + pm;
+    assert!(pruned > 0 && exhaustive > 0);
+    assert!(
+        exhaustive >= 5 * pruned,
+        "exhaustive requested {exhaustive} closed-form evaluations through the memo, \
+         pruned {pruned} — the pruned search must request at least 5x fewer"
+    );
+    // Unique evaluations (misses) must shrink at least as hard: the
+    // pruned search visits a subset of the exhaustive candidate set.
+    assert!(xm >= pm, "misses grew: exhaustive {xm} vs pruned {pm}");
+}

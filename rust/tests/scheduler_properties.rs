@@ -1,13 +1,12 @@
 //! Algorithm-1 scheduler invariants across the full (network x device x
 //! batch) grid, plus randomized synthetic networks.
 
-use ef_train::data::Rng;
 use ef_train::layout::Tiling;
 use ef_train::device::{pynq_z1, zcu102, Device};
 use ef_train::model::resource::ResourceModel;
 use ef_train::model::scheduler::{network_training_cycles, pick_tile, schedule};
-use ef_train::nets::{network_by_name, ConvShape, LayerKind, Network, NETWORK_NAMES};
-use ef_train::util::proptest::{pick, range, run};
+use ef_train::nets::{network_by_name, random_network, Network, NETWORK_NAMES};
+use ef_train::util::proptest::{range, run};
 
 fn assert_schedule_valid(net: &Network, dev: &Device, batch: usize) {
     let s = schedule(net, dev, batch);
@@ -55,30 +54,11 @@ fn random_networks_schedule_validly() {
     run(
         "random nets schedule",
         ef_train::util::proptest::default_cases() / 4,
-        |rng| random_net(rng),
+        |rng| random_network(rng),
         |net| {
             assert_schedule_valid(net, &zcu102(), 4);
         },
     );
-}
-
-fn random_net(rng: &mut Rng) -> Network {
-    let depth = range(rng, 1, 5);
-    let mut layers = Vec::new();
-    let mut ch = *pick(rng, &[3usize, 16]);
-    let mut map = *pick(rng, &[16usize, 32, 64]);
-    for _ in 0..depth {
-        let m = *pick(rng, &[16usize, 32, 64, 96]);
-        let k = *pick(rng, &[1usize, 3, 5]);
-        layers.push(LayerKind::Conv(ConvShape::new(m, ch, map, map, k, 1)));
-        ch = m;
-        if map >= 8 && rng.below(2) == 1 {
-            map /= 2;
-            layers.push(LayerKind::Pool { ch, r: map, c: map });
-        }
-    }
-    // Leak the name: fine for tests.
-    Network { name: "random", layers }
 }
 
 #[test]
@@ -97,6 +77,13 @@ fn tile_override_vs_rule() {
             let t = pick_tile(&dev);
             assert!(dev.q * t * t <= (dsps * 4) / 5, "dsps={dsps} t={t}");
             assert!(dev.q * (t + 1) * (t + 1) > (dsps * 4) / 5, "dsps={dsps} t={t}");
+            // The closed-form isqrt pick must equal the seed's
+            // incrementing loop everywhere.
+            let mut t_loop = 1;
+            while dev.q * (t_loop + 1) * (t_loop + 1) <= (dsps * 4) / 5 {
+                t_loop += 1;
+            }
+            assert_eq!(t, t_loop, "dsps={dsps}");
         },
     );
 }
@@ -106,7 +93,7 @@ fn bigger_devices_never_schedule_slower() {
     run(
         "device monotone",
         ef_train::util::proptest::default_cases() / 8,
-        |rng| random_net(rng),
+        |rng| random_network(rng),
         |net| {
             let zcu = zcu102();
             let pynq = pynq_z1();

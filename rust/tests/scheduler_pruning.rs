@@ -1,0 +1,184 @@
+//! Pruned-search evidence (ISSUE 2 tentpole): the binary-searched +
+//! lower-bound-pruned `Tr` enumeration must return bit-identical
+//! `Schedule`s to the seed's exhaustive scan while pricing far fewer
+//! candidates; the analytic floor it prunes with must never exceed the
+//! true three-process latency; and the `(Tr, M_on)` tiling search must
+//! honor the Eq. 28-32 resource constraints while never modeling slower
+//! than Algorithm 1.
+
+use ef_train::data::Rng;
+use ef_train::device::{pynq_z1, zcu102};
+use ef_train::explore::tiling_search::{conv_stack_cycles, search_tilings};
+use ef_train::layout::{Process, Tiling};
+use ef_train::model::perf::{conv_latency, conv_latency_lower_bound};
+use ef_train::model::resource::ResourceModel;
+use ef_train::model::scheduler::{pick_tile, schedule, schedule_searched, SearchMode};
+use ef_train::nets::{network_by_name, random_network, ConvShape, NETWORK_NAMES};
+use ef_train::util::proptest::{default_cases, pick, range, run};
+
+#[test]
+fn pruned_schedule_is_bit_identical_across_the_zoo() {
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).unwrap();
+        for dev in [zcu102(), pynq_z1()] {
+            for batch in [1usize, 4, 16] {
+                let (fast, fs) = schedule_searched(&net, &dev, batch, SearchMode::Pruned);
+                let (full, xs) = schedule_searched(&net, &dev, batch, SearchMode::Exhaustive);
+                assert_eq!(fast, full, "{name} on {} b={batch}", dev.name);
+                assert!(
+                    fs.priced_candidates <= xs.priced_candidates,
+                    "{name} on {} b={batch}: pruning may never price more",
+                    dev.name
+                );
+                // And the default entry point is the pruned path.
+                assert_eq!(fast, schedule(&net, &dev, batch), "{name} {}", dev.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_search_prices_at_least_5x_fewer_candidates() {
+    let mut pruned = 0u64;
+    let mut exhaustive = 0u64;
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).unwrap();
+        for dev in [zcu102(), pynq_z1()] {
+            for batch in [1usize, 4, 16] {
+                pruned += schedule_searched(&net, &dev, batch, SearchMode::Pruned)
+                    .1
+                    .latency_evals;
+                exhaustive += schedule_searched(&net, &dev, batch, SearchMode::Exhaustive)
+                    .1
+                    .latency_evals;
+            }
+        }
+    }
+    assert!(pruned > 0 && exhaustive > 0);
+    assert!(
+        exhaustive >= 5 * pruned,
+        "exhaustive requested {exhaustive} latency evaluations, pruned {pruned} — \
+         the pruned search must do at least 5x fewer"
+    );
+}
+
+#[test]
+fn pruned_equals_exhaustive_on_random_networks() {
+    run(
+        "pruned == exhaustive",
+        default_cases() / 4,
+        |rng| random_network(rng),
+        |net| {
+            for dev in [zcu102(), pynq_z1()] {
+                let (fast, fs) = schedule_searched(net, &dev, 4, SearchMode::Pruned);
+                let (full, xs) = schedule_searched(net, &dev, 4, SearchMode::Exhaustive);
+                assert_eq!(fast, full, "{}", dev.name);
+                assert!(fs.latency_evals <= xs.latency_evals);
+            }
+        },
+    );
+}
+
+fn random_case(rng: &mut Rng) -> (ConvShape, Tiling, usize) {
+    let tm = *pick(rng, &[4usize, 6, 16]);
+    let k = *pick(rng, &[1usize, 3, 5, 11]);
+    let s = range(rng, 1, 2);
+    let r = range(rng, 2, 33);
+    let c = range(rng, 2, 33);
+    let m = range(rng, 1, 120);
+    let n = range(rng, 1, 64);
+    let layer = ConvShape::new(m, n, r, c, k, s);
+    let tr = range(rng, 1, r);
+    let m_on = range(rng, 1, m.div_ceil(tm)) * tm;
+    (layer, Tiling::new(tm, tm, tr, c, m_on), *pick(rng, &[1usize, 2, 4, 16]))
+}
+
+#[test]
+fn latency_floor_never_exceeds_the_true_sum() {
+    let dev = zcu102();
+    run(
+        "floor <= actual",
+        default_cases(),
+        |rng| random_case(rng),
+        |(l, t, batch)| {
+            let actual: u64 = Process::ALL
+                .iter()
+                .map(|&p| conv_latency(l, t, &dev, p, *batch).cycles)
+                .sum();
+            let floor = conv_latency_lower_bound(l, t, &dev, *batch);
+            assert!(floor <= actual, "floor {floor} > actual {actual} for {l:?} {t:?}");
+        },
+    );
+}
+
+#[test]
+fn tiling_search_respects_constraints_and_never_regresses() {
+    for name in NETWORK_NAMES {
+        let net = network_by_name(name).unwrap();
+        let layers = net.conv_layers();
+        for dev in [zcu102(), pynq_z1()] {
+            let s = search_tilings(&net, &dev, 4);
+            assert!(
+                s.searched_cycles <= s.heuristic_cycles,
+                "{name} on {}: search may never model slower than Algorithm 1",
+                dev.name
+            );
+            assert_eq!(
+                s.searched_cycles,
+                conv_stack_cycles(&layers, &s.tilings, &dev, 4),
+                "{name} on {}: reported cycles must match the tilings",
+                dev.name
+            );
+            // Eq. 28-32, the same shape scheduler_properties.rs enforces
+            // on Algorithm 1's own output.
+            let rm = ResourceModel::new(&dev);
+            let tm = pick_tile(&dev);
+            assert!(dev.q * tm * tm <= dev.dsps, "Eq. 28 on {}", dev.name);
+            assert_eq!(s.tilings.len(), layers.len());
+            let b_wei = layers
+                .iter()
+                .zip(&s.tilings)
+                .map(|(l, t)| rm.b_wei(l, t))
+                .max()
+                .unwrap();
+            assert_eq!(b_wei, s.b_wei, "{name} on {}", dev.name);
+            for (l, t) in layers.iter().zip(&s.tilings) {
+                assert_eq!(t.tm, tm);
+                assert_eq!(t.tn, tm);
+                assert_eq!(t.tc, l.c, "Tc = C by construction");
+                assert!(t.tr >= 1 && t.tr <= l.r);
+                assert_eq!(t.m_on % tm, 0, "M_on multiple of Tm");
+                let banks = 2 * (rm.b_ifm(l, t) + rm.b_ofm(l, t) + b_wei);
+                let floor_t = Tiling::new(tm, tm, 1, l.c, tm);
+                let minimal =
+                    2 * (rm.b_ifm(l, &floor_t) + rm.b_ofm(l, &floor_t) + b_wei);
+                let bound = ((dev.brams * 3) / 4).max(minimal);
+                assert!(
+                    banks <= bound && banks <= dev.brams.max(minimal),
+                    "{name} on {}: layer {l:?} uses {banks} banks (bound {bound})",
+                    dev.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiling_search_matches_heuristic_on_random_networks() {
+    // Random nets exercise ladders/levels the zoo misses; the search
+    // must stay not-worse and internally consistent on all of them.
+    run(
+        "search <= heuristic",
+        default_cases() / 8,
+        |rng| random_network(rng),
+        |net| {
+            let dev = zcu102();
+            let s = search_tilings(net, &dev, 4);
+            assert!(s.searched_cycles <= s.heuristic_cycles);
+            assert_eq!(
+                s.searched_cycles,
+                conv_stack_cycles(&net.conv_layers(), &s.tilings, &dev, 4)
+            );
+        },
+    );
+}
