@@ -1,15 +1,19 @@
 //! Design-space sweep benchmark: the rayon fan-out vs the serial loop on
 //! an identical cold cache, a warm second pass demonstrating the shared
-//! stream-summary cache absorbing the whole workload, and the pruned vs
-//! exhaustive scheduler search (the >= 5x closed-form-work cut).
+//! stream-summary cache absorbing the whole workload, the pruned vs
+//! exhaustive scheduler search (the >= 5x closed-form-work cut), and the
+//! best-first vs exhaustive `B_WEI` tiling-ladder walk.
 //!
 //! Writes the numbers to `BENCH_explore.json` — the artifact the CI
-//! bench-smoke lane uploads as the first point of the perf trajectory.
+//! bench-smoke lane uploads and diffs against the previous run
+//! (`scripts/bench_diff.py` gates the deterministic counters: priced
+//! points and modeled cycles may not regress by more than 10%).
 //! Pass `--fast` (or set `EF_BENCH_FAST=1`) to shrink the grid for CI.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use ef_train::explore::tiling_search::search_tilings_searched;
 use ef_train::explore::{run_sweep, SweepConfig};
 use ef_train::layout::cache;
 use ef_train::model::perf::reset_latency_memo;
@@ -39,9 +43,25 @@ fn zoo_search(mode: SearchMode, batches: &[usize]) -> (SearchStats, f64) {
         for dev in [ef_train::device::zcu102(), ef_train::device::pynq_z1()] {
             for &batch in batches {
                 let (_, stats) = schedule_searched(&net, &dev, batch, mode);
-                total.priced_candidates += stats.priced_candidates;
-                total.pruned_candidates += stats.pruned_candidates;
-                total.latency_evals += stats.latency_evals;
+                total.absorb(&stats);
+            }
+        }
+    }
+    (total, t0.elapsed().as_secs_f64())
+}
+
+/// Run the tiling co-search over the sweep's (net, device, batch) cells
+/// in one ladder mode, summing the engine counters.
+fn ladder_search(cfg: &SweepConfig, mode: SearchMode) -> (SearchStats, f64) {
+    let t0 = Instant::now();
+    let mut total = SearchStats::default();
+    for name in &cfg.nets {
+        let net = network_by_name(name).expect("sweep net");
+        for dev_name in &cfg.devices {
+            let dev = ef_train::device::device_by_name(dev_name).expect("sweep device");
+            for &batch in &cfg.batches {
+                let (_, stats) = search_tilings_searched(&net, &dev, batch, mode);
+                total.absorb(&stats);
             }
         }
     }
@@ -88,6 +108,10 @@ fn main() {
     let (ex_stats, ex_s) = zoo_search(SearchMode::Exhaustive, batches);
     let (pr_stats, pr_s) = zoo_search(SearchMode::Pruned, batches);
 
+    // Tiling co-search: the best-first B_WEI ladder vs the PR 2 scan.
+    let (ladder_ex, ladder_ex_s) = ladder_search(&cfg, SearchMode::Exhaustive);
+    let (ladder_pr, ladder_pr_s) = ladder_search(&cfg, SearchMode::Pruned);
+
     println!(
         "design-space sweep: {n_points} points, {} cached specs{}",
         cache::global().len(),
@@ -111,7 +135,21 @@ fn main() {
         ex_stats.latency_evals as f64 / pr_stats.latency_evals as f64,
         pr_stats.pruned_candidates
     );
+    println!(
+        "tiling ladder: scan priced {} candidates over {} levels in {ladder_ex_s:.3}s; \
+         best-first {} candidates over {} levels ({} pruned) in {ladder_pr_s:.3}s",
+        ladder_ex.priced_candidates,
+        ladder_ex.priced_levels,
+        ladder_pr.priced_candidates,
+        ladder_pr.priced_levels,
+        ladder_pr.pruned_levels
+    );
 
+    assert!(
+        ladder_pr.priced_candidates <= ladder_ex.priced_candidates
+            && ladder_pr.priced_levels <= ladder_ex.priced_levels,
+        "the best-first ladder may never price more than the scan"
+    );
     assert_eq!(serial.points.len(), parallel.points.len());
     assert!(
         serial
@@ -150,6 +188,28 @@ fn main() {
     );
     out.insert("exhaustive_search_s".to_string(), Json::Num(ex_s));
     out.insert("pruned_search_s".to_string(), Json::Num(pr_s));
+    // Deterministic gauges for the CI bench diff (scripts/bench_diff.py):
+    // total modeled cycles over the swept grid, and the tiling ladder's
+    // priced-point counters in both modes.
+    let modeled_total_cycles: u64 = parallel.points.iter().map(|p| p.cycles).sum();
+    out.insert(
+        "modeled_total_cycles".to_string(),
+        Json::Num(modeled_total_cycles as f64),
+    );
+    out.insert(
+        "tiling_exhaustive_priced".to_string(),
+        Json::Num(ladder_ex.priced_candidates as f64),
+    );
+    out.insert(
+        "tiling_pruned_priced".to_string(),
+        Json::Num(ladder_pr.priced_candidates as f64),
+    );
+    out.insert(
+        "tiling_pruned_levels".to_string(),
+        Json::Num(ladder_pr.priced_levels as f64),
+    );
+    out.insert("tiling_exhaustive_s".to_string(), Json::Num(ladder_ex_s));
+    out.insert("tiling_pruned_s".to_string(), Json::Num(ladder_pr_s));
     std::fs::write("BENCH_explore.json", Json::Obj(out).to_string())
         .expect("write BENCH_explore.json");
     println!("wrote BENCH_explore.json");

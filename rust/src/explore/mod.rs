@@ -47,8 +47,9 @@ use crate::layout::streams::StreamSpec;
 use crate::layout::{Process, Scheme};
 use crate::model::perf::aux_latency;
 use crate::model::resource::ResourceModel;
-use crate::model::scheduler::schedule;
+use crate::model::scheduler::{schedule, SearchMode};
 use crate::nets::network_by_name;
+use crate::search::SearchStats;
 use crate::report::Table;
 use crate::sim::{on_chip_feature_words, simulate_layer};
 use crate::util::json::Json;
@@ -179,13 +180,17 @@ pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
 }
 
 /// The `(Tr, M_on)` search for one (network, device, batch) cell —
-/// scheme-independent, so [`run_sweep_with`] runs it once per cell and
-/// shares the outcome across every scheme row.
-fn cell_search(cell: &(Arc<str>, Arc<str>, usize)) -> crate::Result<tiling_search::SearchedTilings> {
+/// scheme-independent, so [`run_sweep_with`] runs it once per cell,
+/// shares the outcome across every scheme row, and persists it in the
+/// cache's per-cell table. Returns the engine's work counters alongside
+/// the outcome.
+fn cell_search(
+    cell: &(Arc<str>, Arc<str>, usize),
+) -> crate::Result<(tiling_search::SearchedTilings, SearchStats)> {
     let (net, device, batch) = cell;
     let n = network_by_name(net).ok_or_else(|| anyhow!("unknown network `{net}` in sweep"))?;
     let d = device_by_name(device).ok_or_else(|| anyhow!("unknown device `{device}` in sweep"))?;
-    Ok(tiling_search::search_tilings(&n, &d, *batch))
+    Ok(tiling_search::search_tilings_searched(&n, &d, *batch, SearchMode::Pruned))
 }
 
 /// The sweep grid: the cross product of its four axes.
@@ -327,6 +332,14 @@ pub struct SweepReport {
     pub cache_hits: usize,
     /// Points priced fresh this run.
     pub cache_misses: usize,
+    /// (network, device, batch) cells searched fresh this run
+    /// (`--search-tilings`; zero otherwise).
+    pub cells_searched: usize,
+    /// Cells answered by the cache's per-cell search table.
+    pub cell_cache_hits: usize,
+    /// Unified engine counters aggregated over the freshly searched
+    /// cells (all-zero when none were).
+    pub search_stats: SearchStats,
 }
 
 fn compute_frontiers(points: &[PricedPoint]) -> BTreeMap<Arc<str>, Vec<usize>> {
@@ -356,6 +369,12 @@ pub fn run_sweep(cfg: &SweepConfig, parallel: bool) -> crate::Result<SweepReport
 /// persistent cache: cached points are reused verbatim, only the
 /// missing grid cells are priced (in parallel when asked), and fresh
 /// prices are inserted back for the caller to save.
+///
+/// Point pricing and the `(Tr, M_on)` search are cached independently
+/// (the v2 [`sweep_cache`] keys the scheme-independent search payload
+/// per (network, device, batch) cell): adding `--search-tilings` to a
+/// warm plain sweep re-prices nothing — it only searches the cells —
+/// and every point, cached or fresh, carries its cell's outcome.
 pub fn run_sweep_with(
     cfg: &SweepConfig,
     opts: &SweepOptions,
@@ -364,7 +383,7 @@ pub fn run_sweep_with(
     let points = cfg.points();
     let t0 = Instant::now();
     let mut priced: Vec<Option<PricedPoint>> = match &cache {
-        Some(c) => points.iter().map(|p| c.lookup(p, opts.search_tilings)).collect(),
+        Some(c) => points.iter().map(|p| c.lookup_point(p)).collect(),
         None => vec![None; points.len()],
     };
     let cache_hits = priced.iter().filter(|p| p.is_some()).count();
@@ -374,7 +393,7 @@ pub fn run_sweep_with(
         .filter(|(i, _)| priced[*i].is_none())
         .map(|(i, p)| (i, p.clone()))
         .collect();
-    let mut fresh: Vec<(usize, PricedPoint)> = if opts.parallel {
+    let fresh: Vec<(usize, PricedPoint)> = if opts.parallel {
         missing
             .par_iter()
             .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
@@ -385,35 +404,58 @@ pub fn run_sweep_with(
             .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
             .collect::<crate::Result<Vec<_>>>()?
     };
+    let cache_misses = fresh.len();
+    for (i, pp) in fresh {
+        if let Some(c) = cache.as_deref_mut() {
+            c.insert_point(&pp);
+        }
+        priced[i] = Some(pp);
+    }
+    let mut priced: Vec<PricedPoint> =
+        priced.into_iter().map(|p| p.expect("every grid cell priced")).collect();
+
+    let mut cells_searched = 0usize;
+    let mut cell_cache_hits = 0usize;
+    let mut search_stats = SearchStats::default();
     if opts.search_tilings {
-        let mut cells: Vec<(Arc<str>, Arc<str>, usize)> = missing
+        let mut cells: Vec<(Arc<str>, Arc<str>, usize)> = points
             .iter()
-            .map(|(_, p)| (p.net.clone(), p.device.clone(), p.batch))
+            .map(|p| (p.net.clone(), p.device.clone(), p.batch))
             .collect();
         cells.sort();
         cells.dedup();
-        let searched: Vec<tiling_search::SearchedTilings> = if opts.parallel {
-            cells.par_iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
+        let mut by_cell: BTreeMap<(Arc<str>, Arc<str>, usize), tiling_search::SearchedTilings> =
+            BTreeMap::new();
+        let mut to_search = Vec::new();
+        for cell in cells {
+            match cache.as_deref().and_then(|c| c.lookup_cell(&cell.0, &cell.1, cell.2)) {
+                Some(s) => {
+                    cell_cache_hits += 1;
+                    by_cell.insert(cell, s);
+                }
+                None => to_search.push(cell),
+            }
+        }
+        let searched: Vec<(tiling_search::SearchedTilings, SearchStats)> = if opts.parallel {
+            to_search.par_iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
         } else {
-            cells.iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
+            to_search.iter().map(cell_search).collect::<crate::Result<Vec<_>>>()?
         };
-        let by_cell: BTreeMap<(Arc<str>, Arc<str>, usize), tiling_search::SearchedTilings> =
-            cells.into_iter().zip(searched).collect();
-        for (_, pp) in &mut fresh {
+        cells_searched = searched.len();
+        for (cell, (outcome, stats)) in to_search.into_iter().zip(searched) {
+            search_stats.absorb(&stats);
+            if let Some(c) = cache.as_deref_mut() {
+                c.insert_cell(&cell.0, &cell.1, cell.2, &outcome);
+            }
+            by_cell.insert(cell, outcome);
+        }
+        for pp in &mut priced {
             pp.search = by_cell
                 .get(&(pp.point.net.clone(), pp.point.device.clone(), pp.point.batch))
                 .cloned();
         }
     }
-    let cache_misses = fresh.len();
-    for (i, pp) in fresh {
-        if let Some(c) = cache.as_deref_mut() {
-            c.insert(&pp, opts.search_tilings);
-        }
-        priced[i] = Some(pp);
-    }
-    let priced: Vec<PricedPoint> =
-        priced.into_iter().map(|p| p.expect("every grid cell priced")).collect();
+
     let frontiers = compute_frontiers(&priced);
     Ok(SweepReport {
         points: priced,
@@ -423,6 +465,9 @@ pub fn run_sweep_with(
         threads: if opts.parallel { rayon::current_num_threads() } else { 1 },
         cache_hits,
         cache_misses,
+        cells_searched,
+        cell_cache_hits,
+        search_stats,
     })
 }
 
@@ -540,6 +585,17 @@ impl SweepReport {
         root.insert("threads".into(), Json::Num(self.threads as f64));
         root.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
         root.insert("cache_misses".into(), Json::Num(self.cache_misses as f64));
+        root.insert("cells_searched".into(), Json::Num(self.cells_searched as f64));
+        root.insert("cell_cache_hits".into(), Json::Num(self.cell_cache_hits as f64));
+        let ss = &self.search_stats;
+        let mut stats = BTreeMap::new();
+        stats.insert("priced_candidates".into(), Json::Num(ss.priced_candidates as f64));
+        stats.insert("pruned_candidates".into(), Json::Num(ss.pruned_candidates as f64));
+        stats.insert("latency_evals".into(), Json::Num(ss.latency_evals as f64));
+        stats.insert("floored_candidates".into(), Json::Num(ss.floored_candidates as f64));
+        stats.insert("priced_levels".into(), Json::Num(ss.priced_levels as f64));
+        stats.insert("pruned_levels".into(), Json::Num(ss.pruned_levels as f64));
+        root.insert("search_stats".into(), Json::Obj(stats));
         Json::Obj(root)
     }
 }

@@ -5,29 +5,46 @@
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "entries": {
-//!     "cnn1x|zcu102|4|reshaped|plain": {
+//!     "cnn1x|zcu102|4|reshaped": {
 //!       "tm": 16, "cycles": 151846336, "realloc_cycles": 0,
 //!       "latency_ms": 1518.46, "throughput_gflops": 2.08,
 //!       "dsps": 1315, "brams": 324, "power_w": 6.89, "energy_mj": 10.4
+//!     }
+//!   },
+//!   "cells": {
+//!     "cnn1x|zcu102|4": {
+//!       "searched_cycles": 1, "heuristic_cycles": 1, "b_wei": 1,
+//!       "levels_swept": 1, "tilings": [[16, 16, 32, 32, 32]]
 //!     }
 //!   }
 //! }
 //! ```
 //!
-//! Keys are `net|device|batch|scheme|plain-or-searched` — a
-//! [`DesignPoint`] plus whether the entry carries a
-//! [`SearchedTilings`] outcome (stored under `"search"`, with the
-//! per-layer tilings as `[Tm, Tn, Tr, Tc, M_on]` rows). The schema
-//! version is bumped whenever pricing semantics or the entry layout
-//! change; a mismatched, unreadable, or partially-decodable file
-//! degrades to cache misses rather than an error, so a stale nightly
-//! cache can never wedge a sweep. Numbers round-trip bit-exactly:
-//! integers stay integral and `f64`s print in shortest-roundtrip form.
+//! `entries` rows are keyed per scheme (`net|device|batch|scheme`) and
+//! carry only the scheme-dependent pricing; the scheme-*independent*
+//! `(Tr, M_on)` search payload ([`SearchedTilings`], with per-layer
+//! tilings as `[Tm, Tn, Tr, Tc, M_on]` rows) lives once per
+//! `net|device|batch` cell in `cells` instead of being duplicated under
+//! every scheme key, so dropping or adding `--search-tilings` between
+//! runs never voids the point pricing and three scheme rows share one
+//! search outcome.
+//!
+//! Versioning: the schema number is bumped whenever pricing semantics
+//! or the layout change. A v1 file (suffix-keyed rows with the search
+//! payload inlined) migrates forward transparently on load; a file
+//! written by a **newer** binary refuses to load with an actionable
+//! error instead of silently re-pricing the whole grid; an unreadable
+//! or partially-decodable file still degrades to cache misses, so a
+//! corrupt nightly cache can never wedge a sweep. Numbers round-trip
+//! bit-exactly: integers stay integral and `f64`s print in
+//! shortest-roundtrip form.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+
+use anyhow::anyhow;
 
 use super::tiling_search::SearchedTilings;
 use super::{scheme_name, DesignPoint, PricedPoint};
@@ -35,23 +52,22 @@ use crate::layout::Tiling;
 use crate::util::json::Json;
 
 /// Bump when pricing semantics or the entry layout change.
-pub const SCHEMA_VERSION: u64 = 1;
+pub const SCHEMA_VERSION: u64 = 2;
 
-/// An in-memory view of one cache file.
+/// An in-memory view of one cache file: scheme-keyed point rows plus
+/// the per-cell search table.
 #[derive(Debug, Clone, Default)]
 pub struct SweepCache {
     entries: BTreeMap<String, Json>,
+    cells: BTreeMap<String, Json>,
 }
 
-fn key(p: &DesignPoint, searched: bool) -> String {
-    format!(
-        "{}|{}|{}|{}|{}",
-        p.net,
-        p.device,
-        p.batch,
-        scheme_name(p.scheme),
-        if searched { "searched" } else { "plain" }
-    )
+fn point_key(p: &DesignPoint) -> String {
+    format!("{}|{}|{}|{}", p.net, p.device, p.batch, scheme_name(p.scheme))
+}
+
+fn cell_key(net: &str, device: &str, batch: usize) -> String {
+    format!("{net}|{device}|{batch}")
 }
 
 fn num(x: f64) -> Json {
@@ -105,7 +121,7 @@ fn decode_search(j: &Json) -> Option<SearchedTilings> {
     })
 }
 
-fn encode(p: &PricedPoint) -> Json {
+fn encode_point(p: &PricedPoint) -> Json {
     let mut m = BTreeMap::new();
     m.insert("tm".into(), num(p.tm as f64));
     m.insert("cycles".into(), num(p.cycles as f64));
@@ -116,18 +132,10 @@ fn encode(p: &PricedPoint) -> Json {
     m.insert("brams".into(), num(p.used_brams as f64));
     m.insert("power_w".into(), num(p.power_w));
     m.insert("energy_mj".into(), num(p.energy_mj));
-    if let Some(s) = &p.search {
-        m.insert("search".into(), encode_search(s));
-    }
     Json::Obj(m)
 }
 
-fn decode(point: DesignPoint, j: &Json, searched: bool) -> Option<PricedPoint> {
-    let search = match (searched, j.get("search")) {
-        (true, Some(s)) => Some(decode_search(s)?),
-        (true, None) => return None, // entry predates the search ask
-        (false, _) => None,
-    };
+fn decode_point(point: DesignPoint, j: &Json) -> Option<PricedPoint> {
     Some(PricedPoint {
         point,
         tm: j.get("tm")?.as_usize()?,
@@ -139,7 +147,7 @@ fn decode(point: DesignPoint, j: &Json, searched: bool) -> Option<PricedPoint> {
         used_brams: j.get("brams")?.as_usize()?,
         power_w: j.get("power_w")?.as_f64()?,
         energy_mj: j.get("energy_mj")?.as_f64()?,
-        search,
+        search: None,
     })
 }
 
@@ -149,62 +157,141 @@ impl SweepCache {
         Self::default()
     }
 
-    /// Load `path`, degrading to an empty cache on a missing file, a
-    /// schema-version mismatch, or any parse failure.
-    pub fn load(path: &Path) -> Self {
+    /// Load `path`. A missing, unparseable, or pre-versioned file
+    /// degrades to an empty cache; a v1 file migrates forward; a file
+    /// whose schema is *newer* than this binary's is an error — its
+    /// entries would otherwise be silently discarded and re-priced,
+    /// clobbering the newer binary's cache on save.
+    pub fn load(path: &Path) -> crate::Result<Self> {
         let Ok(text) = std::fs::read_to_string(path) else {
-            return Self::empty();
+            return Ok(Self::empty());
         };
         let Ok(root) = Json::parse(&text) else {
-            return Self::empty();
+            return Ok(Self::empty());
         };
-        if root.get("schema_version").and_then(Json::as_f64) != Some(SCHEMA_VERSION as f64) {
-            return Self::empty();
+        let Some(version) = root.get("schema_version").and_then(Json::as_usize) else {
+            return Ok(Self::empty());
+        };
+        let version = version as u64;
+        if version > SCHEMA_VERSION {
+            return Err(anyhow!(
+                "sweep cache {} has schema version {version}, newer than this \
+                 binary's {SCHEMA_VERSION}; loading would silently re-price the \
+                 grid and overwrite the newer cache — upgrade ef-train, point \
+                 --cache-file at a different path, or delete the file to rebuild it",
+                path.display()
+            ));
         }
-        let Some(entries) = root.get("entries").and_then(Json::as_obj) else {
-            return Self::empty();
-        };
-        Self { entries: entries.clone() }
+        if version == 1 {
+            return Ok(Self::migrate_v1(&root));
+        }
+        let entries = root
+            .get("entries")
+            .and_then(Json::as_obj)
+            .cloned()
+            .unwrap_or_default();
+        let cells = root
+            .get("cells")
+            .and_then(Json::as_obj)
+            .cloned()
+            .unwrap_or_default();
+        Ok(Self { entries, cells })
     }
 
-    /// Serialize every entry to `path`.
+    /// Forward-migrate a v1 root: keys were
+    /// `net|device|batch|scheme|plain-or-searched` with any search
+    /// outcome inlined under `"search"`. The plain payload of a point's
+    /// `plain` and `searched` rows is identical, so either may win the
+    /// de-suffixed key; search payloads move to the per-cell table.
+    fn migrate_v1(root: &Json) -> Self {
+        let mut out = Self::default();
+        let Some(v1) = root.get("entries").and_then(Json::as_obj) else {
+            return out;
+        };
+        for (key, payload) in v1 {
+            let parts: Vec<&str> = key.split('|').collect();
+            let &[net, device, batch, scheme, _tag] = parts.as_slice() else {
+                continue;
+            };
+            let Some(obj) = payload.as_obj() else {
+                continue;
+            };
+            let mut plain = obj.clone();
+            if let Some(search) = plain.remove("search") {
+                out.cells.insert(format!("{net}|{device}|{batch}"), search);
+            }
+            out.entries
+                .insert(format!("{net}|{device}|{batch}|{scheme}"), Json::Obj(plain));
+        }
+        out
+    }
+
+    /// Serialize every entry to `path` at the current schema.
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         let mut root = BTreeMap::new();
         root.insert("schema_version".into(), num(SCHEMA_VERSION as f64));
         root.insert("entries".into(), Json::Obj(self.entries.clone()));
+        root.insert("cells".into(), Json::Obj(self.cells.clone()));
         std::fs::write(path, Json::Obj(root).to_string())?;
         Ok(())
     }
 
-    /// Cached pricing for `p`, if present and decodable at the current
-    /// schema (with a search outcome when `searched` asks for one). A
-    /// searched entry carries every plain field, so a plain lookup
-    /// falls back to it with the outcome stripped — dropping
-    /// `--search-tilings` between runs does not void the cache.
+    /// Cached scheme-dependent pricing for `p` (no search outcome
+    /// attached), if present and decodable.
+    pub fn lookup_point(&self, p: &DesignPoint) -> Option<PricedPoint> {
+        decode_point(p.clone(), self.entries.get(&point_key(p))?)
+    }
+
+    /// Record one point's scheme-dependent pricing.
+    pub fn insert_point(&mut self, p: &PricedPoint) {
+        self.entries.insert(point_key(&p.point), encode_point(p));
+    }
+
+    /// Cached scheme-independent search outcome for a (network, device,
+    /// batch) cell.
+    pub fn lookup_cell(&self, net: &str, device: &str, batch: usize) -> Option<SearchedTilings> {
+        decode_search(self.cells.get(&cell_key(net, device, batch))?)
+    }
+
+    /// Record one cell's search outcome.
+    pub fn insert_cell(&mut self, net: &str, device: &str, batch: usize, s: &SearchedTilings) {
+        self.cells.insert(cell_key(net, device, batch), encode_search(s));
+    }
+
+    /// Joined view: the point row, with the cell's search outcome
+    /// attached when `searched` asks for one (a point whose cell has no
+    /// outcome yet is a miss for a searched ask, a hit for a plain one
+    /// — dropping `--search-tilings` between runs never voids the
+    /// cache).
     pub fn lookup(&self, p: &DesignPoint, searched: bool) -> Option<PricedPoint> {
-        if let Some(entry) = self.entries.get(&key(p, searched)) {
-            return decode(p.clone(), entry, searched);
-        }
+        let mut pp = self.lookup_point(p)?;
         if searched {
-            return None; // a plain entry cannot answer a searched ask
+            pp.search = Some(self.lookup_cell(&p.net, &p.device, p.batch)?);
         }
-        let entry = self.entries.get(&key(p, true))?;
-        let mut pp = decode(p.clone(), entry, true)?;
-        pp.search = None;
         Some(pp)
     }
 
-    /// Record a freshly priced point.
-    pub fn insert(&mut self, p: &PricedPoint, searched: bool) {
-        self.entries.insert(key(&p.point, searched), encode(p));
+    /// Record a freshly priced point, splitting any search outcome into
+    /// the per-cell table.
+    pub fn insert(&mut self, p: &PricedPoint) {
+        self.insert_point(p);
+        if let Some(s) = &p.search {
+            self.insert_cell(&p.point.net, &p.point.device, p.point.batch, s);
+        }
     }
 
+    /// Point rows in the cache (one per scheme coordinate).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Cells carrying a search outcome.
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.cells.is_empty()
     }
 }
 
@@ -223,11 +310,23 @@ mod tests {
         }
     }
 
+    fn point_with_scheme(scheme: Scheme) -> DesignPoint {
+        DesignPoint { scheme, ..point() }
+    }
+
+    fn searched_outcome() -> SearchedTilings {
+        crate::explore::tiling_search::search_tilings(
+            &crate::nets::network_by_name("cnn1x").unwrap(),
+            &crate::device::zcu102(),
+            4,
+        )
+    }
+
     #[test]
     fn insert_then_lookup_round_trips_bit_exactly() {
         let priced = price_point(&point()).unwrap();
         let mut cache = SweepCache::empty();
-        cache.insert(&priced, false);
+        cache.insert(&priced);
         let back = cache.lookup(&point(), false).expect("hit");
         assert_eq!(back.point, priced.point);
         assert_eq!(back.tm, priced.tm);
@@ -245,11 +344,11 @@ mod tests {
     fn file_round_trip_preserves_entries() {
         let priced = price_point(&point()).unwrap();
         let mut cache = SweepCache::empty();
-        cache.insert(&priced, false);
+        cache.insert(&priced);
         let path = std::env::temp_dir()
             .join(format!("ef_train_cache_rt_{}.json", std::process::id()));
         cache.save(&path).unwrap();
-        let reloaded = SweepCache::load(&path);
+        let reloaded = SweepCache::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(reloaded.len(), 1);
         let back = reloaded.lookup(&point(), false).expect("hit after reload");
@@ -261,39 +360,128 @@ mod tests {
     fn plain_entries_do_not_answer_searched_lookups() {
         let priced = price_point(&point()).unwrap();
         let mut cache = SweepCache::empty();
-        cache.insert(&priced, false);
+        cache.insert(&priced);
         assert!(cache.lookup(&point(), true).is_none());
+        assert!(cache.lookup_cell("cnn1x", "zcu102", 4).is_none());
     }
 
     #[test]
-    fn searched_entries_answer_plain_lookups_without_the_outcome() {
-        let mut priced = price_point(&point()).unwrap();
-        priced.search = Some(crate::explore::tiling_search::search_tilings(
-            &crate::nets::network_by_name("cnn1x").unwrap(),
-            &crate::device::zcu102(),
-            4,
-        ));
+    fn one_cell_serves_every_scheme_row() {
+        let searched = searched_outcome();
         let mut cache = SweepCache::empty();
-        cache.insert(&priced, true);
-        // Dropping --search-tilings must still hit the cache ...
-        let back = cache.lookup(&point(), false).expect("plain fallback hit");
-        assert_eq!(back.cycles, priced.cycles);
-        assert_eq!(back.energy_mj.to_bits(), priced.energy_mj.to_bits());
-        assert!(back.search.is_none());
-        // ... and the searched view round-trips intact.
-        let full = cache.lookup(&point(), true).expect("searched hit");
-        assert_eq!(full.search, priced.search);
+        for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
+            let mut priced = price_point(&point_with_scheme(scheme)).unwrap();
+            priced.search = Some(searched.clone());
+            cache.insert(&priced);
+        }
+        // Three scheme rows, ONE cell payload — the v2 re-keying.
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.cell_count(), 1);
+        for scheme in [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped] {
+            let full = cache.lookup(&point_with_scheme(scheme), true).expect("searched hit");
+            assert_eq!(full.search.as_ref(), Some(&searched));
+            // ... and the plain view still answers without the outcome.
+            let plain = cache.lookup(&point_with_scheme(scheme), false).expect("plain hit");
+            assert!(plain.search.is_none());
+            assert_eq!(plain.cycles, full.cycles);
+        }
     }
 
     #[test]
-    fn garbage_and_stale_schemas_load_empty() {
+    fn v1_files_migrate_forward_and_round_trip_at_v2() {
+        let searched = searched_outcome();
+        let priced = price_point(&point()).unwrap();
+        let priced_bchw = price_point(&point_with_scheme(Scheme::Bchw)).unwrap();
+
+        // A genuine v1 file: suffix-keyed rows, search payload inlined.
+        let mut searched_row = encode_point(&priced).as_obj().unwrap().clone();
+        searched_row.insert("search".into(), encode_search(&searched));
+        let mut v1_entries = BTreeMap::new();
+        v1_entries.insert(
+            "cnn1x|zcu102|4|reshaped|searched".to_string(),
+            Json::Obj(searched_row),
+        );
+        v1_entries.insert(
+            "cnn1x|zcu102|4|reshaped|plain".to_string(),
+            encode_point(&priced),
+        );
+        v1_entries.insert(
+            "cnn1x|zcu102|4|bchw|plain".to_string(),
+            encode_point(&priced_bchw),
+        );
+        let mut v1_root = BTreeMap::new();
+        v1_root.insert("schema_version".to_string(), num(1.0));
+        v1_root.insert("entries".to_string(), Json::Obj(v1_entries));
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_v1_{}.json", std::process::id()));
+        std::fs::write(&path, Json::Obj(v1_root).to_string()).unwrap();
+
+        let migrated = SweepCache::load(&path).unwrap();
+        // Two v1 rows for the reshaped point collapse to one, the
+        // search payload moves to the cell table.
+        assert_eq!(migrated.len(), 2);
+        assert_eq!(migrated.cell_count(), 1);
+        let full = migrated.lookup(&point(), true).expect("migrated searched hit");
+        assert_eq!(full.search.as_ref(), Some(&searched));
+        assert_eq!(full.cycles, priced.cycles);
+        assert_eq!(full.energy_mj.to_bits(), priced.energy_mj.to_bits());
+        let bchw = migrated
+            .lookup(&point_with_scheme(Scheme::Bchw), false)
+            .expect("migrated plain hit");
+        assert_eq!(bchw.cycles, priced_bchw.cycles);
+
+        // Saving re-emits the current schema with the cell table split
+        // out, and the reload agrees with the migrated view.
+        migrated.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let root = Json::parse(&text).unwrap();
+        assert_eq!(
+            root.get("schema_version").and_then(Json::as_usize),
+            Some(SCHEMA_VERSION as usize)
+        );
+        assert_eq!(root.get("cells").and_then(Json::as_obj).unwrap().len(), 1);
+        let reloaded = {
+            let p2 = std::env::temp_dir()
+                .join(format!("ef_train_cache_v2_{}.json", std::process::id()));
+            std::fs::write(&p2, &text).unwrap();
+            let c = SweepCache::load(&p2).unwrap();
+            std::fs::remove_file(&p2).ok();
+            c
+        };
+        assert_eq!(reloaded.len(), migrated.len());
+        assert_eq!(reloaded.cell_count(), migrated.cell_count());
+        assert_eq!(
+            reloaded.lookup(&point(), true).unwrap().search,
+            Some(searched)
+        );
+    }
+
+    #[test]
+    fn newer_schemas_refuse_to_load_with_an_actionable_error() {
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_new_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            format!(r#"{{"schema_version": {}, "entries": {{}}}}"#, SCHEMA_VERSION + 1),
+        )
+        .unwrap();
+        let err = SweepCache::load(&path).expect_err("newer schema must not degrade");
+        std::fs::remove_file(&path).ok();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("newer"), "error must say the file is newer: {msg}");
+        assert!(msg.contains("--cache-file"), "error must be actionable: {msg}");
+    }
+
+    #[test]
+    fn garbage_and_unversioned_files_load_empty() {
         let path = std::env::temp_dir()
             .join(format!("ef_train_cache_bad_{}.json", std::process::id()));
         std::fs::write(&path, "not json at all").unwrap();
-        assert!(SweepCache::load(&path).is_empty());
-        std::fs::write(&path, r#"{"schema_version": 999999, "entries": {}}"#).unwrap();
-        assert!(SweepCache::load(&path).is_empty());
+        assert!(SweepCache::load(&path).unwrap().is_empty());
+        std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
+        assert!(SweepCache::load(&path).unwrap().is_empty(), "no version field");
         std::fs::remove_file(&path).ok();
-        assert!(SweepCache::load(&path).is_empty(), "missing file is empty too");
+        assert!(SweepCache::load(&path).unwrap().is_empty(), "missing file is empty too");
     }
 }

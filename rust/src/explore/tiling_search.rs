@@ -13,10 +13,25 @@
 //! feature-bank bound with `cap` banks reserved. Sweeping the cap over
 //! every *distinct achievable* per-layer `b_wei` value (a finite ladder,
 //! computed from Algorithm 1's own even-split `M_on` sequence) makes the
-//! decomposition exact over that grid. Per-layer `Tr` minimization
-//! reuses the scheduler's binary-searched feasibility ceiling and
-//! [`conv_latency_lower_bound`] pruning, and `(layer, M_on, Tr_max)`
-//! results are memoized across cap levels.
+//! decomposition exact over that grid.
+//!
+//! Both nested walks run on the generic [`BoundedSearch`] engine:
+//!
+//! * the **inner** per-(layer, `M_on`) `Tr` minimization reuses the
+//!   scheduler's binary-searched feasibility ceiling and orders by
+//!   [`conv_latency_lower_bound`] ([`Band::Exact`] — no tie-break band;
+//!   the search reports the model's own optimum), with
+//!   `(layer, M_on, Tr_max)` results memoized across cap levels;
+//! * the **outer** `B_WEI` ladder (ROADMAP item (f), the default
+//!   [`SearchMode::Pruned`]) is ordered best-first by an admissible
+//!   per-level floor — per layer, the minimum lower bound over every
+//!   `(M_on, Tr)` the cap admits, read from memoized prefix-minimum
+//!   floor tables — and early-outs once the next level's floor exceeds
+//!   the incumbent, seeded with Algorithm 1's own cycles (anything
+//!   floored above the heuristic loses the final clamp regardless).
+//!   The PR 2 ascending scan survives as [`SearchMode::Exhaustive`],
+//!   the oracle; the best-first walk is bit-identical and never prices
+//!   more points (`rust/tests/search_engine.rs`).
 //!
 //! The search space contains Algorithm 1's configuration (its `M_on`
 //! picks come from the same ladder and its `B_WEI` is one of the swept
@@ -24,16 +39,20 @@
 //! [`SearchedTilings::searched_cycles`] never exceeds
 //! [`SearchedTilings::heuristic_cycles`]. Driven by
 //! `ef-train explore --search-tilings`, which surfaces the per-cell
-//! `beats_heuristic` delta in the JSON report.
+//! `beats_heuristic` delta and the engine's [`SearchStats`] in the JSON
+//! report.
 
 use std::collections::HashMap;
 
 use crate::device::Device;
-use crate::layout::Tiling;
+use crate::layout::{Process, Tiling};
 use crate::model::perf::{conv_latency_lower_bound, conv_process_sum};
 use crate::model::resource::ResourceModel;
-use crate::model::scheduler::{bram_boundary, max_feasible_tr, pick_tile, schedule};
+use crate::model::scheduler::{
+    bram_boundary, max_feasible_tr, pick_tile, schedule, SearchMode, SearchStats,
+};
 use crate::nets::{ConvShape, Network};
+use crate::search::{Band, BoundedSearch, Candidate, Priced};
 
 /// One (network, device, batch) cell searched beyond Algorithm 1.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -47,7 +66,8 @@ pub struct SearchedTilings {
     pub heuristic_cycles: u64,
     /// Weight-buffer bank maximum of the winning configuration.
     pub b_wei: usize,
-    /// Distinct `B_WEI` coupling levels the search swept.
+    /// Distinct `B_WEI` coupling levels on the ladder (the best-first
+    /// walk may *price* fewer — see [`SearchStats::priced_levels`]).
     pub levels_swept: usize,
 }
 
@@ -106,41 +126,95 @@ fn m_on_ladder(l: &ConvShape, tm: usize) -> Vec<usize> {
     out
 }
 
-/// Latency-minimizing `Tr` for one (layer, `M_on`) pair under a
-/// feasibility ceiling: the scheduler's best-first floor walk,
-/// minimizing the pure three-process sum (no tie-break band — the
-/// discrete-event robustness argument belongs to the heuristic; the
-/// search reports the model's own optimum). Ties keep the
-/// earlier-floored, larger `Tr` — deterministic.
-fn best_tr(
+/// A `B_WEI` coupling level as an engine candidate. Ties on equal
+/// floors break toward the *smaller* cap (inverted key: higher
+/// `tie_key` is visited first), matching the ascending-cap scan's
+/// earliest-winner behaviour on equal totals.
+#[derive(Debug, Clone, Copy)]
+struct CapLevel(usize);
+
+impl Candidate for CapLevel {
+    fn tie_key(&self) -> u64 {
+        u64::MAX - self.0 as u64
+    }
+}
+
+/// Floors of one `(layer, M_on)` pair for every `Tr` in `1..=max_tr`
+/// (`floors[tr - 1]`), plus running prefix minima so the floor-minimum
+/// under any feasibility ceiling is an O(1) lookup.
+struct FloorTable {
+    floors: Vec<u64>,
+    prefix_min: Vec<u64>,
+}
+
+fn floor_table(
+    l: &ConvShape,
+    dev: &Device,
+    batch: usize,
+    tm: usize,
+    m_on: usize,
+    max_tr: usize,
+) -> FloorTable {
+    let floors: Vec<u64> = (1..=max_tr)
+        .map(|tr| conv_latency_lower_bound(l, &Tiling::new(tm, tm, tr, l.c, m_on), dev, batch))
+        .collect();
+    let mut prefix_min = floors.clone();
+    for i in 1..prefix_min.len() {
+        prefix_min[i] = prefix_min[i].min(prefix_min[i - 1]);
+    }
+    FloorTable { floors, prefix_min }
+}
+
+/// Latency-minimizing `Tr` for one (layer, `M_on`) pair given its
+/// pre-computed floors for `1..=tr_max`: the scheduler's best-first
+/// walk with [`Band::Exact`] (pure argmin; ties keep the
+/// earlier-floored, larger `Tr` — deterministic).
+fn best_tr_floored(
+    l: &ConvShape,
+    dev: &Device,
+    batch: usize,
+    tm: usize,
+    m_on: usize,
+    floors: &[u64],
+    stats: &mut SearchStats,
+) -> (u64, Tiling) {
+    let pairs: Vec<(u64, usize)> =
+        floors.iter().enumerate().map(|(i, &f)| (f, i + 1)).collect();
+    let engine = BoundedSearch::from_floored(pairs, Band::Exact);
+    let (visited, walk) = engine.run(|&tr| Priced {
+        cost: conv_process_sum(l, &Tiling::new(tm, tm, tr, l.c, m_on), dev, batch),
+        incumbent: true,
+    });
+    stats.tally_walk(&walk, Process::ALL.len() as u64);
+    let mut best: Option<(u64, usize)> = None;
+    for &(lat, tr) in &visited {
+        if best.map_or(true, |(b, _)| lat < b) {
+            best = Some((lat, tr));
+        }
+    }
+    let (lat, tr) = best.expect("tr_max >= 1 always yields a candidate");
+    (lat, Tiling::new(tm, tm, tr, l.c, m_on))
+}
+
+/// [`best_tr_floored`] with the floors computed on the spot (only up
+/// to `tr_max` — the full-`R` [`FloorTable`] is only worth building
+/// inside [`LadderSearch`], where many ceilings share it) — the
+/// standalone per-(layer, `M_on`) search, public so the oracle tests
+/// can replay it against the legacy hand-rolled walk.
+pub fn best_tr_for(
     l: &ConvShape,
     dev: &Device,
     batch: usize,
     tm: usize,
     m_on: usize,
     tr_max: usize,
+    stats: &mut SearchStats,
 ) -> (u64, Tiling) {
-    let mut order: Vec<(u64, usize)> = (1..=tr_max)
-        .map(|tr| {
-            let cand = Tiling::new(tm, tm, tr, l.c, m_on);
-            (conv_latency_lower_bound(l, &cand, dev, batch), tr)
-        })
+    let floors: Vec<u64> = (1..=tr_max)
+        .map(|tr| conv_latency_lower_bound(l, &Tiling::new(tm, tm, tr, l.c, m_on), dev, batch))
         .collect();
-    order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
-    let mut best: Option<(u64, Tiling)> = None;
-    for &(floor, tr) in &order {
-        if let Some((b, _)) = best {
-            if floor > b {
-                break; // floors only grow: nothing below can win
-            }
-        }
-        let cand = Tiling::new(tm, tm, tr, l.c, m_on);
-        let lat = conv_process_sum(l, &cand, dev, batch);
-        if best.map_or(true, |(b, _)| lat < b) {
-            best = Some((lat, cand));
-        }
-    }
-    best.expect("tr_max >= 1 always yields a candidate")
+    stats.floored_candidates += floors.len() as u64;
+    best_tr_floored(l, dev, batch, tm, m_on, &floors, stats)
 }
 
 /// Does a full configuration respect the Eq. 28-32 shape the scheduler
@@ -169,74 +243,240 @@ fn respects_bounds(
     })
 }
 
-/// Search `(Tr, M_on)` for every conv layer of `net` on `dev`.
-pub fn search_tilings(net: &Network, dev: &Device, batch: usize) -> SearchedTilings {
-    let layers = net.conv_layers();
-    let rm = ResourceModel::new(dev);
-    let tm = pick_tile(dev);
-    let budget = bram_boundary(dev);
-    let heur = schedule(net, dev, batch);
-    let heuristic_cycles = conv_stack_cycles(&layers, &heur.tilings, dev, batch);
+/// One cell's ladder-sweep state: the decomposition grid, Algorithm 1's
+/// fallback picks, and the memo tables both level walks share.
+struct LadderSearch<'a> {
+    layers: &'a [ConvShape],
+    ladders: &'a [Vec<usize>],
+    rm: &'a ResourceModel<'a>,
+    dev: &'a Device,
+    batch: usize,
+    tm: usize,
+    budget: usize,
+    heur_tilings: &'a [Tiling],
+    heur_cost: &'a [u64],
+    /// (layer, `M_on`, `Tr_max`) -> best inner pick; levels mostly
+    /// re-derive the same ceilings, so this absorbs the sweep's pricing.
+    tr_memo: HashMap<(usize, usize, usize), (u64, Tiling)>,
+    /// (layer, `M_on`) -> per-`Tr` floors + prefix minima, shared by
+    /// the level floors and the inner walks.
+    floor_memo: HashMap<(usize, usize), FloorTable>,
+    stats: SearchStats,
+}
 
-    let ladders: Vec<Vec<usize>> = layers.iter().map(|l| m_on_ladder(l, tm)).collect();
-    let layer_b_wei =
-        |l: &ConvShape, m_on: usize| rm.b_wei(l, &Tiling::new(tm, tm, 1, l.c, m_on));
-    // The coupling-variable grid: every weight-bank count any layer can
-    // produce. Algorithm 1's own B_WEI is the max of a subset of these,
-    // hence itself on the grid.
-    let mut levels: Vec<usize> = layers
-        .iter()
-        .zip(&ladders)
-        .flat_map(|(l, ladder)| ladder.iter().map(|&m_on| layer_b_wei(l, m_on)))
-        .collect();
-    levels.sort_unstable();
-    levels.dedup();
+impl LadderSearch<'_> {
+    fn layer_b_wei(&self, i: usize, m_on: usize) -> usize {
+        let l = &self.layers[i];
+        self.rm.b_wei(l, &Tiling::new(self.tm, self.tm, 1, l.c, m_on))
+    }
 
-    // (layer index, M_on, Tr_max) -> its best tiling; levels mostly
-    // re-derive the same ceilings, so this absorbs the sweep's pricing.
-    let mut tr_memo: HashMap<(usize, usize, usize), (u64, Tiling)> = HashMap::new();
+    fn floors(&mut self, i: usize, m_on: usize) -> &FloorTable {
+        if !self.floor_memo.contains_key(&(i, m_on)) {
+            // `Tr_max` shrinks as the reserved weight banks grow, so the
+            // smallest cap that admits this `M_on` (its own `b_wei`)
+            // bounds every ceiling a level can ask of the table —
+            // flooring past it would be pure waste.
+            let min_cap = self.layer_b_wei(i, m_on);
+            let hi = max_feasible_tr(self.rm, &self.layers[i], self.tm, m_on, min_cap, self.budget)
+                .unwrap_or(0);
+            let ft = floor_table(&self.layers[i], self.dev, self.batch, self.tm, m_on, hi);
+            self.stats.floored_candidates += ft.floors.len() as u64;
+            self.floor_memo.insert((i, m_on), ft);
+        }
+        &self.floor_memo[&(i, m_on)]
+    }
 
-    let mut best: Option<(u64, Vec<Tiling>)> = None;
-    for &cap in &levels {
+    /// Admissible floor on [`Self::price_level`]'s total: per layer,
+    /// the minimum [`conv_latency_lower_bound`] over every `(M_on, Tr)`
+    /// the cap admits; layers nothing fits carry their exact fallback
+    /// cost. Since every summand lower-bounds the layer's priced pick,
+    /// the sum lower-bounds the level's total.
+    fn level_floor(&mut self, cap: usize) -> u64 {
+        // Detach the grid references from `self` (they live for 'a, not
+        // for the borrow) so the memo methods below can take `&mut self`.
+        let (layers, ladders) = (self.layers, self.ladders);
+        let mut total = 0u64;
+        for (i, l) in layers.iter().enumerate() {
+            let mut best: Option<u64> = None;
+            for &m_on in &ladders[i] {
+                if self.layer_b_wei(i, m_on) > cap {
+                    continue;
+                }
+                let Some(tr_max) =
+                    max_feasible_tr(self.rm, l, self.tm, m_on, cap, self.budget)
+                else {
+                    continue;
+                };
+                let f = self.floors(i, m_on).prefix_min[tr_max - 1];
+                best = Some(best.map_or(f, |b| b.min(f)));
+            }
+            total += best.unwrap_or(self.heur_cost[i]);
+        }
+        total
+    }
+
+    /// Price one coupling level: every layer independently picks the
+    /// `(M_on, Tr)` minimizing its three-process latency under the cap.
+    fn price_level(&mut self, cap: usize) -> (u64, Vec<Tiling>) {
+        let (layers, ladders) = (self.layers, self.ladders);
         let mut total = 0u64;
         let mut picks = Vec::with_capacity(layers.len());
         for (i, l) in layers.iter().enumerate() {
             let mut layer_best: Option<(u64, Tiling)> = None;
             for &m_on in &ladders[i] {
-                if layer_b_wei(l, m_on) > cap {
+                if self.layer_b_wei(i, m_on) > cap {
                     continue;
                 }
-                let Some(tr_max) = max_feasible_tr(&rm, l, tm, m_on, cap, budget) else {
+                let Some(tr_max) =
+                    max_feasible_tr(self.rm, l, self.tm, m_on, cap, self.budget)
+                else {
                     continue;
                 };
-                let entry = *tr_memo
-                    .entry((i, m_on, tr_max))
-                    .or_insert_with(|| best_tr(l, dev, batch, tm, m_on, tr_max));
+                let key = (i, m_on, tr_max);
+                if !self.tr_memo.contains_key(&key) {
+                    let floors: Vec<u64> = self.floors(i, m_on).floors[..tr_max].to_vec();
+                    let entry = best_tr_floored(
+                        l,
+                        self.dev,
+                        self.batch,
+                        self.tm,
+                        m_on,
+                        &floors,
+                        &mut self.stats,
+                    );
+                    self.tr_memo.insert(key, entry);
+                }
+                let entry = self.tr_memo[&key];
                 if layer_best.map_or(true, |(b, _)| entry.0 < b) {
                     layer_best = Some(entry);
                 }
             }
             // Nothing fits this coupling level: carry Algorithm 1's
             // (possibly fallback) pick so the level stays comparable;
-            // the bounds filter below rejects the level if that pick
-            // cannot coexist with the level's weight residency.
-            let (cycles, tiling) = layer_best.unwrap_or_else(|| {
-                let t = heur.tilings[i];
-                (conv_process_sum(l, &t, dev, batch), t)
-            });
+            // the bounds filter rejects the level if that pick cannot
+            // coexist with the level's weight residency.
+            let (cycles, tiling) =
+                layer_best.unwrap_or((self.heur_cost[i], self.heur_tilings[i]));
             total += cycles;
             picks.push(tiling);
         }
-        if best.as_ref().is_some_and(|(b, _)| total >= *b) {
-            continue;
+        (total, picks)
+    }
+}
+
+/// Search `(Tr, M_on)` for every conv layer of `net` on `dev` — the
+/// default best-first ladder walk.
+pub fn search_tilings(net: &Network, dev: &Device, batch: usize) -> SearchedTilings {
+    search_tilings_searched(net, dev, batch, SearchMode::Pruned).0
+}
+
+/// [`search_tilings`] with an explicit [`SearchMode`] over the `B_WEI`
+/// coupling ladder, returning the unified engine counters.
+///
+/// Both modes return bit-identical [`SearchedTilings`]; the best-first
+/// walk never prices more points (asserted per default grid cell in
+/// `rust/tests/search_engine.rs`, and over random networks).
+pub fn search_tilings_searched(
+    net: &Network,
+    dev: &Device,
+    batch: usize,
+    mode: SearchMode,
+) -> (SearchedTilings, SearchStats) {
+    let layers = net.conv_layers();
+    let rm = ResourceModel::new(dev);
+    let tm = pick_tile(dev);
+    let budget = bram_boundary(dev);
+    let heur = schedule(net, dev, batch);
+    let heur_cost: Vec<u64> = layers
+        .iter()
+        .zip(&heur.tilings)
+        .map(|(l, t)| conv_process_sum(l, t, dev, batch))
+        .collect();
+    let heuristic_cycles: u64 = heur_cost.iter().sum();
+
+    let ladders: Vec<Vec<usize>> = layers.iter().map(|l| m_on_ladder(l, tm)).collect();
+    // The coupling-variable grid: every weight-bank count any layer can
+    // produce. Algorithm 1's own B_WEI is the max of a subset of these,
+    // hence itself on the grid.
+    let mut levels: Vec<usize> = layers
+        .iter()
+        .zip(&ladders)
+        .flat_map(|(l, ladder)| {
+            ladder
+                .iter()
+                .map(|&m_on| rm.b_wei(l, &Tiling::new(tm, tm, 1, l.c, m_on)))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    levels.sort_unstable();
+    levels.dedup();
+
+    let mut ls = LadderSearch {
+        layers: &layers,
+        ladders: &ladders,
+        rm: &rm,
+        dev,
+        batch,
+        tm,
+        budget,
+        heur_tilings: &heur.tilings,
+        heur_cost: &heur_cost,
+        tr_memo: HashMap::new(),
+        floor_memo: HashMap::new(),
+        stats: SearchStats::default(),
+    };
+
+    // The best bounds-respecting level as (total, cap, picks). Both
+    // modes resolve equal totals toward the smallest cap, so the pick
+    // is mode-independent.
+    let mut best: Option<(u64, usize, Vec<Tiling>)> = None;
+    match mode {
+        SearchMode::Exhaustive => {
+            // The PR 2 scan: ascending cap, strict improvement, bounds
+            // checked only on improvers — kept as the oracle.
+            for &cap in &levels {
+                ls.stats.priced_levels += 1;
+                let (total, picks) = ls.price_level(cap);
+                if best.as_ref().is_some_and(|(b, _, _)| total >= *b) {
+                    continue;
+                }
+                if respects_bounds(&rm, &layers, &picks, tm, budget) {
+                    best = Some((total, cap, picks));
+                }
+            }
         }
-        if respects_bounds(&rm, &layers, &picks, tm, budget) {
-            best = Some((total, picks));
+        SearchMode::Pruned => {
+            let caps: Vec<CapLevel> = levels.iter().map(|&c| CapLevel(c)).collect();
+            let engine =
+                BoundedSearch::new(caps, Band::Exact, |&CapLevel(cap)| ls.level_floor(cap))
+                    .seed_incumbent(heuristic_cycles);
+            let mut outcomes: Vec<(u64, usize, bool, Vec<Tiling>)> = Vec::new();
+            let (_, walk) = engine.run(|&CapLevel(cap)| {
+                let (total, picks) = ls.price_level(cap);
+                let passing = respects_bounds(&rm, &layers, &picks, tm, budget);
+                outcomes.push((total, cap, passing, picks));
+                // Bounds-violating levels must not tighten the
+                // early-out: their cost is not a usable answer.
+                Priced { cost: total, incumbent: passing }
+            });
+            ls.stats.tally_level_walk(&walk);
+            for (total, cap, passing, picks) in outcomes {
+                if !passing {
+                    continue;
+                }
+                let better = best
+                    .as_ref()
+                    .map_or(true, |&(bt, bc, _)| (total, cap) < (bt, bc));
+                if better {
+                    best = Some((total, cap, picks));
+                }
+            }
         }
     }
 
-    match best {
-        Some((searched_cycles, tilings)) if searched_cycles < heuristic_cycles => {
+    let stats = ls.stats;
+    let searched = match best {
+        Some((searched_cycles, _, tilings)) if searched_cycles < heuristic_cycles => {
             let b_wei = layers
                 .iter()
                 .zip(&tilings)
@@ -260,7 +500,8 @@ pub fn search_tilings(net: &Network, dev: &Device, batch: usize) -> SearchedTili
             b_wei: heur.b_wei,
             levels_swept: levels.len(),
         },
-    }
+    };
+    (searched, stats)
 }
 
 #[cfg(test)]
@@ -295,5 +536,19 @@ mod tests {
             s.searched_cycles,
             conv_stack_cycles(&net.conv_layers(), &s.tilings, &dev, 4)
         );
+    }
+
+    #[test]
+    fn ladder_modes_agree_and_best_first_prices_no_more() {
+        let net = cnn1x();
+        let dev = zcu102();
+        let (full, ex) = search_tilings_searched(&net, &dev, 4, SearchMode::Exhaustive);
+        let (fast, pr) = search_tilings_searched(&net, &dev, 4, SearchMode::Pruned);
+        assert_eq!(full, fast, "the best-first ladder must match the scan bit-for-bit");
+        assert!(pr.priced_candidates <= ex.priced_candidates);
+        assert!(pr.priced_levels <= ex.priced_levels);
+        // Every level is either priced or pruned; the scan prices all.
+        assert_eq!(pr.priced_levels + pr.pruned_levels, ex.priced_levels);
+        assert_eq!(ex.priced_levels as usize, full.levels_swept);
     }
 }

@@ -34,13 +34,16 @@
 //! and report layers share, so the paper-reproduction paths reuse the
 //! explorer's work (and vice versa) for free.
 //!
-//! The scheduler's own `Tr` enumeration is pruned (binary-searched
-//! BRAM ceiling + a provable latency lower bound,
-//! [`model::scheduler::SearchMode`]) and stays bit-identical to the
+//! Every resource-constrained enumeration runs on one generic bounded
+//! best-first engine ([`search::BoundedSearch`]): the scheduler's `Tr`
+//! walk (binary-searched BRAM ceiling + a provable latency lower bound,
+//! [`model::scheduler::SearchMode`]) stays bit-identical to the
 //! exhaustive scan at >= 5x fewer closed-form evaluations; the explorer
-//! can additionally search per-layer `(Tr, M_on)` beyond Algorithm 1
-//! ([`explore::tiling_search`], `--search-tilings`) and persist priced
-//! points across runs ([`explore::sweep_cache`], `--cache-file`) so a
+//! additionally searches per-layer `(Tr, M_on)` beyond Algorithm 1
+//! ([`explore::tiling_search`], `--search-tilings`) with its `B_WEI`
+//! coupling ladder ordered best-first by the same floor, and persists
+//! priced points across runs ([`explore::sweep_cache`], `--cache-file`
+//! — scheme rows and per-cell search payloads in separate tables) so a
 //! warm sweep only prices new grid cells.
 
 pub mod coordinator;
@@ -54,6 +57,7 @@ pub mod model;
 pub mod nets;
 pub mod report;
 pub mod runtime;
+pub mod search;
 pub mod sim;
 pub mod train;
 pub mod util;

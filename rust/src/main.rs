@@ -156,8 +156,10 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             };
             let jobs = args.parse_flag("jobs", 0usize);
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
-            let mut point_cache =
-                cache_path.as_deref().map(explore::sweep_cache::SweepCache::load);
+            let mut point_cache = match cache_path.as_deref() {
+                Some(p) => Some(explore::sweep_cache::SweepCache::load(p)?),
+                None => None,
+            };
             let report = if jobs > 0 {
                 let pool = rayon::ThreadPoolBuilder::new()
                     .num_threads(jobs)
@@ -182,11 +184,12 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             if let (Some(path), Some(pc)) = (&cache_path, &point_cache) {
                 pc.save(path)?;
                 println!(
-                    "point cache: {} hits / {} freshly priced -> {} ({} entries)",
+                    "point cache: {} hits / {} freshly priced -> {} ({} entries, {} cells)",
                     report.cache_hits,
                     report.cache_misses,
                     path.display(),
-                    pc.len()
+                    pc.len(),
+                    pc.cell_count()
                 );
             }
             if opts.search_tilings {
@@ -198,6 +201,18 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 println!(
                     "tiling search: beat Algorithm 1 on {improved} of {} points",
                     report.points.len()
+                );
+                let ss = &report.search_stats;
+                println!(
+                    "  engine: {} cells searched ({} from cache); {} levels priced / {} \
+                     pruned; {} candidates priced / {} pruned ({} floored)",
+                    report.cells_searched,
+                    report.cell_cache_hits,
+                    ss.priced_levels,
+                    ss.pruned_levels,
+                    ss.priced_candidates,
+                    ss.pruned_candidates,
+                    ss.floored_candidates
                 );
             }
             let out = args.flag_or("out", "explore_report.json");

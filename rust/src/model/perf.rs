@@ -161,53 +161,35 @@ fn wu_latency(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
     total
 }
 
-/// Per-group floor of [`fp_like_latency`]: `batch x lat3` summed over
-/// weight groups. A true lower bound on both the FP and BP closed forms
-/// because the batch-tail terms only ever grow — `t_load >= t_ifm` and
-/// `t_prod2 >= t_prod1` give `latb1 >= lat1` and `latb2 >= lat2`, hence
-/// `latb3 >= lat3` in both tail variants of Eq. (17)/(20)/(21).
+/// Per-group floor of [`fp_like_latency`]: `batch x lat3` plus the one
+/// *guaranteed* batch-tail correction `latb1 - lat1`, summed over
+/// weight groups. A true lower bound on both the FP and BP closed
+/// forms: `t_load >= t_ifm` and `t_prod2 >= t_prod1` give
+/// `latb1 >= lat1` and `latb2 >= lat2`, so the BP tail variant of
+/// Eq. (17)/(20)/(21) has `latb3 = lat3 + (latb1 - lat1)` *exactly*,
+/// and the FP variant has
+/// `latb3 - lat3 = (m_on_tiles - 1)(latb2 - lat2) + (latb1 - lat1)`,
+/// of which only the `(latb2 - lat2)` slack is dropped. Keeping the
+/// guaranteed tail term is what lets pruning bite at batch 1, where
+/// the tail iteration *is* most of the latency (ROADMAP item (e)).
 fn fp_like_floor(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
     let n_tiles = ceil_div(l.n as u64, t.tn as u64);
     let r_tiles = ceil_div(l.r as u64, t.tr as u64);
     let m_on = t.m_on.min(l.m) as u64;
+    let t_load = tt.t_ifm.max(tt.t_wei);
     let t_prod1 = tt.t_ifm.max(tt.t_comp);
+    let t_prod2 = t_load.max(tt.t_comp);
     let t_store = tt.t_comp.max(tt.t_out);
     let lat1 = (n_tiles - 1) * t_prod1 + tt.t_ifm + tt.t_comp;
     let lat2 = (n_tiles - 1) * t_prod1 + tt.t_ifm + t_store;
+    let latb1 = (n_tiles - 1) * t_prod2 + t_load + tt.t_comp;
     let mut total = 0u64;
     let mut m_done = 0u64;
     while m_done < l.m as u64 {
         let g = m_on.min(l.m as u64 - m_done);
         let m_on_tiles = ceil_div(g, t.tm as u64);
-        total += batch * ((m_on_tiles * r_tiles - 1) * lat2 + lat1 + tt.t_out + tt.t_start);
-        m_done += g;
-    }
-    total
-}
-
-/// Same floor for [`wu_latency`]: keeps the per-tile times exact and
-/// drops only the `latb1 >= lat1` batch tails (`t_store >= t_comp`, and
-/// the whole-map variant adds `t_out` terms on top of `lat1`) plus the
-/// trailing `t_out` flush.
-fn wu_floor(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
-    let n_tiles = ceil_div(l.n as u64, t.tn as u64);
-    let r_tiles = ceil_div(l.r as u64, t.tr as u64);
-    let m_on = t.m_on.min(l.m) as u64;
-    let mut total = 0u64;
-    let mut m_done = 0u64;
-    while m_done < l.m as u64 {
-        let g = m_on.min(l.m as u64 - m_done);
-        let m_on_tiles = ceil_div(g, t.tm as u64);
-        let t_load = tt.t_ifm.max(tt.t_ofm);
-        total += if (l.r as u64) <= t.tr as u64 {
-            let t_prod2 = tt.t_ifm.max(tt.t_comp);
-            let lat1 = (n_tiles - 1) * t_prod2 + t_load + tt.t_comp;
-            m_on_tiles * batch * lat1
-        } else {
-            let t_prod1 = t_load.max(tt.t_comp);
-            let lat1 = (r_tiles - 1) * t_prod1 + t_load + tt.t_comp;
-            batch * m_on_tiles * n_tiles * lat1
-        };
+        total += batch * ((m_on_tiles * r_tiles - 1) * lat2 + lat1 + tt.t_out + tt.t_start)
+            + (latb1 - lat1);
         m_done += g;
     }
     total
@@ -218,13 +200,18 @@ fn wu_floor(l: &ConvShape, t: &Tiling, tt: &TileTimes, batch: u64) -> u64 {
 /// computed without touching the [`conv_latency_cached`] memo.
 ///
 /// Every per-tile time is exact (the same [`TileTimes`] / [`bp_problem`]
-/// construction the real closed form uses); only the nonnegative
-/// batch-tail corrections (`latb* >= lat*`) are dropped, so the bound
-/// sits within a few percent of the true sum at training batch sizes —
-/// tight enough for the scheduler's dominated-candidate pruning, cheap
-/// enough to screen every `Tr` candidate. Validity (`bound <= actual`)
-/// is pinned by unit tests here and a property test over random layers
-/// in `rust/tests/scheduler_pruning.rs`.
+/// construction the real closed form uses). The WU term is
+/// [`wu_latency`] itself — the WU closed form is memo-free and no more
+/// expensive than a floor, so the bound carries it exactly. The FP/BP
+/// terms drop only the `(latb2 - lat2)` batch-tail slack beyond the one
+/// guaranteed tail iteration (see [`fp_like_floor`]), so the bound sits
+/// within a few percent of the true sum at *every* batch size,
+/// including batch 1 — tight enough for the scheduler's
+/// dominated-candidate pruning, cheap enough to screen every `Tr`
+/// candidate. Validity (`bound <= actual`) is pinned by unit tests here
+/// and a property test over random layers in
+/// `rust/tests/scheduler_pruning.rs`; the batch-1 pruning bite is
+/// asserted in `rust/tests/pruning_memo_counters.rs`.
 pub fn conv_latency_lower_bound(l: &ConvShape, t: &Tiling, dev: &Device, batch: usize) -> u64 {
     let b = batch as u64;
     let tt_fp = TileTimes::new(l, t, dev, Process::Fp);
@@ -232,7 +219,7 @@ pub fn conv_latency_lower_bound(l: &ConvShape, t: &Tiling, dev: &Device, batch: 
     let tt_wu = TileTimes::new(l, t, dev, Process::Wu);
     fp_like_floor(l, t, &tt_fp, b)
         + fp_like_floor(&bp_layer, &bp_tiling, &tt_bp, b)
-        + wu_floor(l, t, &tt_wu, b)
+        + wu_latency(l, t, &tt_wu, b)
 }
 
 /// The BP pass as the accelerator sees it: the transposed problem
@@ -491,6 +478,15 @@ mod tests {
                         assert!(
                             floor * 2 > actual,
                             "floor {floor} uselessly loose vs {actual} for {l:?} tr={tr}"
+                        );
+                    } else {
+                        // ROADMAP (e): with the exact WU term and the
+                        // guaranteed batch-tail correction, the floor
+                        // stays useful at batch 1 too (only the FP
+                        // (latb2 - lat2) slack is dropped).
+                        assert!(
+                            floor * 4 > actual * 3,
+                            "batch-1 floor {floor} went blunt vs {actual} for {l:?} tr={tr}"
                         );
                     }
                 }

@@ -11,15 +11,27 @@
 //! and candidates are priced best-first by their analytic floor
 //! ([`conv_latency_lower_bound`]), stopping as soon as the floor proves
 //! every remaining `Tr` can neither be the latency minimum nor enter
-//! the 3% tie-break band. The seed's exhaustive scan survives as
-//! [`SearchMode::Exhaustive`], the oracle the pruned search must match
-//! bit-for-bit (`rust/tests/scheduler_pruning.rs`).
+//! the 3% tie-break band. Since PR 3 the walk itself is the generic
+//! [`crate::search::BoundedSearch`] engine (this module is one of its
+//! instantiations; `explore/tiling_search.rs` holds the others). The
+//! seed's exhaustive scan survives as [`SearchMode::Exhaustive`], the
+//! oracle the pruned search must match bit-for-bit
+//! (`rust/tests/scheduler_pruning.rs`).
 
 use crate::device::Device;
 use crate::layout::{Process, Tiling};
 use crate::model::perf::{conv_latency_cached, conv_latency_lower_bound, conv_process_sum};
 use crate::model::resource::ResourceModel;
 use crate::nets::{ConvShape, Network};
+use crate::search::{max_feasible, Band, BoundedSearch, Priced};
+
+pub use crate::search::SearchStats;
+
+/// Algorithm 1's tie-break band: within this factor of the latency
+/// optimum, the largest `Tr` wins (see [`select_tiling`] and the
+/// [`Band::Factor`] handed to the pruned walk — the two must agree or
+/// pruning could drop a band member).
+pub const TIE_BAND_FACTOR: f64 = 1.03;
 
 /// Scheduler output for one network on one device.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -90,24 +102,13 @@ pub enum SearchMode {
     Exhaustive,
 }
 
-/// Work counters for one [`schedule_searched`] run.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct SearchStats {
-    /// `Tr` candidates priced through the closed form.
-    pub priced_candidates: u64,
-    /// Candidates dismissed by the latency lower bound alone.
-    pub pruned_candidates: u64,
-    /// `conv_latency` evaluations requested (three processes per priced
-    /// candidate).
-    pub latency_evals: u64,
-}
-
 /// Largest `Tr <= R` whose double-buffered feature banks fit
 /// `bram_budget` next to `reserved_wei` weight banks (Eq. 29/30/32).
 /// Both bank counts grow monotonically in `Tr` (`Tr_in = S*(Tr-1)+K`
 /// and the OFM rows only grow), so feasibility is a prefix of `1..=R`
-/// and binary search finds its edge. `None` when even `Tr = 1` does
-/// not fit — the caller falls back exactly like the seed scan did.
+/// and [`max_feasible`] binary-searches its edge. `None` when even
+/// `Tr = 1` does not fit — the caller falls back exactly like the seed
+/// scan did.
 pub fn max_feasible_tr(
     rm: &ResourceModel,
     l: &ConvShape,
@@ -116,23 +117,10 @@ pub fn max_feasible_tr(
     reserved_wei: usize,
     bram_budget: usize,
 ) -> Option<usize> {
-    let fits = |tr: usize| {
+    max_feasible(1, l.r, |tr| {
         let cand = Tiling::new(tm, tm, tr, l.c, m_on);
         2 * (rm.b_ifm(l, &cand) + rm.b_ofm(l, &cand) + reserved_wei) <= bram_budget
-    };
-    if !fits(1) {
-        return None;
-    }
-    let (mut lo, mut hi) = (1usize, l.r);
-    while lo < hi {
-        let mid = lo + (hi - lo).div_ceil(2);
-        if fits(mid) {
-            lo = mid;
-        } else {
-            hi = mid - 1;
-        }
-    }
-    Some(lo)
+    })
 }
 
 /// One layer's `Tr` enumeration context (steps 13-16 of Algorithm 1).
@@ -148,6 +136,10 @@ struct TrSearch<'a> {
 }
 
 impl TrSearch<'_> {
+    fn tiling(&self, tr: usize) -> Tiling {
+        Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on)
+    }
+
     fn price(&self, cand: &Tiling, stats: &mut SearchStats) -> u64 {
         stats.priced_candidates += 1;
         stats.latency_evals += Process::ALL.len() as u64;
@@ -158,7 +150,7 @@ impl TrSearch<'_> {
     fn exhaustive(&self, stats: &mut SearchStats) -> Vec<(u64, Tiling)> {
         let mut candidates = Vec::new();
         for tr in 1..=self.l.r {
-            let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
+            let cand = self.tiling(tr);
             let b_ifm = self.rm.b_ifm(self.l, &cand);
             let b_ofm = self.rm.b_ofm(self.l, &cand);
             if 2 * (b_ifm + b_ofm + self.b_wei) > self.bram_budget {
@@ -170,11 +162,11 @@ impl TrSearch<'_> {
         candidates
     }
 
-    /// The pruned scan: best-first branch-and-bound over `1..=Tr_max`.
-    /// Every candidate is floored first (cheap, memo-free), then priced
-    /// in ascending-floor order; once the next floor exceeds
-    /// `1.03 x best-so-far` the walk stops — the floors only grow from
-    /// there. Since `floor <= lat`, every unpriced candidate has
+    /// The pruned scan as a [`BoundedSearch`] instantiation over
+    /// `1..=Tr_max`: floor with [`conv_latency_lower_bound`], price in
+    /// ascending-floor order, stop once the next floor leaves the
+    /// [`TIE_BAND_FACTOR`] band of the best price so far. Since
+    /// `floor <= lat`, every unpriced candidate has
     /// `lat > 1.03 x best >= 1.03 x min`: it can neither be the latency
     /// minimum nor fall inside the 3% band [`select_tiling`] breaks
     /// ties over, so dropping it cannot change the selection. With the
@@ -186,42 +178,28 @@ impl TrSearch<'_> {
         else {
             return Vec::new();
         };
-        let mut order: Vec<(u64, usize)> = (1..=tr_max)
-            .map(|tr| {
-                let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
-                (conv_latency_lower_bound(self.l, &cand, self.dev, self.batch), tr)
-            })
-            .collect();
-        // Ascending floor; the larger `Tr` first on ties (deterministic,
-        // and the tie-break prefers large tiles anyway).
-        order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
-        let mut candidates = Vec::new();
-        let mut best: Option<u64> = None;
-        for (i, &(floor, tr)) in order.iter().enumerate() {
-            if let Some(b) = best {
-                if floor as f64 > b as f64 * 1.03 {
-                    stats.pruned_candidates += (order.len() - i) as u64;
-                    break;
-                }
-            }
-            let cand = Tiling::new(self.tm, self.tm, tr, self.l.c, self.m_on);
-            let lat = self.price(&cand, stats);
-            best = Some(best.map_or(lat, |b| b.min(lat)));
-            candidates.push((lat, cand));
-        }
-        candidates
+        let engine = BoundedSearch::new(1..=tr_max, Band::Factor(TIE_BAND_FACTOR), |&tr| {
+            conv_latency_lower_bound(self.l, &self.tiling(tr), self.dev, self.batch)
+        });
+        let (visited, walk) = engine.run(|&tr| Priced {
+            cost: conv_process_sum(self.l, &self.tiling(tr), self.dev, self.batch),
+            incumbent: true,
+        });
+        stats.tally_walk(&walk, Process::ALL.len() as u64);
+        visited.into_iter().map(|(lat, tr)| (lat, self.tiling(tr))).collect()
     }
 }
 
 /// The paper's pick among priced candidates: the latency-minimizing
-/// `Tr`, except that within 3% of the optimum the *largest* `Tr` wins
-/// (fewest DMA restarts and edge iterations — effects the closed form
-/// underweights but the discrete-event sim confirms).
+/// `Tr`, except that within [`TIE_BAND_FACTOR`] of the optimum the
+/// *largest* `Tr` wins (fewest DMA restarts and edge iterations —
+/// effects the closed form underweights but the discrete-event sim
+/// confirms).
 fn select_tiling(candidates: &[(u64, Tiling)]) -> Option<Tiling> {
     let best = candidates.iter().map(|(lat, _)| *lat).min()?;
     candidates
         .iter()
-        .filter(|(lat, _)| *lat as f64 <= best as f64 * 1.03)
+        .filter(|(lat, _)| *lat as f64 <= best as f64 * TIE_BAND_FACTOR)
         .max_by_key(|(_, c)| c.tr)
         .map(|(_, c)| *c)
 }

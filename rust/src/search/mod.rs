@@ -1,0 +1,339 @@
+//! Generic bounded best-first search — the one walk behind every
+//! resource-constrained enumeration in the crate.
+//!
+//! EF-Train's Algorithm 1 (and the PR 2 extensions built on it) keep
+//! solving the same shaped problem: *enumerate candidates under a
+//! monotone resource constraint, floor each with a provable latency
+//! lower bound, and price them in ascending-floor order until the floor
+//! proves every remaining candidate irrelevant*. This module extracts
+//! that walk once, so the scheduler's `Tr` search
+//! ([`crate::model::scheduler`]), the per-layer `(Tr, M_on)` co-search
+//! and its `B_WEI` coupling-ladder sweep
+//! ([`crate::explore::tiling_search`]) are thin instantiations instead
+//! of divergent hand-rolled copies — and every future axis (`Tn`,
+//! batch, layout scheme) is a plug-in rather than a third copy.
+//!
+//! ## Mapping to the paper (Eq. 28–32)
+//!
+//! * **Feasibility ceiling** — [`max_feasible`]. The Eq. 29/30 feature
+//!   buffer banks `B_IFM`/`B_OFM` grow monotonically in `Tr`
+//!   (`Tr_in = S·(Tr−1)+K`, and the OFM rows only grow), so under the
+//!   Eq. 32 double-buffered bank budget the BRAM-feasible `Tr` form a
+//!   prefix of `1..=R` whose edge a binary search finds. The same holds
+//!   for any candidate axis whose resource use is monotone.
+//! * **Admissible floor** — the `floor` closure handed to
+//!   [`BoundedSearch::new`]. Instantiations pass
+//!   [`crate::model::perf::conv_latency_lower_bound`], a provable lower
+//!   bound on the Eq. (15)–(27) three-process latency; the engine only
+//!   requires `floor(c) <= price(c)` for its pruning to be lossless.
+//! * **Tie-break band** — [`Band`]. Algorithm 1 does not take the raw
+//!   latency argmin: within a small band of the optimum it prefers the
+//!   largest `Tr` (fewest DMA restarts / edge iterations — effects the
+//!   closed form underweights). [`Band::Factor`] keeps every candidate
+//!   whose floor may still land inside that band priced;
+//!   [`Band::Exact`] degenerates to the pure argmin walk.
+//! * **Incumbent policy** — the [`Priced::incumbent`] flag and
+//!   [`BoundedSearch::seed_incumbent`]. The coupling-ladder sweep must
+//!   not let a bounds-violating level tighten the early-out, and can
+//!   seed the incumbent with Algorithm 1's own cycles because its final
+//!   answer is clamped to the heuristic anyway.
+//!
+//! Pruning soundness: candidates are priced in ascending-floor order,
+//! so once `band.excludes(floor, incumbent)` holds, it holds for every
+//! remaining candidate; with an admissible floor each of those has
+//! `price > incumbent` (or outside the band of it) and can change
+//! neither the argmin nor the band the caller selects over. Both legacy
+//! walks are pinned bit-identical to their seed behaviour in
+//! `rust/tests/search_engine.rs` and the `SearchMode::Exhaustive`
+//! oracle tests.
+
+/// A point in a bounded best-first walk. `tie_key` breaks equal-floor
+/// ordering deterministically: **higher keys are visited first** (the
+/// scheduler prefers large `Tr` on ties; the coupling ladder inverts
+/// the key to visit small `B_WEI` caps first).
+pub trait Candidate: Copy {
+    fn tie_key(&self) -> u64;
+}
+
+/// Scalar candidates (a `Tr` value): larger first on floor ties.
+impl Candidate for usize {
+    fn tie_key(&self) -> u64 {
+        *self as u64
+    }
+}
+
+/// When does the walk stop pricing? Checked against the *floor* of the
+/// next candidate in ascending-floor order, so a `true` here excludes
+/// every remaining candidate at once.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Band {
+    /// Stop once the floor strictly exceeds the incumbent — the pure
+    /// argmin walk (nothing floored above the best can win).
+    Exact,
+    /// Stop once the floor exceeds `incumbent * factor` — keeps every
+    /// candidate that may still fall inside the caller's tie-break band
+    /// (Algorithm 1 selects the largest `Tr` within 3% of the optimum,
+    /// i.e. `Band::Factor(1.03)`).
+    Factor(f64),
+}
+
+impl Band {
+    /// Is a candidate floored at `floor` provably outside the band of
+    /// `incumbent`?
+    pub fn excludes(&self, floor: u64, incumbent: u64) -> bool {
+        match self {
+            Band::Exact => floor > incumbent,
+            Band::Factor(f) => floor as f64 > incumbent as f64 * f,
+        }
+    }
+}
+
+/// One candidate's appraisal by the pricing closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Priced {
+    /// The exact objective value (closed-form cycles).
+    pub cost: u64,
+    /// May this candidate tighten the incumbent the early-out compares
+    /// floors against? Instantiations whose candidates can be priced
+    /// yet invalid (the ladder's bounds-violating levels) pass `false`
+    /// so an unusable cost never prunes a usable one.
+    pub incumbent: bool,
+}
+
+/// Work counters of one engine walk, at the walk's own granularity
+/// (candidates for the `Tr` searches, ladder levels for the `B_WEI`
+/// sweep). Folded into [`SearchStats`] by the instantiations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WalkStats {
+    /// Admissible floors evaluated while ordering the walk (zero when
+    /// the caller supplied pre-computed floors).
+    pub floored: u64,
+    /// Candidates priced through the exact objective.
+    pub priced: u64,
+    /// Candidates excluded by the band check alone, unpriced.
+    pub pruned: u64,
+}
+
+/// Unified work accounting across every engine instantiation — the
+/// currency of the pruning-evidence tests (`tests/scheduler_pruning.rs`,
+/// `tests/search_engine.rs`, `tests/pruning_memo_counters.rs`) and the
+/// `BENCH_explore.json` perf trajectory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Candidates priced through the closed form.
+    pub priced_candidates: u64,
+    /// Candidates dismissed by the latency lower bound alone.
+    pub pruned_candidates: u64,
+    /// `conv_latency` evaluations requested (three processes per priced
+    /// candidate).
+    pub latency_evals: u64,
+    /// Admissible floors computed to order the walks.
+    pub floored_candidates: u64,
+    /// `B_WEI` coupling-ladder levels priced (tiling co-search only).
+    pub priced_levels: u64,
+    /// Ladder levels the per-level floor excluded unpriced.
+    pub pruned_levels: u64,
+}
+
+impl SearchStats {
+    /// Fold one candidate-granularity walk in, charging
+    /// `evals_per_price` closed-form evaluations per priced candidate.
+    pub fn tally_walk(&mut self, w: &WalkStats, evals_per_price: u64) {
+        self.floored_candidates += w.floored;
+        self.priced_candidates += w.priced;
+        self.pruned_candidates += w.pruned;
+        self.latency_evals += w.priced * evals_per_price;
+    }
+
+    /// Fold one ladder-level-granularity walk in.
+    pub fn tally_level_walk(&mut self, w: &WalkStats) {
+        self.priced_levels += w.priced;
+        self.pruned_levels += w.pruned;
+    }
+
+    /// Accumulate another run's counters (the explorer aggregates one
+    /// `SearchStats` per searched grid cell).
+    pub fn absorb(&mut self, o: &SearchStats) {
+        self.priced_candidates += o.priced_candidates;
+        self.pruned_candidates += o.pruned_candidates;
+        self.latency_evals += o.latency_evals;
+        self.floored_candidates += o.floored_candidates;
+        self.priced_levels += o.priced_levels;
+        self.pruned_levels += o.pruned_levels;
+    }
+}
+
+/// A bounded best-first walk, fixed at construction: candidates are
+/// floored once, ordered ascending-floor (ties broken by descending
+/// [`Candidate::tie_key`], stably), then [`run`](Self::run) prices them
+/// in that order until the [`Band`] excludes the rest.
+pub struct BoundedSearch<C: Candidate> {
+    ordered: Vec<(u64, C)>,
+    band: Band,
+    seed: Option<u64>,
+    floored: u64,
+}
+
+impl<C: Candidate> BoundedSearch<C> {
+    /// Floor every candidate with `floor` and fix the visit order.
+    pub fn new<I, F>(candidates: I, band: Band, mut floor: F) -> Self
+    where
+        I: IntoIterator<Item = C>,
+        F: FnMut(&C) -> u64,
+    {
+        let pairs: Vec<(u64, C)> = candidates.into_iter().map(|c| (floor(&c), c)).collect();
+        let n = pairs.len() as u64;
+        let mut s = Self::from_floored(pairs, band);
+        s.floored = n;
+        s
+    }
+
+    /// Like [`Self::new`] but over `(floor, candidate)` pairs the
+    /// caller already computed (e.g. from a memoized floor table);
+    /// these do not count toward [`WalkStats::floored`].
+    pub fn from_floored(mut pairs: Vec<(u64, C)>, band: Band) -> Self {
+        pairs.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.tie_key().cmp(&a.1.tie_key())));
+        Self { ordered: pairs, band, seed: None, floored: 0 }
+    }
+
+    /// Start the walk with an incumbent already in place. Sound only
+    /// when the caller discards any result costlier than `cost` anyway
+    /// (the coupling ladder seeds Algorithm 1's own cycles because its
+    /// final answer is clamped to the heuristic).
+    pub fn seed_incumbent(mut self, cost: u64) -> Self {
+        self.seed = Some(cost);
+        self
+    }
+
+    /// Price candidates in ascending-floor order until the band
+    /// excludes the next floor relative to the incumbent (the minimum
+    /// accepted cost so far). Returns every priced `(cost, candidate)`
+    /// in visit order — the caller reduces (argmin, tie-break band,
+    /// lexicographic preference, ...) as its selection rule demands —
+    /// plus the walk's counters.
+    pub fn run<P>(self, mut price: P) -> (Vec<(u64, C)>, WalkStats)
+    where
+        P: FnMut(&C) -> Priced,
+    {
+        let mut stats = WalkStats { floored: self.floored, priced: 0, pruned: 0 };
+        let mut visited = Vec::with_capacity(self.ordered.len().min(8));
+        let mut incumbent = self.seed;
+        for (i, &(floor, c)) in self.ordered.iter().enumerate() {
+            if let Some(b) = incumbent {
+                if self.band.excludes(floor, b) {
+                    stats.pruned = (self.ordered.len() - i) as u64;
+                    break;
+                }
+            }
+            let p = price(&c);
+            stats.priced += 1;
+            if p.incumbent {
+                incumbent = Some(incumbent.map_or(p.cost, |b| b.min(p.cost)));
+            }
+            visited.push((p.cost, c));
+        }
+        (visited, stats)
+    }
+}
+
+/// Largest `v` in `lo..=hi` satisfying the monotone predicate `fits`
+/// (the feasible set must be a prefix of the range — e.g. the Eq. 29/30
+/// bank counts grow with `Tr`, so BRAM feasibility is a prefix of
+/// `1..=R`). `None` when even `lo` fails; the caller falls back exactly
+/// like an exhaustive scan that found nothing would.
+pub fn max_feasible(lo: usize, hi: usize, fits: impl Fn(usize) -> bool) -> Option<usize> {
+    if !fits(lo) {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi.max(lo));
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_feasible_finds_the_prefix_edge() {
+        for edge in 0usize..=12 {
+            let got = max_feasible(1, 10, |v| v <= edge);
+            let want = if edge == 0 { None } else { Some(edge.min(10)) };
+            assert_eq!(got, want, "edge {edge}");
+        }
+        assert_eq!(max_feasible(1, 1, |_| true), Some(1));
+        assert_eq!(max_feasible(3, 9, |v| v <= 7), Some(7));
+        assert_eq!(max_feasible(3, 9, |v| v < 3), None);
+    }
+
+    #[test]
+    fn exact_band_prices_only_floor_minimal_prefix() {
+        // floors: 5, 5, 7, 9; costs equal floors (exact floor).
+        let cands: Vec<(u64, u64)> = vec![(5, 5), (7, 7), (5, 5), (9, 9)];
+        let engine =
+            BoundedSearch::new(0..cands.len(), Band::Exact, |&i: &usize| cands[i].0);
+        let (visited, w) = engine.run(|&i| Priced { cost: cands[i].1, incumbent: true });
+        // Both floor-5 candidates priced (tie with the incumbent is not
+        // excluded), floor-7 and floor-9 pruned.
+        assert_eq!(visited.iter().map(|&(c, _)| c).collect::<Vec<_>>(), vec![5, 5]);
+        assert_eq!((w.priced, w.pruned, w.floored), (2, 2, 4));
+        // Ties visit the higher tie_key first.
+        assert_eq!(visited[0].1, 2);
+        assert_eq!(visited[1].1, 0);
+    }
+
+    #[test]
+    fn factor_band_keeps_the_tie_break_window_priced() {
+        // incumbent 100; floors 102 (inside 3%) priced, 104 pruned.
+        let cands: Vec<(u64, u64)> = vec![(100, 100), (102, 110), (104, 104)];
+        let engine =
+            BoundedSearch::new(0..cands.len(), Band::Factor(1.03), |&i: &usize| cands[i].0);
+        let (visited, w) = engine.run(|&i| Priced { cost: cands[i].1, incumbent: true });
+        assert_eq!(visited.len(), 2);
+        assert_eq!((w.priced, w.pruned), (2, 1));
+    }
+
+    #[test]
+    fn non_incumbent_costs_never_prune() {
+        // The cheap candidate is invalid (incumbent: false): it must not
+        // stop the walk from pricing the valid, costlier ones.
+        let cands: Vec<(u64, u64, bool)> = vec![(1, 1, false), (5, 50, true), (6, 6, true)];
+        let engine = BoundedSearch::new(0..cands.len(), Band::Exact, |&i: &usize| cands[i].0);
+        let (visited, w) = engine.run(|&i| Priced { cost: cands[i].1, incumbent: cands[i].2 });
+        assert_eq!(visited.len(), 3, "invalid cost 1 must not exclude floors 5/6");
+        assert_eq!(w.pruned, 0);
+    }
+
+    #[test]
+    fn seeded_incumbent_prunes_immediately() {
+        let engine = BoundedSearch::new(0..4usize, Band::Exact, |&i| 10 + i as u64)
+            .seed_incumbent(3);
+        let (visited, w) = engine.run(|_| unreachable!("every floor exceeds the seed"));
+        assert!(visited.is_empty());
+        assert_eq!((w.priced, w.pruned), (0, 4));
+    }
+
+    #[test]
+    fn stats_fold_consistently() {
+        let mut s = SearchStats::default();
+        s.tally_walk(&WalkStats { floored: 7, priced: 4, pruned: 3 }, 3);
+        assert_eq!(s.priced_candidates, 4);
+        assert_eq!(s.pruned_candidates, 3);
+        assert_eq!(s.latency_evals, 12);
+        assert_eq!(s.floored_candidates, 7);
+        let mut t = SearchStats::default();
+        t.tally_level_walk(&WalkStats { floored: 0, priced: 2, pruned: 5 });
+        t.absorb(&s);
+        assert_eq!(t.priced_levels, 2);
+        assert_eq!(t.pruned_levels, 5);
+        assert_eq!(t.priced_candidates, 4);
+        assert_eq!(t.latency_evals, 12);
+    }
+}

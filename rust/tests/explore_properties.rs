@@ -16,6 +16,7 @@ use ef_train::layout::cache::{counters, stream_stats};
 use ef_train::layout::streams::{costs_for_spec, summarize_spec, StreamSpec};
 use ef_train::layout::{Process, Role, Scheme, Tiling};
 use ef_train::nets::ConvShape;
+use ef_train::search::SearchStats;
 use ef_train::util::proptest::{pick, range, run};
 
 #[test]
@@ -120,7 +121,7 @@ fn persistent_cache_makes_warm_sweeps_free_and_bit_identical() {
     let path = std::env::temp_dir()
         .join(format!("ef_train_explore_cache_{}.json", std::process::id()));
     cache.save(&path).unwrap();
-    let mut warm_cache = SweepCache::load(&path);
+    let mut warm_cache = SweepCache::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
     assert_eq!(warm_cache.len(), cold.points.len());
 
@@ -150,6 +151,40 @@ fn persistent_cache_makes_warm_sweeps_free_and_bit_identical() {
 }
 
 #[test]
+fn cell_table_shares_search_outcomes_across_schemes_and_runs() {
+    // The v2 cache keys the scheme-independent search payload per
+    // (net, device, batch) cell: three scheme rows share one cell, a
+    // warm searched run re-prices and re-searches nothing, and a plain
+    // run on the same cache still hits every point.
+    let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,bhwc,reshaped").unwrap();
+    let searched_opts = SweepOptions { parallel: false, search_tilings: true };
+    let mut cache = SweepCache::empty();
+    let cold = run_sweep_with(&cfg, &searched_opts, Some(&mut cache)).unwrap();
+    assert_eq!(cold.cells_searched, 1, "three schemes share one search cell");
+    assert_eq!(cold.cell_cache_hits, 0);
+    assert_eq!(cache.len(), 3);
+    assert_eq!(cache.cell_count(), 1);
+    assert!(cold.search_stats.priced_candidates > 0);
+    assert!(cold.search_stats.latency_evals >= 3 * cold.search_stats.priced_candidates);
+    assert!(cold.points.iter().all(|p| p.search.is_some()));
+
+    let warm = run_sweep_with(&cfg, &searched_opts, Some(&mut cache)).unwrap();
+    assert_eq!(warm.cache_hits, 3, "warm searched run must price 0 points");
+    assert_eq!(warm.cells_searched, 0, "... and search 0 cells");
+    assert_eq!(warm.cell_cache_hits, 1);
+    assert_eq!(warm.search_stats, SearchStats::default());
+    for (a, b) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(a.search, b.search, "cell payload must round-trip bit-identically");
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    let plain_opts = SweepOptions { parallel: false, search_tilings: false };
+    let plain = run_sweep_with(&cfg, &plain_opts, Some(&mut cache)).unwrap();
+    assert_eq!(plain.cache_hits, 3, "dropping --search-tilings must not void the cache");
+    assert!(plain.points.iter().all(|p| p.search.is_none()));
+}
+
+#[test]
 fn searched_tilings_beat_the_heuristic_somewhere_and_surface_in_json() {
     let cfg =
         SweepConfig::from_args("cnn1x,lenet10,alexnet", "zcu102,pynq-z1", "4,16", "reshaped")
@@ -171,8 +206,18 @@ fn searched_tilings_beat_the_heuristic_somewhere_and_surface_in_json() {
         improved >= 1,
         "the (Tr, M_on) search must beat Algorithm 1's modeled latency on >= 1 grid cell"
     );
-    // ... and the JSON report surfaces the delta.
+    // ... and the JSON report surfaces the delta plus the unified
+    // engine counters.
     let json = report.to_json();
+    assert_eq!(
+        json.get("search_stats")
+            .and_then(|s| s.get("priced_candidates"))
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64),
+        Some(report.search_stats.priced_candidates)
+    );
+    assert!(report.search_stats.priced_candidates > 0);
+    assert_eq!(report.cells_searched, 3 * 2 * 2, "one search per grid cell");
     let pts = json.get("points").and_then(|p| p.as_arr()).unwrap();
     assert_eq!(pts.len(), report.points.len());
     assert!(pts

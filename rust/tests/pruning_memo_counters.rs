@@ -11,12 +11,12 @@ use ef_train::model::perf::{latency_memo_counters, reset_latency_memo};
 use ef_train::model::scheduler::{schedule_searched, SearchMode};
 use ef_train::nets::{network_by_name, NETWORK_NAMES};
 
-fn requests_for(mode: SearchMode) -> (u64, u64) {
+fn requests_for(mode: SearchMode, batches: &[usize]) -> (u64, u64) {
     reset_latency_memo();
     for name in NETWORK_NAMES {
         let net = network_by_name(name).unwrap();
         for dev in [zcu102(), pynq_z1()] {
-            for batch in [1usize, 4, 16] {
+            for &batch in batches {
                 let _ = schedule_searched(&net, &dev, batch, mode);
             }
         }
@@ -26,8 +26,9 @@ fn requests_for(mode: SearchMode) -> (u64, u64) {
 
 #[test]
 fn pruned_search_requests_5x_fewer_latency_evaluations() {
-    let (xh, xm) = requests_for(SearchMode::Exhaustive);
-    let (ph, pm) = requests_for(SearchMode::Pruned);
+    // Aggregate over the batch regimes (the PR 2 pin).
+    let (xh, xm) = requests_for(SearchMode::Exhaustive, &[1, 4, 16]);
+    let (ph, pm) = requests_for(SearchMode::Pruned, &[1, 4, 16]);
     let exhaustive = xh + xm;
     let pruned = ph + pm;
     assert!(pruned > 0 && exhaustive > 0);
@@ -39,4 +40,20 @@ fn pruned_search_requests_5x_fewer_latency_evaluations() {
     // Unique evaluations (misses) must shrink at least as hard: the
     // pruned search visits a subset of the exhaustive candidate set.
     assert!(xm >= pm, "misses grew: exhaustive {xm} vs pruned {pm}");
+
+    // ROADMAP (e): batch 1 in isolation. The tail iteration *is* most
+    // of the batch-1 latency; the exact-WU + guaranteed-batch-tail
+    // floor (PR 3) keeps the ordering sharp enough that pruning still
+    // cuts the closed-form work several-fold where the original
+    // tails-dropped floor went blunt.
+    let (b1xh, b1xm) = requests_for(SearchMode::Exhaustive, &[1]);
+    let (b1ph, b1pm) = requests_for(SearchMode::Pruned, &[1]);
+    let (b1_exhaustive, b1_pruned) = (b1xh + b1xm, b1ph + b1pm);
+    assert!(b1_pruned > 0 && b1_exhaustive > 0);
+    assert!(
+        b1_exhaustive >= 4 * b1_pruned,
+        "batch-1 pruning went blunt: exhaustive requested {b1_exhaustive} evaluations, \
+         pruned {b1_pruned} — the tightened floor must keep a >= 4x cut at batch 1"
+    );
+    assert!(b1xm >= b1pm, "batch-1 misses grew: exhaustive {b1xm} vs pruned {b1pm}");
 }

@@ -1,0 +1,292 @@
+//! Unified-engine evidence (ISSUE 3 tentpole): the generic bounded
+//! best-first engine (`ef_train::search::BoundedSearch`) reproduces
+//! both legacy hand-rolled walks bit-for-bit — the scheduler's banded
+//! `Tr` walk and the tiling co-search's exact-argmin walk — and the
+//! best-first `B_WEI` coupling ladder (ROADMAP (f)) returns identical
+//! `SearchedTilings` to the PR 2 ascending scan while never pricing
+//! more points, on every default grid cell and on random networks.
+
+use ef_train::data::Rng;
+use ef_train::device::{device_by_name, pynq_z1, zcu102};
+use ef_train::explore::tiling_search::{best_tr_for, search_tilings_searched};
+use ef_train::explore::SweepConfig;
+use ef_train::layout::Tiling;
+use ef_train::model::perf::{conv_latency_lower_bound, conv_process_sum};
+use ef_train::model::resource::ResourceModel;
+use ef_train::model::scheduler::{
+    bram_boundary, max_feasible_tr, pick_tile, SearchMode, SearchStats, TIE_BAND_FACTOR,
+};
+use ef_train::nets::{network_by_name, random_network, ConvShape};
+use ef_train::search::{max_feasible, Band, BoundedSearch, Priced};
+use ef_train::util::proptest::{default_cases, pick, range, run};
+
+/// A synthetic candidate set: `(floor, cost)` with `floor <= cost`,
+/// in a deliberately small value range so equal floors and equal costs
+/// both occur and exercise the tie-breaking.
+fn random_candidates(rng: &mut Rng) -> Vec<(u64, u64)> {
+    let n = range(rng, 1, 14);
+    (0..n)
+        .map(|_| {
+            let floor = range(rng, 50, 80) as u64;
+            let slack = range(rng, 0, 6) as u64;
+            (floor, floor + slack)
+        })
+        .collect()
+}
+
+/// The legacy scheduler walk, verbatim from the pre-engine
+/// `TrSearch::pruned` (PR 2): sort by (floor asc, index desc), price
+/// until the floor leaves the 1.03 band of the best price, return the
+/// priced list in visit order plus the pruned count.
+fn legacy_banded_walk(cands: &[(u64, u64)]) -> (Vec<(u64, usize)>, u64) {
+    let mut order: Vec<(u64, usize)> =
+        cands.iter().enumerate().map(|(i, &(floor, _))| (floor, i)).collect();
+    order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut priced = Vec::new();
+    let mut pruned = 0u64;
+    let mut best: Option<u64> = None;
+    for (i, &(floor, idx)) in order.iter().enumerate() {
+        if let Some(b) = best {
+            if floor as f64 > b as f64 * TIE_BAND_FACTOR {
+                pruned = (order.len() - i) as u64;
+                break;
+            }
+        }
+        let lat = cands[idx].1;
+        best = Some(best.map_or(lat, |b| b.min(lat)));
+        priced.push((lat, idx));
+    }
+    (priced, pruned)
+}
+
+/// The legacy tiling-search walk, verbatim from the pre-engine
+/// `best_tr` (PR 2): same ordering, strict `floor > best` early-out,
+/// first-strict-minimum selection.
+fn legacy_exact_walk(cands: &[(u64, u64)]) -> (u64, usize) {
+    let mut order: Vec<(u64, usize)> =
+        cands.iter().enumerate().map(|(i, &(floor, _))| (floor, i)).collect();
+    order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut best: Option<(u64, usize)> = None;
+    for &(floor, idx) in &order {
+        if let Some((b, _)) = best {
+            if floor > b {
+                break;
+            }
+        }
+        let lat = cands[idx].1;
+        if best.map_or(true, |(b, _)| lat < b) {
+            best = Some((lat, idx));
+        }
+    }
+    best.expect("at least one candidate")
+}
+
+#[test]
+fn engine_reproduces_the_legacy_banded_walk() {
+    run(
+        "engine == legacy banded walk",
+        default_cases(),
+        |rng| random_candidates(rng),
+        |cands| {
+            let (want, want_pruned) = legacy_banded_walk(cands);
+            let engine = BoundedSearch::new(
+                0..cands.len(),
+                Band::Factor(TIE_BAND_FACTOR),
+                |&i: &usize| cands[i].0,
+            );
+            let (got, walk) =
+                engine.run(|&i| Priced { cost: cands[i].1, incumbent: true });
+            assert_eq!(got, want, "visit order and prices must match");
+            assert_eq!(walk.pruned, want_pruned);
+            assert_eq!(walk.priced, want.len() as u64);
+            assert_eq!(walk.floored, cands.len() as u64);
+            assert_eq!(
+                walk.priced + walk.pruned,
+                cands.len() as u64,
+                "every candidate is priced or pruned"
+            );
+        },
+    );
+}
+
+#[test]
+fn engine_reproduces_the_legacy_exact_walk() {
+    run(
+        "engine == legacy exact walk",
+        default_cases(),
+        |rng| random_candidates(rng),
+        |cands| {
+            let want = legacy_exact_walk(cands);
+            let engine =
+                BoundedSearch::new(0..cands.len(), Band::Exact, |&i: &usize| cands[i].0);
+            let (visited, _) = engine.run(|&i| Priced { cost: cands[i].1, incumbent: true });
+            let mut got: Option<(u64, usize)> = None;
+            for &(lat, idx) in &visited {
+                if got.map_or(true, |(b, _)| lat < b) {
+                    got = Some((lat, idx));
+                }
+            }
+            assert_eq!(got.unwrap(), want, "argmin and its tie-break must match");
+        },
+    );
+}
+
+/// The legacy `best_tr` oracle against the real closed forms, verbatim
+/// from PR 2's `tiling_search::best_tr`.
+fn legacy_best_tr(
+    l: &ConvShape,
+    dev: &ef_train::device::Device,
+    batch: usize,
+    tm: usize,
+    m_on: usize,
+    tr_max: usize,
+) -> (u64, Tiling) {
+    let mut order: Vec<(u64, usize)> = (1..=tr_max)
+        .map(|tr| {
+            let cand = Tiling::new(tm, tm, tr, l.c, m_on);
+            (conv_latency_lower_bound(l, &cand, dev, batch), tr)
+        })
+        .collect();
+    order.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut best: Option<(u64, Tiling)> = None;
+    for &(floor, tr) in &order {
+        if let Some((b, _)) = best {
+            if floor > b {
+                break;
+            }
+        }
+        let cand = Tiling::new(tm, tm, tr, l.c, m_on);
+        let lat = conv_process_sum(l, &cand, dev, batch);
+        if best.map_or(true, |(b, _)| lat < b) {
+            best = Some((lat, cand));
+        }
+    }
+    best.expect("tr_max >= 1 always yields a candidate")
+}
+
+#[test]
+fn best_tr_matches_the_legacy_walk_on_random_layers() {
+    run(
+        "best_tr_for == legacy best_tr",
+        default_cases() / 2,
+        |rng| {
+            let tm = *pick(rng, &[4usize, 6, 16]);
+            let k = *pick(rng, &[1usize, 3, 5]);
+            let r = range(rng, 2, 33);
+            let c = range(rng, 2, 33);
+            let m = range(rng, 1, 120);
+            let n = range(rng, 1, 64);
+            let l = ConvShape::new(m, n, r, c, k, 1);
+            let m_on = range(rng, 1, m.div_ceil(tm)) * tm;
+            let tr_max = range(rng, 1, r);
+            let batch = *pick(rng, &[1usize, 4]);
+            (l, tm, m_on, tr_max, batch)
+        },
+        |&(l, tm, m_on, tr_max, batch)| {
+            for dev in [zcu102(), pynq_z1()] {
+                let want = legacy_best_tr(&l, &dev, batch, tm, m_on, tr_max);
+                let mut stats = SearchStats::default();
+                let got = best_tr_for(&l, &dev, batch, tm, m_on, tr_max, &mut stats);
+                assert_eq!(got, want, "{} {l:?}", dev.name);
+                assert!(stats.priced_candidates >= 1);
+                assert_eq!(stats.latency_evals, 3 * stats.priced_candidates);
+                assert_eq!(
+                    stats.priced_candidates + stats.pruned_candidates,
+                    tr_max as u64
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn ladder_modes_agree_on_random_networks_and_best_first_prices_no_more() {
+    run(
+        "ladder pruned == exhaustive",
+        default_cases() / 8,
+        |rng| random_network(rng),
+        |net| {
+            for dev in [zcu102(), pynq_z1()] {
+                let (full, ex) = search_tilings_searched(net, &dev, 4, SearchMode::Exhaustive);
+                let (fast, pr) = search_tilings_searched(net, &dev, 4, SearchMode::Pruned);
+                assert_eq!(full, fast, "{}", dev.name);
+                assert!(pr.priced_candidates <= ex.priced_candidates, "{}", dev.name);
+                assert!(pr.priced_levels <= ex.priced_levels, "{}", dev.name);
+                assert_eq!(
+                    pr.priced_levels + pr.pruned_levels,
+                    ex.priced_levels,
+                    "{}: every ladder level is priced or pruned",
+                    dev.name
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn best_first_ladder_never_prices_more_on_the_default_grid() {
+    // The acceptance pin: on every (network, device, batch) cell of the
+    // default sweep, the best-first ladder returns the scan's exact
+    // SearchedTilings and prices no more points — and across the grid
+    // the per-level floor actually prunes something.
+    let def = SweepConfig::default_sweep();
+    let mut total_pruned_levels = 0u64;
+    for net_name in &def.nets {
+        let net = network_by_name(net_name).unwrap();
+        for dev_name in &def.devices {
+            let dev = device_by_name(dev_name).unwrap();
+            for &batch in &def.batches {
+                let cell = format!("{net_name}/{dev_name}/b{batch}");
+                let (full, ex) =
+                    search_tilings_searched(&net, &dev, batch, SearchMode::Exhaustive);
+                let (fast, pr) = search_tilings_searched(&net, &dev, batch, SearchMode::Pruned);
+                assert_eq!(full, fast, "{cell}: outcomes must be bit-identical");
+                assert!(
+                    pr.priced_candidates <= ex.priced_candidates,
+                    "{cell}: best-first priced {} candidates, scan {}",
+                    pr.priced_candidates,
+                    ex.priced_candidates
+                );
+                assert!(
+                    pr.priced_levels <= ex.priced_levels,
+                    "{cell}: best-first priced {} levels, scan {}",
+                    pr.priced_levels,
+                    ex.priced_levels
+                );
+                assert_eq!(ex.priced_levels as usize, full.levels_swept, "{cell}");
+                total_pruned_levels += pr.pruned_levels;
+            }
+        }
+    }
+    assert!(
+        total_pruned_levels > 0,
+        "the per-level floor never pruned a single ladder level across the default grid"
+    );
+}
+
+#[test]
+fn generic_max_feasible_agrees_with_the_scheduler_wrapper() {
+    // max_feasible_tr is now a thin wrapper over search::max_feasible;
+    // pin the two against a brute-force prefix scan on real layers.
+    for (name, dev) in [("alexnet", zcu102()), ("cnn1x", pynq_z1())] {
+        let net = network_by_name(name).unwrap();
+        let rm = ResourceModel::new(&dev);
+        let tm = pick_tile(&dev);
+        let budget = bram_boundary(&dev);
+        for l in net.conv_layers() {
+            let m_on = l.m.div_ceil(tm) * tm;
+            let b_wei = rm.b_wei(&l, &Tiling::new(tm, tm, 1, l.c, m_on));
+            let fits = |tr: usize| {
+                let cand = Tiling::new(tm, tm, tr, l.c, m_on);
+                2 * (rm.b_ifm(&l, &cand) + rm.b_ofm(&l, &cand) + b_wei) <= budget
+            };
+            let brute = (1..=l.r).take_while(|&tr| fits(tr)).last();
+            assert_eq!(
+                max_feasible_tr(&rm, &l, tm, m_on, b_wei, budget),
+                brute,
+                "{name} {l:?}"
+            );
+            assert_eq!(max_feasible(1, l.r, fits), brute, "{name} {l:?} generic");
+        }
+    }
+}

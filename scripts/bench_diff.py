@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_explore.json artifacts and fail on perf regressions.
+
+Only deterministic counters are gated -- wall-clock keys vary with the
+runner and are reported for context but never fail the build:
+
+  pruned_latency_evals   closed-form work of the pruned scheduler search
+  tiling_pruned_priced   priced points of the best-first B_WEI ladder
+  modeled_total_cycles   modeled latency summed over the swept grid
+
+Exit 0 when the previous artifact is missing (first run, or the
+retention window expired) or when the two runs used different grid
+sizes (fast_mode mismatch); exit 1 when any gated counter grew by more
+than --max-regression-pct.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+GATED = ["pruned_latency_evals", "tiling_pruned_priced", "modeled_total_cycles"]
+CONTEXT = [
+    "rayon_cold_s",
+    "rayon_warm_s",
+    "pruning_factor",
+    "tiling_exhaustive_priced",
+    "tiling_pruned_levels",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("previous", help="previous run's BENCH_explore.json")
+    ap.add_argument("current", help="this run's BENCH_explore.json")
+    ap.add_argument("--max-regression-pct", type=float, default=10.0)
+    args = ap.parse_args()
+
+    if not os.path.exists(args.previous):
+        print(f"no previous artifact at {args.previous}; nothing to diff")
+        return 0
+    with open(args.previous) as f:
+        prev = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    if prev.get("fast_mode") != cur.get("fast_mode"):
+        print(
+            f"fast_mode changed ({prev.get('fast_mode')} -> {cur.get('fast_mode')}); "
+            "grids are not comparable, skipping diff"
+        )
+        return 0
+
+    failures = []
+    for key in GATED + CONTEXT:
+        gated = key in GATED
+        if key not in prev or key not in cur:
+            print(f"  {key}: absent in one run, skipped")
+            continue
+        p, c = float(prev[key]), float(cur[key])
+        pct = 100.0 * (c - p) / p if p else 0.0
+        regressed = gated and c > p * (1.0 + args.max_regression_pct / 100.0)
+        tag = "REGRESSION" if regressed else ("gated" if gated else "info")
+        print(f"  {key}: {p:g} -> {c:g} ({pct:+.1f}%) [{tag}]")
+        if regressed:
+            failures.append(key)
+
+    if failures:
+        print(
+            f"FAIL: >{args.max_regression_pct:g}% regression in "
+            f"{', '.join(failures)} -- priced points / modeled latency must not grow"
+        )
+        return 1
+    print("bench diff clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
