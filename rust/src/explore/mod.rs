@@ -131,9 +131,21 @@ pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
         .ok_or_else(|| anyhow!("unknown network `{}` in sweep", p.net))?;
     let dev = device_by_name(&p.device)
         .ok_or_else(|| anyhow!("unknown device `{}` in sweep", p.device))?;
-    let sched = schedule(&net, &dev, p.batch);
+    Ok(price_point_on(&net, &dev, p))
+}
+
+/// [`price_point`] on already-resolved network/device structs — the
+/// names in `p` are carried through verbatim, so synthetic networks
+/// outside the zoo ([`crate::nets::random_network`], the serve property
+/// tests) price exactly like zoo members.
+pub fn price_point_on(
+    net: &crate::nets::Network,
+    dev: &crate::device::Device,
+    p: &DesignPoint,
+) -> PricedPoint {
+    let sched = schedule(net, dev, p.batch);
     let layers = net.conv_layers();
-    let budget = on_chip_feature_words(&dev);
+    let budget = on_chip_feature_words(dev);
 
     let mut cycles = 0u64;
     let mut realloc = 0u64;
@@ -150,21 +162,21 @@ pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
                 batch: p.batch,
                 weight_reuse: p.scheme == Scheme::Reshaped,
             };
-            let r = simulate_layer(&spec, &dev, i, budget);
+            let r = simulate_layer(&spec, dev, i, budget);
             cycles += r.total();
             realloc += r.realloc_cycles;
         }
     }
     for kind in &net.layers {
-        cycles += aux_latency(kind, &dev, p.batch);
+        cycles += aux_latency(kind, dev, p.batch);
     }
 
-    let rm = ResourceModel::new(&dev);
+    let rm = ResourceModel::new(dev);
     let conv = rm.conv_resources(&layers, &sched.tilings);
-    let (used_dsps, used_brams) = rm.end_to_end_utilization(&net, &conv);
+    let (used_dsps, used_brams) = rm.end_to_end_utilization(net, &conv);
     let secs = dev.cycles_to_s(cycles);
     let power_w = dev.power_w(used_dsps, used_brams);
-    Ok(PricedPoint {
+    PricedPoint {
         point: p.clone(),
         tm: sched.tm,
         cycles,
@@ -176,7 +188,7 @@ pub fn price_point(p: &DesignPoint) -> crate::Result<PricedPoint> {
         power_w,
         energy_mj: power_w * secs * 1e3,
         search: None,
-    })
+    }
 }
 
 /// The `(Tr, M_on)` search for one (network, device, batch) cell —
@@ -210,7 +222,7 @@ impl SweepConfig {
             nets: ["cnn1x", "lenet10", "alexnet"].map(String::from).to_vec(),
             devices: ["zcu102", "pynq-z1"].map(String::from).to_vec(),
             batches: vec![4, 16],
-            schemes: vec![Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped],
+            schemes: Scheme::ALL.to_vec(),
         }
     }
 

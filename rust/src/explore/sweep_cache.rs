@@ -35,19 +35,23 @@
 //! or the layout change. A v1 file (suffix-keyed rows with the search
 //! payload inlined) migrates forward transparently on load; a file
 //! written by a **newer** binary refuses to load with an actionable
-//! error instead of silently re-pricing the whole grid; an unreadable
-//! or partially-decodable file still degrades to cache misses, so a
-//! corrupt nightly cache can never wedge a sweep. Numbers round-trip
-//! bit-exactly: integers stay integral and `f64`s print in
-//! shortest-roundtrip form.
+//! error instead of silently re-pricing the whole grid; a file that no
+//! longer parses (truncated by an interrupted save) is likewise an
+//! error naming the path and byte offset — loading either as empty
+//! would overwrite the cached grid on the next save. Only a *missing*
+//! file or a pre-versioned one (valid JSON without `schema_version`)
+//! degrades to an empty cache. Rows that decode but don't validate are
+//! skipped as misses. Numbers round-trip bit-exactly: integers stay
+//! integral and `f64`s print in shortest-roundtrip form.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::anyhow;
 
 use super::tiling_search::SearchedTilings;
-use super::{scheme_name, DesignPoint, PricedPoint};
+use super::{scheme_by_name, scheme_name, DesignPoint, PricedPoint};
 use crate::layout::Tiling;
 use crate::util::json::Json;
 
@@ -70,6 +74,27 @@ fn cell_key(net: &str, device: &str, batch: usize) -> String {
     format!("{net}|{device}|{batch}")
 }
 
+fn parse_point_key(key: &str) -> Option<DesignPoint> {
+    let parts: Vec<&str> = key.split('|').collect();
+    let &[net, device, batch, scheme] = parts.as_slice() else {
+        return None;
+    };
+    Some(DesignPoint {
+        net: Arc::from(net),
+        device: Arc::from(device),
+        batch: batch.parse().ok()?,
+        scheme: scheme_by_name(scheme)?,
+    })
+}
+
+fn parse_cell_key(key: &str) -> Option<(Arc<str>, Arc<str>, usize)> {
+    let parts: Vec<&str> = key.split('|').collect();
+    let &[net, device, batch] = parts.as_slice() else {
+        return None;
+    };
+    Some((Arc::from(net), Arc::from(device), batch.parse().ok()?))
+}
+
 fn num(x: f64) -> Json {
     Json::Num(x)
 }
@@ -83,16 +108,9 @@ fn encode_search(s: &SearchedTilings) -> Json {
     m.insert(
         "tilings".into(),
         Json::Arr(
-            s.tilings
-                .iter()
-                .map(|t| {
-                    Json::Arr(
-                        [t.tm, t.tn, t.tr, t.tc, t.m_on]
-                            .into_iter()
-                            .map(|v| num(v as f64))
-                            .collect(),
-                    )
-                })
+            s.tiling_rows()
+                .into_iter()
+                .map(|row| Json::Arr(row.into_iter().map(|v| num(v as f64)).collect()))
                 .collect(),
         ),
     );
@@ -157,18 +175,29 @@ impl SweepCache {
         Self::default()
     }
 
-    /// Load `path`. A missing, unparseable, or pre-versioned file
-    /// degrades to an empty cache; a v1 file migrates forward; a file
-    /// whose schema is *newer* than this binary's is an error — its
-    /// entries would otherwise be silently discarded and re-priced,
-    /// clobbering the newer binary's cache on save.
+    /// Load `path`. A missing file or a pre-versioned one (valid JSON
+    /// without `schema_version`) degrades to an empty cache; a v1 file
+    /// migrates forward. Two corruption classes are hard errors, since
+    /// silently re-pricing would clobber the cached grid on save: a file
+    /// that does not parse (truncated by an interrupted save, garbage)
+    /// names the path and byte offset of the failure, and a file whose
+    /// schema is *newer* than this binary's says to upgrade.
     pub fn load(path: &Path) -> crate::Result<Self> {
         let Ok(text) = std::fs::read_to_string(path) else {
             return Ok(Self::empty());
         };
-        let Ok(root) = Json::parse(&text) else {
-            return Ok(Self::empty());
-        };
+        let root = Json::parse(&text).map_err(|e| {
+            anyhow!(
+                "sweep cache {} is corrupt: {} (file is {} bytes{}) — likely \
+                 truncated by an interrupted save; delete the file or point \
+                 --cache-file elsewhere to rebuild it (loading it as empty \
+                 would overwrite the cached grid on the next save)",
+                path.display(),
+                e,
+                text.len(),
+                if e.pos >= text.len() { ", parse ran off the end" } else { "" },
+            )
+        })?;
         let Some(version) = root.get("schema_version").and_then(Json::as_usize) else {
             return Ok(Self::empty());
         };
@@ -278,6 +307,28 @@ impl SweepCache {
         if let Some(s) = &p.search {
             self.insert_cell(&p.point.net, &p.point.device, p.point.batch, s);
         }
+    }
+
+    /// Decode every point row (no search outcomes attached) — the serve
+    /// index's bulk read. Rows whose key or payload fails to decode are
+    /// skipped, the same degradation a [`Self::lookup_point`] miss has.
+    pub fn points(&self) -> Vec<PricedPoint> {
+        self.entries
+            .iter()
+            .filter_map(|(key, payload)| decode_point(parse_point_key(key)?, payload))
+            .collect()
+    }
+
+    /// Decode every per-cell search outcome as
+    /// `(net, device, batch, outcome)` rows, undecodables skipped.
+    pub fn cell_outcomes(&self) -> Vec<(Arc<str>, Arc<str>, usize, SearchedTilings)> {
+        self.cells
+            .iter()
+            .filter_map(|(key, payload)| {
+                let (net, device, batch) = parse_cell_key(key)?;
+                Some((net, device, batch, decode_search(payload)?))
+            })
+            .collect()
     }
 
     /// Point rows in the cache (one per scheme coordinate).
@@ -474,14 +525,80 @@ mod tests {
     }
 
     #[test]
-    fn garbage_and_unversioned_files_load_empty() {
+    fn missing_and_unversioned_files_load_empty() {
         let path = std::env::temp_dir()
             .join(format!("ef_train_cache_bad_{}.json", std::process::id()));
-        std::fs::write(&path, "not json at all").unwrap();
-        assert!(SweepCache::load(&path).unwrap().is_empty());
         std::fs::write(&path, r#"{"entries": {}}"#).unwrap();
         assert!(SweepCache::load(&path).unwrap().is_empty(), "no version field");
         std::fs::remove_file(&path).ok();
-        assert!(SweepCache::load(&path).unwrap().is_empty(), "missing file is empty too");
+        assert!(SweepCache::load(&path).unwrap().is_empty(), "missing file is empty");
+    }
+
+    #[test]
+    fn corrupt_files_error_with_path_and_byte_offset() {
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_garbage_{}.json", std::process::id()));
+        std::fs::write(&path, "not json at all").unwrap();
+        let err = SweepCache::load(&path).expect_err("garbage must not load empty");
+        std::fs::remove_file(&path).ok();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&path.display().to_string()), "must name the path: {msg}");
+        assert!(msg.contains("byte"), "must name the byte offset: {msg}");
+    }
+
+    #[test]
+    fn truncated_files_error_instead_of_clobbering() {
+        // Regression fixture: a real cache file cut mid-save.
+        let priced = price_point(&point()).unwrap();
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced);
+        let full_path = std::env::temp_dir()
+            .join(format!("ef_train_cache_trunc_{}.json", std::process::id()));
+        cache.save(&full_path).unwrap();
+        let full = std::fs::read_to_string(&full_path).unwrap();
+        let truncated = &full[..full.len() / 2];
+        std::fs::write(&full_path, truncated).unwrap();
+        let err = SweepCache::load(&full_path).expect_err("truncated cache must error");
+        std::fs::remove_file(&full_path).ok();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&full_path.display().to_string()),
+            "must name the path: {msg}"
+        );
+        assert!(msg.contains("byte"), "must name the byte offset: {msg}");
+        assert!(msg.contains("truncated"), "must suggest the likely cause: {msg}");
+        assert!(
+            msg.contains(&format!("{} bytes", truncated.len())),
+            "must report the on-disk size: {msg}"
+        );
+    }
+
+    #[test]
+    fn points_and_cell_outcomes_enumerate_every_row() {
+        let searched = searched_outcome();
+        let mut cache = SweepCache::empty();
+        for scheme in Scheme::ALL {
+            let mut priced = price_point(&point_with_scheme(scheme)).unwrap();
+            priced.search = Some(searched.clone());
+            cache.insert(&priced);
+        }
+        let points = cache.points();
+        assert_eq!(points.len(), 3);
+        for scheme in Scheme::ALL {
+            let p = points
+                .iter()
+                .find(|p| p.point.scheme == scheme)
+                .expect("every scheme row enumerated");
+            assert_eq!(p.point, point_with_scheme(scheme));
+            let direct = cache.lookup_point(&p.point).unwrap();
+            assert_eq!(p.cycles, direct.cycles);
+            assert_eq!(p.latency_ms.to_bits(), direct.latency_ms.to_bits());
+            assert!(p.search.is_none(), "bulk read stays scheme-only");
+        }
+        let cells = cache.cell_outcomes();
+        assert_eq!(cells.len(), 1);
+        let (net, device, batch, outcome) = &cells[0];
+        assert_eq!((&**net, &**device, *batch), ("cnn1x", "zcu102", 4));
+        assert_eq!(outcome, &searched);
     }
 }

@@ -86,6 +86,12 @@ impl SearchedTilings {
     pub fn delta_pct(&self) -> f64 {
         100.0 * self.delta_cycles() as f64 / self.heuristic_cycles as f64
     }
+
+    /// Per-layer `[Tm, Tn, Tr, Tc, M_on]` rows — the wire form the
+    /// sweep cache and the serve protocol share.
+    pub fn tiling_rows(&self) -> Vec<[usize; 5]> {
+        self.tilings.iter().map(|t| [t.tm, t.tn, t.tr, t.tc, t.m_on]).collect()
+    }
 }
 
 /// The objective both sides of the comparison share: the three-process

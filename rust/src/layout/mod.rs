@@ -33,6 +33,10 @@ pub enum Scheme {
     Reshaped,
 }
 
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped];
+}
+
 /// The three training processes the unified kernel serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Process {

@@ -45,6 +45,15 @@
 //! priced points across runs ([`explore::sweep_cache`], `--cache-file`
 //! — scheme rows and per-cell search payloads in separate tables) so a
 //! warm sweep only prices new grid cells.
+//!
+//! The **config-advisor service** ([`serve`], `ef-train serve`) is the
+//! explorer's front end: per-(network, device) Pareto frontiers from
+//! the cache, latency-sorted so a `(net, device, budget)` query is a
+//! binary search; uncached cells price on demand behind a coalescing
+//! memo (concurrent identical misses collapse to one computation) and
+//! write back to the cache file; queries arrive as JSON-lines over
+//! stdin (`--oneshot`) or TCP (`--listen`), answered across the rayon
+//! pool with hit/miss/dedup and p50/p95 serving stats.
 
 pub mod coordinator;
 pub mod data;
@@ -58,6 +67,7 @@ pub mod nets;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod sim;
 pub mod train;
 pub mod util;

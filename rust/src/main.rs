@@ -13,6 +13,7 @@ use ef_train::model::scheduler::{network_training_cycles, schedule};
 use ef_train::nets::{network_by_name, NETWORK_NAMES};
 use ef_train::report::{ablations, commas, figures, tables};
 use ef_train::runtime::Runtime;
+use ef_train::serve;
 use ef_train::train::{Evaluator, Trainer};
 use ef_train::util::cli;
 
@@ -28,6 +29,9 @@ USAGE:
   ef-train explore [--nets A,B] [--devices D,E] [--batches N,M]
                    [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
                    [--jobs N] [--cache-file FILE] [--search-tilings]
+  ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
+                 [--cache-file FILE] [--stats-json FILE] [--jobs N]
+                 [--search-tilings]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
@@ -43,12 +47,22 @@ BRAM, energy/image), and writes the full priced grid as JSON.
 `--jobs N` pins the rayon pool; `--cache-file F` persists priced points
 so a warm sweep only prices new grid cells; `--search-tilings` searches
 per-layer (Tr, M_on) beyond Algorithm 1 and reports where it beats the
-paper's heuristic.";
+paper's heuristic.
+
+`serve` answers {net, device, batch?, max_latency_ms?, max_bram?,
+max_energy_mj?, objective?} JSON-lines queries with the optimal cached
+config (budgets are per image; objective: latency | energy | bram).
+`--oneshot` reads queries from stdin (or --queries FILE) and writes one
+reply line each; `--listen ADDR` serves the same protocol over TCP on
+the rayon pool. Warm queries answer from the cache's Pareto frontier
+via binary search; misses price the cell once (concurrent duplicates
+coalesce), write back to --cache-file, and re-index. `{\"stats\": true}`
+or --stats-json F reports hits/misses/coalesced and p50/p95 times.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
     "max-steps", "shift", "nets", "devices", "batches", "schemes", "out",
-    "jobs", "cache-file",
+    "jobs", "cache-file", "queries", "listen", "stats-json",
 ];
 
 fn main() {
@@ -154,7 +168,7 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 parallel: !args.has("serial"),
                 search_tilings: args.has("search-tilings"),
             };
-            let jobs = args.parse_flag("jobs", 0usize);
+            let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
             let mut point_cache = match cache_path.as_deref() {
                 Some(p) => Some(explore::sweep_cache::SweepCache::load(p)?),
@@ -218,6 +232,67 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             let out = args.flag_or("out", "explore_report.json");
             std::fs::write(&out, report.to_json().to_string())?;
             println!("wrote {out}");
+        }
+        Some("serve") => {
+            let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
+            let cache = match cache_path.as_deref() {
+                Some(p) => explore::sweep_cache::SweepCache::load(p)?,
+                None => explore::sweep_cache::SweepCache::empty(),
+            };
+            if !cache.is_empty() {
+                eprintln!(
+                    "serve: loaded {} point rows, {} searched cells",
+                    cache.len(),
+                    cache.cell_count()
+                );
+            }
+            let stats_path = args.flag("stats-json").map(std::path::PathBuf::from);
+            let opts = serve::ServeOptions {
+                search_tilings: args.has("search-tilings"),
+                ..serve::ServeOptions::default()
+            };
+            let advisor =
+                std::sync::Arc::new(serve::Advisor::new(cache, cache_path, stats_path, opts));
+            let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
+            let pool = if jobs > 0 {
+                Some(
+                    rayon::ThreadPoolBuilder::new()
+                        .num_threads(jobs)
+                        .build()
+                        .map_err(|e| anyhow::anyhow!("building a {jobs}-thread pool: {e}"))?,
+                )
+            } else {
+                None
+            };
+            if args.has("oneshot") {
+                let input = match args.flag("queries") {
+                    Some(f) => std::fs::read_to_string(f)?,
+                    None => std::io::read_to_string(std::io::stdin())?,
+                };
+                let oneshot = || serve::serve_oneshot(&advisor, &input);
+                let replies = match &pool {
+                    Some(p) => p.install(oneshot),
+                    None => oneshot(),
+                };
+                use std::io::Write as _;
+                let mut out = std::io::stdout().lock();
+                for r in &replies {
+                    writeln!(out, "{r}")?;
+                }
+                drop(out);
+                advisor.persist_stats()?;
+                eprintln!("{}", advisor.summary_line());
+            } else if let Some(addr) = args.flag("listen") {
+                let listener = std::net::TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+                eprintln!("ef-train serve: listening on {}", listener.local_addr()?);
+                // The accept loop stays on this thread; handlers go to
+                // the pool (a pool-installed accept loop would starve a
+                // --jobs 1 pool of its only worker).
+                serve::serve_listener(&advisor, listener, None, pool.as_ref())?;
+            } else {
+                return Err(anyhow::anyhow!("serve needs --oneshot or --listen ADDR"));
+            }
         }
         Some("train") => {
             let net = args.flag_or("net", "cnn1x");

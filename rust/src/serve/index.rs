@@ -1,0 +1,613 @@
+//! The query index: per-(network, device) Pareto frontiers, latency-
+//! sorted so budget queries binary-search instead of scanning.
+//!
+//! Built once from a [`SweepCache`] (and rebuilt after a miss-path
+//! write-back). Per group the index keeps every cached point plus two
+//! frontier views: one over all batches (batch-free queries) and one
+//! per batch (batch-pinned queries) — a point optimal *within* its
+//! batch can be dominated *across* batches, so the views are distinct.
+//! Each frontier is sorted ascending by latency/image; a latency budget
+//! resolves to a prefix via binary search, and for the common
+//! single-budget query the prefix-best tables answer the argmin in
+//! O(1) without touching the points at all.
+//!
+//! Answers are exact, not just frontier-plausible: [`preferred`] is a
+//! total order whose tie chain covers every frontier axis, so the best
+//! admissible point over the *whole* group under it always lies on the
+//! frontier (if some point beat every frontier member, a dominator of
+//! it — no worse on all axes, better on one — would precede it in the
+//! chain and be on the frontier itself). The serve property tests pin
+//! this against a brute-force argmin over all priced points.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::explore::pareto;
+use crate::explore::sweep_cache::SweepCache;
+use crate::explore::tiling_search::SearchedTilings;
+use crate::explore::{scheme_name, PricedPoint};
+
+/// What a query minimizes. Every axis is also a budget axis; all three
+/// are per-image where batch size matters, matching the sweep's
+/// frontier objectives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Latency in ms per image (the default).
+    Latency,
+    /// Energy in mJ per image.
+    Energy,
+    /// BRAM banks.
+    Bram,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 3] = [Objective::Latency, Objective::Energy, Objective::Bram];
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "latency" | "lat" => Some(Objective::Latency),
+            "energy" => Some(Objective::Energy),
+            "bram" | "brams" => Some(Objective::Bram),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Bram => "bram",
+        }
+    }
+
+    /// The minimized value of `p` under this objective.
+    pub fn value(self, p: &PricedPoint) -> f64 {
+        match self {
+            Objective::Latency => p.latency_ms_per_image(),
+            Objective::Energy => p.energy_mj_per_image(),
+            Objective::Bram => p.used_brams as f64,
+        }
+    }
+}
+
+/// Upper bounds a point must respect to be served. Latency and energy
+/// are per image (the frontier's axes); absent bounds admit everything.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Budgets {
+    pub max_latency_ms: Option<f64>,
+    pub max_bram: Option<usize>,
+    pub max_energy_mj: Option<f64>,
+}
+
+impl Budgets {
+    pub fn admits(&self, p: &PricedPoint) -> bool {
+        self.max_latency_ms.map_or(true, |c| p.latency_ms_per_image() <= c)
+            && self.max_bram.map_or(true, |c| p.used_brams <= c)
+            && self.max_energy_mj.map_or(true, |c| p.energy_mj_per_image() <= c)
+    }
+}
+
+fn scheme_rank(p: &PricedPoint) -> usize {
+    crate::layout::Scheme::ALL
+        .iter()
+        .position(|&s| s == p.point.scheme)
+        .expect("every scheme is in ALL")
+}
+
+/// The total preference order queries are answered under: objective
+/// value first, then the remaining frontier axes, then (batch, scheme)
+/// so points with identical objective vectors still resolve
+/// deterministically. Shared verbatim by the index fast paths, its
+/// scans, and the property tests' brute-force oracle — "bit-matches
+/// brute force" holds because there is exactly one order.
+pub fn preferred(obj: Objective, a: &PricedPoint, b: &PricedPoint) -> Ordering {
+    let key = |p: &PricedPoint| {
+        [
+            obj.value(p),
+            p.latency_ms_per_image(),
+            p.energy_mj_per_image(),
+            p.used_brams as f64,
+        ]
+    };
+    let (ka, kb) = (key(a), key(b));
+    for (x, y) in ka.iter().zip(&kb) {
+        match x.total_cmp(y) {
+            Ordering::Equal => continue,
+            o => return o,
+        }
+    }
+    (a.point.batch, scheme_rank(a)).cmp(&(b.point.batch, scheme_rank(b)))
+}
+
+/// One Pareto frontier, latency-ascending. Indices point into the
+/// owning [`Group`]'s `points`.
+struct SortedFrontier {
+    /// Frontier members ordered by [`preferred`] under
+    /// [`Objective::Latency`] (primary key: latency/image ascending).
+    order: Vec<usize>,
+    /// `latency_ms_per_image` of `order[i]` — the binary-search key.
+    lat: Vec<f64>,
+    /// Best member of `order[..=i]` under the energy / BRAM objective —
+    /// answers latency-budget-only queries without a scan.
+    best_energy: Vec<usize>,
+    best_bram: Vec<usize>,
+}
+
+impl SortedFrontier {
+    fn build(points: &[PricedPoint], subset: &[usize]) -> Self {
+        let rows: Vec<Vec<f64>> = subset
+            .iter()
+            .map(|&i| {
+                let p = &points[i];
+                vec![p.latency_ms_per_image(), p.used_brams as f64, p.energy_mj_per_image()]
+            })
+            .collect();
+        let mut order: Vec<usize> = pareto::frontier_indices(&rows)
+            .into_iter()
+            .map(|local| subset[local])
+            .collect();
+        order.sort_by(|&a, &b| preferred(Objective::Latency, &points[a], &points[b]));
+        let lat: Vec<f64> = order.iter().map(|&i| points[i].latency_ms_per_image()).collect();
+        let prefix_best = |obj: Objective| -> Vec<usize> {
+            let mut best = Vec::with_capacity(order.len());
+            for (k, &i) in order.iter().enumerate() {
+                let prev = if k == 0 { i } else { best[k - 1] };
+                let keep = if preferred(obj, &points[i], &points[prev]) == Ordering::Less {
+                    i
+                } else {
+                    prev
+                };
+                best.push(keep);
+            }
+            best
+        };
+        let best_energy = prefix_best(Objective::Energy);
+        let best_bram = prefix_best(Objective::Bram);
+        Self { order, lat, best_energy, best_bram }
+    }
+
+    /// `(best admissible point, frontier points within the latency
+    /// budget)`. The prefix is a binary search; with no further budgets
+    /// the answer is a table read, otherwise a scan of the prefix under
+    /// [`preferred`].
+    fn best(&self, points: &[PricedPoint], b: &Budgets, obj: Objective) -> (Option<usize>, usize) {
+        let k = match b.max_latency_ms {
+            Some(cap) => self.lat.partition_point(|&l| l <= cap),
+            None => self.order.len(),
+        };
+        if k == 0 {
+            return (None, 0);
+        }
+        if b.max_bram.is_none() && b.max_energy_mj.is_none() {
+            let idx = match obj {
+                Objective::Latency => self.order[0],
+                Objective::Energy => self.best_energy[k - 1],
+                Objective::Bram => self.best_bram[k - 1],
+            };
+            return (Some(idx), k);
+        }
+        let mut best: Option<usize> = None;
+        for &i in &self.order[..k] {
+            if !b.admits(&points[i]) {
+                continue;
+            }
+            if best.map_or(true, |j| preferred(obj, &points[i], &points[j]) == Ordering::Less) {
+                best = Some(i);
+            }
+        }
+        (best, k)
+    }
+}
+
+/// Everything indexed for one (network, device) pair.
+struct Group {
+    points: Vec<PricedPoint>,
+    /// Frontier over every batch — batch-free queries.
+    all: SortedFrontier,
+    /// Frontier within each batch — batch-pinned queries. (Cell
+    /// *completeness* — the miss-path signal — is `has_cell` on the
+    /// index, which also requires every scheme row.)
+    by_batch: BTreeMap<usize, SortedFrontier>,
+    /// Per-batch `(Tr, M_on)` search outcomes from the cache's cell
+    /// table, attached to answers of that batch.
+    search: BTreeMap<usize, SearchedTilings>,
+}
+
+/// The result of one index probe.
+#[derive(Debug, Clone)]
+pub enum Lookup {
+    /// The best admissible point, with its cell's searched tiling when
+    /// the cache had one.
+    Found {
+        point: PricedPoint,
+        search: Option<SearchedTilings>,
+        /// Frontier points that survived the latency cut (context for
+        /// the reply; the other budgets filter inside).
+        considered: usize,
+    },
+    /// The coordinates are indexed but no point fits the budgets.
+    Infeasible { considered: usize },
+    /// Nothing cached for the coordinates — the miss path must price.
+    Unknown,
+}
+
+/// The serving index over a whole cache.
+#[derive(Default)]
+pub struct FrontierIndex {
+    groups: BTreeMap<Arc<str>, BTreeMap<Arc<str>, Group>>,
+}
+
+impl FrontierIndex {
+    pub fn from_cache(cache: &SweepCache) -> Self {
+        Self::from_points(cache.points(), cache.cell_outcomes())
+    }
+
+    /// Build from explicit rows — the cache-free constructor the
+    /// property tests drive with synthetic networks.
+    pub fn from_points(
+        points: Vec<PricedPoint>,
+        cells: Vec<(Arc<str>, Arc<str>, usize, SearchedTilings)>,
+    ) -> Self {
+        let mut grouped: BTreeMap<Arc<str>, BTreeMap<Arc<str>, Vec<PricedPoint>>> =
+            BTreeMap::new();
+        for p in points {
+            grouped
+                .entry(p.point.net.clone())
+                .or_default()
+                .entry(p.point.device.clone())
+                .or_default()
+                .push(p);
+        }
+        let mut groups: BTreeMap<Arc<str>, BTreeMap<Arc<str>, Group>> = BTreeMap::new();
+        for (net, devices) in grouped {
+            let by_device = groups.entry(net).or_default();
+            for (device, points) in devices {
+                let every: Vec<usize> = (0..points.len()).collect();
+                let all = SortedFrontier::build(&points, &every);
+                let mut batches: Vec<usize> = points.iter().map(|p| p.point.batch).collect();
+                batches.sort_unstable();
+                batches.dedup();
+                let by_batch = batches
+                    .into_iter()
+                    .map(|b| {
+                        let subset: Vec<usize> = every
+                            .iter()
+                            .copied()
+                            .filter(|&i| points[i].point.batch == b)
+                            .collect();
+                        (b, SortedFrontier::build(&points, &subset))
+                    })
+                    .collect();
+                by_device.insert(
+                    device,
+                    Group { points, all, by_batch, search: BTreeMap::new() },
+                );
+            }
+        }
+        for (net, device, batch, outcome) in cells {
+            if let Some(g) = groups.get_mut(&net).and_then(|m| m.get_mut(&device)) {
+                g.search.insert(batch, outcome);
+            }
+        }
+        Self { groups }
+    }
+
+    fn group(&self, net: &str, device: &str) -> Option<&Group> {
+        self.groups.get(net)?.get(device)
+    }
+
+    /// Is the (net, device, batch) cell *completely* priced — a row for
+    /// every layout scheme? A partial cell (a cache warmed with a
+    /// restricted `--schemes` axis) must count as a miss, or the
+    /// advisor would serve its best remaining scheme as if it were the
+    /// cell's true optimum.
+    pub fn has_cell(&self, net: &str, device: &str, batch: usize) -> bool {
+        self.group(net, device).is_some_and(|g| {
+            crate::layout::Scheme::ALL.iter().all(|&s| {
+                g.points
+                    .iter()
+                    .any(|p| p.point.batch == batch && p.point.scheme == s)
+            })
+        })
+    }
+
+    /// Answer one query against the index. `batch: None` searches every
+    /// cached batch of the pair (the caller guarantees the default cells
+    /// are present first, so cold and warm answers agree).
+    pub fn lookup(
+        &self,
+        net: &str,
+        device: &str,
+        batch: Option<usize>,
+        budgets: &Budgets,
+        obj: Objective,
+    ) -> Lookup {
+        let Some(group) = self.group(net, device) else {
+            return Lookup::Unknown;
+        };
+        let frontier = match batch {
+            Some(b) => match group.by_batch.get(&b) {
+                Some(f) => f,
+                None => return Lookup::Unknown,
+            },
+            None => &group.all,
+        };
+        let (best, considered) = frontier.best(&group.points, budgets, obj);
+        match best {
+            Some(i) => {
+                let point = group.points[i].clone();
+                let search = group.search.get(&point.point.batch).cloned();
+                Lookup::Found { point, search, considered }
+            }
+            None => Lookup::Infeasible { considered },
+        }
+    }
+
+    /// [`Self::lookup`] over an explicit batch axis: the best
+    /// admissible point across exactly `batches`' per-batch frontiers.
+    /// Cells outside the axis are ignored even when cached, so the
+    /// answer is deterministic however the cache grew — the advisor
+    /// answers batch-free queries through this, keeping a cold run
+    /// (which prices exactly this axis) and a warm one identical.
+    /// The union argmin is exact: the globally best admissible point of
+    /// the axis is also the best within its own batch, so it is that
+    /// batch-frontier's pick and survives the cross-batch min.
+    /// `Unknown` when no batch of the axis has a cell.
+    pub fn lookup_over(
+        &self,
+        net: &str,
+        device: &str,
+        batches: &[usize],
+        budgets: &Budgets,
+        obj: Objective,
+    ) -> Lookup {
+        let Some(group) = self.group(net, device) else {
+            return Lookup::Unknown;
+        };
+        let mut any = false;
+        let mut considered = 0usize;
+        let mut best: Option<usize> = None;
+        for b in batches {
+            let Some(frontier) = group.by_batch.get(b) else {
+                continue;
+            };
+            any = true;
+            let (pick, c) = frontier.best(&group.points, budgets, obj);
+            considered += c;
+            if let Some(i) = pick {
+                let better = best.map_or(true, |j| {
+                    preferred(obj, &group.points[i], &group.points[j]) == Ordering::Less
+                });
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        if !any {
+            return Lookup::Unknown;
+        }
+        match best {
+            Some(i) => {
+                let point = group.points[i].clone();
+                let search = group.search.get(&point.point.batch).cloned();
+                Lookup::Found { point, search, considered }
+            }
+            None => Lookup::Infeasible { considered },
+        }
+    }
+
+    /// `(groups, points, frontier points)` — stats-report context.
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        let mut groups = 0;
+        let mut points = 0;
+        let mut frontier = 0;
+        for devices in self.groups.values() {
+            for g in devices.values() {
+                groups += 1;
+                points += g.points.len();
+                frontier += g.all.order.len();
+            }
+        }
+        (groups, points, frontier)
+    }
+
+    /// Brute-force argmin over **all** indexed points of the pair under
+    /// [`preferred`] — the oracle [`Self::lookup`] must bit-match. Test
+    /// currency (`rust/tests/serve_properties.rs`); linear, unindexed.
+    pub fn brute_force(
+        &self,
+        net: &str,
+        device: &str,
+        batch: Option<usize>,
+        budgets: &Budgets,
+        obj: Objective,
+    ) -> Option<&PricedPoint> {
+        self.group(net, device)?
+            .points
+            .iter()
+            .filter(|p| batch.map_or(true, |b| p.point.batch == b))
+            .filter(|p| budgets.admits(p))
+            .min_by(|a, b| preferred(obj, a, b))
+    }
+
+    /// Is `p` Pareto-dominated by any indexed point of its pair (within
+    /// `batch` when given)? Test currency for the frontier property.
+    pub fn dominated(&self, p: &PricedPoint, batch: Option<usize>) -> bool {
+        let row = |q: &PricedPoint| {
+            vec![q.latency_ms_per_image(), q.used_brams as f64, q.energy_mj_per_image()]
+        };
+        self.group(&p.point.net, &p.point.device).is_some_and(|g| {
+            g.points
+                .iter()
+                .filter(|q| batch.map_or(true, |b| q.point.batch == b))
+                .any(|q| pareto::dominates(&row(q), &row(p)))
+        })
+    }
+}
+
+/// Canonical label of a point for replies and assertions:
+/// `net/device/batch/scheme`.
+pub fn point_label(p: &PricedPoint) -> String {
+    format!(
+        "{}/{}/{}/{}",
+        p.point.net,
+        p.point.device,
+        p.point.batch,
+        scheme_name(p.point.scheme)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{run_sweep, SweepConfig};
+
+    fn index_for(nets: &str, devices: &str, batches: &str) -> FrontierIndex {
+        let cfg =
+            SweepConfig::from_args(nets, devices, batches, "bchw,bhwc,reshaped").unwrap();
+        let report = run_sweep(&cfg, true).unwrap();
+        FrontierIndex::from_points(report.points, Vec::new())
+    }
+
+    #[test]
+    fn unbounded_latency_query_matches_brute_force() {
+        let idx = index_for("cnn1x", "zcu102", "1,4");
+        for batch in [None, Some(1), Some(4)] {
+            let budgets = Budgets::default();
+            for obj in Objective::ALL {
+                let Lookup::Found { point, .. } =
+                    idx.lookup("cnn1x", "zcu102", batch, &budgets, obj)
+                else {
+                    panic!("unbounded query must find a point");
+                };
+                let oracle = idx.brute_force("cnn1x", "zcu102", batch, &budgets, obj).unwrap();
+                assert_eq!(point_label(&point), point_label(oracle), "{obj:?}/{batch:?}");
+                assert_eq!(point.cycles, oracle.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_budget_is_respected_and_binary_search_cuts() {
+        let idx = index_for("cnn1x", "zcu102", "4");
+        // Tight budget below the best point: infeasible, considered 0.
+        let tight = Budgets { max_latency_ms: Some(1e-9), ..Default::default() };
+        let Lookup::Infeasible { considered } =
+            idx.lookup("cnn1x", "zcu102", None, &tight, Objective::Latency)
+        else {
+            panic!("impossible budget must be infeasible");
+        };
+        assert_eq!(considered, 0);
+        // A budget exactly at the best point's latency is inclusive.
+        let Lookup::Found { point: best, .. } = idx.lookup(
+            "cnn1x",
+            "zcu102",
+            None,
+            &Budgets::default(),
+            Objective::Latency,
+        ) else {
+            panic!()
+        };
+        let exact = Budgets {
+            max_latency_ms: Some(best.latency_ms_per_image()),
+            ..Default::default()
+        };
+        let Lookup::Found { point, .. } =
+            idx.lookup("cnn1x", "zcu102", None, &exact, Objective::Latency)
+        else {
+            panic!("inclusive budget must admit the boundary point");
+        };
+        assert_eq!(point_label(&point), point_label(&best));
+    }
+
+    #[test]
+    fn unknown_coordinates_are_misses_not_errors() {
+        let idx = index_for("cnn1x", "zcu102", "4");
+        let b = Budgets::default();
+        assert!(matches!(
+            idx.lookup("lenet10", "zcu102", None, &b, Objective::Latency),
+            Lookup::Unknown
+        ));
+        assert!(matches!(
+            idx.lookup("cnn1x", "pynq-z1", None, &b, Objective::Latency),
+            Lookup::Unknown
+        ));
+        // Cached pair, uncached batch: a miss, not an empty answer.
+        assert!(matches!(
+            idx.lookup("cnn1x", "zcu102", Some(16), &b, Objective::Latency),
+            Lookup::Unknown
+        ));
+        assert!(idx.has_cell("cnn1x", "zcu102", 4));
+        assert!(!idx.has_cell("cnn1x", "zcu102", 16));
+    }
+
+    #[test]
+    fn partial_scheme_cells_are_not_complete() {
+        // A cache warmed with a restricted --schemes axis must read as
+        // a miss, not as a warm cell whose best scheme is the answer.
+        let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw").unwrap();
+        let report = run_sweep(&cfg, false).unwrap();
+        let idx = FrontierIndex::from_points(report.points, Vec::new());
+        assert!(!idx.has_cell("cnn1x", "zcu102", 4), "bchw-only cell is incomplete");
+        // The batch-pinned lookup still answers from what exists — the
+        // advisor just won't call it before completing the cell.
+        assert!(matches!(
+            idx.lookup("cnn1x", "zcu102", Some(4), &Budgets::default(), Objective::Latency),
+            Lookup::Found { .. }
+        ));
+    }
+
+    #[test]
+    fn lookup_over_restricts_to_the_given_axis() {
+        let idx = index_for("cnn1x", "zcu102", "1,4");
+        let b = Budgets::default();
+        // An axis covering every batch agrees with the whole-group view.
+        let Lookup::Found { point: all, .. } =
+            idx.lookup("cnn1x", "zcu102", None, &b, Objective::Latency)
+        else {
+            panic!()
+        };
+        let Lookup::Found { point: over, .. } =
+            idx.lookup_over("cnn1x", "zcu102", &[1, 4], &b, Objective::Latency)
+        else {
+            panic!()
+        };
+        assert_eq!(point_label(&all), point_label(&over));
+        // A single-batch axis equals the batch-pinned lookup.
+        let Lookup::Found { point: pinned, .. } =
+            idx.lookup("cnn1x", "zcu102", Some(4), &b, Objective::Latency)
+        else {
+            panic!()
+        };
+        let Lookup::Found { point: only4, .. } =
+            idx.lookup_over("cnn1x", "zcu102", &[4], &b, Objective::Latency)
+        else {
+            panic!()
+        };
+        assert_eq!(point_label(&pinned), point_label(&only4));
+        // An axis with no cached cells is a miss, not an empty answer.
+        assert!(matches!(
+            idx.lookup_over("cnn1x", "zcu102", &[16], &b, Objective::Latency),
+            Lookup::Unknown
+        ));
+    }
+
+    #[test]
+    fn preferred_is_a_total_order_with_deterministic_ties() {
+        let idx = index_for("cnn1x", "zcu102", "1,4");
+        let g = idx.group("cnn1x", "zcu102").unwrap();
+        for obj in Objective::ALL {
+            for a in &g.points {
+                assert_eq!(preferred(obj, a, a), Ordering::Equal);
+                for b in &g.points {
+                    let ab = preferred(obj, a, b);
+                    assert_eq!(ab, preferred(obj, b, a).reverse());
+                    if point_label(a) != point_label(b) {
+                        assert_ne!(ab, Ordering::Equal, "distinct points must order");
+                    }
+                }
+            }
+        }
+    }
+}

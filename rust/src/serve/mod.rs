@@ -1,0 +1,677 @@
+//! The config-advisor service — `ef-train serve`.
+//!
+//! ROADMAP item (d), the front end that turns the explorer's artifacts
+//! into a service: a deployed device (or a fleet controller retraining
+//! per-user models, the perf4sight/LoCO-PDA scenario of PAPERS.md) asks
+//! "best config for this (network, device, budget)" and gets the
+//! optimal [`PricedPoint`] back, with the searched per-layer tilings
+//! when available. Three layers:
+//!
+//! * **index** ([`index::FrontierIndex`]) — built once from the
+//!   [`SweepCache`]: per-(net, device) Pareto frontiers sorted by
+//!   latency, so a budget query is a binary search plus a table read or
+//!   a short frontier scan, never a sweep over all priced points;
+//! * **miss path** — a query for an uncached cell prices it live
+//!   through [`crate::explore::price_point_on`] (all layout schemes,
+//!   plus the `(Tr, M_on)` search when enabled) behind a
+//!   [`CoalescingMemo`], so concurrent identical misses collapse to ONE
+//!   pricing; the result is written back into the cache (and its file,
+//!   when one backs the advisor) and the index is rebuilt before any
+//!   waiter proceeds;
+//! * **front end** ([`serve_oneshot`], [`serve_listener`]) — JSON-lines
+//!   over stdin or TCP ([`protocol`]), answered across the rayon pool,
+//!   with per-request [`ServeStats`] (hits/misses/dedup, p50/p95
+//!   service time) reported via `--stats-json` or a `{"stats": true}`
+//!   request.
+//!
+//! Every request is classified exactly once: `hit` (index answered),
+//! `miss` (this request priced at least one cell), `coalesced` (waited
+//! on someone else's pricing), or `error`. A warm cache therefore
+//! serves with `misses == 0` — asserted by the CI serve-smoke lane.
+
+pub mod index;
+pub mod protocol;
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use rayon::prelude::*;
+
+use crate::device::device_by_name;
+use crate::explore::sweep_cache::SweepCache;
+use crate::explore::tiling_search::search_tilings;
+use crate::explore::{price_point_on, DesignPoint, PricedPoint, SweepConfig};
+use crate::layout::Scheme;
+use crate::nets::network_by_name;
+use crate::util::json::Json;
+use crate::util::memo::CoalescingMemo;
+use index::{FrontierIndex, Lookup};
+use protocol::{Query, Request, Source};
+
+/// Knobs of one advisor instance.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Run the `(Tr, M_on)` co-search on freshly priced cells, so
+    /// answers carry searched tilings (cached cells keep whatever the
+    /// cache has either way).
+    pub search_tilings: bool,
+    /// The batch axis a batch-free query is answered over — misses
+    /// price every one of these cells first, and the answer considers
+    /// exactly these cells (cached off-axis batches are ignored), so a
+    /// cold advisor and a warm one give identical answers regardless of
+    /// what else ran. Defaults to the sweep's own default batch axis.
+    pub miss_batches: Vec<usize>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            search_tilings: false,
+            miss_batches: SweepConfig::default_sweep().batches,
+        }
+    }
+}
+
+/// Service-time samples kept for the percentile report — a sliding
+/// window, so a long-lived `--listen` server neither grows without
+/// bound nor pays more than O(window) per report.
+const SERVICE_WINDOW: usize = 4096;
+
+/// Live serving counters. Hits/misses/coalesced partition the
+/// successfully parsed-and-validated queries; `errors` is the rest.
+/// Service-time percentiles cover the last [`SERVICE_WINDOW`] requests.
+#[derive(Default)]
+pub struct ServeStats {
+    queries: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    errors: AtomicU64,
+    infeasible: AtomicU64,
+    cells_priced: AtomicU64,
+    points_priced: AtomicU64,
+    service_us: Mutex<VecDeque<u64>>,
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+impl ServeStats {
+    fn count(&self, c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.count(&self.misses)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.count(&self.hits)
+    }
+
+    pub fn coalesced(&self) -> u64 {
+        self.count(&self.coalesced)
+    }
+}
+
+/// The serving engine: index + miss path + stats, shareable across
+/// threads (`Arc<Advisor>`).
+pub struct Advisor {
+    cache: Mutex<SweepCache>,
+    /// Write-back target for miss-path pricings, when file-backed.
+    cache_path: Option<PathBuf>,
+    /// Where [`Self::persist_stats`] writes the stats report.
+    stats_path: Option<PathBuf>,
+    idx: RwLock<FrontierIndex>,
+    inflight: CoalescingMemo<(String, String, usize), ()>,
+    opts: ServeOptions,
+    stats: ServeStats,
+    /// Serializes [`Self::persist_stats`] writers (every finished TCP
+    /// connection persists; concurrent truncate+write would tear the
+    /// file).
+    stats_file_lock: Mutex<()>,
+}
+
+impl Advisor {
+    pub fn new(
+        cache: SweepCache,
+        cache_path: Option<PathBuf>,
+        stats_path: Option<PathBuf>,
+        opts: ServeOptions,
+    ) -> Self {
+        let idx = RwLock::new(FrontierIndex::from_cache(&cache));
+        Self {
+            cache: Mutex::new(cache),
+            cache_path,
+            stats_path,
+            idx,
+            inflight: CoalescingMemo::new(),
+            opts,
+            stats: ServeStats::default(),
+            stats_file_lock: Mutex::new(()),
+        }
+    }
+
+    /// Price one (net, device, batch) cell — every layout scheme, plus
+    /// the tiling search when enabled — write it back, and rebuild the
+    /// index, all inside the coalescing memo so identical concurrent
+    /// misses block on this one computation and wake to a warm index.
+    /// Returns whether *this* caller ran the pricing.
+    ///
+    /// The write-back saves the whole cache file and rebuilds the whole
+    /// index per fresh cell. That is deliberate for now: misses are
+    /// rare after warmup, coalescing already collapses the common
+    /// stampede, and a full rebuild under the cache lock is the
+    /// simplest way to guarantee waiters wake to an index containing
+    /// their cell. Per-group incremental rebuilds and batched saves are
+    /// the ROADMAP follow-on if miss volume ever matters.
+    fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> bool {
+        let key = (net.to_string(), device.to_string(), batch);
+        let (_, fresh) = self.inflight.get_or_compute(&key, || {
+            let network = network_by_name(net).expect("validated before the miss path");
+            let dev = device_by_name(device).expect("validated before the miss path");
+            let net_name: Arc<str> = Arc::from(net);
+            let dev_name: Arc<str> = Arc::from(device);
+            let points: Vec<PricedPoint> = Scheme::ALL
+                .iter()
+                .map(|&scheme| {
+                    price_point_on(
+                        &network,
+                        &dev,
+                        &DesignPoint {
+                            net: net_name.clone(),
+                            device: dev_name.clone(),
+                            batch,
+                            scheme,
+                        },
+                    )
+                })
+                .collect();
+            let search =
+                self.opts.search_tilings.then(|| search_tilings(&network, &dev, batch));
+            self.stats.cells_priced.fetch_add(1, Ordering::Relaxed);
+            self.stats.points_priced.fetch_add(points.len() as u64, Ordering::Relaxed);
+            let mut cache = self.cache.lock().unwrap();
+            for p in &points {
+                cache.insert_point(p);
+            }
+            if let Some(s) = &search {
+                cache.insert_cell(net, device, batch, s);
+            }
+            if let Some(path) = &self.cache_path {
+                // A failed write-back degrades to a non-persistent miss;
+                // the answer itself is unaffected.
+                if let Err(e) = cache.save(path) {
+                    eprintln!("serve: write-back to {} failed: {e:#}", path.display());
+                }
+            }
+            *self.idx.write().unwrap() = FrontierIndex::from_cache(&cache);
+        });
+        fresh
+    }
+
+    /// Answer one parsed query, pricing missing cells on the way.
+    pub fn answer(&self, q: &Query) -> Json {
+        // Canonicalize both names before any keying: `device_by_name`
+        // accepts aliases ("pynq", "PYNQ_Z1", ...), and keying the
+        // cache/index by the query's verbatim spelling would fork warm
+        // cells into duplicate re-priced groups per alias. The zoo's
+        // own names are the cache keys (`Device::name` lowercased is
+        // exactly the sweep axis spelling).
+        let Some(network) = network_by_name(&q.net) else {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::error(&format!(
+                "unknown network `{}` (have {:?})",
+                q.net,
+                crate::nets::NETWORK_NAMES
+            ));
+        };
+        let Some(dev) = device_by_name(&q.device) else {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return protocol::error(&format!("unknown device `{}`", q.device));
+        };
+        let net = network.name;
+        let device = dev.name.to_ascii_lowercase();
+        let mut wanted: Vec<usize> = match q.batch {
+            Some(b) => vec![b],
+            None => self.opts.miss_batches.clone(),
+        };
+        wanted.sort_unstable();
+        wanted.dedup();
+        let mut fresh = false;
+        let mut waited = false;
+        for &b in &wanted {
+            if !self.idx.read().unwrap().has_cell(net, &device, b) {
+                if self.ensure_cell(net, &device, b) {
+                    fresh = true;
+                } else {
+                    waited = true;
+                }
+            }
+        }
+        let source = if fresh {
+            Source::Miss
+        } else if waited {
+            Source::Coalesced
+        } else {
+            Source::Hit
+        };
+        // Batch-pinned queries hit that batch's frontier; batch-free
+        // ones answer over exactly the advisor's batch axis (not
+        // whatever else the cache happens to hold), so the answer set
+        // never depends on which other queries ran first.
+        let lookup = match q.batch {
+            Some(_) => {
+                self.idx
+                    .read()
+                    .unwrap()
+                    .lookup(net, &device, q.batch, &q.budgets, q.objective)
+            }
+            None => {
+                self.idx
+                    .read()
+                    .unwrap()
+                    .lookup_over(net, &device, &wanted, &q.budgets, q.objective)
+            }
+        };
+        let counter = match (&lookup, source) {
+            // ensure_cell inserts every scheme row of the wanted cells,
+            // so Unknown can only mean an empty miss-batch set.
+            (Lookup::Unknown, _) => &self.stats.errors,
+            (_, Source::Miss) => &self.stats.misses,
+            (_, Source::Coalesced) => &self.stats.coalesced,
+            (_, Source::Hit) => &self.stats.hits,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        match lookup {
+            Lookup::Found { point, search, considered } => {
+                protocol::found(q, &point, search.as_ref(), source, considered)
+            }
+            Lookup::Infeasible { considered } => {
+                self.stats.infeasible.fetch_add(1, Ordering::Relaxed);
+                protocol::infeasible(q, source, considered)
+            }
+            Lookup::Unknown => protocol::error(&format!(
+                "no priced points for {net}/{device} — the advisor's miss-batch set \
+                 is empty and the query names no batch",
+            )),
+        }
+    }
+
+    /// Serve one raw request line; `None` for blank lines. Timing,
+    /// parsing, and classification all happen here.
+    pub fn respond_line(&self, line: &str) -> Option<String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return None;
+        }
+        let reply = match protocol::parse_request(line) {
+            Ok(Request::Stats) => self.stats_json(),
+            Ok(Request::Query(q)) => {
+                let t0 = Instant::now();
+                self.stats.queries.fetch_add(1, Ordering::Relaxed);
+                let reply = self.answer(&q);
+                let us = t0.elapsed().as_micros() as u64;
+                let mut window = self.stats.service_us.lock().unwrap();
+                if window.len() == SERVICE_WINDOW {
+                    window.pop_front();
+                }
+                window.push_back(us);
+                drop(window);
+                reply
+            }
+            Err(e) => {
+                self.stats.queries.fetch_add(1, Ordering::Relaxed);
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error(&format!("{e:#}"))
+            }
+        };
+        Some(reply.to_string())
+    }
+
+    /// The live stats report (`--stats-json`, `{"stats": true}`).
+    /// Percentiles cover the last [`SERVICE_WINDOW`] requests.
+    pub fn stats_json(&self) -> Json {
+        let mut times: Vec<u64> =
+            self.stats.service_us.lock().unwrap().iter().copied().collect();
+        times.sort_unstable();
+        let (groups, points, frontier) = self.idx.read().unwrap().sizes();
+        let s = &self.stats;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("queries".into(), Json::Num(s.count(&s.queries) as f64));
+        m.insert("hits".into(), Json::Num(s.count(&s.hits) as f64));
+        m.insert("misses".into(), Json::Num(s.count(&s.misses) as f64));
+        m.insert("coalesced".into(), Json::Num(s.count(&s.coalesced) as f64));
+        m.insert("errors".into(), Json::Num(s.count(&s.errors) as f64));
+        m.insert("infeasible".into(), Json::Num(s.count(&s.infeasible) as f64));
+        m.insert("cells_priced".into(), Json::Num(s.count(&s.cells_priced) as f64));
+        m.insert("points_priced".into(), Json::Num(s.count(&s.points_priced) as f64));
+        m.insert("p50_service_us".into(), Json::Num(percentile(&times, 0.50) as f64));
+        m.insert("p95_service_us".into(), Json::Num(percentile(&times, 0.95) as f64));
+        m.insert(
+            "max_service_us".into(),
+            Json::Num(times.last().copied().unwrap_or(0) as f64),
+        );
+        m.insert("indexed_groups".into(), Json::Num(groups as f64));
+        m.insert("indexed_points".into(), Json::Num(points as f64));
+        m.insert("frontier_points".into(), Json::Num(frontier as f64));
+        Json::Obj(m)
+    }
+
+    /// Write the stats report to `--stats-json`, when configured.
+    /// Writers serialize and land via temp-file + rename, so a reader
+    /// (or a concurrent writer) never sees a torn file.
+    pub fn persist_stats(&self) -> crate::Result<()> {
+        if let Some(path) = &self.stats_path {
+            let _one_writer = self.stats_file_lock.lock().unwrap();
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, self.stats_json().to_string())?;
+            std::fs::rename(&tmp, path)?;
+        }
+        Ok(())
+    }
+
+    /// One human line for stderr after a serving run.
+    pub fn summary_line(&self) -> String {
+        let s = &self.stats;
+        let mut times: Vec<u64> =
+            self.stats.service_us.lock().unwrap().iter().copied().collect();
+        times.sort_unstable();
+        format!(
+            "served {} queries: {} hits, {} misses, {} coalesced, {} errors \
+             ({} cells priced); p50 {}us p95 {}us",
+            s.count(&s.queries),
+            s.count(&s.hits),
+            s.count(&s.misses),
+            s.count(&s.coalesced),
+            s.count(&s.errors),
+            s.count(&s.cells_priced),
+            percentile(&times, 0.50),
+            percentile(&times, 0.95),
+        )
+    }
+
+    /// Live counters (the JSON view is [`Self::stats_json`]).
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Surrender the cache (tests: inspect the write-back).
+    pub fn into_cache(self) -> SweepCache {
+        self.cache.into_inner().unwrap()
+    }
+}
+
+/// Answer a whole JSON-lines batch across the rayon pool, replies in
+/// request order (blank lines skipped). The `--oneshot` front end.
+pub fn serve_oneshot(advisor: &Advisor, input: &str) -> Vec<String> {
+    let lines: Vec<&str> = input.lines().collect();
+    lines
+        .par_iter()
+        .map(|line| advisor.respond_line(line))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+fn handle_conn(advisor: &Advisor, stream: TcpStream) -> crate::Result<()> {
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if let Some(reply) = advisor.respond_line(&line?) {
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+    }
+    Ok(())
+}
+
+/// Accept-loop front end (`--listen ADDR`): each connection is handed
+/// to a rayon pool (`pool`, or the global one) and speaks the same
+/// JSON-lines protocol, request-per-line, reply-per-line. The accept
+/// loop runs on the *calling* thread, never inside the worker pool —
+/// parking it there would let a 1-thread `--jobs 1` pool starve every
+/// handler it spawns. Stats persist after every connection.
+/// `max_conns` bounds the accept loop (tests; `None` serves forever)
+/// and waits for the in-flight handlers before returning.
+pub fn serve_listener(
+    advisor: &Arc<Advisor>,
+    listener: TcpListener,
+    max_conns: Option<usize>,
+    pool: Option<&rayon::ThreadPool>,
+) -> crate::Result<()> {
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let mut accepted = 0usize;
+    for conn in listener.incoming() {
+        // Transient accept failures (connection reset mid-handshake,
+        // fd exhaustion) must not take down every live connection.
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let advisor = Arc::clone(advisor);
+        let tx = tx.clone();
+        let task = move || {
+            if let Err(e) = handle_conn(&advisor, stream) {
+                eprintln!("serve: connection error: {e:#}");
+            }
+            if let Err(e) = advisor.persist_stats() {
+                eprintln!("serve: stats write failed: {e:#}");
+            }
+            let _ = tx.send(());
+        };
+        match pool {
+            Some(p) => p.spawn(task),
+            None => rayon::spawn(task),
+        }
+        accepted += 1;
+        if max_conns.is_some_and(|m| accepted >= m) {
+            break;
+        }
+    }
+    drop(tx);
+    for _ in rx {} // drain: every spawned handler has finished
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warm_advisor(opts: ServeOptions) -> Advisor {
+        let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,bhwc,reshaped").unwrap();
+        let mut cache = SweepCache::empty();
+        crate::explore::run_sweep_with(
+            &cfg,
+            &crate::explore::SweepOptions { parallel: false, search_tilings: false },
+            Some(&mut cache),
+        )
+        .unwrap();
+        Advisor::new(cache, None, None, opts)
+    }
+
+    #[test]
+    fn warm_queries_hit_without_pricing() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let reply = advisor
+            .respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#)
+            .unwrap();
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(j.field_bool("ok"), Some(true));
+        assert_eq!(j.field_str("source"), Some("hit"));
+        assert_eq!(j.field_str("scheme"), Some("reshaped"), "reshaping dominates");
+        assert_eq!(advisor.stats.misses(), 0);
+        assert_eq!(advisor.stats.hits(), 1);
+    }
+
+    #[test]
+    fn miss_prices_writes_back_and_subsequent_queries_hit() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let line = r#"{"net": "lenet10", "device": "zcu102", "batch": 4}"#;
+        let first = Json::parse(&advisor.respond_line(line).unwrap()).unwrap();
+        assert_eq!(first.field_bool("ok"), Some(true));
+        assert_eq!(first.field_str("source"), Some("miss"));
+        let second = Json::parse(&advisor.respond_line(line).unwrap()).unwrap();
+        assert_eq!(second.field_str("source"), Some("hit"));
+        assert_eq!(second.field_f64("cycles"), first.field_f64("cycles"));
+        assert_eq!(advisor.stats.misses(), 1);
+        assert_eq!(advisor.stats.hits(), 1);
+        // The write-back landed: every scheme row of the cell is cached.
+        let cache = advisor.into_cache();
+        for scheme in Scheme::ALL {
+            let dp = DesignPoint {
+                net: "lenet10".into(),
+                device: "zcu102".into(),
+                batch: 4,
+                scheme,
+            };
+            assert!(cache.lookup_point(&dp).is_some(), "{scheme:?} row written back");
+        }
+    }
+
+    #[test]
+    fn identical_concurrent_misses_coalesce_to_one_pricing() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let input =
+            vec![r#"{"net": "lenet10", "device": "zcu102", "batch": 4}"#.to_string(); 8]
+                .join("\n");
+        let replies = serve_oneshot(&advisor, &input);
+        assert_eq!(replies.len(), 8);
+        for r in &replies {
+            let j = Json::parse(r).unwrap();
+            assert_eq!(j.field_bool("ok"), Some(true), "{r}");
+        }
+        // Exactly one request priced the cell; everyone else either
+        // waited on it or arrived after the index rebuild.
+        assert_eq!(advisor.stats.misses(), 1);
+        assert_eq!(advisor.stats.cells_priced.load(Ordering::Relaxed), 1);
+        assert_eq!(advisor.stats.hits() + advisor.stats.coalesced(), 7);
+    }
+
+    #[test]
+    fn device_aliases_canonicalize_to_one_cell() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        // The warm zcu102 cells answer the uppercase alias spelling.
+        let j = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "cnn1x", "device": "ZCU102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.field_str("source"), Some("hit"), "alias must hit the warm cell");
+        // A miss through one alias lands under the canonical key, so
+        // every other alias of the same device then hits it.
+        let miss = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "cnn1x", "device": "PYNQ_Z1", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(miss.field_str("source"), Some("miss"));
+        let hit = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "cnn1x", "device": "pynq", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(hit.field_str("source"), Some("hit"));
+        assert_eq!(hit.field_f64("cycles"), miss.field_f64("cycles"));
+        assert_eq!(advisor.stats.misses(), 1, "one cell priced across three spellings");
+        // The write-back is keyed canonically, never by the alias.
+        let cache = advisor.into_cache();
+        let canonical = DesignPoint {
+            net: "cnn1x".into(),
+            device: "pynq-z1".into(),
+            batch: 4,
+            scheme: Scheme::Reshaped,
+        };
+        assert!(cache.lookup_point(&canonical).is_some());
+        let aliased = DesignPoint { device: "PYNQ_Z1".into(), ..canonical };
+        assert!(cache.lookup_point(&aliased).is_none());
+    }
+
+    #[test]
+    fn unknown_names_are_errors_not_pricings() {
+        let advisor = warm_advisor(ServeOptions::default());
+        for line in [
+            r#"{"net": "nope", "device": "zcu102"}"#,
+            r#"{"net": "cnn1x", "device": "stratix"}"#,
+            r#"{"net": 1, "device": "zcu102"}"#,
+        ] {
+            let j = Json::parse(&advisor.respond_line(line).unwrap()).unwrap();
+            assert_eq!(j.field_bool("ok"), Some(false), "{line}");
+            assert!(j.field_str("error").is_some(), "{line}");
+        }
+        assert_eq!(advisor.stats.count(&advisor.stats.errors), 3);
+        assert_eq!(advisor.stats.misses(), 0);
+    }
+
+    #[test]
+    fn stats_request_reports_the_counters() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        advisor.respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#);
+        let stats =
+            Json::parse(&advisor.respond_line(r#"{"stats": true}"#).unwrap()).unwrap();
+        assert_eq!(stats.field_f64("queries"), Some(1.0));
+        assert_eq!(stats.field_f64("hits"), Some(1.0));
+        assert_eq!(stats.field_f64("misses"), Some(0.0));
+        assert!(stats.field_f64("indexed_points").unwrap() >= 3.0);
+        // Stats requests are control traffic, not queries.
+        let again =
+            Json::parse(&advisor.respond_line(r#"{"stats": true}"#).unwrap()).unwrap();
+        assert_eq!(again.field_f64("queries"), Some(1.0));
+    }
+
+    #[test]
+    fn infeasible_budgets_answer_infeasible() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let j = Json::parse(
+            &advisor
+                .respond_line(
+                    r#"{"net": "cnn1x", "device": "zcu102", "batch": 4,
+                        "max_latency_ms": 0.000001}"#,
+                )
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.field_bool("ok"), Some(false));
+        assert_eq!(j.field_bool("infeasible"), Some(true));
+        assert_eq!(j.field_f64("considered"), Some(0.0));
+        assert_eq!(advisor.stats.count(&advisor.stats.infeasible), 1);
+        assert_eq!(advisor.stats.hits(), 1, "infeasible is still an index hit");
+    }
+}

@@ -1,0 +1,345 @@
+//! The JSON-lines wire protocol the advisor speaks — one request
+//! object in, one reply object out, over stdin (`--oneshot`) or a TCP
+//! connection (`--listen`).
+//!
+//! Request grammar (all budgets optional, latency/energy **per image**
+//! to match the sweep's frontier axes):
+//!
+//! ```json
+//! {"net": "cnn1x", "device": "zcu102", "batch": 4,
+//!  "max_latency_ms": 500, "max_bram": 600, "max_energy_mj": 5,
+//!  "objective": "energy"}
+//! ```
+//!
+//! `objective` is `latency` (default), `energy`, or `bram`; omitting
+//! `batch` answers over exactly the advisor's batch axis (the sweep
+//! default), independent of what else the cache holds, so identical
+//! queries always get identical answers. `{"stats": true}` is a
+//! control request
+//! answered with the live [`super::ServeStats`] report. Parsing is
+//! strict — unknown fields and mistyped values are errors, not silent
+//! defaults — because a misspelled budget that quietly vanishes would
+//! serve an over-budget config as if it fit.
+//!
+//! Replies are single-line JSON with `ok` always present: a found
+//! config echoes the full pricing (plus the searched per-layer tilings
+//! when the cell has them), an unsatisfiable budget reports
+//! `infeasible`, and errors carry one actionable message. `source`
+//! says how the answer was produced (`hit`, `miss`, `coalesced`) and
+//! is the one field that may differ between a cold and a warm run of
+//! the same queries.
+
+use std::collections::BTreeMap;
+
+use anyhow::anyhow;
+
+use super::index::{Budgets, Objective};
+use crate::explore::tiling_search::SearchedTilings;
+use crate::explore::{scheme_name, PricedPoint};
+use crate::util::json::Json;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Query(Query),
+    /// `{"stats": true}` — report serving statistics.
+    Stats,
+}
+
+/// A config question: coordinates, budgets, and what to minimize.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub net: String,
+    pub device: String,
+    pub batch: Option<usize>,
+    pub budgets: Budgets,
+    pub objective: Objective,
+}
+
+/// How the advisor produced an answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// Answered straight from the index.
+    Hit,
+    /// This request priced at least one missing cell.
+    Miss,
+    /// Waited on another request's in-flight pricing of the same cell.
+    Coalesced,
+}
+
+impl Source {
+    pub fn name(self) -> &'static str {
+        match self {
+            Source::Hit => "hit",
+            Source::Miss => "miss",
+            Source::Coalesced => "coalesced",
+        }
+    }
+}
+
+const QUERY_FIELDS: [&str; 7] = [
+    "net",
+    "device",
+    "batch",
+    "max_latency_ms",
+    "max_bram",
+    "max_energy_mj",
+    "objective",
+];
+
+fn require_f64(j: &Json, key: &str) -> crate::Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("`{key}` must be a number, got {v}"))?;
+            if !n.is_finite() || n < 0.0 {
+                return Err(anyhow!("`{key}` must be a finite non-negative number, got {v}"));
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+fn require_usize(j: &Json, key: &str) -> crate::Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_usize().ok_or_else(|| {
+            anyhow!("`{key}` must be a non-negative integer, got {v}")
+        })?)),
+    }
+}
+
+/// Parse one request line. Strict: unknown fields, wrong types, and
+/// out-of-domain values all error with the offending field named.
+pub fn parse_request(line: &str) -> crate::Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow!("request is not valid JSON: {e}"))?;
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow!("request must be a JSON object, got {j}"))?;
+    if let Some(v) = j.get("stats") {
+        if obj.len() != 1 {
+            return Err(anyhow!("a stats request carries no other fields"));
+        }
+        return match v.as_bool() {
+            Some(true) => Ok(Request::Stats),
+            _ => Err(anyhow!("`stats` must be `true`, got {v}")),
+        };
+    }
+    for key in obj.keys() {
+        if !QUERY_FIELDS.contains(&key.as_str()) {
+            return Err(anyhow!("unknown field `{key}` (query fields: {QUERY_FIELDS:?})"));
+        }
+    }
+    let field_str = |key: &str| -> crate::Result<String> {
+        j.get(key)
+            .ok_or_else(|| anyhow!("missing required field `{key}`"))?
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("`{key}` must be a string"))
+    };
+    let batch = require_usize(&j, "batch")?;
+    if batch == Some(0) {
+        return Err(anyhow!("`batch` must be at least 1"));
+    }
+    let objective = match j.get("objective") {
+        None => Objective::Latency,
+        Some(v) => {
+            let name = v.as_str().ok_or_else(|| anyhow!("`objective` must be a string"))?;
+            Objective::by_name(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown objective `{name}` (have {:?})",
+                    Objective::ALL.map(Objective::name)
+                )
+            })?
+        }
+    };
+    Ok(Request::Query(Query {
+        net: field_str("net")?,
+        device: field_str("device")?,
+        batch,
+        budgets: Budgets {
+            max_latency_ms: require_f64(&j, "max_latency_ms")?,
+            max_bram: require_usize(&j, "max_bram")?,
+            max_energy_mj: require_f64(&j, "max_energy_mj")?,
+        },
+        objective,
+    }))
+}
+
+impl Query {
+    /// The request re-emitted as JSON (tests, logging).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("net".into(), Json::Str(self.net.clone()));
+        m.insert("device".into(), Json::Str(self.device.clone()));
+        if let Some(b) = self.batch {
+            m.insert("batch".into(), Json::Num(b as f64));
+        }
+        if let Some(c) = self.budgets.max_latency_ms {
+            m.insert("max_latency_ms".into(), Json::Num(c));
+        }
+        if let Some(c) = self.budgets.max_bram {
+            m.insert("max_bram".into(), Json::Num(c as f64));
+        }
+        if let Some(c) = self.budgets.max_energy_mj {
+            m.insert("max_energy_mj".into(), Json::Num(c));
+        }
+        m.insert("objective".into(), Json::Str(self.objective.name().into()));
+        Json::Obj(m)
+    }
+}
+
+fn reply_base(q: &Query, source: Source, considered: usize) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("net".into(), Json::Str(q.net.clone()));
+    m.insert("device".into(), Json::Str(q.device.clone()));
+    m.insert("objective".into(), Json::Str(q.objective.name().into()));
+    m.insert("source".into(), Json::Str(source.name().into()));
+    m.insert("considered".into(), Json::Num(considered as f64));
+    m
+}
+
+/// The reply for a served config: the full pricing of the winning
+/// point, plus its cell's searched tilings when cached.
+pub fn found(
+    q: &Query,
+    p: &PricedPoint,
+    search: Option<&SearchedTilings>,
+    source: Source,
+    considered: usize,
+) -> Json {
+    let mut m = reply_base(q, source, considered);
+    m.insert("ok".into(), Json::Bool(true));
+    m.insert("batch".into(), Json::Num(p.point.batch as f64));
+    m.insert("scheme".into(), Json::Str(scheme_name(p.point.scheme).into()));
+    m.insert("tm".into(), Json::Num(p.tm as f64));
+    m.insert("cycles".into(), Json::Num(p.cycles as f64));
+    m.insert("realloc_cycles".into(), Json::Num(p.realloc_cycles as f64));
+    m.insert("latency_ms".into(), Json::Num(p.latency_ms));
+    m.insert("latency_ms_per_image".into(), Json::Num(p.latency_ms_per_image()));
+    m.insert("throughput_gflops".into(), Json::Num(p.throughput_gflops));
+    m.insert("dsps".into(), Json::Num(p.used_dsps as f64));
+    m.insert("brams".into(), Json::Num(p.used_brams as f64));
+    m.insert("power_w".into(), Json::Num(p.power_w));
+    m.insert("energy_mj".into(), Json::Num(p.energy_mj));
+    m.insert("energy_mj_per_image".into(), Json::Num(p.energy_mj_per_image()));
+    if let Some(s) = search {
+        m.insert(
+            "tilings".into(),
+            Json::Arr(
+                s.tiling_rows()
+                    .into_iter()
+                    .map(|row| {
+                        Json::Arr(row.into_iter().map(|v| Json::Num(v as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("searched_cycles".into(), Json::Num(s.searched_cycles as f64));
+        m.insert("beats_heuristic".into(), Json::Bool(s.beats_heuristic()));
+    }
+    Json::Obj(m)
+}
+
+/// The reply when the coordinates are priced but no config fits the
+/// budgets — an answer, not an error: the budgets are unachievable.
+pub fn infeasible(q: &Query, source: Source, considered: usize) -> Json {
+    let mut m = reply_base(q, source, considered);
+    m.insert("ok".into(), Json::Bool(false));
+    m.insert("infeasible".into(), Json::Bool(true));
+    if let Some(b) = q.batch {
+        m.insert("batch".into(), Json::Num(b as f64));
+    }
+    Json::Obj(m)
+}
+
+/// A request-level failure (bad JSON, unknown network, ...).
+pub fn error(msg: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(false));
+    m.insert("error".into(), Json::Str(msg.into()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_query(line: &str) -> Query {
+        match parse_request(line).unwrap() {
+            Request::Query(q) => q,
+            other => panic!("expected a query, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_a_full_query() {
+        let q = parse_query(
+            r#"{"net": "cnn1x", "device": "zcu102", "batch": 4,
+                "max_latency_ms": 500, "max_bram": 600, "max_energy_mj": 5,
+                "objective": "energy"}"#,
+        );
+        assert_eq!(q.net, "cnn1x");
+        assert_eq!(q.device, "zcu102");
+        assert_eq!(q.batch, Some(4));
+        assert_eq!(q.budgets.max_latency_ms, Some(500.0));
+        assert_eq!(q.budgets.max_bram, Some(600));
+        assert_eq!(q.budgets.max_energy_mj, Some(5.0));
+        assert_eq!(q.objective, Objective::Energy);
+    }
+
+    #[test]
+    fn minimal_query_defaults_to_latency_and_no_budgets() {
+        let q = parse_query(r#"{"net": "cnn1x", "device": "zcu102"}"#);
+        assert_eq!(q.batch, None);
+        assert_eq!(q.budgets, Budgets::default());
+        assert_eq!(q.objective, Objective::Latency);
+    }
+
+    #[test]
+    fn stats_request_parses() {
+        assert_eq!(parse_request(r#"{"stats": true}"#).unwrap(), Request::Stats);
+        assert!(parse_request(r#"{"stats": false}"#).is_err());
+        assert!(parse_request(r#"{"stats": true, "net": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn strict_parsing_rejects_typos_and_bad_types() {
+        for (line, needle) in [
+            ("nonsense", "not valid JSON"),
+            ("[1]", "must be a JSON object"),
+            (r#"{"net": "a"}"#, "`device`"),
+            (r#"{"device": "a"}"#, "`net`"),
+            (r#"{"net": "a", "device": "b", "max_latency": 5}"#, "unknown field"),
+            (r#"{"net": "a", "device": "b", "batch": 0}"#, "at least 1"),
+            (r#"{"net": "a", "device": "b", "batch": 1.5}"#, "`batch`"),
+            (r#"{"net": "a", "device": "b", "max_latency_ms": "fast"}"#, "number"),
+            (r#"{"net": "a", "device": "b", "max_bram": -3}"#, "`max_bram`"),
+            (r#"{"net": "a", "device": "b", "objective": "speed"}"#, "unknown objective"),
+            (r#"{"net": 7, "device": "b"}"#, "must be a string"),
+        ] {
+            let err = parse_request(line).expect_err(line);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "`{line}` -> `{msg}` (wanted `{needle}`)");
+        }
+    }
+
+    #[test]
+    fn query_round_trips_through_its_json() {
+        let q = parse_query(
+            r#"{"net": "lenet10", "device": "pynq-z1", "batch": 16,
+                "max_bram": 280, "objective": "bram"}"#,
+        );
+        let echoed = parse_query(&q.to_json().to_string());
+        assert_eq!(echoed, q);
+    }
+
+    #[test]
+    fn error_reply_shape() {
+        let e = error("boom");
+        assert_eq!(e.field_bool("ok"), Some(false));
+        assert_eq!(e.field_str("error"), Some("boom"));
+    }
+}

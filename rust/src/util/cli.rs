@@ -56,6 +56,21 @@ impl Args {
         self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Like [`Self::parse_flag`], but a present-yet-malformed value is
+    /// an actionable error instead of silently becoming the default
+    /// (`--jobs abc` must not quietly mean "default pool").
+    pub fn try_parse_flag<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> crate::Result<Option<T>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow::anyhow!("--{name} got `{v}`, which does not parse")
+            }),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -90,5 +105,14 @@ mod tests {
         let a = parse(argv("x"), &[]);
         assert_eq!(a.flag_or("net", "cnn1x"), "cnn1x");
         assert_eq!(a.parse_flag("lr", 0.05f32), 0.05);
+    }
+
+    #[test]
+    fn try_parse_flag_rejects_malformed_values() {
+        let a = parse(argv("serve --jobs 4 --port nope"), &["jobs", "port"]);
+        assert_eq!(a.try_parse_flag::<usize>("jobs").unwrap(), Some(4));
+        assert_eq!(a.try_parse_flag::<usize>("absent").unwrap(), None);
+        let err = a.try_parse_flag::<usize>("port").unwrap_err();
+        assert!(format!("{err}").contains("--port"), "{err}");
     }
 }

@@ -10,7 +10,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 const SHARDS: usize = 16;
 
@@ -84,6 +84,62 @@ impl<K: Hash + Eq + Clone, V: Clone> Default for ShardedMemo<K, V> {
     }
 }
 
+/// A [`ShardedMemo`] whose misses *coalesce*: when several threads ask
+/// for the same absent key at once, exactly one runs `compute` and the
+/// rest block on its `OnceLock` until the value lands. `ShardedMemo`
+/// alone may compute twice under that race (by design — its payloads
+/// are cheap); this wrapper is for expensive computations like the
+/// config-advisor's miss path, where one computation prices a whole
+/// sweep cell and duplicates would be real work.
+pub struct CoalescingMemo<K, V> {
+    cells: ShardedMemo<K, Arc<OnceLock<V>>>,
+    computed: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> CoalescingMemo<K, V> {
+    pub fn new() -> Self {
+        Self {
+            cells: ShardedMemo::new(),
+            computed: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// Clone the value for `key`, running `compute` exactly once per key
+    /// across all threads. Returns `(value, fresh)` — `fresh` is true
+    /// for the single caller whose `compute` ran; everyone else either
+    /// waited on that computation or found it finished.
+    pub fn get_or_compute(&self, key: &K, compute: impl FnOnce() -> V) -> (V, bool) {
+        let cell = self.cells.get_or_compute(key, || Arc::new(OnceLock::new()));
+        let mut fresh = false;
+        let v = cell
+            .get_or_init(|| {
+                fresh = true;
+                compute()
+            })
+            .clone();
+        if fresh {
+            self.computed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+        (v, fresh)
+    }
+
+    /// `(computed, coalesced)` — computations run vs. callers served by
+    /// someone else's computation (in-flight or finished).
+    pub fn counters(&self) -> (u64, u64) {
+        (self.computed.load(Ordering::Relaxed), self.coalesced.load(Ordering::Relaxed))
+    }
+}
+
+impl<K: Hash + Eq + Clone, V: Clone> Default for CoalescingMemo<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +171,41 @@ mod tests {
         memo.reset();
         assert!(memo.is_empty());
         assert_eq!(memo.counters(), (0, 0));
+    }
+
+    #[test]
+    fn coalescing_memo_computes_each_key_exactly_once() {
+        let memo: CoalescingMemo<u64, u64> = CoalescingMemo::new();
+        let calls = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for k in 0..64u64 {
+                        let (v, _) = memo.get_or_compute(&k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            k + 1
+                        });
+                        assert_eq!(v, k + 1);
+                    }
+                });
+            }
+        });
+        // The whole point: 8 threads x 64 keys, 64 computations.
+        assert_eq!(calls.load(Ordering::SeqCst), 64);
+        let (computed, coalesced) = memo.counters();
+        assert_eq!(computed, 64);
+        assert_eq!(coalesced, 8 * 64 - 64);
+    }
+
+    #[test]
+    fn coalescing_memo_reports_the_fresh_caller() {
+        let memo: CoalescingMemo<&'static str, usize> = CoalescingMemo::new();
+        let (v, fresh) = memo.get_or_compute(&"k", || 7);
+        assert!(fresh);
+        assert_eq!(v, 7);
+        let (v, fresh) = memo.get_or_compute(&"k", || unreachable!("must coalesce"));
+        assert!(!fresh);
+        assert_eq!(v, 7);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Config-advisor correctness properties:
+//!
+//! * **frontier-optimality** — on synthetic grids priced from
+//!   `nets::random_network`, every served answer satisfies its budgets,
+//!   lies on the per-(net, device) Pareto frontier (no other point of
+//!   its coordinates dominates it), and bit-matches the brute-force
+//!   argmin over **all** priced points under the shared preference
+//!   order — the index's binary search + prefix tables may only be
+//!   faster, never different;
+//! * **cold-vs-warm equivalence** — replaying the CI query file against
+//!   an empty cache (everything misses, prices, writes back) and then
+//!   against the written cache gives identical answers, with every warm
+//!   query an index hit (`misses == 0`);
+//! * the TCP front end speaks the same protocol, one reply per line.
+
+use std::sync::Arc;
+
+use ef_train::data::Rng;
+use ef_train::device::{pynq_z1, zcu102, Device};
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::explore::{
+    price_point_on, run_sweep_with, DesignPoint, PricedPoint, SweepConfig, SweepOptions,
+};
+use ef_train::layout::Scheme;
+use ef_train::nets::{random_network, Network};
+use ef_train::serve::index::{point_label, Budgets, FrontierIndex, Lookup, Objective};
+use ef_train::serve::{serve_listener, serve_oneshot, Advisor, ServeOptions};
+use ef_train::util::json::Json;
+use ef_train::util::proptest::{pick, range, run};
+
+const BATCHES: [usize; 2] = [1, 4];
+
+fn devices() -> [Device; 2] {
+    [zcu102(), pynq_z1()]
+}
+
+/// Price a synthetic network over the (device, batch, scheme) grid
+/// under a fabricated name — the serve index never needs the zoo.
+fn price_synthetic(net: &Network, name: &str) -> Vec<PricedPoint> {
+    let net_name: Arc<str> = Arc::from(name);
+    let mut out = Vec::new();
+    for dev in devices() {
+        let dev_name: Arc<str> = Arc::from(dev.name.to_ascii_lowercase().as_str());
+        for batch in BATCHES {
+            for scheme in Scheme::ALL {
+                out.push(price_point_on(
+                    net,
+                    &dev,
+                    &DesignPoint {
+                        net: net_name.clone(),
+                        device: dev_name.clone(),
+                        batch,
+                        scheme,
+                    },
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+struct SynthQuery {
+    net: String,
+    device: String,
+    batch: Option<usize>,
+    budgets: Budgets,
+    objective: Objective,
+}
+
+#[derive(Debug)]
+struct Case {
+    points: Vec<PricedPoint>,
+    queries: Vec<SynthQuery>,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let n_nets = range(rng, 1, 2);
+    let mut points = Vec::new();
+    let mut names = Vec::new();
+    for i in 0..n_nets {
+        let name = format!("rand{i}");
+        points.extend(price_synthetic(&random_network(rng), &name));
+        names.push(name);
+    }
+    // Budget caps come from real priced values, so inclusive boundaries
+    // and just-out-of-reach budgets both occur.
+    let mut queries = Vec::new();
+    for _ in 0..12 {
+        let anchor = pick(rng, &points).clone();
+        let cap_f = |rng: &mut Rng, v: f64| match rng.below(3) {
+            0 => None,
+            1 => Some(v),
+            _ => Some(v * 0.6),
+        };
+        let budgets = Budgets {
+            max_latency_ms: cap_f(rng, anchor.latency_ms_per_image()),
+            max_bram: match rng.below(3) {
+                0 => None,
+                1 => Some(anchor.used_brams),
+                _ => Some(anchor.used_brams.saturating_sub(1)),
+            },
+            max_energy_mj: cap_f(rng, anchor.energy_mj_per_image()),
+        };
+        queries.push(SynthQuery {
+            net: pick(rng, &names).clone(),
+            device: pick(rng, &["zcu102", "pynq-z1"]).to_string(),
+            batch: *pick(rng, &[None, Some(1), Some(4), Some(2)]),
+            budgets,
+            objective: *pick(rng, &Objective::ALL),
+        });
+    }
+    Case { points, queries }
+}
+
+#[test]
+fn every_answer_is_budget_true_frontier_optimal_and_matches_brute_force() {
+    run("serve_frontier_optimality", 8, gen_case, |case| {
+        let idx = FrontierIndex::from_points(case.points.clone(), Vec::new());
+        let label_of = |l: &Lookup| match l {
+            Lookup::Found { point, .. } => Some(point_label(point)),
+            _ => None,
+        };
+        for q in &case.queries {
+            let got =
+                idx.lookup(&q.net, &q.device, q.batch, &q.budgets, q.objective);
+            let oracle =
+                idx.brute_force(&q.net, &q.device, q.batch, &q.budgets, q.objective);
+            if q.batch.is_none() {
+                // The advisor's batch-axis path must agree with the
+                // whole-group lookup when the axis covers every batch.
+                let over =
+                    idx.lookup_over(&q.net, &q.device, &BATCHES, &q.budgets, q.objective);
+                assert_eq!(label_of(&over), label_of(&got), "{q:?}");
+            }
+            match got {
+                Lookup::Found { point, .. } => {
+                    // Budgets hold.
+                    assert!(q.budgets.admits(&point), "{q:?} -> {}", point_label(&point));
+                    // Frontier membership within the queried coordinates.
+                    assert!(
+                        !idx.dominated(&point, q.batch),
+                        "{q:?} served a dominated point {}",
+                        point_label(&point)
+                    );
+                    // Bit-match against the brute-force argmin.
+                    let oracle = oracle.expect("oracle must agree feasibility");
+                    assert_eq!(point_label(&point), point_label(oracle), "{q:?}");
+                    assert_eq!(point.cycles, oracle.cycles);
+                    assert_eq!(
+                        point.latency_ms.to_bits(),
+                        oracle.latency_ms.to_bits()
+                    );
+                    assert_eq!(
+                        point.energy_mj.to_bits(),
+                        oracle.energy_mj.to_bits()
+                    );
+                    assert_eq!(point.used_brams, oracle.used_brams);
+                }
+                Lookup::Infeasible { .. } | Lookup::Unknown => {
+                    assert!(
+                        oracle.is_none(),
+                        "index said no but brute force found {} for {q:?}",
+                        point_label(oracle.unwrap())
+                    );
+                }
+            }
+        }
+    });
+}
+
+fn query_file() -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/serve_queries.jsonl");
+    std::fs::read_to_string(path).expect("CI query fixture present")
+}
+
+/// Strip the one legitimately run-dependent field.
+fn without_source(reply: &str) -> Json {
+    let mut obj = Json::parse(reply).unwrap().as_obj().unwrap().clone();
+    obj.remove("source");
+    Json::Obj(obj)
+}
+
+#[test]
+fn cold_and_warm_advisors_give_identical_answers_and_warm_never_misses() {
+    let queries = query_file();
+    let n_queries = queries.lines().filter(|l| !l.trim().is_empty()).count();
+    let tmp = std::env::temp_dir()
+        .join(format!("ef_train_serve_cache_{}.json", std::process::id()));
+    std::fs::remove_file(&tmp).ok();
+    let opts = ServeOptions { search_tilings: true, miss_batches: vec![4, 16] };
+
+    let cold = Advisor::new(SweepCache::empty(), Some(tmp.clone()), None, opts.clone());
+    let cold_replies = serve_oneshot(&cold, &queries);
+    assert_eq!(cold_replies.len(), n_queries);
+    assert!(cold.stats().misses() > 0, "an empty cache must miss");
+    for r in &cold_replies {
+        let j = Json::parse(r).unwrap();
+        assert_eq!(j.field_bool("ok"), Some(true), "fixture queries are feasible: {r}");
+        assert!(j.get("tilings").is_some(), "searched cells carry tilings: {r}");
+    }
+
+    let warm_cache = SweepCache::load(&tmp).expect("write-back produced a loadable cache");
+    assert!(!warm_cache.is_empty());
+    let warm = Advisor::new(warm_cache, Some(tmp.clone()), None, opts);
+    let warm_replies = serve_oneshot(&warm, &queries);
+    std::fs::remove_file(&tmp).ok();
+
+    assert_eq!(warm_replies.len(), cold_replies.len());
+    for (c, w) in cold_replies.iter().zip(&warm_replies) {
+        assert_eq!(without_source(c), without_source(w), "cold {c} vs warm {w}");
+    }
+    assert_eq!(warm.stats().misses(), 0, "warm queries must not price");
+    assert_eq!(warm.stats().coalesced(), 0);
+    assert_eq!(warm.stats().hits(), n_queries as u64, "every warm query is a hit");
+}
+
+#[test]
+fn three_constraint_reply_respects_every_budget() {
+    let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,bhwc,reshaped").unwrap();
+    let mut cache = SweepCache::empty();
+    run_sweep_with(
+        &cfg,
+        &SweepOptions { parallel: false, search_tilings: false },
+        Some(&mut cache),
+    )
+    .unwrap();
+    let advisor = Advisor::new(
+        cache,
+        None,
+        None,
+        ServeOptions { search_tilings: false, miss_batches: vec![4] },
+    );
+    let reply = advisor
+        .respond_line(
+            r#"{"net": "cnn1x", "device": "zcu102", "batch": 4,
+                "max_latency_ms": 10000, "max_bram": 1500, "max_energy_mj": 1000,
+                "objective": "energy"}"#,
+        )
+        .unwrap();
+    let j = Json::parse(&reply).unwrap();
+    assert_eq!(j.field_bool("ok"), Some(true));
+    assert_eq!(j.field_str("source"), Some("hit"));
+    assert!(j.field_f64("latency_ms_per_image").unwrap() <= 10000.0);
+    assert!(j.field_f64("brams").unwrap() <= 1500.0);
+    assert!(j.field_f64("energy_mj_per_image").unwrap() <= 1000.0);
+    assert_eq!(advisor.stats().misses(), 0);
+}
+
+#[test]
+fn tcp_session_speaks_the_protocol() {
+    let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,bhwc,reshaped").unwrap();
+    let mut cache = SweepCache::empty();
+    run_sweep_with(
+        &cfg,
+        &SweepOptions { parallel: false, search_tilings: false },
+        Some(&mut cache),
+    )
+    .unwrap();
+    let advisor = Arc::new(Advisor::new(
+        cache,
+        None,
+        None,
+        ServeOptions { search_tilings: false, miss_batches: vec![4] },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn({
+        let advisor = Arc::clone(&advisor);
+        move || serve_listener(&advisor, listener, Some(1), None).unwrap()
+    });
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            b"{\"net\": \"cnn1x\", \"device\": \"zcu102\", \"batch\": 4}\n\
+              {\"stats\": true}\n",
+        )
+        .unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let reader = BufReader::new(stream);
+    let replies: Vec<String> = reader.lines().collect::<Result<_, _>>().unwrap();
+    server.join().unwrap();
+
+    assert_eq!(replies.len(), 2, "one reply line per request line");
+    let answer = Json::parse(&replies[0]).unwrap();
+    assert_eq!(answer.field_bool("ok"), Some(true));
+    assert_eq!(answer.field_str("source"), Some("hit"));
+    assert_eq!(answer.field_str("scheme"), Some("reshaped"));
+    let stats = Json::parse(&replies[1]).unwrap();
+    assert_eq!(stats.field_f64("queries"), Some(1.0));
+    assert_eq!(stats.field_f64("hits"), Some(1.0));
+    assert_eq!(stats.field_f64("misses"), Some(0.0));
+}

@@ -8,10 +8,14 @@ runner and are reported for context but never fail the build:
   tiling_pruned_priced   priced points of the best-first B_WEI ladder
   modeled_total_cycles   modeled latency summed over the swept grid
 
-Exit 0 when the previous artifact is missing (first run, or the
-retention window expired) or when the two runs used different grid
-sizes (fast_mode mismatch); exit 1 when any gated counter grew by more
-than --max-regression-pct.
+Exit 0 whenever there is no usable baseline -- the previous artifact is
+missing (first run on a branch, or the retention window expired),
+unreadable, or not valid JSON -- and when the two runs used different
+grid sizes (fast_mode mismatch). Only a genuine regression fails the
+lane: a gated counter of the CURRENT run growing by more than
+--max-regression-pct over a readable baseline (a corrupt *current*
+artifact is still an error -- that's this run's own output). Exit 1 on
+regression.
 """
 
 import argparse
@@ -37,10 +41,17 @@ def main() -> int:
     args = ap.parse_args()
 
     if not os.path.exists(args.previous):
-        print(f"no previous artifact at {args.previous}; nothing to diff")
+        print(
+            f"no baseline, skipping: {args.previous} does not exist "
+            "(first run on this branch, or the artifact retention window expired)"
+        )
         return 0
-    with open(args.previous) as f:
-        prev = json.load(f)
+    try:
+        with open(args.previous) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"no baseline, skipping: {args.previous} is unreadable ({e})")
+        return 0
     with open(args.current) as f:
         cur = json.load(f)
 
