@@ -1,0 +1,67 @@
+//! Fleet-simulation benchmark: one fixed, seeded fleet scenario run
+//! cold against the advisor, written to `BENCH_fleet.json` — the
+//! artifact the CI fleet-smoke lane uploads and diffs against the
+//! previous run (`scripts/bench_diff.py` gates
+//! `fleet_makespan_cycles`: the modeled fleet makespan may not grow by
+//! more than 10%).
+//!
+//! Every field in the artifact is deterministic — the report carries
+//! no wall-clock — so for a fixed seed the file is byte-identical
+//! across runs and rayon pool sizes, which is exactly what makes it
+//! diffable. Pass `--fast` (or set `EF_BENCH_FAST=1`) to shrink the
+//! session count for CI.
+
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::fleet::{run_fleet, FleetConfig};
+use ef_train::serve::{Advisor, ServeOptions};
+use ef_train::util::json::Json;
+
+fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast")
+        || std::env::var("EF_BENCH_FAST").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+fn main() {
+    let fast = fast_mode();
+    let cfg = FleetConfig {
+        sessions: if fast { 200 } else { 1000 },
+        ..FleetConfig::default()
+    };
+    let opts = ServeOptions {
+        miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+        ..ServeOptions::default()
+    };
+    // Cold advisor: the bench also exercises the miss path; the grid is
+    // small (nets x devices x batches), so pricing is a fixed prefix of
+    // the run and the steady state is all hits.
+    let advisor = Advisor::new(SweepCache::empty(), None, None, opts);
+    let report = run_fleet(&cfg, &advisor).expect("fleet run");
+
+    let Json::Obj(mut root) = report.to_json() else {
+        unreachable!("fleet reports serialize to an object");
+    };
+    root.insert("bench".into(), Json::Str("fleet".into()));
+    root.insert("fast_mode".into(), Json::Bool(fast));
+    root.insert("seed".into(), Json::Num(cfg.seed as f64));
+    std::fs::write("BENCH_fleet.json", Json::Obj(root).to_string())
+        .expect("write BENCH_fleet.json");
+
+    println!(
+        "fleet bench: {} sessions (seed {}), makespan {} cycles \
+         ({:.2} modeled s), {:.1}% device utilization",
+        report.sessions,
+        cfg.seed,
+        report.makespan_cycles,
+        report.makespan_s(),
+        100.0 * report.device_utilization()
+    );
+    println!(
+        "advisor: {} hits, {} misses, {} coalesced, {} rejected, {} errors",
+        report.advisor.hits,
+        report.advisor.misses,
+        report.advisor.coalesced,
+        report.advisor.rejected,
+        report.advisor.errors
+    );
+    println!("wrote BENCH_fleet.json");
+}

@@ -21,7 +21,8 @@ use std::collections::VecDeque;
 
 use crate::data::Dataset;
 use crate::device::Device;
-use crate::model::scheduler::{network_training_cycles, schedule};
+use crate::model::scheduler::{network_training_cycles_masked, schedule};
+use crate::model::PhaseMask;
 use crate::nets::Network;
 use crate::train::Trainer;
 
@@ -108,6 +109,56 @@ impl AdaptationMonitor {
     }
 }
 
+/// Modeled FPGA cost of one training step (batch) for a (network,
+/// device, batch) under a partial-retraining [`PhaseMask`] — scheduler
+/// + the closed-form Eq. (15)–(27) + aux layers, free of any PJRT
+/// state. This is the *closed-form* masked step cost the live
+/// [`Coordinator`] reports; the fleet simulator prices its sessions
+/// through the discrete-event counterpart
+/// ([`crate::explore::masked_point_cycles`]), which is scheme-aware.
+/// A full mask is the classic full-retraining step; a depth-k mask
+/// prices FP everywhere but BP/WU only over the retrained suffix.
+pub fn fpga_step_cycles(net: &Network, dev: &Device, batch: usize, mask: &PhaseMask) -> u64 {
+    let sched = schedule(net, dev, batch);
+    network_training_cycles_masked(net, &sched, dev, batch, mask)
+}
+
+/// The adaptation session loop, decoupled from the PJRT [`Trainer`]:
+/// pull samples from `ds` into `batcher`, step via `step`, observe the
+/// loss in `monitor`, stop on convergence or `max_steps`. Returns
+/// `(steps, samples_seen, initial_loss)`; the loss history lives
+/// wherever `step` records it. [`Coordinator::adapt`] drives the real
+/// trainer through this; the convergence-edge tests drive synthetic
+/// steppers (`rust/tests/coordinator_adaptation.rs`).
+pub fn drive_adaptation(
+    batcher: &mut Batcher,
+    monitor: &mut AdaptationMonitor,
+    ds: &mut Dataset,
+    batch: usize,
+    max_steps: usize,
+    mut step: impl FnMut(Vec<f32>, Vec<i32>) -> crate::Result<f32>,
+) -> crate::Result<(usize, u64, f32)> {
+    let mut samples_seen = 0u64;
+    let mut steps = 0usize;
+    let mut initial_loss = f32::NAN;
+    while steps < max_steps && !monitor.converged() {
+        // Samples "arrive" one by one — the stream the device sees.
+        while batcher.pending() < batch {
+            let (x, y) = ds.sample();
+            batcher.push(x, y);
+            samples_seen += 1;
+        }
+        let (x, y) = batcher.pop_batch().expect("full batch");
+        let loss = step(x, y)?;
+        if steps == 0 {
+            initial_loss = loss;
+        }
+        monitor.observe(loss);
+        steps += 1;
+    }
+    Ok((steps, samples_seen, initial_loss))
+}
+
 /// Summary of one adaptation session.
 #[derive(Debug, Clone)]
 pub struct AdaptationReport {
@@ -145,10 +196,10 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Modeled FPGA cost of one training step (batch) — scheduler +
-    /// Eq. (15)–(27) + aux layers.
+    /// Eq. (15)–(27) + aux layers, full retraining.
     pub fn fpga_cycles_per_step(&self) -> u64 {
-        let sched = schedule(self.net, self.dev, self.trainer.batch);
-        network_training_cycles(self.net, &sched, self.dev, self.trainer.batch)
+        let mask = PhaseMask::full(self.net.conv_count());
+        fpga_step_cycles(self.net, self.dev, self.trainer.batch, &mask)
     }
 
     /// Drive adaptation on a synthetic sample stream until the monitor
@@ -159,24 +210,16 @@ impl<'a> Coordinator<'a> {
         max_steps: usize,
     ) -> crate::Result<AdaptationReport> {
         let t0 = std::time::Instant::now();
-        let mut samples_seen = 0u64;
-        let mut steps = 0usize;
-        let mut initial_loss = f32::NAN;
-        while steps < max_steps && !self.monitor.converged() {
-            // Samples "arrive" one by one — the stream the device sees.
-            while self.batcher.pending() < self.trainer.batch {
-                let (x, y) = ds.sample();
-                self.batcher.push(x, y);
-                samples_seen += 1;
-            }
-            let (x, y) = self.batcher.pop_batch().expect("full batch");
-            let loss = self.trainer.step(x, y)?;
-            if steps == 0 {
-                initial_loss = loss;
-            }
-            self.monitor.observe(loss);
-            steps += 1;
-        }
+        let trainer = &mut self.trainer;
+        let batch = trainer.batch;
+        let (steps, samples_seen, initial_loss) = drive_adaptation(
+            &mut self.batcher,
+            &mut self.monitor,
+            ds,
+            batch,
+            max_steps,
+            |x, y| trainer.step(x, y),
+        )?;
         let cycles = self.fpga_cycles_per_step();
         let curve: Vec<f32> = self.trainer.history.iter().map(|r| r.loss).collect();
         Ok(AdaptationReport {

@@ -144,33 +144,10 @@ pub fn price_point_on(
     p: &DesignPoint,
 ) -> PricedPoint {
     let sched = schedule(net, dev, p.batch);
+    let full = crate::model::PhaseMask::full(net.conv_count());
+    let (cycles, realloc) = simulate_point_cycles(net, dev, p, &full, &sched);
+
     let layers = net.conv_layers();
-    let budget = on_chip_feature_words(dev);
-
-    let mut cycles = 0u64;
-    let mut realloc = 0u64;
-    for (i, (l, t)) in layers.iter().zip(&sched.tilings).enumerate() {
-        for process in Process::ALL {
-            if i == 0 && process == Process::Bp {
-                continue; // layer 1 produces no input gradient
-            }
-            let spec = StreamSpec {
-                scheme: p.scheme,
-                process,
-                layer: *l,
-                tiling: *t,
-                batch: p.batch,
-                weight_reuse: p.scheme == Scheme::Reshaped,
-            };
-            let r = simulate_layer(&spec, dev, i, budget);
-            cycles += r.total();
-            realloc += r.realloc_cycles;
-        }
-    }
-    for kind in &net.layers {
-        cycles += aux_latency(kind, dev, p.batch);
-    }
-
     let rm = ResourceModel::new(dev);
     let conv = rm.conv_resources(&layers, &sched.tilings);
     let (used_dsps, used_brams) = rm.end_to_end_utilization(net, &conv);
@@ -189,6 +166,70 @@ pub fn price_point_on(
         energy_mj: power_w * secs * 1e3,
         search: None,
     }
+}
+
+/// The one discrete-event pricing loop, mask-parameterized: simulate
+/// every conv (layer, process) the [`crate::model::PhaseMask`] runs
+/// (FP everywhere; BP/WU only over the retrained suffix; layer 1's BP
+/// is structurally skipped either way), plus the aux-layer streaming.
+/// Returns `(total cycles, host-realloc share)`. [`price_point_on`]
+/// calls this with a full mask and [`masked_point_cycles`] with the
+/// session's, so the two can never drift apart.
+fn simulate_point_cycles(
+    net: &crate::nets::Network,
+    dev: &crate::device::Device,
+    p: &DesignPoint,
+    mask: &crate::model::PhaseMask,
+    sched: &crate::model::Schedule,
+) -> (u64, u64) {
+    let layers = net.conv_layers();
+    let budget = on_chip_feature_words(dev);
+    let mut cycles = 0u64;
+    let mut realloc = 0u64;
+    for (i, (l, t)) in layers.iter().zip(&sched.tilings).enumerate() {
+        for process in Process::ALL {
+            if i == 0 && process == Process::Bp {
+                continue; // layer 1 produces no input gradient
+            }
+            if !mask.runs(i, process) {
+                continue; // frozen prefix: FP-only
+            }
+            let spec = StreamSpec {
+                scheme: p.scheme,
+                process,
+                layer: *l,
+                tiling: *t,
+                batch: p.batch,
+                weight_reuse: p.scheme == Scheme::Reshaped,
+            };
+            let r = simulate_layer(&spec, dev, i, budget);
+            cycles += r.total();
+            realloc += r.realloc_cycles;
+        }
+    }
+    for kind in &net.layers {
+        cycles += aux_latency(kind, dev, p.batch);
+    }
+    (cycles, realloc)
+}
+
+/// Modeled cycles of one training step under a partial-retraining
+/// [`crate::model::PhaseMask`] — the same discrete-event pricing as
+/// [`price_point_on`] (literally the same loop,
+/// [`simulate_point_cycles`]). A full mask reproduces
+/// [`price_point_on`]'s `cycles` bit-for-bit by construction;
+/// shallower masks price strictly less BP+WU work, monotonically in
+/// depth (each retrained layer's WU stream is nonempty). This is how
+/// the fleet simulator prices a depth-`k` adaptation session on its
+/// advisor-chosen config.
+pub fn masked_point_cycles(
+    net: &crate::nets::Network,
+    dev: &crate::device::Device,
+    p: &DesignPoint,
+    mask: &crate::model::PhaseMask,
+) -> u64 {
+    let sched = schedule(net, dev, p.batch);
+    simulate_point_cycles(net, dev, p, mask, &sched).0
 }
 
 /// The `(Tr, M_on)` search for one (network, device, batch) cell —

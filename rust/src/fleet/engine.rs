@@ -1,0 +1,287 @@
+//! The discrete-event fleet engine.
+//!
+//! A binary-heap event queue keyed on `(cycle, kind, session id)` —
+//! completions sort before arrivals at the same cycle (a device frees
+//! before a new session can queue behind it), and ties within a kind
+//! break on session id, so the event order is a total function of the
+//! trace. Per session the engine:
+//!
+//! 1. resolves the configuration by querying the shared
+//!    [`Advisor`] at arrival time — the real serving path, so hits,
+//!    misses, coalescing, *and admission-control rejections* happen
+//!    exactly as a live fleet would see them;
+//! 2. prices the adaptation duration as `steps-to-converge ×` the
+//!    masked step cycles of the advisor-chosen scheme
+//!    ([`masked_point_cycles`]; a depth-`k` session pays FP over all
+//!    conv layers but BP/WU over the suffix only);
+//! 3. occupies its device slot for that duration, FIFO-queueing behind
+//!    whatever the slot is already running.
+//!
+//! The engine itself is strictly serial — parallelism lives only
+//! inside the advisor's miss-path pricing — which is what makes the
+//! run bit-identical across `--jobs` values.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use crate::device::Device;
+use crate::explore::{masked_point_cycles, scheme_by_name, DesignPoint};
+use crate::model::PhaseMask;
+use crate::nets::Network;
+use crate::serve::protocol::Query;
+use crate::serve::{canonical_coords, Advisor};
+
+use super::report::{DeviceStat, FleetReport, SessionRecord};
+use super::trace::Session;
+use super::{FleetConfig, REF_FREQ_MHZ};
+
+/// Event classes, in same-cycle processing order.
+const EV_FREE: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+
+/// One device slot's live state.
+struct Slot {
+    kind: String,
+    /// Session index currently running, if any.
+    running: Option<usize>,
+    queue: VecDeque<usize>,
+    busy_cycles: u64,
+    served: usize,
+}
+
+/// What arrival-time resolution decided about a session, kept until
+/// its completion event.
+struct Pending {
+    duration_cycles: u64,
+    power_w: f64,
+    scheme: String,
+    source: String,
+}
+
+/// The advisor's answer distilled to what the engine needs.
+enum Resolution {
+    Run(Pending),
+    /// Admission control said overloaded — the session is dropped
+    /// (a real controller would retry; the open-loop trace does not).
+    Rejected,
+    /// Budget-infeasible or request error — recorded, not run.
+    Failed { source: String },
+}
+
+/// Resolved (network, device) structs per (net, kind) pair.
+type Zoo = BTreeMap<(String, String), (Network, Device)>;
+/// Session duration per (net, kind, batch, scheme, depth) — distinct
+/// sessions of one shape share one masked pricing.
+type DurationMemo = BTreeMap<(String, String, usize, String, usize), u64>;
+
+fn resolve(
+    advisor: &Advisor,
+    s: &Session,
+    zoo: &mut Zoo,
+    durations: &mut DurationMemo,
+) -> crate::Result<Resolution> {
+    let q = Query {
+        net: s.net.clone(),
+        device: s.device_kind.clone(),
+        batch: Some(s.batch),
+        budgets: s.budgets,
+        objective: s.objective,
+    };
+    let reply = advisor.answer(&q);
+    if reply.field_str("error") == Some("overloaded") {
+        return Ok(Resolution::Rejected);
+    }
+    if reply.field_bool("ok") != Some(true) {
+        let source = if reply.field_bool("infeasible") == Some(true) {
+            "infeasible".to_string()
+        } else {
+            "error".to_string()
+        };
+        return Ok(Resolution::Failed { source });
+    }
+    let scheme_name = reply
+        .field_str("scheme")
+        .ok_or_else(|| anyhow!("advisor reply lacks a scheme: {reply}"))?
+        .to_string();
+    let source = reply
+        .field_str("source")
+        .ok_or_else(|| anyhow!("advisor reply lacks a source: {reply}"))?
+        .to_string();
+    let power_w = reply
+        .field_f64("power_w")
+        .ok_or_else(|| anyhow!("advisor reply lacks power_w: {reply}"))?;
+    let (network, dev) = zoo
+        .entry((s.net.clone(), s.device_kind.clone()))
+        .or_insert_with(|| {
+            let (network, _, dev, _) = canonical_coords(&s.net, &s.device_kind)
+                .expect("trace names resolve through the canonical path");
+            (network, dev)
+        });
+    let n_convs = network.conv_count();
+    // Clamp the depth before keying: depth k >= n_convs IS full
+    // retraining, so "full" and every over-deep k share one memoized
+    // pricing instead of re-simulating per spelling.
+    let depth = s.retrain_depth.map_or(n_convs, |k| k.min(n_convs));
+    let key = (
+        s.net.clone(),
+        s.device_kind.clone(),
+        s.batch,
+        scheme_name.clone(),
+        depth,
+    );
+    let cached = durations.get(&key).copied();
+    let duration_cycles = match cached {
+        Some(d) => d,
+        None => {
+            let scheme = scheme_by_name(&scheme_name)
+                .ok_or_else(|| anyhow!("advisor reply names unknown scheme `{scheme_name}`"))?;
+            let mask = PhaseMask::last_k(n_convs, depth);
+            let point = DesignPoint {
+                net: Arc::from(s.net.as_str()),
+                device: Arc::from(s.device_kind.as_str()),
+                batch: s.batch,
+                scheme,
+            };
+            let step_cycles = masked_point_cycles(network, dev, &point, &mask);
+            // Device clock -> fleet reference clock.
+            let per_step_ref = step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64;
+            let d = per_step_ref.max(1) * s.steps as u64;
+            durations.insert(key, d);
+            d
+        }
+    };
+    Ok(Resolution::Run(Pending {
+        duration_cycles,
+        power_w,
+        scheme: scheme_name,
+        source,
+    }))
+}
+
+/// Run `sessions` (time-ordered, ids dense from 0) against `advisor`.
+pub fn run(
+    cfg: &FleetConfig,
+    sessions: &[Session],
+    advisor: &Advisor,
+) -> crate::Result<FleetReport> {
+    let mut slots: Vec<Slot> = cfg
+        .device_slots()
+        .into_iter()
+        .map(|(kind, _)| Slot {
+            kind,
+            running: None,
+            queue: VecDeque::new(),
+            busy_cycles: 0,
+            served: 0,
+        })
+        .collect();
+    let mut pending: Vec<Option<Pending>> = (0..sessions.len()).map(|_| None).collect();
+    let mut starts: Vec<u64> = vec![0; sessions.len()];
+    let mut records: Vec<Option<SessionRecord>> = (0..sessions.len()).map(|_| None).collect();
+    let mut zoo = BTreeMap::new();
+    let mut durations = BTreeMap::new();
+
+    // Min-heap of (cycle, class, session id, slot).
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
+    for s in sessions {
+        heap.push(Reverse((s.arrival_cycle, EV_ARRIVE, s.id, s.device_slot)));
+    }
+
+    let mut makespan = 0u64;
+    let start_session = |slot: &mut Slot,
+                         idx: usize,
+                         now: u64,
+                         pending: &[Option<Pending>],
+                         starts: &mut [u64],
+                         heap: &mut BinaryHeap<Reverse<(u64, u8, u64, usize)>>,
+                         sessions: &[Session]| {
+        let p = pending[idx].as_ref().expect("queued sessions are resolved");
+        starts[idx] = now;
+        slot.running = Some(idx);
+        heap.push(Reverse((
+            now + p.duration_cycles,
+            EV_FREE,
+            sessions[idx].id,
+            sessions[idx].device_slot,
+        )));
+    };
+
+    while let Some(Reverse((now, class, sid, slot_idx))) = heap.pop() {
+        makespan = makespan.max(now);
+        let idx = sid as usize;
+        match class {
+            EV_FREE => {
+                let slot = &mut slots[slot_idx];
+                debug_assert_eq!(slot.running, Some(idx));
+                slot.running = None;
+                slot.served += 1;
+                let s = &sessions[idx];
+                let p = pending[idx].as_ref().expect("completed sessions were resolved");
+                slot.busy_cycles += p.duration_cycles;
+                let start = starts[idx];
+                let secs = p.duration_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6);
+                records[idx] = Some(SessionRecord {
+                    id: s.id,
+                    net: s.net.clone(),
+                    device_kind: s.device_kind.clone(),
+                    device_slot: s.device_slot,
+                    batch: s.batch,
+                    retrain_depth: s.retrain_depth,
+                    steps: s.steps,
+                    scheme: Some(p.scheme.clone()),
+                    source: p.source.clone(),
+                    arrival_cycle: s.arrival_cycle,
+                    start_cycle: start,
+                    end_cycle: now,
+                    queue_cycles: start - s.arrival_cycle,
+                    service_cycles: p.duration_cycles,
+                    energy_mj: p.power_w * secs * 1e3,
+                });
+                if let Some(next) = slot.queue.pop_front() {
+                    start_session(slot, next, now, &pending, &mut starts, &mut heap, sessions);
+                }
+            }
+            _ => {
+                let s = &sessions[idx];
+                match resolve(advisor, s, &mut zoo, &mut durations)? {
+                    Resolution::Run(p) => {
+                        pending[idx] = Some(p);
+                        let slot = &mut slots[slot_idx];
+                        if slot.running.is_none() {
+                            start_session(
+                                slot, idx, now, &pending, &mut starts, &mut heap, sessions,
+                            );
+                        } else {
+                            slot.queue.push_back(idx);
+                        }
+                    }
+                    Resolution::Rejected => {
+                        records[idx] = Some(SessionRecord::unserved(s, "rejected"));
+                    }
+                    Resolution::Failed { source } => {
+                        records[idx] = Some(SessionRecord::unserved(s, &source));
+                    }
+                }
+            }
+        }
+    }
+
+    let records: Vec<SessionRecord> = records
+        .into_iter()
+        .map(|r| r.expect("every session resolves to a record"))
+        .collect();
+    let devices: Vec<DeviceStat> = slots
+        .iter()
+        .enumerate()
+        .map(|(i, s)| DeviceStat {
+            kind: s.kind.clone(),
+            slot: i,
+            sessions: s.served,
+            busy_cycles: s.busy_cycles,
+        })
+        .collect();
+    Ok(FleetReport::build(records, devices, makespan, advisor))
+}

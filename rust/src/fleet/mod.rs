@@ -1,0 +1,280 @@
+//! Fleet simulation — a deterministic discrete-event model of an
+//! online-adaptation **fleet** served by the config advisor.
+//!
+//! EF-Train's deployment story is continuous on-device training for
+//! adaptation and personalization (§1, §2.3); the ROADMAP's north star
+//! is serving that story to millions of users. This subsystem closes
+//! the loop between the two: a synthetic population of edge devices
+//! runs adaptation sessions concurrently, every session resolves its
+//! configuration by querying a shared [`crate::serve::Advisor`]
+//! (hit/miss/coalesce/reject semantics exercised for real), and the
+//! simulator reports fleet-level behaviour — throughput, device
+//! utilization, queueing and adaptation latency percentiles, energy,
+//! advisor load — as a table plus JSON (`ef-train fleet`,
+//! `benches/fleet.rs` → `BENCH_fleet.json`).
+//!
+//! Scenario diversity follows the related work (PAPERS.md): LoCO-PDA
+//! retrains only a suffix of layers per session and TinyTrain adapts
+//! under tight budgets, so traces mix full and partial-retraining
+//! sessions of varying depth — a depth-`k` session prices FP over all
+//! layers but BP/WU over the last `k` conv layers only
+//! ([`crate::model::PhaseMask`]).
+//!
+//! Three modules:
+//!
+//! * [`trace`] — the seedable workload generator: no wall-clock, no
+//!   global state; a fleet trace is a pure function of `--seed`
+//!   ([`crate::util::rng::SplitMix64`] sub-streams for arrivals vs
+//!   session attributes), with configurable device / network / batch /
+//!   retrain-depth mixes and a Poisson arrival process;
+//! * [`engine`] — the discrete-event simulator: a binary-heap event
+//!   queue keyed on cycle with a deterministic session-id tie-break,
+//!   per-device FIFO queueing, advisor-resolved configs, session
+//!   durations = steps-to-converge × masked step cycles
+//!   ([`crate::explore::masked_point_cycles`] on the advisor-chosen
+//!   scheme);
+//! * [`report`] — fleet metrics aggregation, table + JSON emission.
+//!
+//! **Determinism contract:** for a fixed seed the whole run — every
+//! event, every report byte — is identical across repeated runs and
+//! across `--jobs` values. Parallelism exists only *inside* the
+//! advisor's miss-path pricing (scheme rows fan out over rayon), never
+//! in event ordering; `rust/tests/fleet_sim.rs` pins byte-identical
+//! report JSON for `--jobs 1` vs `--jobs 4`.
+//!
+//! A corollary: because sessions resolve one at a time, the advisor
+//! never has more than one pricing in flight during a simulation, so
+//! `--max-inflight-misses N` is only observable here at `N = 0`
+//! (reject every cold pricing). Bounds `N >= 1` matter for the *live*
+//! serving front ends (`ef-train serve`), where queries really are
+//! concurrent; modeling in-flight overload inside the simulation is
+//! the closed-loop arrival-model follow-on (ROADMAP (j)).
+
+pub mod engine;
+pub mod report;
+pub mod trace;
+
+use anyhow::anyhow;
+
+use crate::serve::{canonical_device, canonical_net, Advisor};
+
+/// The fleet timeline's clock: cycles at this reference frequency.
+/// Device-local durations convert via their own clocks (both zoo
+/// boards run 100 MHz, so the conversion is currently the identity —
+/// the plumbing exists so a faster board would still share one
+/// timeline).
+pub const REF_FREQ_MHZ: u64 = 100;
+
+/// One fleet scenario: population, mixes, and arrival process. Names
+/// are canonical (the constructor canonicalizes through
+/// [`crate::serve::canonical_coords`]'s helpers, so "PYNQ_Z1" and
+/// "pynq-z1" in a mix describe the same device kind and hit the same
+/// advisor cells).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Sessions to generate.
+    pub sessions: usize,
+    /// The trace seed — the *only* source of randomness.
+    pub seed: u64,
+    /// Mean session arrivals per modeled second (Poisson process).
+    pub arrival_rate: f64,
+    /// Device kinds and how many fleet instances of each exist.
+    pub device_mix: Vec<(String, usize)>,
+    /// Networks sessions adapt, by weight.
+    pub net_mix: Vec<(String, f64)>,
+    /// Mini-batch sizes sessions train with, by weight.
+    pub batch_mix: Vec<(usize, f64)>,
+    /// Retrain depths, by weight: `None` is full retraining, `Some(k)`
+    /// retrains only the last `k` conv layers (clamped per network).
+    pub depth_mix: Vec<(Option<usize>, f64)>,
+    /// Hard cap on steps-to-converge per session.
+    pub max_session_steps: usize,
+}
+
+impl Default for FleetConfig {
+    /// The CI smoke scenario: both boards, the two small nets, the
+    /// sweep's default batch axis, half the sessions partial-depth.
+    fn default() -> Self {
+        Self {
+            sessions: 200,
+            seed: 7,
+            arrival_rate: 1.0,
+            device_mix: vec![("zcu102".into(), 2), ("pynq-z1".into(), 2)],
+            net_mix: vec![("cnn1x".into(), 1.0), ("lenet10".into(), 1.0)],
+            batch_mix: vec![(4, 3.0), (16, 1.0)],
+            depth_mix: vec![(None, 2.0), (Some(1), 1.0), (Some(2), 1.0)],
+            max_session_steps: 120,
+        }
+    }
+}
+
+/// Split a `name:weight` CSV (weight optional, default 1) into pairs.
+fn split_mix(csv: &str) -> crate::Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in csv.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad weight `{w}` in mix entry `{part}`"))?;
+                (n.trim().to_string(), w)
+            }
+            None => (part.to_string(), 1.0),
+        };
+        if weight <= 0.0 || !weight.is_finite() {
+            return Err(anyhow!("mix entry `{part}` needs a positive finite weight"));
+        }
+        out.push((name, weight));
+    }
+    if out.is_empty() {
+        return Err(anyhow!("mix `{csv}` names no entries"));
+    }
+    Ok(out)
+}
+
+impl FleetConfig {
+    /// Parse the CLI's mix strings into a validated, canonicalized
+    /// config. Every name resolves eagerly (a bad mix fails before any
+    /// simulation), and device/network spellings collapse to their
+    /// canonical cache-key names — alias spellings in a mix land on
+    /// the same advisor cells.
+    #[allow(clippy::too_many_arguments)]
+    pub fn parse(
+        sessions: usize,
+        seed: u64,
+        arrival_rate: f64,
+        device_mix: &str,
+        net_mix: &str,
+        batch_mix: &str,
+        depth_mix: &str,
+        max_session_steps: usize,
+    ) -> crate::Result<Self> {
+        if sessions == 0 {
+            return Err(anyhow!("--sessions must be at least 1"));
+        }
+        if arrival_rate <= 0.0 || !arrival_rate.is_finite() {
+            return Err(anyhow!("--arrival-rate must be a positive number"));
+        }
+        if max_session_steps == 0 {
+            return Err(anyhow!("--max-steps must be at least 1"));
+        }
+        let mut devices: Vec<(String, usize)> = Vec::new();
+        for (name, count) in split_mix(device_mix)? {
+            let (_, canonical) = canonical_device(&name)?;
+            if count.fract() != 0.0 {
+                return Err(anyhow!("device count for `{name}` must be an integer"));
+            }
+            // Alias spellings of one kind merge into one pool entry.
+            match devices.iter_mut().find(|(k, _)| *k == canonical) {
+                Some((_, n)) => *n += count as usize,
+                None => devices.push((canonical, count as usize)),
+            }
+        }
+        let mut nets: Vec<(String, f64)> = Vec::new();
+        for (name, weight) in split_mix(net_mix)? {
+            let (_, canonical) = canonical_net(&name)?;
+            match nets.iter_mut().find(|(k, _)| *k == canonical) {
+                Some((_, w)) => *w += weight,
+                None => nets.push((canonical.to_string(), weight)),
+            }
+        }
+        let batches = split_mix(batch_mix)?
+            .into_iter()
+            .map(|(b, w)| {
+                let b: usize =
+                    b.parse().map_err(|_| anyhow!("bad batch size `{b}` in --batch-mix"))?;
+                if b == 0 {
+                    return Err(anyhow!("batch sizes must be at least 1"));
+                }
+                Ok((b, w))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let depths = split_mix(depth_mix)?
+            .into_iter()
+            .map(|(d, w)| {
+                if d.eq_ignore_ascii_case("full") {
+                    return Ok((None, w));
+                }
+                let k: usize = d
+                    .parse()
+                    .map_err(|_| anyhow!("bad depth `{d}` in --depth-mix (want `full` or k)"))?;
+                if k == 0 {
+                    return Err(anyhow!("retrain depth must be at least 1 (or `full`)"));
+                }
+                Ok((Some(k), w))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Self {
+            sessions,
+            seed,
+            arrival_rate,
+            device_mix: devices,
+            net_mix: nets,
+            batch_mix: batches,
+            depth_mix: depths,
+            max_session_steps,
+        })
+    }
+
+    /// The fleet's device instances, flattened in mix order:
+    /// `(kind, instance-within-kind)` per slot. Slot index is the
+    /// identity both the trace and the engine key on.
+    pub fn device_slots(&self) -> Vec<(String, usize)> {
+        let mut slots = Vec::new();
+        for (kind, count) in &self.device_mix {
+            for i in 0..(*count).max(1) {
+                slots.push((kind.clone(), i));
+            }
+        }
+        slots
+    }
+}
+
+/// Generate the trace and run it through the engine — the whole
+/// `ef-train fleet` pipeline behind one call.
+pub fn run_fleet(cfg: &FleetConfig, advisor: &Advisor) -> crate::Result<report::FleetReport> {
+    let sessions = trace::generate(cfg)?;
+    engine::run(cfg, &sessions, advisor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_canonicalizes_and_merges_aliases() {
+        let cfg = FleetConfig::parse(
+            10,
+            1,
+            0.5,
+            "PYNQ_Z1:2,pynq:1,zcu102:1",
+            "CNN1X:1,lenet10:2",
+            "4:1",
+            "full:1,2:1",
+            50,
+        )
+        .unwrap();
+        assert_eq!(cfg.device_mix, vec![("pynq-z1".to_string(), 3), ("zcu102".to_string(), 1)]);
+        assert_eq!(cfg.net_mix[0].0, "cnn1x");
+        assert_eq!(cfg.device_slots().len(), 4);
+        assert_eq!(cfg.depth_mix, vec![(None, 1.0), (Some(2), 1.0)]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_mixes() {
+        let p = |d: &str, n: &str, b: &str, k: &str| {
+            FleetConfig::parse(10, 1, 1.0, d, n, b, k, 50)
+        };
+        assert!(p("stratix:1", "cnn1x", "4", "full").is_err());
+        assert!(p("zcu102", "nope", "4", "full").is_err());
+        assert!(p("zcu102", "cnn1x", "four", "full").is_err());
+        assert!(p("zcu102", "cnn1x", "0", "full").is_err());
+        assert!(p("zcu102", "cnn1x", "4", "0").is_err());
+        assert!(p("zcu102", "cnn1x", "4", "deep").is_err());
+        assert!(p("zcu102", "cnn1x", "4:-1", "full").is_err());
+        assert!(p("", "cnn1x", "4", "full").is_err());
+        assert!(FleetConfig::parse(0, 1, 1.0, "zcu102", "cnn1x", "4", "full", 50).is_err());
+        assert!(FleetConfig::parse(10, 1, 0.0, "zcu102", "cnn1x", "4", "full", 50).is_err());
+    }
+}

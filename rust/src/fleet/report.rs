@@ -1,0 +1,372 @@
+//! Fleet-level metrics: aggregation, table rendering, and the
+//! deterministic JSON report.
+//!
+//! Everything emitted here is a pure function of the trace and the
+//! advisor's behaviour — **no wall-clock anywhere**, so a fixed seed
+//! yields byte-identical JSON across runs and `--jobs` values (the
+//! determinism contract `rust/tests/fleet_sim.rs` pins, and what lets
+//! CI diff `BENCH_fleet.json` across commits with
+//! `scripts/bench_diff.py`).
+
+use std::collections::BTreeMap;
+
+use crate::report::Table;
+use crate::serve::Advisor;
+use crate::util::json::Json;
+
+use super::trace::Session;
+use super::REF_FREQ_MHZ;
+
+/// One session's simulated outcome.
+#[derive(Debug, Clone)]
+pub struct SessionRecord {
+    pub id: u64,
+    pub net: String,
+    pub device_kind: String,
+    pub device_slot: usize,
+    pub batch: usize,
+    pub retrain_depth: Option<usize>,
+    pub steps: usize,
+    /// The advisor-chosen layout scheme (`None` if the session never
+    /// ran).
+    pub scheme: Option<String>,
+    /// How the config resolved: `hit` | `miss` | `coalesced` |
+    /// `rejected` | `infeasible` | `error`.
+    pub source: String,
+    pub arrival_cycle: u64,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    /// Time spent waiting behind the device's FIFO.
+    pub queue_cycles: u64,
+    /// Modeled adaptation time on the device.
+    pub service_cycles: u64,
+    pub energy_mj: f64,
+}
+
+impl SessionRecord {
+    /// Did this session actually occupy a device?
+    pub fn ran(&self) -> bool {
+        self.scheme.is_some()
+    }
+
+    /// Arrival-to-completion latency (zero for unserved sessions).
+    pub fn sojourn_cycles(&self) -> u64 {
+        self.end_cycle.saturating_sub(self.arrival_cycle)
+    }
+
+    /// A record for a session the fleet never ran (rejected by
+    /// admission control, budget-infeasible, or errored).
+    pub fn unserved(s: &Session, source: &str) -> Self {
+        Self {
+            id: s.id,
+            net: s.net.clone(),
+            device_kind: s.device_kind.clone(),
+            device_slot: s.device_slot,
+            batch: s.batch,
+            retrain_depth: s.retrain_depth,
+            steps: s.steps,
+            scheme: None,
+            source: source.to_string(),
+            arrival_cycle: s.arrival_cycle,
+            start_cycle: s.arrival_cycle,
+            end_cycle: s.arrival_cycle,
+            queue_cycles: 0,
+            service_cycles: 0,
+            energy_mj: 0.0,
+        }
+    }
+}
+
+/// Per device-slot totals.
+#[derive(Debug, Clone)]
+pub struct DeviceStat {
+    pub kind: String,
+    pub slot: usize,
+    pub sessions: usize,
+    pub busy_cycles: u64,
+}
+
+/// The advisor counters the fleet exercised, snapshotted at the end of
+/// the run.
+#[derive(Debug, Clone, Default)]
+pub struct AdvisorCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub cells_priced: u64,
+    pub saves: u64,
+}
+
+/// `sorted` ascending; `q` in [0, 1].
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// p50/p95/max of a cycle population.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CyclePercentiles {
+    pub p50: u64,
+    pub p95: u64,
+    pub max: u64,
+}
+
+impl CyclePercentiles {
+    fn of(mut values: Vec<u64>) -> Self {
+        values.sort_unstable();
+        Self {
+            p50: percentile(&values, 0.50),
+            p95: percentile(&values, 0.95),
+            max: values.last().copied().unwrap_or(0),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("p50_cycles".into(), Json::Num(self.p50 as f64));
+        m.insert("p95_cycles".into(), Json::Num(self.p95 as f64));
+        m.insert("max_cycles".into(), Json::Num(self.max as f64));
+        Json::Obj(m)
+    }
+}
+
+/// A finished fleet run, aggregated.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub sessions: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub infeasible: usize,
+    pub errored: usize,
+    /// Last event on the fleet timeline ([`REF_FREQ_MHZ`] cycles) —
+    /// the modeled makespan the CI bench gate watches.
+    pub makespan_cycles: u64,
+    pub total_busy_cycles: u64,
+    pub total_energy_mj: f64,
+    pub queueing: CyclePercentiles,
+    pub service: CyclePercentiles,
+    pub sojourn: CyclePercentiles,
+    pub devices: Vec<DeviceStat>,
+    pub advisor: AdvisorCounters,
+    pub records: Vec<SessionRecord>,
+}
+
+impl FleetReport {
+    /// Aggregate one engine run. `records` are in session-id order.
+    pub fn build(
+        records: Vec<SessionRecord>,
+        devices: Vec<DeviceStat>,
+        makespan_cycles: u64,
+        advisor: &Advisor,
+    ) -> Self {
+        let completed = records.iter().filter(|r| r.ran()).count();
+        let rejected = records.iter().filter(|r| r.source == "rejected").count();
+        let infeasible = records.iter().filter(|r| r.source == "infeasible").count();
+        let errored = records.iter().filter(|r| r.source == "error").count();
+        let ran: Vec<&SessionRecord> = records.iter().filter(|r| r.ran()).collect();
+        let queueing =
+            CyclePercentiles::of(ran.iter().map(|r| r.queue_cycles).collect());
+        let service =
+            CyclePercentiles::of(ran.iter().map(|r| r.service_cycles).collect());
+        let sojourn =
+            CyclePercentiles::of(ran.iter().map(|r| r.sojourn_cycles()).collect());
+        let total_busy_cycles = devices.iter().map(|d| d.busy_cycles).sum();
+        let total_energy_mj = ran.iter().map(|r| r.energy_mj).sum();
+        let stats = advisor.stats();
+        let advisor = AdvisorCounters {
+            hits: stats.hits(),
+            misses: stats.misses(),
+            coalesced: stats.coalesced(),
+            rejected: stats.rejected(),
+            errors: stats.errors(),
+            cells_priced: stats.cells_priced(),
+            saves: stats.saves(),
+        };
+        Self {
+            sessions: records.len(),
+            completed,
+            rejected,
+            infeasible,
+            errored,
+            makespan_cycles,
+            total_busy_cycles,
+            total_energy_mj,
+            queueing,
+            service,
+            sojourn,
+            devices,
+            advisor,
+            records,
+        }
+    }
+
+    /// Makespan in modeled seconds.
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6)
+    }
+
+    /// Completed adaptation sessions per modeled second.
+    pub fn sessions_per_modeled_s(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.makespan_s()
+    }
+
+    /// Mean busy fraction across all device slots over the makespan.
+    pub fn device_utilization(&self) -> f64 {
+        let capacity = self.devices.len() as u64 * self.makespan_cycles;
+        if capacity == 0 {
+            return 0.0;
+        }
+        self.total_busy_cycles as f64 / capacity as f64
+    }
+
+    fn cycles_ms(c: u64) -> f64 {
+        c as f64 / (REF_FREQ_MHZ as f64 * 1e3)
+    }
+
+    /// The headline metrics as a printable [`Table`].
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Fleet: {} sessions over {} device slots, makespan {:.2} modeled s",
+                self.sessions,
+                self.devices.len(),
+                self.makespan_s()
+            ),
+            &["Metric", "Value"],
+        );
+        let mut row = |k: &str, v: String| t.push(vec![k.to_string(), v]);
+        row("sessions completed", format!("{}", self.completed));
+        row("sessions rejected (overload)", format!("{}", self.rejected));
+        row("sessions infeasible", format!("{}", self.infeasible));
+        row("sessions errored", format!("{}", self.errored));
+        row("sessions / modeled s", format!("{:.3}", self.sessions_per_modeled_s()));
+        row("device utilization", format!("{:.1}%", 100.0 * self.device_utilization()));
+        row("total energy", format!("{:.1} mJ", self.total_energy_mj));
+        row(
+            "queueing p50 / p95 / max",
+            format!(
+                "{:.1} / {:.1} / {:.1} ms",
+                Self::cycles_ms(self.queueing.p50),
+                Self::cycles_ms(self.queueing.p95),
+                Self::cycles_ms(self.queueing.max)
+            ),
+        );
+        row(
+            "adaptation p50 / p95 / max",
+            format!(
+                "{:.1} / {:.1} / {:.1} ms",
+                Self::cycles_ms(self.service.p50),
+                Self::cycles_ms(self.service.p95),
+                Self::cycles_ms(self.service.max)
+            ),
+        );
+        row(
+            "advisor hits / misses / coalesced / rejected",
+            format!(
+                "{} / {} / {} / {}",
+                self.advisor.hits,
+                self.advisor.misses,
+                self.advisor.coalesced,
+                self.advisor.rejected
+            ),
+        );
+        row(
+            "advisor cells priced / cache saves",
+            format!("{} / {}", self.advisor.cells_priced, self.advisor.saves),
+        );
+        t
+    }
+
+    /// Per device-slot occupancy as a printable [`Table`].
+    pub fn device_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fleet device occupancy",
+            &["Slot", "Device", "Sessions", "Busy (modeled s)", "Utilization"],
+        );
+        for d in &self.devices {
+            let util = if self.makespan_cycles == 0 {
+                0.0
+            } else {
+                d.busy_cycles as f64 / self.makespan_cycles as f64
+            };
+            t.push(vec![
+                d.slot.to_string(),
+                d.kind.clone(),
+                d.sessions.to_string(),
+                format!("{:.2}", d.busy_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6)),
+                format!("{:.1}%", 100.0 * util),
+            ]);
+        }
+        t
+    }
+
+    /// The deterministic JSON report. Aggregates only (per-session
+    /// records stay in memory for tests) and **no wall-clock fields**,
+    /// so a fixed seed reproduces this byte-for-byte — the property
+    /// that makes `BENCH_fleet.json` diffable across runs.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("sessions".into(), Json::Num(self.sessions as f64));
+        root.insert("completed".into(), Json::Num(self.completed as f64));
+        root.insert("rejected".into(), Json::Num(self.rejected as f64));
+        root.insert("infeasible".into(), Json::Num(self.infeasible as f64));
+        root.insert("errored".into(), Json::Num(self.errored as f64));
+        root.insert(
+            "fleet_makespan_cycles".into(),
+            Json::Num(self.makespan_cycles as f64),
+        );
+        root.insert(
+            "total_busy_cycles".into(),
+            Json::Num(self.total_busy_cycles as f64),
+        );
+        root.insert(
+            "sessions_per_modeled_s".into(),
+            Json::Num(self.sessions_per_modeled_s()),
+        );
+        root.insert(
+            "device_utilization".into(),
+            Json::Num(self.device_utilization()),
+        );
+        root.insert("total_energy_mj".into(), Json::Num(self.total_energy_mj));
+        root.insert("queueing".into(), self.queueing.to_json());
+        root.insert("adaptation".into(), self.service.to_json());
+        root.insert("sojourn".into(), self.sojourn.to_json());
+        let mut adv = BTreeMap::new();
+        adv.insert("hits".into(), Json::Num(self.advisor.hits as f64));
+        adv.insert("misses".into(), Json::Num(self.advisor.misses as f64));
+        adv.insert("coalesced".into(), Json::Num(self.advisor.coalesced as f64));
+        adv.insert("rejected".into(), Json::Num(self.advisor.rejected as f64));
+        adv.insert("errors".into(), Json::Num(self.advisor.errors as f64));
+        adv.insert(
+            "cells_priced".into(),
+            Json::Num(self.advisor.cells_priced as f64),
+        );
+        adv.insert("saves".into(), Json::Num(self.advisor.saves as f64));
+        root.insert("advisor".into(), Json::Obj(adv));
+        root.insert(
+            "devices".into(),
+            Json::Arr(
+                self.devices
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("slot".into(), Json::Num(d.slot as f64));
+                        m.insert("kind".into(), Json::Str(d.kind.clone()));
+                        m.insert("sessions".into(), Json::Num(d.sessions as f64));
+                        m.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+}

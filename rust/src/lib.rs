@@ -53,13 +53,27 @@
 //! memo (concurrent identical misses collapse to one computation) and
 //! write back to the cache file; queries arrive as JSON-lines over
 //! stdin (`--oneshot`) or TCP (`--listen`), answered across the rayon
-//! pool with hit/miss/dedup and p50/p95 serving stats.
+//! pool with hit/miss/dedup and p50/p95 serving stats, admission
+//! control on the miss path (`--max-inflight-misses`) and batched
+//! cache-file write-back (`--save-every`).
+//!
+//! The **fleet simulator** ([`fleet`], `ef-train fleet`) closes the
+//! serving loop at population scale: a seedable, fully deterministic
+//! discrete-event model of many edge devices running adaptation
+//! sessions concurrently — full and LoCO-PDA-style partial-retraining
+//! sessions ([`model::PhaseMask`] prices FP over all layers, BP/WU
+//! over the retrained suffix only) — each resolving its config through
+//! a shared [`serve::Advisor`] and FIFO-queueing on its modeled
+//! device. Reports fleet throughput, utilization, queueing/adaptation
+//! latency percentiles, energy, and advisor load as table + JSON
+//! (`benches/fleet.rs` → `BENCH_fleet.json`, diffed in CI).
 
 pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod dma;
 pub mod explore;
+pub mod fleet;
 pub mod layout;
 pub mod metrics;
 pub mod model;

@@ -8,6 +8,7 @@ use ef_train::coordinator::Coordinator;
 use ef_train::data::Dataset;
 use ef_train::device::{device_by_name, zcu102};
 use ef_train::explore;
+use ef_train::fleet;
 use ef_train::layout::cache;
 use ef_train::model::scheduler::{network_training_cycles, schedule};
 use ef_train::nets::{network_by_name, NETWORK_NAMES};
@@ -31,7 +32,13 @@ USAGE:
                    [--jobs N] [--cache-file FILE] [--search-tilings]
   ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
                  [--cache-file FILE] [--stats-json FILE] [--jobs N]
-                 [--search-tilings]
+                 [--search-tilings] [--max-inflight-misses N]
+                 [--save-every N]
+  ef-train fleet [--sessions N] [--seed S] [--jobs J] [--cache-file PATH]
+                 [--arrival-rate R] [--depth-mix CSV] [--device-mix CSV]
+                 [--net-mix CSV] [--batch-mix CSV] [--max-steps N]
+                 [--max-inflight-misses N] [--save-every N]
+                 [--search-tilings] [--out FILE]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
@@ -56,13 +63,28 @@ config (budgets are per image; objective: latency | energy | bram).
 reply line each; `--listen ADDR` serves the same protocol over TCP on
 the rayon pool. Warm queries answer from the cache's Pareto frontier
 via binary search; misses price the cell once (concurrent duplicates
-coalesce), write back to --cache-file, and re-index. `{\"stats\": true}`
-or --stats-json F reports hits/misses/coalesced and p50/p95 times.";
+coalesce), write back to --cache-file every --save-every fresh cells
+(plus once on shutdown), and re-index. `--max-inflight-misses N` bounds
+concurrent miss pricings: excess queries get a retryable
+{\"error\": \"overloaded\"} reply. `{\"stats\": true}` or --stats-json F
+reports hits/misses/coalesced/rejected and p50/p95 times.
+
+`fleet` simulates an online-adaptation fleet end to end through the
+advisor: a seedable deterministic trace of adaptation sessions
+(device/net/batch mixes; --depth-mix mixes full retraining with
+LoCO-PDA-style partial sessions, e.g. `full:2,1:1,2:1`, where depth k
+runs BP+WU on only the last k conv layers) arrives at --arrival-rate
+sessions per modeled second, resolves configs via the shared advisor
+(hits/misses/coalescing/rejections for real), and FIFO-queues on the
+modeled devices. Prints fleet metrics and writes the JSON report to
+--out; a fixed --seed is bit-identical across runs and --jobs values.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
     "max-steps", "shift", "nets", "devices", "batches", "schemes", "out",
-    "jobs", "cache-file", "queries", "listen", "stats-json",
+    "jobs", "cache-file", "queries", "listen", "stats-json", "sessions",
+    "arrival-rate", "device-mix", "net-mix", "batch-mix", "depth-mix",
+    "max-inflight-misses", "save-every",
 ];
 
 fn main() {
@@ -247,10 +269,14 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 );
             }
             let stats_path = args.flag("stats-json").map(std::path::PathBuf::from);
-            let opts = serve::ServeOptions {
+            let mut opts = serve::ServeOptions {
                 search_tilings: args.has("search-tilings"),
+                max_inflight_misses: args.try_parse_flag("max-inflight-misses")?,
                 ..serve::ServeOptions::default()
             };
+            if let Some(n) = args.try_parse_flag::<usize>("save-every")? {
+                opts.save_every = n.max(1);
+            }
             let advisor =
                 std::sync::Arc::new(serve::Advisor::new(cache, cache_path, stats_path, opts));
             let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
@@ -293,6 +319,58 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             } else {
                 return Err(anyhow::anyhow!("serve needs --oneshot or --listen ADDR"));
             }
+        }
+        Some("fleet") => {
+            let cfg = fleet::FleetConfig::parse(
+                args.parse_flag("sessions", 200usize),
+                args.parse_flag("seed", 7u64),
+                args.parse_flag("arrival-rate", 1.0f64),
+                &args.flag_or("device-mix", "zcu102:2,pynq-z1:2"),
+                &args.flag_or("net-mix", "cnn1x:1,lenet10:1"),
+                &args.flag_or("batch-mix", "4:3,16:1"),
+                &args.flag_or("depth-mix", "full:2,1:1,2:1"),
+                args.parse_flag("max-steps", 120usize),
+            )?;
+            let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
+            let cache = match cache_path.as_deref() {
+                Some(p) => explore::sweep_cache::SweepCache::load(p)?,
+                None => explore::sweep_cache::SweepCache::empty(),
+            };
+            if !cache.is_empty() {
+                eprintln!(
+                    "fleet: loaded {} point rows, {} searched cells",
+                    cache.len(),
+                    cache.cell_count()
+                );
+            }
+            let mut opts = serve::ServeOptions {
+                search_tilings: args.has("search-tilings"),
+                max_inflight_misses: args.try_parse_flag("max-inflight-misses")?,
+                // Batch-free queries never occur (sessions pin their
+                // batch), but keep the axis aligned with the trace.
+                miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+                ..serve::ServeOptions::default()
+            };
+            if let Some(n) = args.try_parse_flag::<usize>("save-every")? {
+                opts.save_every = n.max(1);
+            }
+            let advisor = serve::Advisor::new(cache, cache_path, None, opts);
+            let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
+            let run = || fleet::run_fleet(&cfg, &advisor);
+            let report = if jobs > 0 {
+                let pool = rayon::ThreadPoolBuilder::new()
+                    .num_threads(jobs)
+                    .build()
+                    .map_err(|e| anyhow::anyhow!("building a {jobs}-thread pool: {e}"))?;
+                pool.install(run)?
+            } else {
+                run()?
+            };
+            println!("{}", report.summary_table());
+            println!("{}", report.device_table());
+            let out = args.flag_or("out", "fleet_report.json");
+            std::fs::write(&out, report.to_json().to_string())?;
+            println!("wrote {out}");
         }
         Some("train") => {
             let net = args.flag_or("net", "cnn1x");

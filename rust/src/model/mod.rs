@@ -9,4 +9,88 @@ pub mod scheduler;
 
 pub use perf::{conv_latency, conv_latency_lower_bound, LatencyBreakdown};
 pub use resource::{ConvResources, ResourceModel};
-pub use scheduler::{schedule, schedule_searched, Schedule, SearchMode, SearchStats};
+pub use scheduler::{
+    network_training_cycles_masked, schedule, schedule_searched, Schedule, SearchMode,
+    SearchStats,
+};
+
+use crate::layout::Process;
+
+/// Which training processes run on each conv layer of an adaptation
+/// session — the LoCO-PDA-style partial-retraining mask (PAPERS.md):
+/// a depth-`k` session forward-propagates through *every* layer but
+/// back-propagates and updates weights only on the last `k` conv
+/// layers; the frozen prefix is FP-only. `k >= n_convs` is full
+/// retraining (the paper's default), and the whole analytic stack
+/// prices a masked session by consulting [`PhaseMask::runs`] per
+/// (conv layer, process).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PhaseMask {
+    n_convs: usize,
+    retrain_suffix: usize,
+}
+
+impl PhaseMask {
+    /// Full retraining: BP + WU on every conv layer.
+    pub fn full(n_convs: usize) -> Self {
+        Self { n_convs, retrain_suffix: n_convs }
+    }
+
+    /// Retrain only the last `k` conv layers (clamped to the network).
+    pub fn last_k(n_convs: usize, k: usize) -> Self {
+        Self { n_convs, retrain_suffix: k.min(n_convs) }
+    }
+
+    /// Number of conv layers that run BP + WU.
+    pub fn depth(&self) -> usize {
+        self.retrain_suffix
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.retrain_suffix == self.n_convs
+    }
+
+    /// Is conv layer `conv_idx` (0-based, front to back) retrained?
+    pub fn retrains(&self, conv_idx: usize) -> bool {
+        conv_idx + self.retrain_suffix >= self.n_convs
+    }
+
+    /// Does `process` run on conv layer `conv_idx` under this mask?
+    /// (Layer 1's structural BP skip — it produces no input gradient —
+    /// is the caller's invariant, orthogonal to the mask.)
+    pub fn runs(&self, conv_idx: usize, process: Process) -> bool {
+        match process {
+            Process::Fp => true,
+            Process::Bp | Process::Wu => self.retrains(conv_idx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_suffix_semantics() {
+        let m = PhaseMask::last_k(5, 2);
+        assert_eq!(m.depth(), 2);
+        assert!(!m.is_full());
+        for i in 0..5 {
+            assert_eq!(m.retrains(i), i >= 3, "layer {i}");
+            assert!(m.runs(i, Process::Fp), "FP always runs on layer {i}");
+            assert_eq!(m.runs(i, Process::Bp), i >= 3);
+            assert_eq!(m.runs(i, Process::Wu), i >= 3);
+        }
+    }
+
+    #[test]
+    fn full_and_overdeep_masks_retrain_everything() {
+        for m in [PhaseMask::full(3), PhaseMask::last_k(3, 3), PhaseMask::last_k(3, 99)] {
+            assert!(m.is_full());
+            assert_eq!(m.depth(), 3);
+            assert!((0..3).all(|i| m.retrains(i)));
+        }
+        let frozen = PhaseMask::last_k(3, 0);
+        assert!((0..3).all(|i| !frozen.retrains(i)), "depth 0 freezes the stack");
+    }
+}

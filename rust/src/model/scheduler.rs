@@ -314,7 +314,25 @@ pub fn network_training_cycles(
     dev: &Device,
     batch: usize,
 ) -> u64 {
-    network_cycles_inner(net, sched, dev, batch, true)
+    let mask = crate::model::PhaseMask::full(net.conv_count());
+    network_training_cycles_masked(net, sched, dev, batch, &mask)
+}
+
+/// [`network_training_cycles`] under a partial-retraining
+/// [`crate::model::PhaseMask`]: FP is priced over every layer, BP/WU
+/// only over the conv layers the mask retrains (LoCO-PDA-style depth-k
+/// adaptation sessions). A full mask reproduces
+/// [`network_training_cycles`] exactly; shallower masks price strictly
+/// less, monotonically in depth (each retrained layer contributes
+/// positive WU cycles) — the fleet simulator's per-session step cost.
+pub fn network_training_cycles_masked(
+    net: &Network,
+    sched: &Schedule,
+    dev: &Device,
+    batch: usize,
+    mask: &crate::model::PhaseMask,
+) -> u64 {
+    network_cycles_inner(net, sched, dev, batch, true, mask)
 }
 
 /// Like [`network_training_cycles`] but excluding FC layers — the
@@ -326,7 +344,8 @@ pub fn network_conv_training_cycles(
     dev: &Device,
     batch: usize,
 ) -> u64 {
-    network_cycles_inner(net, sched, dev, batch, false)
+    let mask = crate::model::PhaseMask::full(net.conv_count());
+    network_cycles_inner(net, sched, dev, batch, false, &mask)
 }
 
 fn network_cycles_inner(
@@ -335,6 +354,7 @@ fn network_cycles_inner(
     dev: &Device,
     batch: usize,
     include_fc: bool,
+    mask: &crate::model::PhaseMask,
 ) -> u64 {
     let mut cycles = 0u64;
     let mut conv_idx = 0usize;
@@ -345,6 +365,9 @@ fn network_cycles_inner(
                 for p in Process::ALL {
                     if conv_idx == 0 && p == Process::Bp {
                         continue; // layer 1 needs no input gradient
+                    }
+                    if !mask.runs(conv_idx, p) {
+                        continue; // frozen prefix: FP-only
                     }
                     cycles += conv_latency_cached(l, t, dev, p, batch).cycles;
                 }
@@ -462,6 +485,26 @@ mod tests {
             assert!(t.tr * 2 >= l.r, "tr {} vs r {}", t.tr, l.r);
             assert_eq!(t.m_on, round_up_to(l.m, 16));
         }
+    }
+
+    #[test]
+    fn masked_cycles_match_full_at_depth_n_and_shrink_below() {
+        let net = alexnet();
+        let dev = zcu102();
+        let s = schedule(&net, &dev, 4);
+        let n = net.conv_layers().len();
+        let full = network_training_cycles(&net, &s, &dev, 4);
+        let full_mask = crate::model::PhaseMask::full(n);
+        assert_eq!(network_training_cycles_masked(&net, &s, &dev, 4, &full_mask), full);
+        let mut prev = 0u64;
+        for k in 0..=n {
+            let mask = crate::model::PhaseMask::last_k(n, k);
+            let c = network_training_cycles_masked(&net, &s, &dev, 4, &mask);
+            assert!(c > prev, "depth {k}: {c} must exceed depth {}: {prev}", k.max(1) - 1);
+            assert!(c <= full, "depth {k} cannot exceed full retraining");
+            prev = c;
+        }
+        assert_eq!(prev, full, "depth n is full retraining");
     }
 
     #[test]

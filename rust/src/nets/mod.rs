@@ -111,6 +111,15 @@ impl Network {
             .collect()
     }
 
+    /// Number of conv layers, without materializing them — the depth a
+    /// partial-retraining [`crate::model::PhaseMask`] is clamped to.
+    pub fn conv_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, LayerKind::Conv(_)))
+            .count()
+    }
+
     /// Total training operations for a batch, the paper's §6.4 formula:
     /// `2 x (3 x sum_i MACs_i - MACs_1)` — every layer does FP+BP+WU
     /// except the first conv which skips BP (Table 3's "N/A").
@@ -220,6 +229,7 @@ mod tests {
         for name in NETWORK_NAMES {
             let net = network_by_name(name).unwrap();
             assert!(!net.conv_layers().is_empty(), "{name}");
+            assert_eq!(net.conv_count(), net.conv_layers().len(), "{name}");
         }
         assert!(network_by_name("nope").is_none());
     }

@@ -26,8 +26,14 @@
 //!
 //! Every request is classified exactly once: `hit` (index answered),
 //! `miss` (this request priced at least one cell), `coalesced` (waited
-//! on someone else's pricing), or `error`. A warm cache therefore
-//! serves with `misses == 0` — asserted by the CI serve-smoke lane.
+//! on someone else's pricing), `rejected` (admission control refused to
+//! start a new pricing — `--max-inflight-misses`), or `error`. A warm
+//! cache therefore serves with `misses == 0` — asserted by the CI
+//! serve-smoke lane — and the fleet simulator's accounting
+//! (`hits + misses + coalesced + rejected == sessions`) leans on the
+//! partition being exhaustive. Miss-path write-back is batched:
+//! `--save-every N` fresh cells per cache-file save, plus a final
+//! flush on drop.
 
 pub mod index;
 pub mod protocol;
@@ -36,22 +42,60 @@ use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
+use anyhow::anyhow;
 use rayon::prelude::*;
 
-use crate::device::device_by_name;
+use crate::device::{device_by_name, Device};
 use crate::explore::sweep_cache::SweepCache;
 use crate::explore::tiling_search::search_tilings;
 use crate::explore::{price_point_on, DesignPoint, PricedPoint, SweepConfig};
 use crate::layout::Scheme;
-use crate::nets::network_by_name;
+use crate::nets::{network_by_name, Network};
 use crate::util::json::Json;
 use crate::util::memo::CoalescingMemo;
 use index::{FrontierIndex, Lookup};
 use protocol::{Query, Request, Source};
+
+/// Resolve a network spelling to the zoo struct and its canonical
+/// cache-key name. Case-insensitive, like the device aliases — the
+/// zoo's own (lowercase) name is the cache key. Part of THE one
+/// canonical-name path (see [`canonical_coords`]).
+pub fn canonical_net(net: &str) -> crate::Result<(Network, &'static str)> {
+    let network = network_by_name(&net.to_ascii_lowercase()).ok_or_else(|| {
+        anyhow!("unknown network `{net}` (have {:?})", crate::nets::NETWORK_NAMES)
+    })?;
+    let name = network.name;
+    Ok((network, name))
+}
+
+/// Resolve a device spelling — including every alias `device_by_name`
+/// accepts ("pynq", "PYNQ_Z1", ...) — to the zoo struct and its
+/// canonical cache-key name (`Device::name` lowercased is exactly the
+/// sweep axis spelling). Part of [`canonical_coords`].
+pub fn canonical_device(device: &str) -> crate::Result<(Device, String)> {
+    let dev = device_by_name(device).ok_or_else(|| anyhow!("unknown device `{device}`"))?;
+    let name = dev.name.to_ascii_lowercase();
+    Ok((dev, name))
+}
+
+/// Resolve request spellings to the zoo structs **and** the canonical
+/// cache-key names — THE one canonical-name path, shared by
+/// [`Advisor::answer`] and the fleet trace generator
+/// ([`crate::fleet::trace`]). Keying the cache/index by a caller's
+/// verbatim spelling would fork warm cells into duplicate re-priced
+/// groups per alias, so every caller must canonicalize here first.
+pub fn canonical_coords(
+    net: &str,
+    device: &str,
+) -> crate::Result<(Network, &'static str, Device, String)> {
+    let (network, net_name) = canonical_net(net)?;
+    let (dev, device_name) = canonical_device(device)?;
+    Ok((network, net_name, dev, device_name))
+}
 
 /// Knobs of one advisor instance.
 #[derive(Debug, Clone)]
@@ -66,6 +110,19 @@ pub struct ServeOptions {
     /// cold advisor and a warm one give identical answers regardless of
     /// what else ran. Defaults to the sweep's own default batch axis.
     pub miss_batches: Vec<usize>,
+    /// Admission control on the miss path: at most this many *new*
+    /// pricings in flight at once. A query that would start one beyond
+    /// the bound gets a structured `{"error": "overloaded",
+    /// "retryable": true}` reply instead of queueing unboundedly;
+    /// coalescing onto an already-running pricing is always admitted
+    /// (it adds no load). `None` admits everything (the PR 4
+    /// behaviour).
+    pub max_inflight_misses: Option<usize>,
+    /// Batched write-back: save the cache file once every this many
+    /// fresh cells (and once more on shutdown/drop for the remainder)
+    /// instead of rewriting the whole file per cell. A burst of K
+    /// misses performs at most `ceil(K / save_every) + 1` saves.
+    pub save_every: usize,
 }
 
 impl Default for ServeOptions {
@@ -73,6 +130,8 @@ impl Default for ServeOptions {
         Self {
             search_tilings: false,
             miss_batches: SweepConfig::default_sweep().batches,
+            max_inflight_misses: None,
+            save_every: 16,
         }
     }
 }
@@ -91,10 +150,16 @@ pub struct ServeStats {
     hits: AtomicU64,
     misses: AtomicU64,
     coalesced: AtomicU64,
+    /// Miss-path pricings refused by admission control
+    /// (`max_inflight_misses`) — the overload signal a fleet
+    /// controller retries on.
+    rejected: AtomicU64,
     errors: AtomicU64,
     infeasible: AtomicU64,
     cells_priced: AtomicU64,
     points_priced: AtomicU64,
+    /// Cache-file saves performed by the batched write-back path.
+    saves: AtomicU64,
     service_us: Mutex<VecDeque<u64>>,
 }
 
@@ -122,6 +187,22 @@ impl ServeStats {
     pub fn coalesced(&self) -> u64 {
         self.count(&self.coalesced)
     }
+
+    pub fn rejected(&self) -> u64 {
+        self.count(&self.rejected)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.count(&self.errors)
+    }
+
+    pub fn saves(&self) -> u64 {
+        self.count(&self.saves)
+    }
+
+    pub fn cells_priced(&self) -> u64 {
+        self.count(&self.cells_priced)
+    }
 }
 
 /// The serving engine: index + miss path + stats, shareable across
@@ -134,12 +215,33 @@ pub struct Advisor {
     stats_path: Option<PathBuf>,
     idx: RwLock<FrontierIndex>,
     inflight: CoalescingMemo<(String, String, usize), ()>,
+    /// Live count of *new* pricings in flight — what
+    /// `max_inflight_misses` bounds. Its own atomic (not derived from
+    /// the memo) because admission must be decided *before* the caller
+    /// blocks on the pricing.
+    inflight_misses: AtomicUsize,
+    /// Fresh cells inserted since the last cache-file save; at
+    /// `save_every` the write-back flushes, and [`Advisor::flush`]
+    /// (also run on drop) covers the remainder. Mutated only under the
+    /// cache mutex, so the save decision and the reset cannot race.
+    unsaved_cells: AtomicU64,
     opts: ServeOptions,
     stats: ServeStats,
     /// Serializes [`Self::persist_stats`] writers (every finished TCP
     /// connection persists; concurrent truncate+write would tear the
     /// file).
     stats_file_lock: Mutex<()>,
+}
+
+/// How one [`Advisor::ensure_cell`] call resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ensure {
+    /// This caller priced the cell.
+    Fresh,
+    /// Waited on (or arrived just after) someone else's pricing.
+    Waited,
+    /// Admission control refused to start a new pricing.
+    Rejected,
 }
 
 impl Advisor {
@@ -156,34 +258,70 @@ impl Advisor {
             stats_path,
             idx,
             inflight: CoalescingMemo::new(),
+            inflight_misses: AtomicUsize::new(0),
+            unsaved_cells: AtomicU64::new(0),
             opts,
             stats: ServeStats::default(),
             stats_file_lock: Mutex::new(()),
         }
     }
 
-    /// Price one (net, device, batch) cell — every layout scheme, plus
-    /// the tiling search when enabled — write it back, and rebuild the
-    /// index, all inside the coalescing memo so identical concurrent
-    /// misses block on this one computation and wake to a warm index.
-    /// Returns whether *this* caller ran the pricing.
+    /// Price one (net, device, batch) cell — every layout scheme (in
+    /// parallel across the rayon pool), plus the tiling search when
+    /// enabled — write it back, and rebuild the index, all inside the
+    /// coalescing memo so identical concurrent misses block on this one
+    /// computation and wake to a warm index.
     ///
-    /// The write-back saves the whole cache file and rebuilds the whole
-    /// index per fresh cell. That is deliberate for now: misses are
-    /// rare after warmup, coalescing already collapses the common
-    /// stampede, and a full rebuild under the cache lock is the
-    /// simplest way to guarantee waiters wake to an index containing
-    /// their cell. Per-group incremental rebuilds and batched saves are
-    /// the ROADMAP follow-on if miss volume ever matters.
-    fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> bool {
+    /// Admission control: a caller that would *start* a new pricing
+    /// must take one of the `max_inflight_misses` permits; at the bound
+    /// it is [`Ensure::Rejected`] instead of queueing unboundedly.
+    /// Coalescing onto an in-flight pricing never needs a permit — the
+    /// wait adds no load.
+    ///
+    /// Write-back is batched: fresh cells accumulate and the cache file
+    /// is saved every `save_every` cells (plus a final [`Self::flush`]
+    /// on drop), so a K-miss burst performs at most
+    /// `ceil(K / save_every) + 1` saves instead of K. The index rebuild
+    /// stays per-cell under the cache lock — waiters must wake to an
+    /// index containing their cell; per-group incremental rebuilds are
+    /// the remaining ROADMAP follow-on.
+    fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> Ensure {
         let key = (net.to_string(), device.to_string(), batch);
+        // Would this call start a new pricing? If the cell is already
+        // in flight (or done) we coalesce for free; otherwise take a
+        // permit — and give it back after the memo resolves (a caller
+        // that raced and merely coalesced holds its permit only for
+        // that pricing's duration, a transient over-count on the
+        // conservative side).
+        let mut permit = false;
+        if !self.inflight.contains(&key) {
+            if let Some(max) = self.opts.max_inflight_misses {
+                let admitted = self
+                    .inflight_misses
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                        (n < max).then_some(n + 1)
+                    })
+                    .is_ok();
+                if admitted {
+                    permit = true;
+                } else if !self.inflight.contains(&key) {
+                    // At the bound AND the cell is still genuinely
+                    // unstarted: refuse. (If another caller began the
+                    // pricing between the two checks, fall through —
+                    // waiting on it adds no load, so rejecting would
+                    // shed traffic the bound does not require.)
+                    return Ensure::Rejected;
+                }
+            }
+        }
         let (_, fresh) = self.inflight.get_or_compute(&key, || {
             let network = network_by_name(net).expect("validated before the miss path");
             let dev = device_by_name(device).expect("validated before the miss path");
             let net_name: Arc<str> = Arc::from(net);
             let dev_name: Arc<str> = Arc::from(device);
             let points: Vec<PricedPoint> = Scheme::ALL
-                .iter()
+                .as_slice()
+                .par_iter()
                 .map(|&scheme| {
                     price_point_on(
                         &network,
@@ -208,40 +346,57 @@ impl Advisor {
             if let Some(s) = &search {
                 cache.insert_cell(net, device, batch, s);
             }
-            if let Some(path) = &self.cache_path {
-                // A failed write-back degrades to a non-persistent miss;
-                // the answer itself is unaffected.
-                if let Err(e) = cache.save(path) {
-                    eprintln!("serve: write-back to {} failed: {e:#}", path.display());
-                }
+            let unsaved = self.unsaved_cells.fetch_add(1, Ordering::Relaxed) + 1;
+            if self.cache_path.is_some() && unsaved >= self.opts.save_every as u64 {
+                self.save_locked(&cache);
             }
             *self.idx.write().unwrap() = FrontierIndex::from_cache(&cache);
         });
-        fresh
+        if permit {
+            self.inflight_misses.fetch_sub(1, Ordering::AcqRel);
+        }
+        if fresh {
+            Ensure::Fresh
+        } else {
+            Ensure::Waited
+        }
+    }
+
+    /// Save the cache file while already holding the cache lock and
+    /// zero the unsaved counter. A failed write degrades to a
+    /// non-persistent miss; the answers themselves are unaffected.
+    fn save_locked(&self, cache: &SweepCache) {
+        let Some(path) = &self.cache_path else {
+            return;
+        };
+        self.unsaved_cells.store(0, Ordering::Relaxed);
+        self.stats.saves.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = cache.save(path) {
+            eprintln!("serve: write-back to {} failed: {e:#}", path.display());
+        }
+    }
+
+    /// Persist any fresh cells the batched write-back has not saved
+    /// yet. Called on drop, so a shutdown never strands priced cells;
+    /// call it explicitly before reading the cache file mid-session.
+    pub fn flush(&self) {
+        let cache = self.cache.lock().unwrap();
+        if self.unsaved_cells.load(Ordering::Relaxed) > 0 {
+            self.save_locked(&cache);
+        }
     }
 
     /// Answer one parsed query, pricing missing cells on the way.
     pub fn answer(&self, q: &Query) -> Json {
-        // Canonicalize both names before any keying: `device_by_name`
-        // accepts aliases ("pynq", "PYNQ_Z1", ...), and keying the
-        // cache/index by the query's verbatim spelling would fork warm
-        // cells into duplicate re-priced groups per alias. The zoo's
-        // own names are the cache keys (`Device::name` lowercased is
-        // exactly the sweep axis spelling).
-        let Some(network) = network_by_name(&q.net) else {
-            self.stats.errors.fetch_add(1, Ordering::Relaxed);
-            return protocol::error(&format!(
-                "unknown network `{}` (have {:?})",
-                q.net,
-                crate::nets::NETWORK_NAMES
-            ));
+        // Canonicalize both names before any keying — the one shared
+        // canonical-name path ([`canonical_coords`]).
+        let (_network, net, _dev, device) = match canonical_coords(&q.net, &q.device) {
+            Ok(c) => c,
+            Err(e) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                return protocol::error(&format!("{e:#}"));
+            }
         };
-        let Some(dev) = device_by_name(&q.device) else {
-            self.stats.errors.fetch_add(1, Ordering::Relaxed);
-            return protocol::error(&format!("unknown device `{}`", q.device));
-        };
-        let net = network.name;
-        let device = dev.name.to_ascii_lowercase();
         let mut wanted: Vec<usize> = match q.batch {
             Some(b) => vec![b],
             None => self.opts.miss_batches.clone(),
@@ -252,10 +407,16 @@ impl Advisor {
         let mut waited = false;
         for &b in &wanted {
             if !self.idx.read().unwrap().has_cell(net, &device, b) {
-                if self.ensure_cell(net, &device, b) {
-                    fresh = true;
-                } else {
-                    waited = true;
+                match self.ensure_cell(net, &device, b) {
+                    Ensure::Fresh => fresh = true,
+                    Ensure::Waited => waited = true,
+                    Ensure::Rejected => {
+                        // Overload is its own classification: exactly
+                        // one of hits/misses/coalesced/rejected per
+                        // query, so fleet accounting stays exhaustive.
+                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        return protocol::overloaded();
+                    }
                 }
             }
         }
@@ -353,10 +514,12 @@ impl Advisor {
         m.insert("hits".into(), Json::Num(s.count(&s.hits) as f64));
         m.insert("misses".into(), Json::Num(s.count(&s.misses) as f64));
         m.insert("coalesced".into(), Json::Num(s.count(&s.coalesced) as f64));
+        m.insert("rejected".into(), Json::Num(s.count(&s.rejected) as f64));
         m.insert("errors".into(), Json::Num(s.count(&s.errors) as f64));
         m.insert("infeasible".into(), Json::Num(s.count(&s.infeasible) as f64));
         m.insert("cells_priced".into(), Json::Num(s.count(&s.cells_priced) as f64));
         m.insert("points_priced".into(), Json::Num(s.count(&s.points_priced) as f64));
+        m.insert("saves".into(), Json::Num(s.count(&s.saves) as f64));
         m.insert("p50_service_us".into(), Json::Num(percentile(&times, 0.50) as f64));
         m.insert("p95_service_us".into(), Json::Num(percentile(&times, 0.95) as f64));
         m.insert(
@@ -389,14 +552,16 @@ impl Advisor {
             self.stats.service_us.lock().unwrap().iter().copied().collect();
         times.sort_unstable();
         format!(
-            "served {} queries: {} hits, {} misses, {} coalesced, {} errors \
-             ({} cells priced); p50 {}us p95 {}us",
+            "served {} queries: {} hits, {} misses, {} coalesced, {} rejected, \
+             {} errors ({} cells priced, {} saves); p50 {}us p95 {}us",
             s.count(&s.queries),
             s.count(&s.hits),
             s.count(&s.misses),
             s.count(&s.coalesced),
+            s.count(&s.rejected),
             s.count(&s.errors),
             s.count(&s.cells_priced),
+            s.count(&s.saves),
             percentile(&times, 0.50),
             percentile(&times, 0.95),
         )
@@ -407,9 +572,25 @@ impl Advisor {
         &self.stats
     }
 
-    /// Surrender the cache (tests: inspect the write-back).
-    pub fn into_cache(self) -> SweepCache {
-        self.cache.into_inner().unwrap()
+    /// Take the cache out — a test hook for inspecting the write-back
+    /// (`into_cache(self)` until the drop-time flush made consuming
+    /// `self` impossible). Zeroes the unsaved counter so the drop-time
+    /// [`Self::flush`] cannot save the now-empty cache over the file.
+    /// An advisor must NOT keep serving after its cache is taken: a
+    /// later miss would batch-save the near-empty replacement cache
+    /// over the file, discarding previously persisted cells.
+    pub fn take_cache(&self) -> SweepCache {
+        let mut cache = self.cache.lock().unwrap();
+        self.unsaved_cells.store(0, Ordering::Relaxed);
+        std::mem::take(&mut *cache)
+    }
+}
+
+impl Drop for Advisor {
+    /// The shutdown half of the batched write-back: whatever the
+    /// per-`save_every` saves have not persisted yet lands now.
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -539,7 +720,7 @@ mod tests {
         assert_eq!(advisor.stats.misses(), 1);
         assert_eq!(advisor.stats.hits(), 1);
         // The write-back landed: every scheme row of the cell is cached.
-        let cache = advisor.into_cache();
+        let cache = advisor.take_cache();
         for scheme in Scheme::ALL {
             let dp = DesignPoint {
                 net: "lenet10".into(),
@@ -606,7 +787,7 @@ mod tests {
         assert_eq!(hit.field_f64("cycles"), miss.field_f64("cycles"));
         assert_eq!(advisor.stats.misses(), 1, "one cell priced across three spellings");
         // The write-back is keyed canonically, never by the alias.
-        let cache = advisor.into_cache();
+        let cache = advisor.take_cache();
         let canonical = DesignPoint {
             net: "cnn1x".into(),
             device: "pynq-z1".into(),
@@ -673,5 +854,123 @@ mod tests {
         assert_eq!(j.field_f64("considered"), Some(0.0));
         assert_eq!(advisor.stats.count(&advisor.stats.infeasible), 1);
         assert_eq!(advisor.stats.hits(), 1, "infeasible is still an index hit");
+    }
+
+    #[test]
+    fn admission_control_rejects_new_pricings_at_the_bound() {
+        // A zero-permit advisor can never *start* a pricing: every warm
+        // query still hits, every miss-path query gets the structured
+        // retryable rejection, and nothing is priced.
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            max_inflight_misses: Some(0),
+            ..ServeOptions::default()
+        });
+        let hit = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(hit.field_str("source"), Some("hit"), "warm cells need no permit");
+        let rej = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "lenet10", "device": "zcu102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(rej.field_bool("ok"), Some(false));
+        assert_eq!(rej.field_str("error"), Some("overloaded"));
+        assert_eq!(rej.field_bool("retryable"), Some(true));
+        assert_eq!(advisor.stats.rejected(), 1);
+        assert_eq!(advisor.stats.misses(), 0);
+        assert_eq!(advisor.stats.cells_priced.load(Ordering::Relaxed), 0);
+        let stats =
+            Json::parse(&advisor.respond_line(r#"{"stats": true}"#).unwrap()).unwrap();
+        assert_eq!(stats.field_f64("rejected"), Some(1.0), "surfaced in the stats report");
+    }
+
+    #[test]
+    fn admission_permits_are_returned_after_each_pricing() {
+        // One permit, used serially: every miss is admitted because the
+        // permit frees when its pricing lands.
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            max_inflight_misses: Some(1),
+            ..ServeOptions::default()
+        });
+        for batch in [1usize, 2] {
+            let line = format!(r#"{{"net": "lenet10", "device": "zcu102", "batch": {batch}}}"#);
+            let j = Json::parse(&advisor.respond_line(&line).unwrap()).unwrap();
+            assert_eq!(j.field_bool("ok"), Some(true), "{line}");
+            assert_eq!(j.field_str("source"), Some("miss"));
+        }
+        assert_eq!(advisor.stats.rejected(), 0);
+        assert_eq!(advisor.stats.misses(), 2);
+    }
+
+    #[test]
+    fn batched_write_back_saves_every_n_cells_and_flushes_the_rest_on_drop() {
+        let tmp = std::env::temp_dir()
+            .join(format!("ef_train_save_every_{}.json", std::process::id()));
+        std::fs::remove_file(&tmp).ok();
+        let save_every = 4usize;
+        let k = 10usize; // cells in the burst
+        let advisor = Advisor::new(
+            SweepCache::empty(),
+            Some(tmp.clone()),
+            None,
+            ServeOptions {
+                miss_batches: vec![4],
+                save_every,
+                ..ServeOptions::default()
+            },
+        );
+        for batch in 1..=k {
+            let line = format!(r#"{{"net": "cnn1x", "device": "zcu102", "batch": {batch}}}"#);
+            let j = Json::parse(&advisor.respond_line(&line).unwrap()).unwrap();
+            assert_eq!(j.field_bool("ok"), Some(true), "{line}");
+        }
+        // K = 10 fresh cells at save_every = 4: exactly 2 in-burst saves
+        // (cells 4 and 8), never one per cell.
+        assert_eq!(advisor.stats.saves(), (k / save_every) as u64);
+        drop(advisor); // flushes cells 9-10
+        // <= ceil(K/N) + 1 saves total, and no cached point lost.
+        let cache = SweepCache::load(&tmp).expect("flushed cache must load");
+        std::fs::remove_file(&tmp).ok();
+        for batch in 1..=k {
+            for scheme in Scheme::ALL {
+                let dp = DesignPoint {
+                    net: "cnn1x".into(),
+                    device: "zcu102".into(),
+                    batch,
+                    scheme,
+                };
+                assert!(
+                    cache.lookup_point(&dp).is_some(),
+                    "batch {batch} {scheme:?} must survive the batched write-back"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flush_is_idempotent_and_skips_the_save_when_nothing_is_unsaved() {
+        let tmp = std::env::temp_dir()
+            .join(format!("ef_train_flush_noop_{}.json", std::process::id()));
+        std::fs::remove_file(&tmp).ok();
+        let advisor = Advisor::new(
+            SweepCache::empty(),
+            Some(tmp.clone()),
+            None,
+            ServeOptions { miss_batches: vec![4], save_every: 1, ..ServeOptions::default() },
+        );
+        advisor.respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#);
+        assert_eq!(advisor.stats.saves(), 1, "save_every = 1 saves per cell");
+        advisor.flush();
+        advisor.flush();
+        assert_eq!(advisor.stats.saves(), 1, "no-op flushes must not re-save");
+        drop(advisor);
+        std::fs::remove_file(&tmp).ok();
     }
 }

@@ -263,6 +263,18 @@ pub fn error(msg: &str) -> Json {
     Json::Obj(m)
 }
 
+/// Admission control refused this query's miss-path pricing: a
+/// structured, *retryable* rejection — unlike [`error`], nothing is
+/// wrong with the request, the advisor is just at its
+/// `--max-inflight-misses` bound right now.
+pub fn overloaded() -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ok".into(), Json::Bool(false));
+    m.insert("error".into(), Json::Str("overloaded".into()));
+    m.insert("retryable".into(), Json::Bool(true));
+    Json::Obj(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

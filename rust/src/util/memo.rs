@@ -54,6 +54,13 @@ impl<K: Hash + Eq + Clone, V: Clone> ShardedMemo<K, V> {
             .clone()
     }
 
+    /// Clone the cached value for `key` without computing — and without
+    /// touching the hit/miss counters, so probing never skews the
+    /// evidence tests that read them.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
     /// `(hits, misses)` since construction or the last [`Self::reset`].
     pub fn counters(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
@@ -125,6 +132,15 @@ impl<K: Hash + Eq + Clone, V: Clone> CoalescingMemo<K, V> {
             self.coalesced.fetch_add(1, Ordering::Relaxed);
         }
         (v, fresh)
+    }
+
+    /// Is `key`'s computation already in flight (or finished)? A `true`
+    /// answer means a caller about to `get_or_compute` this key would
+    /// coalesce rather than start new work — the admission-control
+    /// pre-check: waiting on someone else's pricing adds no load, so
+    /// only callers that would *start* a computation need a permit.
+    pub fn contains(&self, key: &K) -> bool {
+        self.cells.get(key).is_some()
     }
 
     /// `(computed, coalesced)` — computations run vs. callers served by

@@ -5,11 +5,13 @@
 //! generic pieces a project would normally pull from crates.io are
 //! implemented here: a JSON parser/emitter ([`json`]), a micro benchmark
 //! harness ([`bench`]), a property-testing loop ([`proptest`]), a tiny
-//! CLI argument reader ([`cli`]), and a sharded concurrent memo table
-//! ([`memo`]).
+//! CLI argument reader ([`cli`]), a sharded concurrent memo table
+//! ([`memo`]), and a splittable PRNG for deterministic workload
+//! generation ([`rng`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod memo;
 pub mod proptest;
+pub mod rng;

@@ -1,0 +1,133 @@
+//! SplitMix64 — the seed-splitting PRNG behind the fleet simulator's
+//! trace generator.
+//!
+//! [`crate::data::Rng`] (xorshift64*) is the crate's sample-stream
+//! generator; what the fleet trace additionally needs is *stream
+//! derivation*: one user-facing `--seed` must fan out into independent
+//! deterministic sub-streams (arrival process, session attributes) so
+//! that, e.g., changing how many attributes a session draws never
+//! shifts the arrival times. SplitMix64 is the standard splitter for
+//! that job — `stream(seed, salt)` keys an independent generator per
+//! salt. No wall-clock, no global state: every fleet run is a pure
+//! function of its seed.
+
+/// SplitMix64: Steele et al.'s `splittable` PRNG. Passes BigCrush,
+/// one u64 of state, and — the property the fleet leans on — any two
+/// distinct seeds give statistically independent streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64(u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64(seed)
+    }
+
+    /// An independent sub-stream of `seed`: the `salt`-th output of a
+    /// splitter seeded with `seed` becomes the child's seed.
+    pub fn stream(seed: u64, salt: u64) -> Self {
+        let mut splitter = SplitMix64(seed);
+        let mut child = 0;
+        for _ in 0..=(salt % 16) {
+            child = splitter.next_u64();
+        }
+        SplitMix64(child ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa.
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponential with the given rate (mean `1 / rate`) — the fleet's
+    /// Poisson inter-arrival draw.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.uniform()).ln() / rate
+    }
+
+    /// Pick an index by weight (weights need not normalize; all
+    /// non-negative, at least one positive).
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if u < w {
+                return i;
+            }
+            u -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn streams_are_distinct_and_stable() {
+        let mut a = SplitMix64::stream(7, 0);
+        let mut b = SplitMix64::stream(7, 1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys, "salted streams must diverge");
+        let mut a2 = SplitMix64::stream(7, 0);
+        assert_eq!(xs[0], a2.next_u64(), "same salt replays the stream");
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut r = SplitMix64::new(42);
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn exponential_has_the_right_mean() {
+        let mut r = SplitMix64::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn weighted_respects_the_weights() {
+        let mut r = SplitMix64::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.weighted(&[1.0, 2.0, 1.0])] += 1;
+        }
+        assert!(counts[1] > counts[0] && counts[1] > counts[2], "{counts:?}");
+        let frac = counts[1] as f64 / 30_000.0;
+        assert!((frac - 0.5).abs() < 0.03, "{frac}");
+    }
+}

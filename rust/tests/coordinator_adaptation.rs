@@ -1,0 +1,157 @@
+//! Convergence-edge coverage for the adaptation control plane:
+//! `AdaptationMonitor` plateau semantics (windows shorter/longer than
+//! the history, non-improving and worsening streams) and the extracted
+//! `drive_adaptation` session loop `Coordinator::adapt` runs on —
+//! driven here with synthetic steppers, so the edges are testable
+//! without PJRT artifacts.
+
+use ef_train::coordinator::{drive_adaptation, AdaptationMonitor, Batcher};
+use ef_train::data::Dataset;
+
+// --------------------------------------------------------------------------
+// AdaptationMonitor edges
+// --------------------------------------------------------------------------
+
+#[test]
+fn window_shorter_than_history_sees_only_the_tail() {
+    // A long improving prefix must not mask a recent plateau when the
+    // window is much shorter than the history.
+    let mut m = AdaptationMonitor::new(3, 0.01);
+    for i in 0..30 {
+        m.observe(3.0 - 0.09 * i as f32); // long steady improvement
+    }
+    assert!(!m.converged(), "still improving inside the window");
+    for _ in 0..6 {
+        m.observe(0.3); // recent plateau, two windows long
+    }
+    assert!(m.converged(), "the tail windows decide, not the history");
+}
+
+#[test]
+fn window_longer_than_history_never_converges() {
+    let mut m = AdaptationMonitor::new(50, 0.01);
+    for _ in 0..99 {
+        m.observe(1.0); // one observation short of two full windows
+    }
+    assert!(!m.converged(), "needs 2 x window observations");
+    m.observe(1.0);
+    assert!(m.converged(), "exactly two flat windows is a plateau");
+}
+
+#[test]
+fn non_improving_plateau_converges_at_exactly_two_windows() {
+    let mut m = AdaptationMonitor::new(4, 0.01);
+    for i in 0..16 {
+        m.observe(0.7);
+        let expect = i + 1 >= 8;
+        assert_eq!(m.converged(), expect, "after {} observations", i + 1);
+    }
+}
+
+#[test]
+fn worsening_loss_counts_as_converged() {
+    // The plateau rule is "stopped improving" — a worsening stream has
+    // certainly stopped improving, and adaptation should end rather
+    // than burn the device on divergence.
+    let mut m = AdaptationMonitor::new(5, 0.01);
+    for i in 0..10 {
+        m.observe(0.5 + 0.1 * i as f32);
+    }
+    assert!(m.converged());
+}
+
+// --------------------------------------------------------------------------
+// drive_adaptation (the Coordinator::adapt loop) edges
+// --------------------------------------------------------------------------
+
+#[test]
+fn plateau_stepper_stops_early_and_accounts_samples() {
+    let batch = 4usize;
+    let mut batcher = Batcher::new(batch, 4);
+    let mut monitor = AdaptationMonitor::new(5, 0.01);
+    let mut ds = Dataset::new(1, 0.5, 0.0);
+    let mut calls = 0usize;
+    let (steps, samples, initial) =
+        drive_adaptation(&mut batcher, &mut monitor, &mut ds, batch, 100, |x, y| {
+            assert_eq!(x.len(), batch * 3 * 32 * 32);
+            assert_eq!(y.len(), batch);
+            calls += 1;
+            Ok(1.0)
+        })
+        .unwrap();
+    // A flat loss converges as soon as two monitor windows exist.
+    assert_eq!(steps, 10);
+    assert_eq!(calls, 10);
+    assert_eq!(samples, 10 * batch as u64, "empty batcher refills per step");
+    assert_eq!(initial, 1.0);
+    assert_eq!(batcher.pending(), 0, "the loop consumes exactly what it pulls");
+}
+
+#[test]
+fn empty_batcher_with_zero_step_budget_does_nothing() {
+    let mut batcher = Batcher::new(4, 4);
+    let mut monitor = AdaptationMonitor::new(5, 0.01);
+    let mut ds = Dataset::new(1, 0.5, 0.0);
+    let (steps, samples, initial) =
+        drive_adaptation(&mut batcher, &mut monitor, &mut ds, 4, 0, |_, _| {
+            panic!("a zero-step budget must never step")
+        })
+        .unwrap();
+    assert_eq!(steps, 0);
+    assert_eq!(samples, 0, "no samples are pulled for steps that never run");
+    assert!(initial.is_nan());
+    assert_eq!(batcher.pending(), 0);
+}
+
+#[test]
+fn pre_converged_monitor_skips_the_session() {
+    let mut batcher = Batcher::new(2, 4);
+    let mut monitor = AdaptationMonitor::new(3, 0.01);
+    for _ in 0..6 {
+        monitor.observe(0.4); // already plateaued before the session
+    }
+    let mut ds = Dataset::new(2, 0.5, 0.0);
+    let (steps, samples, _) =
+        drive_adaptation(&mut batcher, &mut monitor, &mut ds, 2, 50, |_, _| {
+            panic!("a converged monitor must not step")
+        })
+        .unwrap();
+    assert_eq!((steps, samples), (0, 0));
+}
+
+#[test]
+fn leftover_pending_samples_are_used_before_pulling_new_ones() {
+    let batch = 4usize;
+    let mut batcher = Batcher::new(batch, 4);
+    // Three samples already buffered from a previous burst.
+    for i in 0..3 {
+        batcher.push(vec![0.0; 3 * 32 * 32], i);
+    }
+    let mut monitor = AdaptationMonitor::new(2, 0.01);
+    let mut ds = Dataset::new(3, 0.5, 0.0);
+    let (steps, samples, _) =
+        drive_adaptation(&mut batcher, &mut monitor, &mut ds, batch, 100, |_, _| Ok(0.5))
+            .unwrap();
+    assert_eq!(steps, 4, "flat loss, window 2 -> 4 steps");
+    // The first step tops up the 3 leftovers with 1 fresh sample.
+    assert_eq!(samples, 1 + 3 * batch as u64);
+}
+
+#[test]
+fn stepper_errors_propagate_out_of_the_session() {
+    let mut batcher = Batcher::new(2, 4);
+    let mut monitor = AdaptationMonitor::new(5, 0.01);
+    let mut ds = Dataset::new(4, 0.5, 0.0);
+    let mut calls = 0usize;
+    let err = drive_adaptation(&mut batcher, &mut monitor, &mut ds, 2, 50, |_, _| {
+        calls += 1;
+        if calls == 3 {
+            Err(anyhow::anyhow!("device fell over"))
+        } else {
+            Ok(0.9)
+        }
+    })
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("device fell over"));
+    assert_eq!(calls, 3);
+}

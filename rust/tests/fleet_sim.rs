@@ -1,0 +1,258 @@
+//! Fleet-simulator integration tests: the determinism contract (same
+//! seed => byte-identical report JSON across runs and rayon pool
+//! sizes), the depth-masked pricing properties the ISSUE acceptance
+//! criteria name, exhaustive advisor accounting
+//! (hits + misses + coalesced + rejected == sessions), admission
+//! control under fleet load, and the canonical-name regression (alias
+//! device spellings hit one cache cell from the fleet engine too).
+
+use ef_train::data::Rng;
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::explore::{masked_point_cycles, price_point_on, DesignPoint};
+use ef_train::fleet::{run_fleet, FleetConfig};
+use ef_train::layout::Scheme;
+use ef_train::model::scheduler::{network_training_cycles_masked, schedule};
+use ef_train::model::PhaseMask;
+use ef_train::nets::random_network;
+use ef_train::serve::{Advisor, ServeOptions};
+use ef_train::util::proptest;
+use std::sync::Arc;
+
+/// A small, fast scenario: one net, one batch, both boards.
+fn tiny_cfg(sessions: usize, seed: u64) -> FleetConfig {
+    FleetConfig::parse(
+        sessions,
+        seed,
+        1.0,
+        "zcu102:1,pynq-z1:1",
+        "cnn1x:1",
+        "4:1",
+        "full:2,1:1,2:1",
+        60,
+    )
+    .unwrap()
+}
+
+fn advisor_for(cfg: &FleetConfig) -> Advisor {
+    Advisor::new(
+        SweepCache::empty(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            ..ServeOptions::default()
+        },
+    )
+}
+
+#[test]
+fn same_seed_is_byte_identical_across_runs_and_pool_sizes() {
+    let cfg = tiny_cfg(48, 11);
+    let run_in_pool = |threads: usize| -> String {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .expect("pool");
+        // A fresh cold advisor per run: the report embeds advisor
+        // counters, so identical runs need identical advisor histories.
+        let advisor = advisor_for(&cfg);
+        let report = pool.install(|| run_fleet(&cfg, &advisor)).expect("fleet run");
+        report.to_json().to_string()
+    };
+    let a = run_in_pool(1);
+    let b = run_in_pool(1);
+    assert_eq!(a, b, "two identical runs must emit identical bytes");
+    let c = run_in_pool(4);
+    assert_eq!(
+        a, c,
+        "parallelism lives only inside advisor pricing; event order and \
+         report bytes may not depend on the pool size"
+    );
+}
+
+#[test]
+fn advisor_accounting_is_exhaustive_and_sessions_all_resolve() {
+    let cfg = tiny_cfg(64, 3);
+    let advisor = advisor_for(&cfg);
+    let report = run_fleet(&cfg, &advisor).unwrap();
+    assert_eq!(report.sessions, 64);
+    let adv = &report.advisor;
+    assert_eq!(
+        adv.hits + adv.misses + adv.coalesced + adv.rejected,
+        64,
+        "every session is classified exactly once: {adv:?}"
+    );
+    assert_eq!(adv.errors, 0, "canonical trace names cannot error");
+    assert_eq!(report.rejected, 0, "no admission bound configured");
+    assert_eq!(report.completed, 64);
+    assert!(adv.misses >= 1, "a cold advisor must price the first cell");
+    assert!(adv.hits > 0, "repeat sessions must hit");
+    assert!(report.makespan_cycles > 0);
+    assert!(report.device_utilization() > 0.0 && report.device_utilization() <= 1.0);
+    // Session records are complete, time-consistent, and energy-bearing.
+    for r in &report.records {
+        assert!(r.ran(), "session {} must have run: {:?}", r.id, r.source);
+        assert!(r.start_cycle >= r.arrival_cycle);
+        assert_eq!(r.end_cycle - r.start_cycle, r.service_cycles);
+        assert_eq!(r.start_cycle - r.arrival_cycle, r.queue_cycles);
+        assert!(r.service_cycles > 0);
+        assert!(r.energy_mj > 0.0);
+    }
+}
+
+#[test]
+fn warm_cache_serves_the_whole_fleet_without_pricing() {
+    let cfg = tiny_cfg(32, 5);
+    // Warm pass populates the advisor's cache file-lessly; reuse its
+    // cache for the second, fully warm fleet.
+    let cold = advisor_for(&cfg);
+    run_fleet(&cfg, &cold).unwrap();
+    let warm = Advisor::new(
+        cold.take_cache(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            ..ServeOptions::default()
+        },
+    );
+    let report = run_fleet(&cfg, &warm).unwrap();
+    assert_eq!(report.advisor.misses, 0, "warm fleet must not price");
+    assert_eq!(report.advisor.hits, 32);
+}
+
+#[test]
+fn admission_bound_rejects_the_cold_fleet_and_admits_the_warm_one() {
+    let cfg = tiny_cfg(24, 9);
+    let opts = ServeOptions {
+        miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+        max_inflight_misses: Some(0),
+        ..ServeOptions::default()
+    };
+    let choked = Advisor::new(SweepCache::empty(), None, None, opts.clone());
+    let report = run_fleet(&cfg, &choked).unwrap();
+    assert_eq!(report.rejected, 24, "a zero-permit cold advisor rejects everything");
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.advisor.rejected, 24);
+    assert_eq!(
+        report.advisor.hits
+            + report.advisor.misses
+            + report.advisor.coalesced
+            + report.advisor.rejected,
+        24,
+        "rejected sessions still land in the exhaustive classification"
+    );
+    assert_eq!(report.makespan_cycles, report.records.last().unwrap().arrival_cycle);
+    for r in &report.records {
+        assert!(!r.ran());
+        assert_eq!(r.source, "rejected");
+        assert_eq!(r.energy_mj, 0.0);
+    }
+    // The same bound with a warm cache never needs a permit.
+    let warm_src = advisor_for(&cfg);
+    run_fleet(&cfg, &warm_src).unwrap();
+    let warm = Advisor::new(warm_src.take_cache(), None, None, opts);
+    let report = run_fleet(&cfg, &warm).unwrap();
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.completed, 24);
+}
+
+#[test]
+fn alias_device_spellings_hit_one_cache_cell_from_the_engine() {
+    // The canonical-name path is shared (serve::canonical_coords):
+    // sessions spelled "PYNQ_Z1" and "pynq-z1" must resolve to the
+    // same advisor cell — one pricing total, keyed canonically.
+    let cfg = FleetConfig {
+        sessions: 12,
+        seed: 2,
+        arrival_rate: 1.0,
+        device_mix: vec![("PYNQ_Z1".into(), 1), ("pynq-z1".into(), 1)],
+        net_mix: vec![("cnn1x".into(), 1.0)],
+        batch_mix: vec![(4, 1.0)],
+        depth_mix: vec![(None, 1.0)],
+        max_session_steps: 40,
+    };
+    let advisor = advisor_for(&cfg);
+    let report = run_fleet(&cfg, &advisor).unwrap();
+    assert_eq!(report.advisor.misses, 1, "one cell across both spellings");
+    assert_eq!(report.advisor.hits, 11);
+    assert_eq!(report.completed, 12);
+    let cache = advisor.take_cache();
+    let canonical = DesignPoint {
+        net: "cnn1x".into(),
+        device: "pynq-z1".into(),
+        batch: 4,
+        scheme: Scheme::Reshaped,
+    };
+    assert!(cache.lookup_point(&canonical).is_some(), "write-back keys canonically");
+    let aliased = DesignPoint { device: "PYNQ_Z1".into(), ..canonical };
+    assert!(cache.lookup_point(&aliased).is_none(), "never by the alias spelling");
+}
+
+#[test]
+fn full_mask_prices_identically_to_the_unmasked_point() {
+    let net = ef_train::nets::network_by_name("cnn1x").unwrap();
+    let dev = ef_train::device::device_by_name("zcu102").unwrap();
+    let n = net.conv_layers().len();
+    for scheme in Scheme::ALL {
+        let p = DesignPoint {
+            net: Arc::from("cnn1x"),
+            device: Arc::from("zcu102"),
+            batch: 4,
+            scheme,
+        };
+        let full = price_point_on(&net, &dev, &p).cycles;
+        let masked = masked_point_cycles(&net, &dev, &p, &PhaseMask::full(n));
+        assert_eq!(masked, full, "{scheme:?}: a full mask is the unmasked pricing");
+    }
+}
+
+#[test]
+fn depth_k_prices_strictly_less_and_monotonically_over_random_networks() {
+    // The ISSUE acceptance property: depth-k sessions price strictly
+    // less modeled BP+WU work than full retraining of the same
+    // (net, device, batch), monotonically in k — for both the
+    // discrete-event pricing the fleet engine uses and the closed-form
+    // path the coordinator reports.
+    let cases = proptest::default_cases().min(24);
+    proptest::run(
+        "masked pricing monotone in retrain depth",
+        cases,
+        |rng: &mut Rng| {
+            let net = random_network(rng);
+            let batch = *proptest::pick(rng, &[1usize, 4]);
+            let scheme = *proptest::pick(rng, &Scheme::ALL);
+            (net, batch, scheme)
+        },
+        |(net, batch, scheme)| {
+            let dev = ef_train::device::zcu102();
+            let n = net.conv_layers().len();
+            let p = DesignPoint {
+                net: Arc::from(net.name),
+                device: Arc::from("zcu102"),
+                batch: *batch,
+                scheme: *scheme,
+            };
+            let sched = schedule(net, &dev, *batch);
+            let mut prev_sim = 0u64;
+            let mut prev_cf = 0u64;
+            for k in 0..=n {
+                let mask = PhaseMask::last_k(n, k);
+                let sim = masked_point_cycles(net, &dev, &p, &mask);
+                let cf = network_training_cycles_masked(net, &sched, &dev, *batch, &mask);
+                assert!(
+                    sim > prev_sim,
+                    "sim pricing must grow strictly with depth: k={k} {sim} vs {prev_sim}"
+                );
+                assert!(
+                    cf > prev_cf,
+                    "closed form must grow strictly with depth: k={k} {cf} vs {prev_cf}"
+                );
+                prev_sim = sim;
+                prev_cf = cf;
+            }
+            let full_sim = masked_point_cycles(net, &dev, &p, &PhaseMask::full(n));
+            assert_eq!(prev_sim, full_sim, "depth n == full retraining");
+        },
+    );
+}

@@ -189,7 +189,8 @@ fn cold_and_warm_advisors_give_identical_answers_and_warm_never_misses() {
     let tmp = std::env::temp_dir()
         .join(format!("ef_train_serve_cache_{}.json", std::process::id()));
     std::fs::remove_file(&tmp).ok();
-    let opts = ServeOptions { search_tilings: true, miss_batches: vec![4, 16] };
+    let opts =
+        ServeOptions { search_tilings: true, miss_batches: vec![4, 16], ..ServeOptions::default() };
 
     let cold = Advisor::new(SweepCache::empty(), Some(tmp.clone()), None, opts.clone());
     let cold_replies = serve_oneshot(&cold, &queries);
@@ -201,6 +202,9 @@ fn cold_and_warm_advisors_give_identical_answers_and_warm_never_misses() {
         assert!(j.get("tilings").is_some(), "searched cells carry tilings: {r}");
     }
 
+    // Write-back is batched now: flush the below-threshold remainder
+    // before reading the file (a shutdown/drop would do the same).
+    cold.flush();
     let warm_cache = SweepCache::load(&tmp).expect("write-back produced a loadable cache");
     assert!(!warm_cache.is_empty());
     let warm = Advisor::new(warm_cache, Some(tmp.clone()), None, opts);
@@ -230,7 +234,7 @@ fn three_constraint_reply_respects_every_budget() {
         cache,
         None,
         None,
-        ServeOptions { search_tilings: false, miss_batches: vec![4] },
+        ServeOptions { search_tilings: false, miss_batches: vec![4], ..ServeOptions::default() },
     );
     let reply = advisor
         .respond_line(
@@ -262,7 +266,7 @@ fn tcp_session_speaks_the_protocol() {
         cache,
         None,
         None,
-        ServeOptions { search_tilings: false, miss_batches: vec![4] },
+        ServeOptions { search_tilings: false, miss_batches: vec![4], ..ServeOptions::default() },
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();

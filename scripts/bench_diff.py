@@ -1,21 +1,28 @@
 #!/usr/bin/env python3
-"""Diff two BENCH_explore.json artifacts and fail on perf regressions.
+"""Diff two bench artifacts and fail on perf regressions.
+
+Handles both artifact kinds, keyed by the artifact's own "bench" field
+(absent means the original explore artifact):
+
+  explore (BENCH_explore.json) gates:
+    pruned_latency_evals   closed-form work of the pruned scheduler search
+    tiling_pruned_priced   priced points of the best-first B_WEI ladder
+    modeled_total_cycles   modeled latency summed over the swept grid
+
+  fleet (BENCH_fleet.json) gates:
+    fleet_makespan_cycles  modeled makespan of the seeded fleet scenario
 
 Only deterministic counters are gated -- wall-clock keys vary with the
-runner and are reported for context but never fail the build:
-
-  pruned_latency_evals   closed-form work of the pruned scheduler search
-  tiling_pruned_priced   priced points of the best-first B_WEI ladder
-  modeled_total_cycles   modeled latency summed over the swept grid
+runner and are reported for context but never fail the build.
 
 Exit 0 whenever there is no usable baseline -- the previous artifact is
 missing (first run on a branch, or the retention window expired),
-unreadable, or not valid JSON -- and when the two runs used different
-grid sizes (fast_mode mismatch). Only a genuine regression fails the
-lane: a gated counter of the CURRENT run growing by more than
---max-regression-pct over a readable baseline (a corrupt *current*
-artifact is still an error -- that's this run's own output). Exit 1 on
-regression.
+unreadable, or not valid JSON -- and when the two runs are not
+comparable (fast_mode or bench-kind mismatch, different fleet session
+counts or seeds). Only a genuine regression fails the lane: a gated
+counter of the CURRENT run growing by more than --max-regression-pct
+over a readable baseline (a corrupt *current* artifact is still an
+error -- that's this run's own output). Exit 1 on regression.
 """
 
 import argparse
@@ -23,20 +30,42 @@ import json
 import os
 import sys
 
-GATED = ["pruned_latency_evals", "tiling_pruned_priced", "modeled_total_cycles"]
-CONTEXT = [
-    "rayon_cold_s",
-    "rayon_warm_s",
-    "pruning_factor",
-    "tiling_exhaustive_priced",
-    "tiling_pruned_levels",
-]
+KINDS = {
+    "explore": {
+        "gated": [
+            "pruned_latency_evals",
+            "tiling_pruned_priced",
+            "modeled_total_cycles",
+        ],
+        "context": [
+            "rayon_cold_s",
+            "rayon_warm_s",
+            "pruning_factor",
+            "tiling_exhaustive_priced",
+            "tiling_pruned_levels",
+        ],
+        # Both runs must agree on these for the grids to be comparable.
+        "compat": ["fast_mode"],
+    },
+    "fleet": {
+        "gated": ["fleet_makespan_cycles"],
+        "context": [
+            "sessions_per_modeled_s",
+            "device_utilization",
+            "total_energy_mj",
+            "total_busy_cycles",
+            "completed",
+            "rejected",
+        ],
+        "compat": ["fast_mode", "sessions", "seed"],
+    },
+}
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("previous", help="previous run's BENCH_explore.json")
-    ap.add_argument("current", help="this run's BENCH_explore.json")
+    ap.add_argument("previous", help="previous run's bench artifact")
+    ap.add_argument("current", help="this run's bench artifact")
     ap.add_argument("--max-regression-pct", type=float, default=10.0)
     args = ap.parse_args()
 
@@ -55,16 +84,28 @@ def main() -> int:
     with open(args.current) as f:
         cur = json.load(f)
 
-    if prev.get("fast_mode") != cur.get("fast_mode"):
+    kind = cur.get("bench", "explore")
+    if kind not in KINDS:
+        print(f"unknown bench kind {kind!r}, skipping diff")
+        return 0
+    if prev.get("bench", "explore") != kind:
         print(
-            f"fast_mode changed ({prev.get('fast_mode')} -> {cur.get('fast_mode')}); "
-            "grids are not comparable, skipping diff"
+            f"bench kind changed ({prev.get('bench', 'explore')} -> {kind}); "
+            "artifacts are not comparable, skipping diff"
         )
         return 0
+    spec = KINDS[kind]
+    for key in spec["compat"]:
+        if prev.get(key) != cur.get(key):
+            print(
+                f"{key} changed ({prev.get(key)} -> {cur.get(key)}); "
+                "runs are not comparable, skipping diff"
+            )
+            return 0
 
     failures = []
-    for key in GATED + CONTEXT:
-        gated = key in GATED
+    for key in spec["gated"] + spec["context"]:
+        gated = key in spec["gated"]
         if key not in prev or key not in cur:
             print(f"  {key}: absent in one run, skipped")
             continue
@@ -79,7 +120,7 @@ def main() -> int:
     if failures:
         print(
             f"FAIL: >{args.max_regression_pct:g}% regression in "
-            f"{', '.join(failures)} -- priced points / modeled latency must not grow"
+            f"{', '.join(failures)} -- gated bench counters must not grow"
         )
         return 1
     print("bench diff clean")
