@@ -73,15 +73,17 @@ enum Resolution {
 
 /// Resolved (network, device) structs per (net, kind) pair.
 type Zoo = BTreeMap<(String, String), (Network, Device)>;
-/// Session duration per (net, kind, batch, scheme, depth) — distinct
-/// sessions of one shape share one masked pricing.
-type DurationMemo = BTreeMap<(String, String, usize, String, usize), u64>;
+/// Per-step masked cost (reference-clock cycles) per
+/// (net, kind, batch, scheme, depth) — distinct sessions of one shape
+/// share one masked pricing, but each multiplies in its own
+/// steps-to-converge.
+type StepCostMemo = BTreeMap<(String, String, usize, String, usize), u64>;
 
 fn resolve(
     advisor: &Advisor,
     s: &Session,
     zoo: &mut Zoo,
-    durations: &mut DurationMemo,
+    step_costs: &mut StepCostMemo,
 ) -> crate::Result<Resolution> {
     let q = Query {
         net: s.net.clone(),
@@ -132,9 +134,8 @@ fn resolve(
         scheme_name.clone(),
         depth,
     );
-    let cached = durations.get(&key).copied();
-    let duration_cycles = match cached {
-        Some(d) => d,
+    let per_step_ref = match step_costs.get(&key).copied() {
+        Some(c) => c,
         None => {
             let scheme = scheme_by_name(&scheme_name)
                 .ok_or_else(|| anyhow!("advisor reply names unknown scheme `{scheme_name}`"))?;
@@ -147,12 +148,15 @@ fn resolve(
             };
             let step_cycles = masked_point_cycles(network, dev, &point, &mask);
             // Device clock -> fleet reference clock.
-            let per_step_ref = step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64;
-            let d = per_step_ref.max(1) * s.steps as u64;
-            durations.insert(key, d);
-            d
+            let c = (step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64).max(1);
+            step_costs.insert(key, c);
+            c
         }
     };
+    // The memo holds only the per-step cost: every session — first or
+    // not — pays its OWN steps-to-converge on top of the shared
+    // pricing ("durations = steps × masked step cycles").
+    let duration_cycles = per_step_ref * s.steps as u64;
     Ok(Resolution::Run(Pending {
         duration_cycles,
         power_w,
@@ -182,7 +186,7 @@ pub fn run(
     let mut starts: Vec<u64> = vec![0; sessions.len()];
     let mut records: Vec<Option<SessionRecord>> = (0..sessions.len()).map(|_| None).collect();
     let mut zoo = BTreeMap::new();
-    let mut durations = BTreeMap::new();
+    let mut step_costs = BTreeMap::new();
 
     // Min-heap of (cycle, class, session id, slot).
     let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
@@ -246,7 +250,7 @@ pub fn run(
             }
             _ => {
                 let s = &sessions[idx];
-                match resolve(advisor, s, &mut zoo, &mut durations)? {
+                match resolve(advisor, s, &mut zoo, &mut step_costs)? {
                     Resolution::Run(p) => {
                         pending[idx] = Some(p);
                         let slot = &mut slots[slot_idx];

@@ -219,11 +219,15 @@ impl FleetConfig {
 
     /// The fleet's device instances, flattened in mix order:
     /// `(kind, instance-within-kind)` per slot. Slot index is the
-    /// identity both the trace and the engine key on.
+    /// identity both the trace and the engine key on. Counts are taken
+    /// at face value — [`Self::parse`] guarantees every count is at
+    /// least 1, and [`trace::generate`] re-validates hand-built
+    /// configs, so a zero count is an error upstream rather than a
+    /// silently conjured phantom device here.
     pub fn device_slots(&self) -> Vec<(String, usize)> {
         let mut slots = Vec::new();
         for (kind, count) in &self.device_mix {
-            for i in 0..(*count).max(1) {
+            for i in 0..*count {
                 slots.push((kind.clone(), i));
             }
         }

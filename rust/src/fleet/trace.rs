@@ -12,6 +12,8 @@
 //! [`AdaptationMonitor`], so the fleet converges by the same plateau
 //! rule the live [`crate::coordinator::Coordinator`] uses.
 
+use anyhow::anyhow;
+
 use crate::coordinator::AdaptationMonitor;
 use crate::serve::index::{Budgets, Objective};
 use crate::serve::{canonical_device, canonical_net};
@@ -68,10 +70,15 @@ fn steps_to_converge(rng: &mut SplitMix64, depth_frac: f64, max_steps: usize) ->
 /// Generate the whole trace for `cfg` — a pure function of the seed.
 pub fn generate(cfg: &FleetConfig) -> crate::Result<Vec<Session>> {
     let slots = cfg.device_slots();
-    // Validated + canonicalized at parse; resolve once more here so a
-    // hand-built config cannot smuggle unknown names into the engine.
-    for (kind, _) in &cfg.device_mix {
+    // Validated + canonicalized at parse; re-check here so a
+    // hand-built config cannot smuggle unknown names or zero-instance
+    // device kinds into the engine (slot indices assume every mix
+    // entry contributes at least one slot).
+    for (kind, count) in &cfg.device_mix {
         canonical_device(kind)?;
+        if *count == 0 {
+            return Err(anyhow!("device mix entry `{kind}` has zero instances"));
+        }
     }
     let mut nets = Vec::with_capacity(cfg.net_mix.len());
     for (name, weight) in &cfg.net_mix {
@@ -179,6 +186,18 @@ mod tests {
         }
         assert!(partial > 0, "the default depth mix produces partial sessions");
         assert!(partial < trace.len(), "and full sessions");
+    }
+
+    #[test]
+    fn generate_rejects_zero_instance_device_kinds() {
+        // device_slots() takes counts at face value, so a hand-built
+        // config with a zero count must error here rather than conjure
+        // a phantom device (or desync the trace's slot indices).
+        let cfg = FleetConfig {
+            device_mix: vec![("zcu102".into(), 1), ("pynq-z1".into(), 0)],
+            ..FleetConfig::default()
+        };
+        assert!(generate(&cfg).is_err());
     }
 
     #[test]

@@ -115,7 +115,10 @@ pub struct ServeOptions {
     /// the bound gets a structured `{"error": "overloaded",
     /// "retryable": true}` reply instead of queueing unboundedly;
     /// coalescing onto an already-running pricing is always admitted
-    /// (it adds no load). `None` admits everything (the PR 4
+    /// (it adds no load). Admission is per *query*, decided before any
+    /// pricing: one permit covers all of a batch-free query's
+    /// sequential miss-batch pricings, so a rejected reply never
+    /// follows partial warm-up. `None` admits everything (the PR 4
     /// behaviour).
     pub max_inflight_misses: Option<usize>,
     /// Batched write-back: save the cache file once every this many
@@ -215,10 +218,12 @@ pub struct Advisor {
     stats_path: Option<PathBuf>,
     idx: RwLock<FrontierIndex>,
     inflight: CoalescingMemo<(String, String, usize), ()>,
-    /// Live count of *new* pricings in flight — what
-    /// `max_inflight_misses` bounds. Its own atomic (not derived from
-    /// the memo) because admission must be decided *before* the caller
-    /// blocks on the pricing.
+    /// Live count of queries holding a miss-path pricing permit — what
+    /// `max_inflight_misses` bounds. A query prices its miss batches
+    /// sequentially under ONE permit, so this also bounds pricings in
+    /// flight. Its own atomic (not derived from the memo) because
+    /// admission must be decided *before* the caller blocks on any
+    /// pricing.
     inflight_misses: AtomicUsize,
     /// Fresh cells inserted since the last cache-file save; at
     /// `save_every` the write-back flushes, and [`Advisor::flush`]
@@ -240,8 +245,6 @@ enum Ensure {
     Fresh,
     /// Waited on (or arrived just after) someone else's pricing.
     Waited,
-    /// Admission control refused to start a new pricing.
-    Rejected,
 }
 
 impl Advisor {
@@ -272,11 +275,10 @@ impl Advisor {
     /// coalescing memo so identical concurrent misses block on this one
     /// computation and wake to a warm index.
     ///
-    /// Admission control: a caller that would *start* a new pricing
-    /// must take one of the `max_inflight_misses` permits; at the bound
-    /// it is [`Ensure::Rejected`] instead of queueing unboundedly.
-    /// Coalescing onto an in-flight pricing never needs a permit — the
-    /// wait adds no load.
+    /// Admission control lives in [`Self::answer`], which takes one
+    /// `max_inflight_misses` permit covering ALL of a query's
+    /// (sequential) cell pricings before calling here — by the time
+    /// this runs, the pricing is already admitted.
     ///
     /// Write-back is batched: fresh cells accumulate and the cache file
     /// is saved every `save_every` cells (plus a final [`Self::flush`]
@@ -287,33 +289,6 @@ impl Advisor {
     /// the remaining ROADMAP follow-on.
     fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> Ensure {
         let key = (net.to_string(), device.to_string(), batch);
-        // Would this call start a new pricing? If the cell is already
-        // in flight (or done) we coalesce for free; otherwise take a
-        // permit — and give it back after the memo resolves (a caller
-        // that raced and merely coalesced holds its permit only for
-        // that pricing's duration, a transient over-count on the
-        // conservative side).
-        let mut permit = false;
-        if !self.inflight.contains(&key) {
-            if let Some(max) = self.opts.max_inflight_misses {
-                let admitted = self
-                    .inflight_misses
-                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
-                        (n < max).then_some(n + 1)
-                    })
-                    .is_ok();
-                if admitted {
-                    permit = true;
-                } else if !self.inflight.contains(&key) {
-                    // At the bound AND the cell is still genuinely
-                    // unstarted: refuse. (If another caller began the
-                    // pricing between the two checks, fall through —
-                    // waiting on it adds no load, so rejecting would
-                    // shed traffic the bound does not require.)
-                    return Ensure::Rejected;
-                }
-            }
-        }
         let (_, fresh) = self.inflight.get_or_compute(&key, || {
             let network = network_by_name(net).expect("validated before the miss path");
             let dev = device_by_name(device).expect("validated before the miss path");
@@ -352,9 +327,6 @@ impl Advisor {
             }
             *self.idx.write().unwrap() = FrontierIndex::from_cache(&cache);
         });
-        if permit {
-            self.inflight_misses.fetch_sub(1, Ordering::AcqRel);
-        }
         if fresh {
             Ensure::Fresh
         } else {
@@ -374,6 +346,17 @@ impl Advisor {
         if let Err(e) = cache.save(path) {
             eprintln!("serve: write-back to {} failed: {e:#}", path.display());
         }
+    }
+
+    /// Would answering over the `wanted` batch axis have to *start* a
+    /// new pricing right now — i.e. is some wanted cell neither in the
+    /// index nor already being priced? Coalescing onto an in-flight
+    /// pricing never counts: waiting adds no load.
+    fn starts_new_pricing(&self, net: &str, device: &str, wanted: &[usize]) -> bool {
+        wanted.iter().any(|&b| {
+            !self.idx.read().unwrap().has_cell(net, device, b)
+                && !self.inflight.contains(&(net.to_string(), device.to_string(), b))
+        })
     }
 
     /// Persist any fresh cells the batched write-back has not saved
@@ -403,6 +386,38 @@ impl Advisor {
         };
         wanted.sort_unstable();
         wanted.dedup();
+        // Admission is decided ONCE, up front, for the whole query: a
+        // query that must start at least one new pricing takes a
+        // single permit covering all of its (sequential) cell
+        // pricings. Deciding per cell instead could reject a
+        // batch-free query midway — after earlier miss batches were
+        // already priced — so the client would be told "overloaded"
+        // and retry despite real warm-up work having happened; a
+        // rejected reply must precede any pricing.
+        let mut permit = false;
+        if let Some(max) = self.opts.max_inflight_misses {
+            if self.starts_new_pricing(net, &device, &wanted) {
+                permit = self
+                    .inflight_misses
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                        (n < max).then_some(n + 1)
+                    })
+                    .is_ok();
+                if !permit && self.starts_new_pricing(net, &device, &wanted) {
+                    // At the bound AND some wanted cell is still
+                    // genuinely unstarted: refuse before pricing
+                    // anything. (If every missing cell began pricing
+                    // between the two checks, fall through — waiting
+                    // adds no load, so rejecting would shed traffic
+                    // the bound does not require.) Overload is its own
+                    // classification: exactly one of hits/misses/
+                    // coalesced/rejected per query, so fleet
+                    // accounting stays exhaustive.
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return protocol::overloaded();
+                }
+            }
+        }
         let mut fresh = false;
         let mut waited = false;
         for &b in &wanted {
@@ -410,15 +425,11 @@ impl Advisor {
                 match self.ensure_cell(net, &device, b) {
                     Ensure::Fresh => fresh = true,
                     Ensure::Waited => waited = true,
-                    Ensure::Rejected => {
-                        // Overload is its own classification: exactly
-                        // one of hits/misses/coalesced/rejected per
-                        // query, so fleet accounting stays exhaustive.
-                        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                        return protocol::overloaded();
-                    }
                 }
             }
+        }
+        if permit {
+            self.inflight_misses.fetch_sub(1, Ordering::AcqRel);
         }
         let source = if fresh {
             Source::Miss
@@ -907,6 +918,40 @@ mod tests {
         }
         assert_eq!(advisor.stats.rejected(), 0);
         assert_eq!(advisor.stats.misses(), 2);
+    }
+
+    #[test]
+    fn batch_free_admission_is_decided_once_before_any_pricing() {
+        // One permit covers a batch-free query's whole miss-batch axis:
+        // a bound of 1 admits three cold cells in one query...
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![1, 2, 4],
+            max_inflight_misses: Some(1),
+            ..ServeOptions::default()
+        });
+        let j = Json::parse(
+            &advisor.respond_line(r#"{"net": "lenet10", "device": "zcu102"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.field_bool("ok"), Some(true));
+        assert_eq!(j.field_str("source"), Some("miss"));
+        assert_eq!(advisor.stats.cells_priced(), 3);
+        assert_eq!(advisor.stats.rejected(), 0);
+        assert_eq!(advisor.inflight_misses.load(Ordering::Relaxed), 0, "permit returned");
+        // ...and a rejection is decided before ANY cell is priced —
+        // never midway through the axis after partial warm-up.
+        let bound0 = warm_advisor(ServeOptions {
+            miss_batches: vec![1, 2, 4],
+            max_inflight_misses: Some(0),
+            ..ServeOptions::default()
+        });
+        let rej = Json::parse(
+            &bound0.respond_line(r#"{"net": "lenet10", "device": "zcu102"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(rej.field_str("error"), Some("overloaded"));
+        assert_eq!(bound0.stats.rejected(), 1);
+        assert_eq!(bound0.stats.cells_priced(), 0, "rejection precedes all pricing");
     }
 
     #[test]

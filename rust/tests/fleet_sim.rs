@@ -101,6 +101,60 @@ fn advisor_accounting_is_exhaustive_and_sessions_all_resolve() {
 }
 
 #[test]
+fn every_session_pays_its_own_steps_times_the_shared_per_step_cost() {
+    // Sessions of one (net, device, batch, scheme, depth) shape share
+    // one masked per-step pricing, but each session's duration must be
+    // its OWN steps x that cost — a shape's first session must not
+    // donate its total duration to every later session of the shape.
+    let cfg = tiny_cfg(64, 13);
+    let advisor = advisor_for(&cfg);
+    let report = run_fleet(&cfg, &advisor).unwrap();
+    let mut per_step: std::collections::BTreeMap<_, u64> = std::collections::BTreeMap::new();
+    let mut steps_differ_within_a_shape = false;
+    for r in report.records.iter().filter(|r| r.ran()) {
+        assert_eq!(
+            r.service_cycles % r.steps as u64,
+            0,
+            "session {}: duration must be per-step cost x steps",
+            r.id
+        );
+        let cost = r.service_cycles / r.steps as u64;
+        let shape = (
+            r.net.clone(),
+            r.device_kind.clone(),
+            r.batch,
+            r.retrain_depth,
+            r.scheme.clone(),
+        );
+        match per_step.get(&shape) {
+            Some(&prev) => {
+                assert_eq!(prev, cost, "one shape, one per-step cost: session {}", r.id);
+            }
+            None => {
+                per_step.insert(shape, cost);
+            }
+        }
+        if report.records.iter().any(|o| {
+            o.ran()
+                && o.id != r.id
+                && o.net == r.net
+                && o.device_kind == r.device_kind
+                && o.batch == r.batch
+                && o.retrain_depth == r.retrain_depth
+                && o.scheme == r.scheme
+                && o.steps != r.steps
+        }) {
+            steps_differ_within_a_shape = true;
+        }
+    }
+    assert!(
+        steps_differ_within_a_shape,
+        "the trace must produce same-shape sessions with different step counts, \
+         or this test cannot catch a memoized-total-duration regression"
+    );
+}
+
+#[test]
 fn warm_cache_serves_the_whole_fleet_without_pricing() {
     let cfg = tiny_cfg(32, 5);
     // Warm pass populates the advisor's cache file-lessly; reuse its
