@@ -12,7 +12,7 @@
 //! session count for CI.
 
 use ef_train::explore::sweep_cache::SweepCache;
-use ef_train::fleet::{run_fleet, FleetConfig};
+use ef_train::fleet::{run_fleet, FleetConfig, WORKLOAD_SCHEMA};
 use ef_train::serve::{Advisor, ServeOptions};
 use ef_train::util::json::Json;
 
@@ -43,6 +43,17 @@ fn main() {
     root.insert("bench".into(), Json::Str("fleet".into()));
     root.insert("fast_mode".into(), Json::Bool(fast));
     root.insert("seed".into(), Json::Num(cfg.seed as f64));
+    // Seed-to-workload model version: bench_diff treats a mismatch as
+    // "not comparable" (an intentional trace-model change), never as a
+    // makespan regression.
+    root.insert(
+        "workload_schema".into(),
+        Json::Num(WORKLOAD_SCHEMA as f64),
+    );
+    root.insert(
+        "sojourn_p99_cycles".into(),
+        Json::Num(report.sojourn.p99 as f64),
+    );
     std::fs::write("BENCH_fleet.json", Json::Obj(root).to_string())
         .expect("write BENCH_fleet.json");
 

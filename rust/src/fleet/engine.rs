@@ -4,24 +4,42 @@
 //! completions sort before arrivals at the same cycle (a device frees
 //! before a new session can queue behind it), and ties within a kind
 //! break on session id, so the event order is a total function of the
-//! trace. Per session the engine:
+//! trace. Per session *attempt* the engine:
 //!
-//! 1. resolves the configuration by querying the shared
-//!    [`Advisor`] at arrival time — the real serving path, so hits,
-//!    misses, coalescing, *and admission-control rejections* happen
-//!    exactly as a live fleet would see them;
-//! 2. prices the adaptation duration as `steps-to-converge ×` the
+//! 1. checks the fleet's own admission control first: if a
+//!    [`ShedPolicy`] is configured and the target device's wait queue
+//!    is at the depth bound, a sheddable-class arrival is refused
+//!    **without consulting the advisor** (shedding protects the
+//!    advisor too);
+//! 2. resolves the configuration by querying the shared [`Advisor`] —
+//!    the real serving path, so hits, misses, coalescing, *and
+//!    admission-control rejections* happen exactly as a live fleet
+//!    would see them; a reply flagged `retryable` feeds the retry
+//!    policy rather than terminating the session;
+//! 3. prices the adaptation duration as `steps-to-converge ×` the
 //!    masked step cycles of the advisor-chosen scheme
 //!    ([`masked_point_cycles`]; a depth-`k` session pays FP over all
 //!    conv layers but BP/WU over the suffix only);
-//! 3. occupies its device slot for that duration, FIFO-queueing behind
-//!    whatever the slot is already running.
+//! 4. occupies its device slot for that duration, queueing in its
+//!    priority class's FIFO behind whatever the slot is already
+//!    running — when the slot frees, the highest-ranked non-empty
+//!    class is served first, FIFO within a class.
+//!
+//! Refused attempts (shed or advisor-overloaded) re-enter the event
+//! queue as fresh arrivals at `now + backoff` per the [`RetryPolicy`]
+//! until the retry budget is spent, then the session is recorded as
+//! **abandoned**.
 //!
 //! The engine itself is strictly serial — parallelism lives only
 //! inside the advisor's miss-path pricing — which is what makes the
-//! run bit-identical across `--jobs` values.
+//! run bit-identical across `--jobs` values. Makespan is the cycle of
+//! the **last completion** (`EV_FREE`): unserved arrivals extend the
+//! event horizon but do no fleet work, so they must not stretch the
+//! makespan (the PR-5 engine got this wrong, inflating utilization
+//! denominators whenever the tail of the trace was refused).
 
 use std::cmp::Reverse;
+use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::Arc;
 
@@ -33,7 +51,9 @@ use crate::model::PhaseMask;
 use crate::nets::Network;
 use crate::serve::protocol::Query;
 use crate::serve::{canonical_coords, Advisor};
+use crate::util::rng::SplitMix64;
 
+use super::policy::{RetryPolicy, ShedPolicy, RETRY_JITTER_SALT};
 use super::report::{DeviceStat, FleetReport, SessionRecord};
 use super::trace::Session;
 use super::{FleetConfig, REF_FREQ_MHZ};
@@ -47,9 +67,23 @@ struct Slot {
     kind: String,
     /// Session index currently running, if any.
     running: Option<usize>,
-    queue: VecDeque<usize>,
+    /// One FIFO per priority class, indexed by rank (0 = most urgent);
+    /// served strictly by rank, FIFO within a rank.
+    queues: Vec<VecDeque<usize>>,
     busy_cycles: u64,
     served: usize,
+}
+
+impl Slot {
+    /// Sessions waiting across all classes (the shed policy's depth).
+    fn queue_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Next session to serve: highest-ranked non-empty class first.
+    fn pop_next(&mut self) -> Option<usize> {
+        self.queues.iter_mut().find_map(|q| q.pop_front())
+    }
 }
 
 /// What arrival-time resolution decided about a session, kept until
@@ -64,9 +98,10 @@ struct Pending {
 /// The advisor's answer distilled to what the engine needs.
 enum Resolution {
     Run(Pending),
-    /// Admission control said overloaded — the session is dropped
-    /// (a real controller would retry; the open-loop trace does not).
-    Rejected,
+    /// The advisor refused the attempt but flagged the reply as
+    /// retryable (admission control said overloaded) — the retry
+    /// policy decides whether the session backs off or abandons.
+    Overloaded,
     /// Budget-infeasible or request error — recorded, not run.
     Failed { source: String },
 }
@@ -85,6 +120,17 @@ fn resolve(
     zoo: &mut Zoo,
     step_costs: &mut StepCostMemo,
 ) -> crate::Result<Resolution> {
+    // Resolve the coordinates *before* consulting the advisor: a
+    // hand-built session naming an unknown net or device is a caller
+    // bug the engine reports as `Err`, not a panic (and not an advisor
+    // "error" reply silently folded into the fleet accounting).
+    let (network, dev) = match zoo.entry((s.net.clone(), s.device_kind.clone())) {
+        Entry::Occupied(e) => e.into_mut(),
+        Entry::Vacant(e) => {
+            let (network, _, dev, _) = canonical_coords(&s.net, &s.device_kind)?;
+            e.insert((network, dev))
+        }
+    };
     let q = Query {
         net: s.net.clone(),
         device: s.device_kind.clone(),
@@ -93,8 +139,11 @@ fn resolve(
         objective: s.objective,
     };
     let reply = advisor.answer(&q);
-    if reply.field_str("error") == Some("overloaded") {
-        return Ok(Resolution::Rejected);
+    // Admission control marks its refusals retryable; key off the
+    // *flag* rather than the error spelling so any future retryable
+    // refusal feeds the same backoff path.
+    if reply.field_bool("retryable") == Some(true) {
+        return Ok(Resolution::Overloaded);
     }
     if reply.field_bool("ok") != Some(true) {
         let source = if reply.field_bool("infeasible") == Some(true) {
@@ -115,13 +164,6 @@ fn resolve(
     let power_w = reply
         .field_f64("power_w")
         .ok_or_else(|| anyhow!("advisor reply lacks power_w: {reply}"))?;
-    let (network, dev) = zoo
-        .entry((s.net.clone(), s.device_kind.clone()))
-        .or_insert_with(|| {
-            let (network, _, dev, _) = canonical_coords(&s.net, &s.device_kind)
-                .expect("trace names resolve through the canonical path");
-            (network, dev)
-        });
     let n_convs = network.conv_count();
     // Clamp the depth before keying: depth k >= n_convs IS full
     // retraining, so "full" and every over-deep k share one memoized
@@ -171,22 +213,48 @@ pub fn run(
     sessions: &[Session],
     advisor: &Advisor,
 ) -> crate::Result<FleetReport> {
+    let n_classes = cfg.priority_mix.len();
+    if n_classes == 0 {
+        return Err(anyhow!("fleet config declares no priority classes"));
+    }
+    for s in sessions {
+        if s.priority >= n_classes {
+            return Err(anyhow!(
+                "session {} has priority rank {} but the config declares {} classes",
+                s.id,
+                s.priority,
+                n_classes
+            ));
+        }
+    }
     let mut slots: Vec<Slot> = cfg
         .device_slots()
         .into_iter()
         .map(|(kind, _)| Slot {
             kind,
             running: None,
-            queue: VecDeque::new(),
+            queues: vec![VecDeque::new(); n_classes],
             busy_cycles: 0,
             served: 0,
         })
         .collect();
+    let retry = RetryPolicy::from_config(cfg);
+    let shed = ShedPolicy::from_config(cfg);
+    let mut jitter = SplitMix64::stream(cfg.seed, RETRY_JITTER_SALT);
+
     let mut pending: Vec<Option<Pending>> = (0..sessions.len()).map(|_| None).collect();
     let mut starts: Vec<u64> = vec![0; sessions.len()];
+    // The cycle of the arrival attempt that was *admitted* — queueing
+    // time is measured from admission, while sojourn runs from the
+    // original arrival (so it includes backoff waits).
+    let mut admitted: Vec<u64> = vec![0; sessions.len()];
+    let mut attempts: Vec<u32> = vec![0; sessions.len()];
+    let mut shed_counts: Vec<u32> = vec![0; sessions.len()];
     let mut records: Vec<Option<SessionRecord>> = (0..sessions.len()).map(|_| None).collect();
     let mut zoo = BTreeMap::new();
     let mut step_costs = BTreeMap::new();
+    let mut retries_total = 0u64;
+    let mut shed_total = 0u64;
 
     // Min-heap of (cycle, class, session id, slot).
     let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
@@ -214,10 +282,13 @@ pub fn run(
     };
 
     while let Some(Reverse((now, class, sid, slot_idx))) = heap.pop() {
-        makespan = makespan.max(now);
         let idx = sid as usize;
         match class {
             EV_FREE => {
+                // Only completions advance the makespan: the fleet's
+                // horizon is the last cycle a device did work, not the
+                // last event (a refused tail arrival does no work).
+                makespan = makespan.max(now);
                 let slot = &mut slots[slot_idx];
                 debug_assert_eq!(slot.running, Some(idx));
                 slot.running = None;
@@ -235,38 +306,74 @@ pub fn run(
                     batch: s.batch,
                     retrain_depth: s.retrain_depth,
                     steps: s.steps,
+                    priority: s.priority,
+                    attempts: attempts[idx],
+                    shed: shed_counts[idx],
                     scheme: Some(p.scheme.clone()),
                     source: p.source.clone(),
                     arrival_cycle: s.arrival_cycle,
                     start_cycle: start,
                     end_cycle: now,
-                    queue_cycles: start - s.arrival_cycle,
+                    queue_cycles: start - admitted[idx],
                     service_cycles: p.duration_cycles,
                     energy_mj: p.power_w * secs * 1e3,
                 });
-                if let Some(next) = slot.queue.pop_front() {
+                if let Some(next) = slot.pop_next() {
                     start_session(slot, next, now, &pending, &mut starts, &mut heap, sessions);
                 }
             }
             _ => {
                 let s = &sessions[idx];
-                match resolve(advisor, s, &mut zoo, &mut step_costs)? {
-                    Resolution::Run(p) => {
-                        pending[idx] = Some(p);
-                        let slot = &mut slots[slot_idx];
-                        if slot.running.is_none() {
-                            start_session(
-                                slot, idx, now, &pending, &mut starts, &mut heap, sessions,
-                            );
-                        } else {
-                            slot.queue.push_back(idx);
+                attempts[idx] += 1;
+                // Fleet admission control runs before the advisor is
+                // consulted — a shed attempt performs no query.
+                let was_shed = match &shed {
+                    Some(policy) => policy.sheds(s.priority, slots[slot_idx].queue_depth()),
+                    None => false,
+                };
+                let refused = if was_shed {
+                    shed_counts[idx] += 1;
+                    shed_total += 1;
+                    true
+                } else {
+                    match resolve(advisor, s, &mut zoo, &mut step_costs)? {
+                        Resolution::Run(p) => {
+                            pending[idx] = Some(p);
+                            admitted[idx] = now;
+                            let slot = &mut slots[slot_idx];
+                            if slot.running.is_none() {
+                                start_session(
+                                    slot, idx, now, &pending, &mut starts, &mut heap, sessions,
+                                );
+                            } else {
+                                slot.queues[s.priority].push_back(idx);
+                            }
+                            false
+                        }
+                        Resolution::Overloaded => true,
+                        Resolution::Failed { source } => {
+                            records[idx] = Some(SessionRecord::unserved(
+                                s,
+                                &source,
+                                attempts[idx],
+                                shed_counts[idx],
+                            ));
+                            false
                         }
                     }
-                    Resolution::Rejected => {
-                        records[idx] = Some(SessionRecord::unserved(s, "rejected"));
-                    }
-                    Resolution::Failed { source } => {
-                        records[idx] = Some(SessionRecord::unserved(s, &source));
+                };
+                if refused {
+                    if retry.allows(attempts[idx]) {
+                        retries_total += 1;
+                        let delay = retry.backoff_cycles(attempts[idx], &mut jitter);
+                        heap.push(Reverse((now + delay, EV_ARRIVE, s.id, s.device_slot)));
+                    } else {
+                        records[idx] = Some(SessionRecord::unserved(
+                            s,
+                            "abandoned",
+                            attempts[idx],
+                            shed_counts[idx],
+                        ));
                     }
                 }
             }
@@ -287,5 +394,15 @@ pub fn run(
             busy_cycles: s.busy_cycles,
         })
         .collect();
-    Ok(FleetReport::build(records, devices, makespan, advisor))
+    let class_names: Vec<String> =
+        cfg.priority_mix.iter().map(|(name, _)| name.clone()).collect();
+    Ok(FleetReport::build(
+        records,
+        devices,
+        makespan,
+        advisor,
+        class_names,
+        retries_total,
+        shed_total,
+    ))
 }

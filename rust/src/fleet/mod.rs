@@ -20,37 +20,63 @@
 //! layers but BP/WU over the last `k` conv layers only
 //! ([`crate::model::PhaseMask`]).
 //!
-//! Three modules:
+//! Four modules:
 //!
 //! * [`trace`] — the seedable workload generator: no wall-clock, no
 //!   global state; a fleet trace is a pure function of `--seed`
 //!   ([`crate::util::rng::SplitMix64`] sub-streams for arrivals vs
 //!   session attributes), with configurable device / network / batch /
-//!   retrain-depth mixes and a Poisson arrival process;
+//!   retrain-depth / priority mixes and a Poisson arrival process
+//!   that optionally modulates between a base and a burst rate
+//!   (two-state MMPP, `--burst-rate` / `--burst-dwell`);
 //! * [`engine`] — the discrete-event simulator: a binary-heap event
 //!   queue keyed on cycle with a deterministic session-id tie-break,
-//!   per-device FIFO queueing, advisor-resolved configs, session
-//!   durations = steps-to-converge × masked step cycles
+//!   per-device **per-priority-class** FIFO queueing served strictly
+//!   by class rank, advisor-resolved configs, session durations =
+//!   steps-to-converge × masked step cycles
 //!   ([`crate::explore::masked_point_cycles`] on the advisor-chosen
 //!   scheme);
-//! * [`report`] — fleet metrics aggregation, table + JSON emission.
+//! * [`policy`] — the closed-loop decisions, split from the engine's
+//!   mechanism: jittered-exponential-backoff retries
+//!   (`--max-retries`) and queue-depth load shedding that drops
+//!   low-priority work first (`--shed-below` / `--shed-depth`);
+//! * [`report`] — fleet metrics aggregation (per-class sojourn
+//!   p50/p95/p99, retry/shed/abandon totals), table + JSON emission.
 //!
 //! **Determinism contract:** for a fixed seed the whole run — every
 //! event, every report byte — is identical across repeated runs and
 //! across `--jobs` values. Parallelism exists only *inside* the
 //! advisor's miss-path pricing (scheme rows fan out over rayon), never
 //! in event ordering; `rust/tests/fleet_sim.rs` pins byte-identical
-//! report JSON for `--jobs 1` vs `--jobs 4`.
+//! report JSON for `--jobs 1` vs `--jobs 4`. Retry jitter and the
+//! MMPP modulating chain draw from their own seed sub-streams, so
+//! switching the closed-loop knobs on never reshapes the arrival or
+//! attribute streams.
 //!
-//! A corollary: because sessions resolve one at a time, the advisor
-//! never has more than one pricing in flight during a simulation, so
+//! **The traffic model is closed-loop:** a session refused service —
+//! by advisor admission control (`--max-inflight-misses`) or by the
+//! fleet's own shed policy — re-enters the event queue as a fresh
+//! arrival after a backoff, up to `--max-retries` times, then is
+//! *abandoned*. Advisor accounting is per **attempt**: every non-shed
+//! arrival performs exactly one advisor query (shed attempts perform
+//! none — shedding exists to protect the advisor too), so
+//! `hits + misses + coalesced + rejected` equals the number of
+//! advisor-consulting attempts, while fleet-level outcomes partition
+//! as `completed + abandoned + infeasible + errored == sessions`.
+//!
+//! A corollary of the serial event loop: the advisor never has more
+//! than one pricing in flight during a simulation, so
 //! `--max-inflight-misses N` is only observable here at `N = 0`
-//! (reject every cold pricing). Bounds `N >= 1` matter for the *live*
-//! serving front ends (`ef-train serve`), where queries really are
-//! concurrent; modeling in-flight overload inside the simulation is
-//! the closed-loop arrival-model follow-on (ROADMAP (j)).
+//! (reject every cold pricing — a permanently overloaded advisor that
+//! backoff cannot route around; retried attempts are re-rejected and
+//! eventually abandoned). Time-*varying* overload — the condition
+//! retries genuinely recover from — comes from queue-depth shedding
+//! and bursty arrivals, which drain. Bounds `N >= 1` matter for the
+//! *live* serving front ends (`ef-train serve`), where queries really
+//! are concurrent.
 
 pub mod engine;
+pub mod policy;
 pub mod report;
 pub mod trace;
 
@@ -64,6 +90,17 @@ use crate::serve::{canonical_device, canonical_net, Advisor};
 /// the plumbing exists so a faster board would still share one
 /// timeline).
 pub const REF_FREQ_MHZ: u64 = 100;
+
+/// Version of the **workload model**: the mapping from a seed to a
+/// trace and its simulated accounting. Bumped whenever an intentional
+/// change (an RNG fix, a new default draw) makes the same seed
+/// produce a different workload, so `scripts/bench_diff.py` can tell
+/// "the model changed" from "the code regressed" and skip the
+/// makespan gate as not-comparable instead of red-failing.
+///
+/// History: 1 = PR 5 seed model (modulo-biased `below`); 2 = unbiased
+/// Lemire draws + zero-weight-proof `weighted` + closed-loop fields.
+pub const WORKLOAD_SCHEMA: u64 = 2;
 
 /// One fleet scenario: population, mixes, and arrival process. Names
 /// are canonical (the constructor canonicalizes through
@@ -89,6 +126,28 @@ pub struct FleetConfig {
     pub depth_mix: Vec<(Option<usize>, f64)>,
     /// Hard cap on steps-to-converge per session.
     pub max_session_steps: usize,
+    /// Priority classes by weight, **listed in priority order** (first
+    /// entry = most urgent). Device queues serve strictly by class
+    /// rank. A single class keeps the trace's attribute stream
+    /// untouched (no class draw), so default-config seeds replay.
+    pub priority_mix: Vec<(String, f64)>,
+    /// Retries allowed per session beyond its first attempt
+    /// (jittered exponential backoff); 0 = open loop.
+    pub max_retries: u32,
+    /// Nominal first-retry backoff in modeled milliseconds.
+    pub retry_base_ms: f64,
+    /// Load shedding: classes ranked strictly below this class are
+    /// shed when the target device's wait queue is at least
+    /// [`Self::shed_depth`] deep. `None` disables shedding.
+    pub shed_below: Option<String>,
+    /// Wait-queue depth bound the shed policy triggers at.
+    pub shed_depth: usize,
+    /// Two-state MMPP arrivals: `(burst_rate, mean_dwell_s)` — the
+    /// arrival process alternates between [`Self::arrival_rate`] and
+    /// `burst_rate`, dwelling an exponential time with the given mean
+    /// in each state. `None` = plain Poisson (draw-identical to the
+    /// pre-MMPP trace).
+    pub burst: Option<(f64, f64)>,
 }
 
 impl Default for FleetConfig {
@@ -104,6 +163,12 @@ impl Default for FleetConfig {
             batch_mix: vec![(4, 3.0), (16, 1.0)],
             depth_mix: vec![(None, 2.0), (Some(1), 1.0), (Some(2), 1.0)],
             max_session_steps: 120,
+            priority_mix: vec![("default".into(), 1.0)],
+            max_retries: 0,
+            retry_base_ms: 50.0,
+            shed_below: None,
+            shed_depth: 8,
+            burst: None,
         }
     }
 }
@@ -214,7 +279,74 @@ impl FleetConfig {
             batch_mix: batches,
             depth_mix: depths,
             max_session_steps,
+            ..Self::default()
         })
+    }
+
+    /// Parse and validate the closed-loop CLI knobs onto a base
+    /// config: `--priority-mix` (classes in priority order, first =
+    /// most urgent), `--max-retries` / `--retry-base-ms` (jittered
+    /// exponential backoff), `--shed-below CLASS` + `--shed-depth N`
+    /// (queue-depth shedding of classes ranked below CLASS), and
+    /// `--burst-rate` + `--burst-dwell` (two-state MMPP arrivals;
+    /// both or neither).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_closed_loop(
+        mut self,
+        priority_mix: &str,
+        max_retries: u32,
+        retry_base_ms: f64,
+        shed_below: Option<&str>,
+        shed_depth: usize,
+        burst_rate: Option<f64>,
+        burst_dwell: Option<f64>,
+    ) -> crate::Result<Self> {
+        let classes = split_mix(priority_mix)?;
+        for (i, (name, _)) in classes.iter().enumerate() {
+            if classes[..i].iter().any(|(other, _)| other == name) {
+                return Err(anyhow!("--priority-mix names class `{name}` twice"));
+            }
+        }
+        if let Some(protected) = shed_below {
+            if !classes.iter().any(|(name, _)| name == protected.trim()) {
+                return Err(anyhow!(
+                    "--shed-below `{protected}` is not a --priority-mix class \
+                     (have {:?})",
+                    classes.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                ));
+            }
+            if shed_depth == 0 {
+                return Err(anyhow!("--shed-depth must be at least 1"));
+            }
+        }
+        if !(retry_base_ms > 0.0 && retry_base_ms.is_finite()) {
+            return Err(anyhow!("--retry-base-ms must be a positive number"));
+        }
+        let burst = match (burst_rate, burst_dwell) {
+            (None, None) => None,
+            (Some(rate), Some(dwell)) => {
+                if !(rate > 0.0 && rate.is_finite()) {
+                    return Err(anyhow!("--burst-rate must be a positive number"));
+                }
+                if !(dwell > 0.0 && dwell.is_finite()) {
+                    return Err(anyhow!("--burst-dwell must be a positive number"));
+                }
+                Some((rate, dwell))
+            }
+            _ => {
+                return Err(anyhow!(
+                    "--burst-rate and --burst-dwell enable MMPP arrivals together; \
+                     set both or neither"
+                ))
+            }
+        };
+        self.priority_mix = classes;
+        self.max_retries = max_retries;
+        self.retry_base_ms = retry_base_ms;
+        self.shed_below = shed_below.map(|s| s.trim().to_string());
+        self.shed_depth = shed_depth;
+        self.burst = burst;
+        Ok(self)
     }
 
     /// The fleet's device instances, flattened in mix order:
@@ -280,5 +412,52 @@ mod tests {
         assert!(p("", "cnn1x", "4", "full").is_err());
         assert!(FleetConfig::parse(0, 1, 1.0, "zcu102", "cnn1x", "4", "full", 50).is_err());
         assert!(FleetConfig::parse(10, 1, 0.0, "zcu102", "cnn1x", "4", "full", 50).is_err());
+    }
+
+    #[test]
+    fn closed_loop_knobs_parse_and_validate() {
+        let base = || FleetConfig::default();
+        let cfg = base()
+            .with_closed_loop(
+                "interactive:1,background:3",
+                3,
+                25.0,
+                Some("interactive"),
+                4,
+                Some(8.0),
+                Some(2.0),
+            )
+            .unwrap();
+        assert_eq!(
+            cfg.priority_mix,
+            vec![("interactive".to_string(), 1.0), ("background".to_string(), 3.0)]
+        );
+        assert_eq!(cfg.max_retries, 3);
+        assert_eq!(cfg.shed_below.as_deref(), Some("interactive"));
+        assert_eq!(cfg.shed_depth, 4);
+        assert_eq!(cfg.burst, Some((8.0, 2.0)));
+        // Duplicate class names, unknown shed class, zero shed depth,
+        // half-configured bursts, bad backoff base: all rejected.
+        assert!(base()
+            .with_closed_loop("a:1,a:2", 0, 50.0, None, 8, None, None)
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1", 0, 50.0, Some("b"), 8, None, None)
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1,b:1", 0, 50.0, Some("a"), 0, None, None)
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1", 0, 50.0, None, 8, Some(2.0), None)
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1", 0, 50.0, None, 8, None, Some(2.0))
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1", 0, 50.0, None, 8, Some(0.0), Some(2.0))
+            .is_err());
+        assert!(base()
+            .with_closed_loop("a:1", 0, 0.0, None, 8, None, None)
+            .is_err());
     }
 }

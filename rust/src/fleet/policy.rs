@@ -1,0 +1,165 @@
+//! Closed-loop fleet policies — the *decisions*, kept apart from the
+//! engine's *mechanism*.
+//!
+//! The engine owns event ordering, queues, and records; what to do
+//! when a session cannot be admitted right now lives here, so a new
+//! shedding rule or backoff curve is a policy edit, never an event-
+//! loop edit (the scheduler/rate-limiter split loopr uses between its
+//! `priority` and `rate_limit` modules).
+//!
+//! Two policies:
+//!
+//! * [`RetryPolicy`] — a session refused service (advisor admission
+//!   control said overloaded, or the fleet shed it) re-enters the
+//!   event queue as a fresh arrival at
+//!   `now + base * 2^attempt ± jitter`, up to `--max-retries`
+//!   attempts, after which it is **abandoned**. Jitter draws come
+//!   from a dedicated [`SplitMix64`] sub-stream of the trace seed
+//!   (salt [`RETRY_JITTER_SALT`]), so enabling retries can never
+//!   reshape the arrival or attribute streams.
+//! * [`ShedPolicy`] — fleet-level admission control: when a device's
+//!   wait queue is at least `--shed-depth` deep, an arriving session
+//!   whose priority class ranks *below* `--shed-below` is shed before
+//!   the advisor is even consulted (shedding protects the advisor
+//!   too, and a shed attempt therefore performs **no** advisor
+//!   query). Classes at or above the protected rank are always
+//!   admitted — low-priority work is dropped first, high-priority
+//!   work never is.
+
+use crate::util::rng::SplitMix64;
+
+use super::{FleetConfig, REF_FREQ_MHZ};
+
+/// The salt of the [`SplitMix64`] sub-stream backoff jitter draws
+/// come from (arrivals use 1, session attributes 2, the MMPP
+/// modulating chain 4).
+pub const RETRY_JITTER_SALT: u64 = 3;
+
+/// Jitter amplitude: each backoff is scaled by a uniform factor in
+/// `[1 - JITTER_FRAC, 1 + JITTER_FRAC]`, decorrelating retry storms.
+pub const JITTER_FRAC: f64 = 0.5;
+
+/// Jittered-exponential-backoff retry policy.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries allowed per session beyond its first attempt.
+    pub max_retries: u32,
+    /// Nominal first-retry delay on the fleet timeline.
+    pub base_cycles: u64,
+}
+
+impl RetryPolicy {
+    pub fn from_config(cfg: &FleetConfig) -> Self {
+        // --retry-base-ms on the reference clock: ms * (cycles/ms).
+        let base_cycles =
+            ((cfg.retry_base_ms * REF_FREQ_MHZ as f64 * 1e3) as u64).max(1);
+        Self { max_retries: cfg.max_retries, base_cycles }
+    }
+
+    /// May a session whose `attempts`-th arrival (1-based) just failed
+    /// try again? Retries used so far are `attempts - 1`.
+    pub fn allows(&self, attempts: u32) -> bool {
+        attempts <= self.max_retries
+    }
+
+    /// The jittered backoff delay after failed attempt number
+    /// `attempt` (1-based): `base * 2^(attempt - 1)`, scaled by a
+    /// uniform factor in `[1 - JITTER_FRAC, 1 + JITTER_FRAC]` drawn
+    /// from the dedicated jitter stream. The exponent saturates so a
+    /// deep retry budget cannot overflow the timeline.
+    pub fn backoff_cycles(&self, attempt: u32, jitter: &mut SplitMix64) -> u64 {
+        let exp = attempt.saturating_sub(1).min(20);
+        let nominal = self.base_cycles.saturating_mul(1u64 << exp);
+        let scale = 1.0 + (jitter.uniform() * 2.0 - 1.0) * JITTER_FRAC;
+        ((nominal as f64 * scale) as u64).max(1)
+    }
+}
+
+/// Queue-depth shedding: drop low-priority work first under load.
+#[derive(Debug, Clone)]
+pub struct ShedPolicy {
+    /// Classes ranked strictly below this (higher index = lower
+    /// priority) are sheddable.
+    pub protected_rank: usize,
+    /// Wait-queue depth (running session excluded) at which sheddable
+    /// arrivals are refused.
+    pub depth: usize,
+}
+
+impl ShedPolicy {
+    /// `None` when `--shed-below` is unset — every arrival is
+    /// admitted regardless of queue depth.
+    pub fn from_config(cfg: &FleetConfig) -> Option<Self> {
+        let protected = cfg.shed_below.as_deref()?;
+        let protected_rank = cfg
+            .priority_mix
+            .iter()
+            .position(|(name, _)| name == protected)
+            .expect("FleetConfig validation pins --shed-below to a declared class");
+        Some(Self { protected_rank, depth: cfg.shed_depth })
+    }
+
+    /// Shed this arrival? `class_rank` indexes the priority mix
+    /// (0 = most urgent); `queue_depth` counts sessions waiting on the
+    /// target device across all classes.
+    pub fn sheds(&self, class_rank: usize, queue_depth: usize) -> bool {
+        class_rank > self.protected_rank && queue_depth >= self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(max_retries: u32, shed_below: Option<&str>) -> FleetConfig {
+        FleetConfig {
+            priority_mix: vec![("interactive".into(), 1.0), ("background".into(), 3.0)],
+            max_retries,
+            shed_below: shed_below.map(str::to_string),
+            shed_depth: 2,
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn retry_budget_counts_attempts_not_retries() {
+        let p = RetryPolicy::from_config(&cfg_with(2, None));
+        assert!(p.allows(1), "first failure: 0 retries used, 2 allowed");
+        assert!(p.allows(2), "second failure: 1 retry used");
+        assert!(!p.allows(3), "third failure: budget exhausted");
+        let open_loop = RetryPolicy::from_config(&cfg_with(0, None));
+        assert!(!open_loop.allows(1), "max-retries 0 abandons on first failure");
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt_within_jitter() {
+        let p = RetryPolicy::from_config(&cfg_with(8, None));
+        let mut jitter = SplitMix64::new(5);
+        for attempt in 1..=8u32 {
+            let nominal = p.base_cycles * (1u64 << (attempt - 1));
+            let lo = (nominal as f64 * (1.0 - JITTER_FRAC)) as u64;
+            let hi = (nominal as f64 * (1.0 + JITTER_FRAC)) as u64 + 1;
+            for _ in 0..50 {
+                let d = p.backoff_cycles(attempt, &mut jitter);
+                assert!(d >= lo && d <= hi, "attempt {attempt}: {d} not in [{lo}, {hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_exponent_saturates_instead_of_overflowing() {
+        let p = RetryPolicy::from_config(&cfg_with(u32::MAX, None));
+        let mut jitter = SplitMix64::new(5);
+        let d = p.backoff_cycles(u32::MAX, &mut jitter);
+        assert!(d >= 1, "deep attempts still produce a finite delay: {d}");
+    }
+
+    #[test]
+    fn shed_protects_the_named_class_and_above() {
+        let policy = ShedPolicy::from_config(&cfg_with(0, Some("interactive"))).unwrap();
+        assert!(!policy.sheds(0, 100), "protected class never sheds");
+        assert!(policy.sheds(1, 2), "lower class sheds at the bound");
+        assert!(!policy.sheds(1, 1), "below the bound everything is admitted");
+        assert!(ShedPolicy::from_config(&cfg_with(0, None)).is_none());
+    }
+}

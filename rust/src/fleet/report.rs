@@ -7,12 +7,19 @@
 //! determinism contract `rust/tests/fleet_sim.rs` pins, and what lets
 //! CI diff `BENCH_fleet.json` across commits with
 //! `scripts/bench_diff.py`).
+//!
+//! Outcomes partition exactly: `completed + abandoned + infeasible +
+//! errored == sessions`. Per-session attempt and shed counts survive
+//! into [`SessionRecord`]; per-priority-class sojourn percentiles
+//! (p50/p95/p99 — the SLO view) land in [`ClassStat`] rows of both the
+//! table and the JSON.
 
 use std::collections::BTreeMap;
 
 use crate::report::Table;
 use crate::serve::Advisor;
 use crate::util::json::Json;
+use crate::util::stats::percentile;
 
 use super::trace::Session;
 use super::REF_FREQ_MHZ;
@@ -27,16 +34,26 @@ pub struct SessionRecord {
     pub batch: usize,
     pub retrain_depth: Option<usize>,
     pub steps: usize,
+    /// Priority-class rank (index into the config's mix, 0 = most
+    /// urgent).
+    pub priority: usize,
+    /// Arrival attempts this session made (1 = admitted first try).
+    pub attempts: u32,
+    /// How many of those attempts the fleet's shed policy refused.
+    pub shed: u32,
     /// The advisor-chosen layout scheme (`None` if the session never
     /// ran).
     pub scheme: Option<String>,
     /// How the config resolved: `hit` | `miss` | `coalesced` |
-    /// `rejected` | `infeasible` | `error`.
+    /// `abandoned` | `infeasible` | `error`.
     pub source: String,
+    /// The session's *original* arrival — sojourn runs from here, so
+    /// it includes retry backoff waits.
     pub arrival_cycle: u64,
     pub start_cycle: u64,
     pub end_cycle: u64,
-    /// Time spent waiting behind the device's FIFO.
+    /// Time spent waiting in the device's class FIFO, measured from
+    /// the admitted attempt (backoff time is sojourn, not queueing).
     pub queue_cycles: u64,
     /// Modeled adaptation time on the device.
     pub service_cycles: u64,
@@ -54,9 +71,9 @@ impl SessionRecord {
         self.end_cycle.saturating_sub(self.arrival_cycle)
     }
 
-    /// A record for a session the fleet never ran (rejected by
-    /// admission control, budget-infeasible, or errored).
-    pub fn unserved(s: &Session, source: &str) -> Self {
+    /// A record for a session the fleet never ran (abandoned after its
+    /// retry budget, budget-infeasible, or errored).
+    pub fn unserved(s: &Session, source: &str, attempts: u32, shed: u32) -> Self {
         Self {
             id: s.id,
             net: s.net.clone(),
@@ -65,6 +82,9 @@ impl SessionRecord {
             batch: s.batch,
             retrain_depth: s.retrain_depth,
             steps: s.steps,
+            priority: s.priority,
+            attempts,
+            shed,
             scheme: None,
             source: source.to_string(),
             arrival_cycle: s.arrival_cycle,
@@ -99,20 +119,12 @@ pub struct AdvisorCounters {
     pub saves: u64,
 }
 
-/// `sorted` ascending; `q` in [0, 1].
-fn percentile(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx]
-}
-
-/// p50/p95/max of a cycle population.
+/// p50/p95/p99/max of a cycle population.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CyclePercentiles {
     pub p50: u64,
     pub p95: u64,
+    pub p99: u64,
     pub max: u64,
 }
 
@@ -122,6 +134,7 @@ impl CyclePercentiles {
         Self {
             p50: percentile(&values, 0.50),
             p95: percentile(&values, 0.95),
+            p99: percentile(&values, 0.99),
             max: values.last().copied().unwrap_or(0),
         }
     }
@@ -130,9 +143,23 @@ impl CyclePercentiles {
         let mut m = BTreeMap::new();
         m.insert("p50_cycles".into(), Json::Num(self.p50 as f64));
         m.insert("p95_cycles".into(), Json::Num(self.p95 as f64));
+        m.insert("p99_cycles".into(), Json::Num(self.p99 as f64));
         m.insert("max_cycles".into(), Json::Num(self.max as f64));
         Json::Obj(m)
     }
+}
+
+/// One priority class's SLO view: volume, outcomes, and the sojourn
+/// percentiles of its *completed* sessions.
+#[derive(Debug, Clone)]
+pub struct ClassStat {
+    pub name: String,
+    /// Rank in the priority mix (0 = most urgent).
+    pub rank: usize,
+    pub sessions: usize,
+    pub completed: usize,
+    pub abandoned: usize,
+    pub sojourn: CyclePercentiles,
 }
 
 /// A finished fleet run, aggregated.
@@ -140,32 +167,46 @@ impl CyclePercentiles {
 pub struct FleetReport {
     pub sessions: usize,
     pub completed: usize,
-    pub rejected: usize,
+    /// Sessions whose retry budget ran out (every attempt was shed or
+    /// advisor-refused).
+    pub abandoned: usize,
     pub infeasible: usize,
     pub errored: usize,
-    /// Last event on the fleet timeline ([`REF_FREQ_MHZ`] cycles) —
-    /// the modeled makespan the CI bench gate watches.
+    /// Backoff re-arrivals scheduled across the run.
+    pub retries: u64,
+    /// Attempts the fleet's shed policy refused (no advisor query).
+    pub shed: u64,
+    /// Cycle of the last session *completion* on the fleet timeline
+    /// ([`REF_FREQ_MHZ`] cycles) — the modeled makespan the CI bench
+    /// gate watches. Refused arrivals past the last completion do not
+    /// extend it: makespan measures work done, not events seen.
     pub makespan_cycles: u64,
     pub total_busy_cycles: u64,
     pub total_energy_mj: f64,
     pub queueing: CyclePercentiles,
     pub service: CyclePercentiles,
     pub sojourn: CyclePercentiles,
+    /// Per-priority-class stats, in rank order.
+    pub classes: Vec<ClassStat>,
     pub devices: Vec<DeviceStat>,
     pub advisor: AdvisorCounters,
     pub records: Vec<SessionRecord>,
 }
 
 impl FleetReport {
-    /// Aggregate one engine run. `records` are in session-id order.
+    /// Aggregate one engine run. `records` are in session-id order;
+    /// `class_names` are the config's priority classes in rank order.
     pub fn build(
         records: Vec<SessionRecord>,
         devices: Vec<DeviceStat>,
         makespan_cycles: u64,
         advisor: &Advisor,
+        class_names: Vec<String>,
+        retries: u64,
+        shed: u64,
     ) -> Self {
         let completed = records.iter().filter(|r| r.ran()).count();
-        let rejected = records.iter().filter(|r| r.source == "rejected").count();
+        let abandoned = records.iter().filter(|r| r.source == "abandoned").count();
         let infeasible = records.iter().filter(|r| r.source == "infeasible").count();
         let errored = records.iter().filter(|r| r.source == "error").count();
         let ran: Vec<&SessionRecord> = records.iter().filter(|r| r.ran()).collect();
@@ -175,6 +216,31 @@ impl FleetReport {
             CyclePercentiles::of(ran.iter().map(|r| r.service_cycles).collect());
         let sojourn =
             CyclePercentiles::of(ran.iter().map(|r| r.sojourn_cycles()).collect());
+        let classes = class_names
+            .into_iter()
+            .enumerate()
+            .map(|(rank, name)| {
+                let of_class: Vec<&SessionRecord> =
+                    records.iter().filter(|r| r.priority == rank).collect();
+                ClassStat {
+                    name,
+                    rank,
+                    sessions: of_class.len(),
+                    completed: of_class.iter().filter(|r| r.ran()).count(),
+                    abandoned: of_class
+                        .iter()
+                        .filter(|r| r.source == "abandoned")
+                        .count(),
+                    sojourn: CyclePercentiles::of(
+                        of_class
+                            .iter()
+                            .filter(|r| r.ran())
+                            .map(|r| r.sojourn_cycles())
+                            .collect(),
+                    ),
+                }
+            })
+            .collect();
         let total_busy_cycles = devices.iter().map(|d| d.busy_cycles).sum();
         let total_energy_mj = ran.iter().map(|r| r.energy_mj).sum();
         let stats = advisor.stats();
@@ -190,15 +256,18 @@ impl FleetReport {
         Self {
             sessions: records.len(),
             completed,
-            rejected,
+            abandoned,
             infeasible,
             errored,
+            retries,
+            shed,
             makespan_cycles,
             total_busy_cycles,
             total_energy_mj,
             queueing,
             service,
             sojourn,
+            classes,
             devices,
             advisor,
             records,
@@ -244,9 +313,10 @@ impl FleetReport {
         );
         let mut row = |k: &str, v: String| t.push(vec![k.to_string(), v]);
         row("sessions completed", format!("{}", self.completed));
-        row("sessions rejected (overload)", format!("{}", self.rejected));
+        row("sessions abandoned (retries spent)", format!("{}", self.abandoned));
         row("sessions infeasible", format!("{}", self.infeasible));
         row("sessions errored", format!("{}", self.errored));
+        row("retries / shed attempts", format!("{} / {}", self.retries, self.shed));
         row("sessions / modeled s", format!("{:.3}", self.sessions_per_modeled_s()));
         row("device utilization", format!("{:.1}%", 100.0 * self.device_utilization()));
         row("total energy", format!("{:.1} mJ", self.total_energy_mj));
@@ -268,6 +338,19 @@ impl FleetReport {
                 Self::cycles_ms(self.service.max)
             ),
         );
+        for c in &self.classes {
+            row(
+                &format!("[{}] sojourn p50 / p95 / p99", c.name),
+                format!(
+                    "{:.1} / {:.1} / {:.1} ms ({} done, {} abandoned)",
+                    Self::cycles_ms(c.sojourn.p50),
+                    Self::cycles_ms(c.sojourn.p95),
+                    Self::cycles_ms(c.sojourn.p99),
+                    c.completed,
+                    c.abandoned
+                ),
+            );
+        }
         row(
             "advisor hits / misses / coalesced / rejected",
             format!(
@@ -316,9 +399,11 @@ impl FleetReport {
         let mut root = BTreeMap::new();
         root.insert("sessions".into(), Json::Num(self.sessions as f64));
         root.insert("completed".into(), Json::Num(self.completed as f64));
-        root.insert("rejected".into(), Json::Num(self.rejected as f64));
+        root.insert("abandoned".into(), Json::Num(self.abandoned as f64));
         root.insert("infeasible".into(), Json::Num(self.infeasible as f64));
         root.insert("errored".into(), Json::Num(self.errored as f64));
+        root.insert("retries".into(), Json::Num(self.retries as f64));
+        root.insert("shed".into(), Json::Num(self.shed as f64));
         root.insert(
             "fleet_makespan_cycles".into(),
             Json::Num(self.makespan_cycles as f64),
@@ -339,6 +424,24 @@ impl FleetReport {
         root.insert("queueing".into(), self.queueing.to_json());
         root.insert("adaptation".into(), self.service.to_json());
         root.insert("sojourn".into(), self.sojourn.to_json());
+        root.insert(
+            "classes".into(),
+            Json::Arr(
+                self.classes
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".into(), Json::Str(c.name.clone()));
+                        m.insert("rank".into(), Json::Num(c.rank as f64));
+                        m.insert("sessions".into(), Json::Num(c.sessions as f64));
+                        m.insert("completed".into(), Json::Num(c.completed as f64));
+                        m.insert("abandoned".into(), Json::Num(c.abandoned as f64));
+                        m.insert("sojourn".into(), c.sojourn.to_json());
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
         let mut adv = BTreeMap::new();
         adv.insert("hits".into(), Json::Num(self.advisor.hits as f64));
         adv.insert("misses".into(), Json::Num(self.advisor.misses as f64));

@@ -2,10 +2,19 @@
 //! deterministic, wall-clock-free.
 //!
 //! A trace is a stream of adaptation [`Session`]s drawn from the
-//! configured mixes over two independent [`SplitMix64`] sub-streams of
-//! `--seed`: one for the Poisson arrival process, one for session
-//! attributes — so reshaping the attribute draws can never shift the
-//! arrival times and vice versa. Steps-to-converge is not a raw draw:
+//! configured mixes over independent [`SplitMix64`] sub-streams of
+//! `--seed`: one for the arrival process, one for session attributes,
+//! and (only when `--burst-rate` is set) one for the MMPP modulating
+//! chain — so reshaping the attribute draws can never shift the
+//! arrival times and vice versa, and switching bursts on never
+//! reshapes either. Arrivals are Poisson at `--arrival-rate` by
+//! default; with `--burst-rate`/`--burst-dwell` they become a
+//! two-state Markov-modulated Poisson process that alternates between
+//! the base and burst rates, dwelling an exponential time (mean
+//! `--burst-dwell` modeled seconds) in each state. Priority classes
+//! (`--priority-mix`, first class = most urgent) are an attribute
+//! draw — skipped entirely for a single-class mix, so default-config
+//! seeds replay byte-identically. Steps-to-converge is not a raw draw:
 //! each session synthesizes a loss curve (exponential decay toward a
 //! plateau, rate scaled by retrain depth — shallower LoCO-PDA-style
 //! sessions adapt slower per step) and runs it through the *real*
@@ -38,6 +47,9 @@ pub struct Session {
     /// `None` = full retraining; `Some(k)` = BP+WU over the last `k`
     /// conv layers only (clamped to the network's depth downstream).
     pub retrain_depth: Option<usize>,
+    /// Priority-class rank: an index into the config's priority mix,
+    /// 0 = most urgent. Device queues serve strictly by this rank.
+    pub priority: usize,
     /// What the session asks the advisor to minimize.
     pub objective: Objective,
     /// Budgets forwarded to the advisor (loose by construction — the
@@ -67,6 +79,69 @@ fn steps_to_converge(rng: &mut SplitMix64, depth_frac: f64, max_steps: usize) ->
     steps.max(1)
 }
 
+/// The salt of the MMPP modulating chain's [`SplitMix64`] sub-stream
+/// (arrivals use 1, attributes 2, retry jitter 3).
+pub const MMPP_CHAIN_SALT: u64 = 4;
+
+/// The arrival process: plain Poisson, or a two-state MMPP when a
+/// burst rate is configured.
+///
+/// Each inter-arrival consumes one unit-exponential draw from the
+/// arrival stream as "work" and advances modeled time at the current
+/// state's rate until the work is spent, crossing state boundaries as
+/// needed (state dwell times come from the dedicated chain stream).
+/// With bursts off, the work is simply divided by the base rate —
+/// value-identical to drawing `exponential(rate)` directly, so
+/// pre-MMPP traces replay unchanged.
+struct ArrivalProcess {
+    base_rate: f64,
+    burst: Option<(f64, f64)>,
+    /// Dwell draws for the modulating chain — its own sub-stream, so
+    /// enabling bursts never reshapes arrival or attribute draws.
+    chain: SplitMix64,
+    in_burst: bool,
+    /// Modeled seconds left in the current state.
+    state_left_s: f64,
+}
+
+impl ArrivalProcess {
+    fn new(cfg: &FleetConfig) -> Self {
+        let mut chain = SplitMix64::stream(cfg.seed, MMPP_CHAIN_SALT);
+        let state_left_s = match cfg.burst {
+            Some((_, dwell)) => chain.exponential(1.0 / dwell),
+            None => 0.0,
+        };
+        Self {
+            base_rate: cfg.arrival_rate,
+            burst: cfg.burst,
+            chain,
+            in_burst: false,
+            state_left_s,
+        }
+    }
+
+    /// Modeled seconds until the next arrival.
+    fn next_interarrival_s(&mut self, arrivals: &mut SplitMix64) -> f64 {
+        let mut work = arrivals.exponential(1.0);
+        let Some((burst_rate, dwell)) = self.burst else {
+            return work / self.base_rate;
+        };
+        let mut waited = 0.0;
+        loop {
+            let rate = if self.in_burst { burst_rate } else { self.base_rate };
+            if work <= rate * self.state_left_s {
+                let dt = work / rate;
+                self.state_left_s -= dt;
+                return waited + dt;
+            }
+            work -= rate * self.state_left_s;
+            waited += self.state_left_s;
+            self.in_burst = !self.in_burst;
+            self.state_left_s = self.chain.exponential(1.0 / dwell);
+        }
+    }
+}
+
 /// Generate the whole trace for `cfg` — a pure function of the seed.
 pub fn generate(cfg: &FleetConfig) -> crate::Result<Vec<Session>> {
     let slots = cfg.device_slots();
@@ -88,16 +163,25 @@ pub fn generate(cfg: &FleetConfig) -> crate::Result<Vec<Session>> {
     let net_weights: Vec<f64> = nets.iter().map(|(_, w, _)| *w).collect();
     let batch_weights: Vec<f64> = cfg.batch_mix.iter().map(|(_, w)| *w).collect();
     let depth_weights: Vec<f64> = cfg.depth_mix.iter().map(|(_, w)| *w).collect();
+    let class_weights: Vec<f64> = cfg.priority_mix.iter().map(|(_, w)| *w).collect();
 
     let mut arrivals = SplitMix64::stream(cfg.seed, 1);
     let mut attrs = SplitMix64::stream(cfg.seed, 2);
+    let mut process = ArrivalProcess::new(cfg);
     let cycles_per_s = REF_FREQ_MHZ as f64 * 1e6;
 
     let mut out = Vec::with_capacity(cfg.sessions);
     let mut clock = 0u64;
     for id in 0..cfg.sessions as u64 {
-        clock += (arrivals.exponential(cfg.arrival_rate) * cycles_per_s) as u64;
+        clock += (process.next_interarrival_s(&mut arrivals) * cycles_per_s) as u64;
         let slot = attrs.below(slots.len());
+        // A single-class mix draws nothing, so pre-priority traces
+        // (and the default config) replay byte-identically.
+        let priority = if class_weights.len() > 1 {
+            attrs.weighted(&class_weights)
+        } else {
+            0
+        };
         let (kind, _) = &slots[slot];
         let (net, _, n_convs) = &nets[attrs.weighted(&net_weights)];
         let batch = cfg.batch_mix[attrs.weighted(&batch_weights)].0;
@@ -126,6 +210,7 @@ pub fn generate(cfg: &FleetConfig) -> crate::Result<Vec<Session>> {
             net: net.clone(),
             batch,
             retrain_depth,
+            priority,
             objective,
             budgets,
             steps,
@@ -198,6 +283,58 @@ mod tests {
             ..FleetConfig::default()
         };
         assert!(generate(&cfg).is_err());
+    }
+
+    #[test]
+    fn priority_draws_are_in_range_and_single_class_is_free() {
+        let multi = FleetConfig {
+            sessions: 256,
+            priority_mix: vec![("interactive".into(), 1.0), ("background".into(), 3.0)],
+            ..FleetConfig::default()
+        };
+        let trace = generate(&multi).unwrap();
+        assert!(trace.iter().all(|s| s.priority < 2));
+        assert!(trace.iter().any(|s| s.priority == 0), "both classes appear");
+        assert!(trace.iter().any(|s| s.priority == 1), "both classes appear");
+
+        // A single-class mix must not consume an attribute draw: an
+        // explicit one-class config replays the default trace exactly.
+        let default_trace = generate(&FleetConfig { sessions: 64, ..FleetConfig::default() })
+            .unwrap();
+        let one_class = generate(&FleetConfig {
+            sessions: 64,
+            priority_mix: vec![("everything".into(), 7.0)],
+            ..FleetConfig::default()
+        })
+        .unwrap();
+        for (a, b) in default_trace.iter().zip(&one_class) {
+            assert_eq!(a.arrival_cycle, b.arrival_cycle);
+            assert_eq!(a.net, b.net);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(b.priority, 0);
+        }
+    }
+
+    #[test]
+    fn bursts_reshape_arrivals_but_never_attributes() {
+        let base = FleetConfig { sessions: 128, ..FleetConfig::default() };
+        let bursty = FleetConfig { burst: Some((60.0, 0.5)), ..base.clone() };
+        let a = generate(&base).unwrap();
+        let b = generate(&bursty).unwrap();
+        assert!(
+            a.iter().zip(&b).any(|(x, y)| x.arrival_cycle != y.arrival_cycle),
+            "a hotter burst state must compress some inter-arrivals"
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.device_slot, y.device_slot, "attribute stream untouched");
+            assert_eq!(x.net, y.net);
+            assert_eq!(x.batch, y.batch);
+            assert_eq!(x.retrain_depth, y.retrain_depth);
+            assert_eq!(x.steps, y.steps);
+        }
+        // Burst states only ever add rate, so the bursty trace finishes
+        // arriving no later than the base one.
+        assert!(b.last().unwrap().arrival_cycle <= a.last().unwrap().arrival_cycle);
     }
 
     #[test]

@@ -37,6 +37,9 @@ USAGE:
   ef-train fleet [--sessions N] [--seed S] [--jobs J] [--cache-file PATH]
                  [--arrival-rate R] [--depth-mix CSV] [--device-mix CSV]
                  [--net-mix CSV] [--batch-mix CSV] [--max-steps N]
+                 [--priority-mix CSV] [--max-retries N] [--retry-base-ms MS]
+                 [--shed-below CLASS] [--shed-depth N]
+                 [--burst-rate R] [--burst-dwell S]
                  [--max-inflight-misses N] [--save-every N]
                  [--search-tilings] [--out FILE]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
@@ -75,16 +78,25 @@ advisor: a seedable deterministic trace of adaptation sessions
 LoCO-PDA-style partial sessions, e.g. `full:2,1:1,2:1`, where depth k
 runs BP+WU on only the last k conv layers) arrives at --arrival-rate
 sessions per modeled second, resolves configs via the shared advisor
-(hits/misses/coalescing/rejections for real), and FIFO-queues on the
-modeled devices. Prints fleet metrics and writes the JSON report to
---out; a fixed --seed is bit-identical across runs and --jobs values.";
+(hits/misses/coalescing/rejections for real), and queues per priority
+class on the modeled devices. The traffic model is closed-loop:
+refused attempts (advisor overload, or queue-depth shedding of
+classes below --shed-below once the wait queue reaches --shed-depth)
+retry with jittered exponential backoff up to --max-retries times,
+then abandon. --priority-mix lists classes most-urgent-first, e.g.
+`interactive:1,background:3`; --burst-rate/--burst-dwell switch the
+arrivals to a two-state MMPP that alternates between the base and
+burst rates. Prints fleet metrics (per-class sojourn p50/p95/p99) and
+writes the JSON report to --out; a fixed --seed is bit-identical
+across runs and --jobs values.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
     "max-steps", "shift", "nets", "devices", "batches", "schemes", "out",
     "jobs", "cache-file", "queries", "listen", "stats-json", "sessions",
     "arrival-rate", "device-mix", "net-mix", "batch-mix", "depth-mix",
-    "max-inflight-misses", "save-every",
+    "max-inflight-misses", "save-every", "priority-mix", "max-retries",
+    "retry-base-ms", "shed-below", "shed-depth", "burst-rate", "burst-dwell",
 ];
 
 fn main() {
@@ -330,6 +342,15 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 &args.flag_or("batch-mix", "4:3,16:1"),
                 &args.flag_or("depth-mix", "full:2,1:1,2:1"),
                 args.parse_flag("max-steps", 120usize),
+            )?
+            .with_closed_loop(
+                &args.flag_or("priority-mix", "default:1"),
+                args.parse_flag("max-retries", 0u32),
+                args.parse_flag("retry-base-ms", 50.0f64),
+                args.flag("shed-below"),
+                args.parse_flag("shed-depth", 8usize),
+                args.try_parse_flag("burst-rate")?,
+                args.try_parse_flag("burst-dwell")?,
             )?;
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
             let cache = match cache_path.as_deref() {

@@ -57,6 +57,7 @@ use crate::layout::Scheme;
 use crate::nets::{network_by_name, Network};
 use crate::util::json::Json;
 use crate::util::memo::CoalescingMemo;
+use crate::util::stats::percentile;
 use index::{FrontierIndex, Lookup};
 use protocol::{Query, Request, Source};
 
@@ -164,14 +165,6 @@ pub struct ServeStats {
     /// Cache-file saves performed by the batched write-back path.
     saves: AtomicU64,
     service_us: Mutex<VecDeque<u64>>,
-}
-
-fn percentile(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx]
 }
 
 impl ServeStats {

@@ -6,8 +6,8 @@
 //! implemented here: a JSON parser/emitter ([`json`]), a micro benchmark
 //! harness ([`bench`]), a property-testing loop ([`proptest`]), a tiny
 //! CLI argument reader ([`cli`]), a sharded concurrent memo table
-//! ([`memo`]), and a splittable PRNG for deterministic workload
-//! generation ([`rng`]).
+//! ([`memo`]), a splittable PRNG for deterministic workload
+//! generation ([`rng`]), and shared order statistics ([`stats`]).
 
 pub mod bench;
 pub mod cli;
@@ -15,3 +15,4 @@ pub mod json;
 pub mod memo;
 pub mod proptest;
 pub mod rng;
+pub mod stats;

@@ -46,10 +46,31 @@ impl SplitMix64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
-    /// Uniform integer in `[0, n)`.
+    /// Uniform integer in `[0, n)` — unbiased.
+    ///
+    /// Lemire's multiply-shift rejection method: `x * n >> 64` maps a
+    /// uniform u64 into `[0, n)`, and the rare draws that land in the
+    /// `2^64 mod n`-sized ragged remainder are rejected and redrawn.
+    /// The previous `next_u64() % n` skewed toward small values for
+    /// any `n` that does not divide `2^64` (immeasurably for tiny
+    /// mixes, but a bias baked into every trace is still a bias).
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut low = m as u64;
+        if low < n {
+            // Threshold `2^64 mod n`: below it, the slice of u64 space
+            // mapping to this bucket is one short — reject and redraw.
+            let t = n.wrapping_neg() % n;
+            while low < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                low = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Exponential with the given rate (mean `1 / rate`) — the fleet's
@@ -60,18 +81,29 @@ impl SplitMix64 {
     }
 
     /// Pick an index by weight (weights need not normalize; all
-    /// non-negative, at least one positive).
+    /// non-negative, at least one positive). An index with zero weight
+    /// is **never** returned: the scan skips non-positive weights
+    /// entirely, and the accumulated-float-error fallback lands on the
+    /// last *positive*-weight index rather than blindly on
+    /// `weights.len() - 1` (which could be a zero-weight entry the
+    /// caller asked to exclude).
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
         debug_assert!(total > 0.0);
         let mut u = self.uniform() * total;
+        let mut last_positive = usize::MAX;
         for (i, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            last_positive = i;
             if u < w {
                 return i;
             }
             u -= w;
         }
-        weights.len() - 1
+        debug_assert!(last_positive != usize::MAX, "at least one positive weight");
+        last_positive
     }
 }
 
@@ -117,6 +149,50 @@ mod tests {
         let n = 20_000;
         let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_across_small_moduli() {
+        // Lemire rejection: every bucket of [0, n) lands within 2% of
+        // 1/n over a large sample, for moduli that do not divide 2^64
+        // (where `% n` was biased).
+        for n in [3usize, 5, 7, 12] {
+            let mut r = SplitMix64::new(n as u64);
+            let mut counts = vec![0usize; n];
+            let draws = 60_000;
+            for _ in 0..draws {
+                counts[r.below(n)] += 1;
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                let frac = c as f64 / draws as f64;
+                assert!(
+                    (frac - 1.0 / n as f64).abs() < 0.02,
+                    "n={n} bucket {i}: {frac}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn below_one_is_always_zero() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..100 {
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn weighted_never_returns_a_zero_weight_index() {
+        // Zero-weight entries are excluded outright — including the
+        // final index, which the old float-error fallback could land
+        // on even at weight 0.
+        let mut r = SplitMix64::new(17);
+        for _ in 0..20_000 {
+            assert_eq!(r.weighted(&[1.0, 0.0]), 0);
+            assert_eq!(r.weighted(&[0.0, 1.0, 0.0]), 1);
+            let i = r.weighted(&[0.0, 2.0, 0.0, 1.0, 0.0]);
+            assert!(i == 1 || i == 3, "{i}");
+        }
     }
 
     #[test]

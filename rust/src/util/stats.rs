@@ -1,0 +1,52 @@
+//! Shared order-statistics helpers.
+//!
+//! One percentile convention for the whole crate — the serve stats
+//! window and the fleet report used to carry copy-pasted twins of this
+//! function, which is exactly how two subsystems drift into reporting
+//! differently-defined "p95"s.
+
+/// Nearest-rank percentile over an **ascending-sorted** slice.
+///
+/// Convention: the value at index `round((len - 1) * q)` — i.e. the
+/// sample nearest the `q`-quantile rank, never an interpolated value
+/// that no request actually experienced. `q` is in `[0, 1]`;
+/// `q = 0` is the minimum, `q = 1` the maximum, and an empty
+/// population reports 0.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_population_reports_zero() {
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn nearest_rank_endpoints_and_median() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 1.0), 100);
+        // round((100 - 1) * 0.5) = round(49.5) = 50 (half away from
+        // zero), so the even-length "median" is the upper neighbour.
+        assert_eq!(percentile(&v, 0.50), 51);
+        assert_eq!(percentile(&v, 0.95), 95);
+        assert_eq!(percentile(&v, 0.99), 99);
+        let odd: Vec<u64> = (1..=99).collect();
+        assert_eq!(percentile(&odd, 0.50), 50);
+    }
+
+    #[test]
+    fn single_sample_answers_every_quantile() {
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[7], q), 7);
+        }
+    }
+}

@@ -1,19 +1,22 @@
 //! Fleet-simulator integration tests: the determinism contract (same
 //! seed => byte-identical report JSON across runs and rayon pool
-//! sizes), the depth-masked pricing properties the ISSUE acceptance
-//! criteria name, exhaustive advisor accounting
-//! (hits + misses + coalesced + rejected == sessions), admission
-//! control under fleet load, and the canonical-name regression (alias
-//! device spellings hit one cache cell from the fleet engine too).
+//! sizes, open- and closed-loop), the depth-masked pricing properties
+//! the ISSUE acceptance criteria name, exhaustive per-attempt advisor
+//! accounting (hits + misses + coalesced + rejected == non-shed
+//! attempts), the closed-loop retry/shed/priority behaviour, the
+//! completion-only makespan regression, and the canonical-name
+//! regression (alias device spellings hit one cache cell from the
+//! fleet engine too).
 
 use ef_train::data::Rng;
 use ef_train::explore::sweep_cache::SweepCache;
 use ef_train::explore::{masked_point_cycles, price_point_on, DesignPoint};
-use ef_train::fleet::{run_fleet, FleetConfig};
+use ef_train::fleet::{engine, run_fleet, trace, FleetConfig};
 use ef_train::layout::Scheme;
 use ef_train::model::scheduler::{network_training_cycles_masked, schedule};
 use ef_train::model::PhaseMask;
 use ef_train::nets::random_network;
+use ef_train::serve::index::{Budgets, Objective};
 use ef_train::serve::{Advisor, ServeOptions};
 use ef_train::util::proptest;
 use std::sync::Arc;
@@ -83,11 +86,18 @@ fn advisor_accounting_is_exhaustive_and_sessions_all_resolve() {
         "every session is classified exactly once: {adv:?}"
     );
     assert_eq!(adv.errors, 0, "canonical trace names cannot error");
-    assert_eq!(report.rejected, 0, "no admission bound configured");
+    assert_eq!(report.abandoned, 0, "no admission bound configured");
+    assert_eq!(report.retries, 0, "open loop by default");
+    assert_eq!(report.shed, 0, "no shed policy by default");
     assert_eq!(report.completed, 64);
     assert!(adv.misses >= 1, "a cold advisor must price the first cell");
     assert!(adv.hits > 0, "repeat sessions must hit");
     assert!(report.makespan_cycles > 0);
+    assert_eq!(
+        report.makespan_cycles,
+        report.records.iter().map(|r| r.end_cycle).max().unwrap(),
+        "makespan is the last completion"
+    );
     assert!(report.device_utilization() > 0.0 && report.device_utilization() <= 1.0);
     // Session records are complete, time-consistent, and energy-bearing.
     for r in &report.records {
@@ -95,6 +105,9 @@ fn advisor_accounting_is_exhaustive_and_sessions_all_resolve() {
         assert!(r.start_cycle >= r.arrival_cycle);
         assert_eq!(r.end_cycle - r.start_cycle, r.service_cycles);
         assert_eq!(r.start_cycle - r.arrival_cycle, r.queue_cycles);
+        assert_eq!(r.attempts, 1, "first attempt admits when nothing refuses");
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.priority, 0, "single-class default mix");
         assert!(r.service_cycles > 0);
         assert!(r.energy_mj > 0.0);
     }
@@ -185,8 +198,13 @@ fn admission_bound_rejects_the_cold_fleet_and_admits_the_warm_one() {
     };
     let choked = Advisor::new(SweepCache::empty(), None, None, opts.clone());
     let report = run_fleet(&cfg, &choked).unwrap();
-    assert_eq!(report.rejected, 24, "a zero-permit cold advisor rejects everything");
+    assert_eq!(
+        report.abandoned, 24,
+        "a zero-permit cold advisor refuses everything; the open loop abandons on \
+         the first refusal"
+    );
     assert_eq!(report.completed, 0);
+    assert_eq!(report.retries, 0, "max-retries defaults to 0");
     assert_eq!(report.advisor.rejected, 24);
     assert_eq!(
         report.advisor.hits
@@ -194,12 +212,19 @@ fn admission_bound_rejects_the_cold_fleet_and_admits_the_warm_one() {
             + report.advisor.coalesced
             + report.advisor.rejected,
         24,
-        "rejected sessions still land in the exhaustive classification"
+        "refused attempts still land in the exhaustive classification"
     );
-    assert_eq!(report.makespan_cycles, report.records.last().unwrap().arrival_cycle);
+    // Makespan regression (PR 5 bug): nothing ever completed, so no
+    // fleet work was done — the makespan is zero, not the last refused
+    // arrival's cycle.
+    assert_eq!(
+        report.makespan_cycles, 0,
+        "refused arrivals must not stretch the makespan"
+    );
     for r in &report.records {
         assert!(!r.ran());
-        assert_eq!(r.source, "rejected");
+        assert_eq!(r.source, "abandoned");
+        assert_eq!(r.attempts, 1);
         assert_eq!(r.energy_mj, 0.0);
     }
     // The same bound with a warm cache never needs a permit.
@@ -207,8 +232,195 @@ fn admission_bound_rejects_the_cold_fleet_and_admits_the_warm_one() {
     run_fleet(&cfg, &warm_src).unwrap();
     let warm = Advisor::new(warm_src.take_cache(), None, None, opts);
     let report = run_fleet(&cfg, &warm).unwrap();
-    assert_eq!(report.rejected, 0);
+    assert_eq!(report.abandoned, 0);
     assert_eq!(report.completed, 24);
+}
+
+#[test]
+fn makespan_tracks_the_last_completion_not_the_last_event() {
+    // A session abandoned after the last completion extends the event
+    // horizon but does no work. Force that shape: a closed-loop run
+    // against a permanently choked advisor retries every session past
+    // the horizon of an identical run that completed normally — and
+    // the makespan must stay pinned at zero (no completions at all).
+    let cfg = tiny_cfg(16, 21)
+        .with_closed_loop("default:1", 3, 50.0, None, 8, None, None)
+        .unwrap();
+    let choked = Advisor::new(
+        SweepCache::empty(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            max_inflight_misses: Some(0),
+            ..ServeOptions::default()
+        },
+    );
+    let report = run_fleet(&cfg, &choked).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.abandoned, 16);
+    assert_eq!(report.retries, 3 * 16, "every session spends its full budget");
+    assert_eq!(report.makespan_cycles, 0);
+    assert_eq!(report.sessions_per_modeled_s(), 0.0);
+    assert_eq!(report.device_utilization(), 0.0);
+    for r in &report.records {
+        assert_eq!(r.attempts, 4, "1 initial + 3 retries");
+    }
+}
+
+#[test]
+fn engine_propagates_bogus_session_names_as_errors() {
+    // A hand-built session naming an unknown net or device is a caller
+    // bug: engine::run must return Err (PR 5 panicked inside a memo
+    // closure instead).
+    let cfg = tiny_cfg(1, 1);
+    let well_formed = trace::generate(&cfg).unwrap();
+    let mut bogus_net = well_formed.clone();
+    bogus_net[0].net = "definitely-not-a-net".into();
+    let advisor = advisor_for(&cfg);
+    assert!(engine::run(&cfg, &bogus_net, &advisor).is_err());
+    let mut bogus_dev = well_formed.clone();
+    bogus_dev[0].device_kind = "definitely-not-a-board".into();
+    assert!(engine::run(&cfg, &bogus_dev, &advisor).is_err());
+    let mut bogus_priority = well_formed;
+    bogus_priority[0].priority = 7;
+    assert!(
+        engine::run(&cfg, &bogus_priority, &advisor).is_err(),
+        "a priority rank outside the config's class list is rejected up front"
+    );
+    // Building a session from scratch exercises the same path.
+    let handmade = vec![trace::Session {
+        id: 0,
+        arrival_cycle: 0,
+        device_kind: "zcu102".into(),
+        device_slot: 0,
+        net: "nope".into(),
+        batch: 4,
+        retrain_depth: None,
+        priority: 0,
+        objective: Objective::ALL[0],
+        budgets: Budgets::default(),
+        steps: 1,
+    }];
+    assert!(engine::run(&cfg, &handmade, &advisor).is_err());
+}
+
+/// A deliberately congested scenario: one device slot, arrivals far
+/// faster than service, two priority classes with background work
+/// sheddable once the wait queue is 2 deep.
+fn congested_cfg(max_retries: u32) -> FleetConfig {
+    FleetConfig::parse(48, 11, 100.0, "zcu102:1", "cnn1x:1", "4:1", "full:2,1:1,2:1", 60)
+        .unwrap()
+        .with_closed_loop(
+            "interactive:1,background:3",
+            max_retries,
+            50.0,
+            Some("interactive"),
+            2,
+            None,
+            None,
+        )
+        .unwrap()
+}
+
+#[test]
+fn retries_recover_shed_work_the_open_loop_abandons() {
+    // The closed-loop acceptance property: under transient overload
+    // (queue-depth shedding during the arrival burst), a retrying
+    // fleet completes a strictly larger fraction of its sessions than
+    // the open loop, because backed-off attempts land after the queue
+    // drains. max_retries 20 saturates the backoff far beyond any
+    // plausible busy period, so every shed session eventually lands.
+    let open = run_fleet(&congested_cfg(0), &advisor_for(&congested_cfg(0))).unwrap();
+    assert!(open.shed > 0, "the burst must drive the queue past the shed depth");
+    assert_eq!(open.retries, 0);
+    assert!(
+        open.abandoned > 0 && open.completed < open.sessions,
+        "the open loop abandons shed work on the spot"
+    );
+    let closed =
+        run_fleet(&congested_cfg(20), &advisor_for(&congested_cfg(20))).unwrap();
+    assert!(closed.retries > 0);
+    assert!(
+        closed.completed > open.completed,
+        "retries must strictly beat the open loop: {} vs {}",
+        closed.completed,
+        open.completed
+    );
+    assert!(closed.abandoned < open.abandoned);
+    // Priority SLOs: the protected class is never shed and is served
+    // first, so its completed-sojourn tail cannot exceed the sheddable
+    // class's (whose recovered sessions pay backoff on top).
+    assert_eq!(closed.classes.len(), 2);
+    let interactive = &closed.classes[0];
+    let background = &closed.classes[1];
+    assert_eq!(interactive.name, "interactive");
+    assert_eq!(background.name, "background");
+    assert!(interactive.sessions > 0 && background.sessions > 0);
+    assert_eq!(interactive.abandoned, 0, "the protected class is never shed");
+    assert_eq!(
+        interactive.sessions + background.sessions,
+        closed.sessions,
+        "classes partition the trace"
+    );
+    assert!(interactive.sojourn.p99 <= background.sojourn.p99);
+    // Shed attempts skip the advisor entirely: records of sessions that
+    // were ever shed carry the count, and nothing interactive sheds.
+    assert!(closed.records.iter().all(|r| r.priority != 0 || r.shed == 0));
+}
+
+#[test]
+fn accounting_is_exhaustive_per_attempt_under_retries() {
+    let cfg = congested_cfg(20);
+    let report = run_fleet(&cfg, &advisor_for(&cfg)).unwrap();
+    // Fleet outcomes partition the sessions...
+    assert_eq!(
+        report.completed + report.abandoned + report.infeasible + report.errored,
+        report.sessions
+    );
+    // ...attempts total the initial arrivals plus every retry...
+    let attempts: u64 = report.records.iter().map(|r| u64::from(r.attempts)).sum();
+    assert_eq!(attempts, report.sessions as u64 + report.retries);
+    // ...and every attempt either queried the advisor (classified
+    // exactly once) or was shed before the advisor saw it.
+    let adv = &report.advisor;
+    assert_eq!(
+        adv.hits + adv.misses + adv.coalesced + adv.rejected,
+        attempts - report.shed,
+        "one advisor classification per non-shed attempt: {adv:?}"
+    );
+    let shed_per_record: u64 = report.records.iter().map(|r| u64::from(r.shed)).sum();
+    assert_eq!(shed_per_record, report.shed);
+    assert_eq!(adv.errors, 0);
+}
+
+#[test]
+fn closed_loop_reports_are_byte_identical_across_pool_sizes() {
+    // The determinism contract survives every closed-loop knob at
+    // once: retries + shedding + priorities + MMPP bursts.
+    let cfg = congested_cfg(3)
+        .with_closed_loop(
+            "interactive:1,background:3",
+            3,
+            50.0,
+            Some("interactive"),
+            2,
+            Some(400.0),
+            Some(0.25),
+        )
+        .unwrap();
+    let run_in_pool = |threads: usize| -> String {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .expect("pool");
+        let advisor = advisor_for(&cfg);
+        let report = pool.install(|| run_fleet(&cfg, &advisor)).expect("fleet run");
+        report.to_json().to_string()
+    };
+    let a = run_in_pool(1);
+    let b = run_in_pool(4);
+    assert_eq!(a, b, "closed-loop event order may not depend on the pool size");
 }
 
 #[test]
@@ -225,6 +437,7 @@ fn alias_device_spellings_hit_one_cache_cell_from_the_engine() {
         batch_mix: vec![(4, 1.0)],
         depth_mix: vec![(None, 1.0)],
         max_session_steps: 40,
+        ..FleetConfig::default()
     };
     let advisor = advisor_for(&cfg);
     let report = run_fleet(&cfg, &advisor).unwrap();

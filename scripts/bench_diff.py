@@ -55,9 +55,16 @@ KINDS = {
             "total_energy_mj",
             "total_busy_cycles",
             "completed",
-            "rejected",
+            "abandoned",
+            "retries",
+            "shed",
+            "sojourn_p99_cycles",
         ],
-        "compat": ["fast_mode", "sessions", "seed"],
+        # workload_schema: the seed-to-workload model version. An
+        # intentional trace-model change (e.g. an RNG bias fix) bumps
+        # it, making the runs not-comparable instead of red-failing the
+        # makespan gate.
+        "compat": ["fast_mode", "sessions", "seed", "workload_schema"],
     },
 }
 
