@@ -8,8 +8,12 @@
 //! Every field in the artifact is deterministic — the report carries
 //! no wall-clock — so for a fixed seed the file is byte-identical
 //! across runs and rayon pool sizes, which is exactly what makes it
-//! diffable. Pass `--fast` (or set `EF_BENCH_FAST=1`) to shrink the
-//! session count for CI.
+//! diffable. A second, fault-injected run of the same trace stamps
+//! `chaos_*` counters (crashes/recoveries/throttles, steps lost and
+//! resumed, goodput, SLO violation rate) into the artifact under
+//! `bench_schema` 2 — context for the diff, never gated. Pass
+//! `--fast` (or set `EF_BENCH_FAST=1`) to shrink the session count
+//! for CI.
 
 use ef_train::explore::sweep_cache::SweepCache;
 use ef_train::fleet::{run_fleet, FleetConfig, WORKLOAD_SCHEMA};
@@ -37,12 +41,80 @@ fn main() {
     let advisor = Advisor::new(SweepCache::empty(), None, None, opts);
     let report = run_fleet(&cfg, &advisor).expect("fleet run");
 
+    // Second scenario: the same seeded trace under full fault
+    // injection (crashes + throttles + checkpoints + SLO targets) on a
+    // fresh cold advisor. Its counters ride along in the artifact under
+    // `chaos_*` keys; the *gated* makespan stays the faultless run's,
+    // so the perf gate keeps its history.
+    let chaos_cfg = FleetConfig {
+        sessions: if fast { 200 } else { 1000 },
+        ..FleetConfig::default()
+    }
+    .with_closed_loop(
+        "interactive:1,background:3",
+        3,
+        50.0,
+        Some("interactive"),
+        2,
+        None,
+        None,
+    )
+    .expect("chaos priority mix")
+    .with_faults(
+        Some(25.0),
+        Some(2.0),
+        Some(40.0),
+        Some(5.0),
+        0.6,
+        8,
+        Some("interactive:6000000000,background:1000000000000000"),
+    )
+    .expect("chaos fault knobs");
+    let chaos_opts = ServeOptions {
+        miss_batches: chaos_cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+        ..ServeOptions::default()
+    };
+    let chaos_advisor = Advisor::new(SweepCache::empty(), None, None, chaos_opts);
+    let chaos = run_fleet(&chaos_cfg, &chaos_advisor).expect("chaos fleet run");
+    let chaos_faults = chaos.faults.expect("chaos run configures faults");
+
     let Json::Obj(mut root) = report.to_json() else {
         unreachable!("fleet reports serialize to an object");
     };
     root.insert("bench".into(), Json::Str("fleet".into()));
     root.insert("fast_mode".into(), Json::Bool(fast));
     root.insert("seed".into(), Json::Num(cfg.seed as f64));
+    // Artifact layout version: bumped to 2 when the chaos scenario and
+    // its `chaos_*` keys landed. bench_diff treats a mismatch (e.g. a
+    // pre-chaos baseline with no bench_schema at all) as "not
+    // comparable", never as a regression.
+    root.insert("bench_schema".into(), Json::Num(2.0));
+    root.insert(
+        "chaos_makespan_cycles".into(),
+        Json::Num(chaos.makespan_cycles as f64),
+    );
+    root.insert("chaos_crashes".into(), Json::Num(chaos_faults.crashes as f64));
+    root.insert(
+        "chaos_throttles".into(),
+        Json::Num(chaos_faults.throttles as f64),
+    );
+    root.insert(
+        "chaos_recoveries".into(),
+        Json::Num(chaos_faults.recoveries as f64),
+    );
+    root.insert(
+        "chaos_steps_lost".into(),
+        Json::Num(chaos_faults.steps_lost as f64),
+    );
+    root.insert(
+        "chaos_steps_resumed".into(),
+        Json::Num(chaos_faults.steps_resumed as f64),
+    );
+    root.insert("chaos_goodput".into(), Json::Num(chaos_faults.goodput()));
+    root.insert(
+        "chaos_slo_violation_rate".into(),
+        Json::Num(chaos.slo_violation_rate()),
+    );
     // Seed-to-workload model version: bench_diff treats a mismatch as
     // "not comparable" (an intentional trace-model change), never as a
     // makespan regression.
@@ -73,6 +145,17 @@ fn main() {
         report.advisor.coalesced,
         report.advisor.rejected,
         report.advisor.errors
+    );
+    println!(
+        "chaos: {} crashes, {} recoveries, {} throttles, {} steps lost, \
+         {} resumed, goodput {:.4}, SLO violation rate {:.4}",
+        chaos_faults.crashes,
+        chaos_faults.recoveries,
+        chaos_faults.throttles,
+        chaos_faults.steps_lost,
+        chaos_faults.steps_resumed,
+        chaos_faults.goodput(),
+        chaos.slo_violation_rate()
     );
     println!("wrote BENCH_fleet.json");
 }

@@ -256,12 +256,20 @@ impl SweepCache {
     }
 
     /// Serialize every entry to `path` at the current schema.
+    ///
+    /// Crash-safe: the bytes land in a sibling temp file first and
+    /// rename into place (the same pattern `--stats-json` uses), so a
+    /// save killed mid-write can never leave the truncated file
+    /// [`Self::load`] hard-errors on — the previous cache survives
+    /// intact and the leftover `.tmp` is overwritten by the next save.
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         let mut root = BTreeMap::new();
         root.insert("schema_version".into(), num(SCHEMA_VERSION as f64));
         root.insert("entries".into(), Json::Obj(self.entries.clone()));
         root.insert("cells".into(), Json::Obj(self.cells.clone()));
-        std::fs::write(path, Json::Obj(root).to_string())?;
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, Json::Obj(root).to_string())?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -405,6 +413,44 @@ mod tests {
         let back = reloaded.lookup(&point(), false).expect("hit after reload");
         assert_eq!(back.cycles, priced.cycles);
         assert_eq!(back.energy_mj.to_bits(), priced.energy_mj.to_bits());
+    }
+
+    /// The crash-safety regression: a save killed mid-write leaves its
+    /// partial bytes only in the sibling `.tmp` file, so the real path
+    /// keeps the previous complete cache — exactly the truncated-file
+    /// failure [`SweepCache::load`] hard-errors on if the bytes had
+    /// gone to `path` directly — and the next save replaces the stale
+    /// temp.
+    #[test]
+    fn save_killed_mid_write_never_corrupts_the_cache_file() {
+        let priced = price_point(&point()).unwrap();
+        let mut cache = SweepCache::empty();
+        cache.insert(&priced);
+        let path = std::env::temp_dir()
+            .join(format!("ef_train_cache_kill_{}.json", std::process::id()));
+        let tmp = path.with_extension("tmp");
+        cache.save(&path).unwrap();
+        assert!(!tmp.exists(), "a completed save leaves no temp file");
+        let full = std::fs::read_to_string(&path).unwrap();
+
+        // Simulate the kill: the interrupted save got halfway through
+        // writing the temp file and never renamed.
+        std::fs::write(&tmp, &full[..full.len() / 2]).unwrap();
+        let reloaded = SweepCache::load(&path).expect("real path is untouched");
+        assert_eq!(reloaded.len(), 1, "previous cache survives the torn save");
+        // Had those bytes landed at `path` itself, load would refuse.
+        let torn = std::env::temp_dir()
+            .join(format!("ef_train_cache_torn_{}.json", std::process::id()));
+        std::fs::write(&torn, &full[..full.len() / 2]).unwrap();
+        assert!(SweepCache::load(&torn).is_err(), "truncated cache is a hard error");
+
+        // The next save overwrites the stale temp and lands atomically.
+        cache.insert(&price_point(&point_with_scheme(Scheme::Bchw)).unwrap());
+        cache.save(&path).unwrap();
+        assert!(!tmp.exists(), "retried save consumes the stale temp file");
+        assert_eq!(SweepCache::load(&path).unwrap().len(), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&torn).ok();
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The discrete-event fleet engine.
 //!
-//! A binary-heap event queue keyed on `(cycle, kind, session id)` —
-//! completions sort before arrivals at the same cycle (a device frees
-//! before a new session can queue behind it), and ties within a kind
-//! break on session id, so the event order is a total function of the
-//! trace. Per session *attempt* the engine:
+//! A binary-heap event queue keyed on `(cycle, kind, id)` —
+//! completions sort before every other event at the same cycle (a
+//! device frees before a fault or a new arrival can touch it), fault
+//! events sort before arrivals (an arrival sees the slot state the
+//! fault left), and ties within a kind break on session/slot id, so
+//! the event order is a total function of the trace and the fault
+//! schedule. Per session *attempt* the engine:
 //!
 //! 1. checks the fleet's own admission control first: if a
 //!    [`ShedPolicy`] is configured and the target device's wait queue
@@ -16,27 +18,45 @@
 //!    admission-control rejections* happen exactly as a live fleet
 //!    would see them; a reply flagged `retryable` feeds the retry
 //!    policy rather than terminating the session;
-//! 3. prices the adaptation duration as `steps-to-converge ×` the
-//!    masked step cycles of the advisor-chosen scheme
+//! 3. prices the adaptation work as `steps-to-converge ×` the masked
+//!    step cycles of the advisor-chosen scheme
 //!    ([`masked_point_cycles`]; a depth-`k` session pays FP over all
-//!    conv layers but BP/WU over the suffix only);
-//! 4. occupies its device slot for that duration, queueing in its
-//!    priority class's FIFO behind whatever the slot is already
-//!    running — when the slot frees, the highest-ranked non-empty
-//!    class is served first, FIFO within a class.
+//!    conv layers but BP/WU over the suffix only), plus — when
+//!    `--checkpoint-steps` is on — one checkpoint write per interval,
+//!    priced as the retrained weight bytes over the device's DRAM
+//!    bandwidth ([`SessionWork`]);
+//! 4. occupies its device slot, queueing in its priority class's FIFO
+//!    behind whatever the slot is already running — when the slot
+//!    frees, the highest-ranked non-empty class is served first, FIFO
+//!    within a class.
+//!
+//! **Execution is segmented, not one-shot**: a running session is a
+//! scheduled completion event *plus* per-slot segment state, and any
+//! fault event ([`faults`]) can cut the segment short. A **throttle**
+//! re-prices the remaining work at the derated clock (progress
+//! accrues, nothing is lost); a **crash** takes the slot down for a
+//! repair interval, rolls the in-flight session back to its last
+//! durable checkpoint (step zero with checkpointing off), and
+//! re-queues it at the *front* of its priority class — it resumes as
+//! soon as the slot repairs, before later arrivals of its own class.
+//! Stale completion events are invalidated by a per-slot epoch carried
+//! in the heap entry. With every fault knob off no fault event is ever
+//! scheduled, no fault stream is ever drawn, and the event sequence is
+//! byte-identical to the pre-fault one-shot engine.
 //!
 //! Refused attempts (shed or advisor-overloaded) re-enter the event
 //! queue as fresh arrivals at `now + backoff` per the [`RetryPolicy`]
 //! until the retry budget is spent, then the session is recorded as
-//! **abandoned**.
+//! **abandoned**. Crash re-queues are *recoveries*, not retries: they
+//! consume no retry budget and perform no advisor query (the session's
+//! resolved config survives the crash).
 //!
 //! The engine itself is strictly serial — parallelism lives only
 //! inside the advisor's miss-path pricing — which is what makes the
 //! run bit-identical across `--jobs` values. Makespan is the cycle of
-//! the **last completion** (`EV_FREE`): unserved arrivals extend the
-//! event horizon but do no fleet work, so they must not stretch the
-//! makespan (the PR-5 engine got this wrong, inflating utilization
-//! denominators whenever the tail of the trace was refused).
+//! the **last completion** (`EV_FREE`): unserved arrivals and trailing
+//! fault events extend the event horizon but do no fleet work, so they
+//! must not stretch the makespan.
 
 use std::cmp::Reverse;
 use std::collections::btree_map::Entry;
@@ -53,14 +73,37 @@ use crate::serve::protocol::Query;
 use crate::serve::{canonical_coords, Advisor};
 use crate::util::rng::SplitMix64;
 
+use super::faults::{self, FaultModel, SessionWork, PPM};
 use super::policy::{RetryPolicy, ShedPolicy, RETRY_JITTER_SALT};
-use super::report::{DeviceStat, FleetReport, SessionRecord};
+use super::report::{DeviceStat, FaultStats, FleetReport, SessionRecord};
 use super::trace::Session;
 use super::{FleetConfig, REF_FREQ_MHZ};
 
-/// Event classes, in same-cycle processing order.
+/// Event classes, in same-cycle processing order. Completions first (a
+/// device frees — and its makespan contribution lands — before
+/// anything else at that cycle sees it), then repairs before crashes
+/// (a slot whose repair ties a fresh crash is up for an instant, and
+/// the crash takes it straight back down), then throttle transitions,
+/// then arrivals last (an arrival observes the slot state every fault
+/// at its cycle produced).
 const EV_FREE: u8 = 0;
-const EV_ARRIVE: u8 = 1;
+const EV_REPAIR: u8 = 1;
+const EV_THROTTLE_END: u8 = 2;
+const EV_CRASH: u8 = 3;
+const EV_THROTTLE_START: u8 = 4;
+const EV_ARRIVE: u8 = 5;
+
+/// Hard ceiling on crash interruptions of one session — a fault
+/// config whose MTBF is far below any session's service time could
+/// otherwise spin the no-checkpoint restart loop forever. Hitting it
+/// is an `Err` (runaway config), not a silent outcome.
+const MAX_CRASHES_PER_SESSION: u32 = 10_000;
+
+/// A heap entry: `(cycle, event kind, session-or-slot id, slot,
+/// epoch)`. The epoch is nonzero only for `EV_FREE` and invalidates
+/// completions whose segment a fault already cut short; it sits last
+/// in the tuple so it never reorders live events.
+type Ev = Reverse<(u64, u8, u64, usize, u64)>;
 
 /// One device slot's live state.
 struct Slot {
@@ -72,6 +115,20 @@ struct Slot {
     queues: Vec<VecDeque<usize>>,
     busy_cycles: u64,
     served: usize,
+    /// Crashed slots are down until their `EV_REPAIR`.
+    up: bool,
+    /// Current clock rate in parts-per-million of nominal
+    /// ([`PPM`] = full speed; a throttle dwell derates it).
+    rate_ppm: u64,
+    /// Bumped whenever the running segment is (re)scheduled or cut
+    /// short; a popped `EV_FREE` whose epoch mismatches is stale.
+    epoch: u64,
+    /// When the current serving segment began (valid while `running`).
+    segment_start: u64,
+    /// Cycles spent down across all repair intervals.
+    down_cycles: u64,
+    crashes: u64,
+    throttles: u64,
 }
 
 impl Slot {
@@ -86,13 +143,25 @@ impl Slot {
     }
 }
 
-/// What arrival-time resolution decided about a session, kept until
-/// its completion event.
+/// What arrival-time resolution decided about a session, kept (and
+/// accumulated into) until its completion event.
 struct Pending {
-    duration_cycles: u64,
+    work: SessionWork,
+    /// Nominal cycles of the timeline completed so far — advanced at
+    /// every segment boundary, rolled back to the durable floor by a
+    /// crash.
+    done: u64,
     power_w: f64,
     scheme: String,
     source: String,
+    /// Wall cycles across all serving segments (re-done work and
+    /// checkpoint writes included — the device is busy and burning
+    /// power either way).
+    service_cycles: u64,
+    first_start: Option<u64>,
+    crashes: u32,
+    steps_lost: u64,
+    steps_resumed: u64,
 }
 
 /// The advisor's answer distilled to what the engine needs.
@@ -108,15 +177,35 @@ enum Resolution {
 
 /// Resolved (network, device) structs per (net, kind) pair.
 type Zoo = BTreeMap<(String, String), (Network, Device)>;
-/// Per-step masked cost (reference-clock cycles) per
-/// (net, kind, batch, scheme, depth) — distinct sessions of one shape
-/// share one masked pricing, but each multiplies in its own
-/// steps-to-converge.
-type StepCostMemo = BTreeMap<(String, String, usize, String, usize), u64>;
+/// Per-step and per-checkpoint masked cost (reference-clock cycles)
+/// per (net, kind, batch, scheme, depth) — distinct sessions of one
+/// shape share one pricing, but each multiplies in its own
+/// steps-to-converge and checkpoint cadence.
+type StepCostMemo = BTreeMap<(String, String, usize, String, usize), (u64, u64)>;
+
+/// Checkpoint write cost on the fleet reference clock: the *retrained*
+/// weight tensors (BP+WU suffix only — a frozen layer's weights never
+/// change, so recovery does not need them re-persisted) stream to
+/// stable storage over the device's DMA port, plus one DMA start
+/// latency.
+fn checkpoint_cycles(network: &Network, dev: &Device, mask: &PhaseMask) -> u64 {
+    let words: u64 = network
+        .conv_layers()
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| mask.retrains(*i))
+        .map(|(_, l)| l.weight_words())
+        .sum();
+    let bytes = words * 4;
+    let bytes_per_cycle = (dev.dma_bits as u64 / 8).max(1);
+    let dev_cycles = dev.t_start + bytes.div_ceil(bytes_per_cycle);
+    (dev_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64).max(1)
+}
 
 fn resolve(
     advisor: &Advisor,
     s: &Session,
+    ckpt_every: u64,
     zoo: &mut Zoo,
     step_costs: &mut StepCostMemo,
 ) -> crate::Result<Resolution> {
@@ -176,7 +265,7 @@ fn resolve(
         scheme_name.clone(),
         depth,
     );
-    let per_step_ref = match step_costs.get(&key).copied() {
+    let (per_step, ckpt_cost) = match step_costs.get(&key).copied() {
         Some(c) => c,
         None => {
             let scheme = scheme_by_name(&scheme_name)
@@ -190,21 +279,82 @@ fn resolve(
             };
             let step_cycles = masked_point_cycles(network, dev, &point, &mask);
             // Device clock -> fleet reference clock.
-            let c = (step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64).max(1);
-            step_costs.insert(key, c);
-            c
+            let per_step = (step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64).max(1);
+            let ckpt_cost = checkpoint_cycles(network, dev, &mask);
+            step_costs.insert(key, (per_step, ckpt_cost));
+            (per_step, ckpt_cost)
         }
     };
-    // The memo holds only the per-step cost: every session — first or
-    // not — pays its OWN steps-to-converge on top of the shared
-    // pricing ("durations = steps × masked step cycles").
-    let duration_cycles = per_step_ref * s.steps as u64;
+    // The memo holds only the per-step/per-write costs: every session —
+    // first or not — pays its OWN steps-to-converge and checkpoint
+    // count on top of the shared pricing.
+    let work = SessionWork {
+        steps: s.steps as u64,
+        per_step,
+        ckpt_cost,
+        ckpt_every,
+    };
     Ok(Resolution::Run(Pending {
-        duration_cycles,
+        work,
+        done: 0,
         power_w,
         scheme: scheme_name,
         source,
+        service_cycles: 0,
+        first_start: None,
+        crashes: 0,
+        steps_lost: 0,
+        steps_resumed: 0,
     }))
+}
+
+/// Begin (or resume) serving `idx` on `slot`: open a segment at `now`
+/// and schedule its completion for the remaining work stretched by the
+/// slot's current clock rate.
+fn start_segment(
+    slot: &mut Slot,
+    slot_idx: usize,
+    idx: usize,
+    now: u64,
+    pending: &mut [Option<Pending>],
+    starts: &mut [u64],
+    heap: &mut BinaryHeap<Ev>,
+    sessions: &[Session],
+) {
+    debug_assert!(slot.up, "segments only run on up slots");
+    let p = pending[idx].as_mut().expect("queued sessions are resolved");
+    if p.first_start.is_none() {
+        p.first_start = Some(now);
+        starts[idx] = now;
+    }
+    slot.running = Some(idx);
+    slot.epoch += 1;
+    slot.segment_start = now;
+    let remaining = p.work.total() - p.done;
+    let wall = faults::stretch(remaining, slot.rate_ppm);
+    heap.push(Reverse((now + wall, EV_FREE, sessions[idx].id, slot_idx, slot.epoch)));
+}
+
+/// Cut the running segment short at `now`: accrue its wall time into
+/// the slot and session, credit the nominal progress it made at the
+/// slot's current rate, invalidate the scheduled completion, and hand
+/// back the interrupted session. Returns the nominal progress credited
+/// alongside, so callers can keep the fleet-wide goodput ledger.
+fn close_segment(
+    slot: &mut Slot,
+    now: u64,
+    pending: &mut [Option<Pending>],
+) -> Option<(usize, u64)> {
+    let idx = slot.running.take()?;
+    let elapsed = now - slot.segment_start;
+    slot.busy_cycles += elapsed;
+    slot.epoch += 1;
+    let p = pending[idx].as_mut().expect("running sessions are resolved");
+    p.service_cycles += elapsed;
+    let made = faults::progress(elapsed, slot.rate_ppm);
+    p.done += made;
+    debug_assert!(p.done < p.work.total(), "interrupted before completion");
+    Some((idx, made))
 }
 
 /// Run `sessions` (time-ordered, ids dense from 0) against `advisor`.
@@ -236,11 +386,24 @@ pub fn run(
             queues: vec![VecDeque::new(); n_classes],
             busy_cycles: 0,
             served: 0,
+            up: true,
+            rate_ppm: PPM,
+            epoch: 0,
+            segment_start: 0,
+            down_cycles: 0,
+            crashes: 0,
+            throttles: 0,
         })
         .collect();
     let retry = RetryPolicy::from_config(cfg);
     let shed = ShedPolicy::from_config(cfg);
+    let fault_model: Option<FaultModel> = cfg.faults;
     let mut jitter = SplitMix64::stream(cfg.seed, RETRY_JITTER_SALT);
+    // Per-slot fault streams (salt 5); drawn from only when the
+    // corresponding process is configured, so faults-off runs consume
+    // no fault draws at all.
+    let mut fault_streams = faults::slot_streams(cfg.seed, slots.len());
+    let ckpt_every = cfg.checkpoint_steps as u64;
 
     let mut pending: Vec<Option<Pending>> = (0..sessions.len()).map(|_| None).collect();
     let mut starts: Vec<u64> = vec![0; sessions.len()];
@@ -255,49 +418,58 @@ pub fn run(
     let mut step_costs = BTreeMap::new();
     let mut retries_total = 0u64;
     let mut shed_total = 0u64;
+    let mut totals = FaultStats::default();
+    // Sessions without a terminal record yet. Fault processes are
+    // self-scheduling and would otherwise tick forever; once every
+    // session has resolved, popped fault events are dropped without
+    // rescheduling their successors and the heap drains.
+    let mut outstanding = sessions.len();
 
-    // Min-heap of (cycle, class, session id, slot).
-    let mut heap: BinaryHeap<Reverse<(u64, u8, u64, usize)>> = BinaryHeap::new();
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
     for s in sessions {
-        heap.push(Reverse((s.arrival_cycle, EV_ARRIVE, s.id, s.device_slot)));
+        heap.push(Reverse((s.arrival_cycle, EV_ARRIVE, s.id, s.device_slot, 0)));
+    }
+    if let Some(fm) = &fault_model {
+        for (si, streams) in fault_streams.iter_mut().enumerate() {
+            if let Some(c) = &fm.crash {
+                let at = faults::draw_cycles(&mut streams.crash, c.mtbf_s);
+                heap.push(Reverse((at, EV_CRASH, si as u64, si, 0)));
+            }
+            if let Some(t) = &fm.throttle {
+                let at = faults::draw_cycles(&mut streams.throttle, t.mtbf_s);
+                heap.push(Reverse((at, EV_THROTTLE_START, si as u64, si, 0)));
+            }
+        }
     }
 
     let mut makespan = 0u64;
-    let start_session = |slot: &mut Slot,
-                         idx: usize,
-                         now: u64,
-                         pending: &[Option<Pending>],
-                         starts: &mut [u64],
-                         heap: &mut BinaryHeap<Reverse<(u64, u8, u64, usize)>>,
-                         sessions: &[Session]| {
-        let p = pending[idx].as_ref().expect("queued sessions are resolved");
-        starts[idx] = now;
-        slot.running = Some(idx);
-        heap.push(Reverse((
-            now + p.duration_cycles,
-            EV_FREE,
-            sessions[idx].id,
-            sessions[idx].device_slot,
-        )));
-    };
-
-    while let Some(Reverse((now, class, sid, slot_idx))) = heap.pop() {
-        let idx = sid as usize;
+    while let Some(Reverse((now, class, sid, slot_idx, epoch))) = heap.pop() {
         match class {
             EV_FREE => {
+                let slot = &mut slots[slot_idx];
+                if slot.epoch != epoch {
+                    // A fault cut this segment short after the
+                    // completion was scheduled — stale.
+                    continue;
+                }
+                let idx = sid as usize;
+                debug_assert_eq!(slot.running, Some(idx));
                 // Only completions advance the makespan: the fleet's
                 // horizon is the last cycle a device did work, not the
-                // last event (a refused tail arrival does no work).
+                // last event (refused tail arrivals and trailing fault
+                // ticks do no work).
                 makespan = makespan.max(now);
-                let slot = &mut slots[slot_idx];
-                debug_assert_eq!(slot.running, Some(idx));
                 slot.running = None;
                 slot.served += 1;
+                let elapsed = now - slot.segment_start;
+                slot.busy_cycles += elapsed;
                 let s = &sessions[idx];
-                let p = pending[idx].as_ref().expect("completed sessions were resolved");
-                slot.busy_cycles += p.duration_cycles;
+                let p = pending[idx].as_mut().expect("completed sessions were resolved");
+                p.service_cycles += elapsed;
+                totals.nominal_done_cycles += p.work.total() - p.done;
+                p.done = p.work.total();
                 let start = starts[idx];
-                let secs = p.duration_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6);
+                let secs = p.service_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6);
                 records[idx] = Some(SessionRecord {
                     id: s.id,
                     net: s.net.clone(),
@@ -309,20 +481,135 @@ pub fn run(
                     priority: s.priority,
                     attempts: attempts[idx],
                     shed: shed_counts[idx],
+                    crashes: p.crashes,
+                    steps_lost: p.steps_lost,
+                    steps_resumed: p.steps_resumed,
                     scheme: Some(p.scheme.clone()),
                     source: p.source.clone(),
                     arrival_cycle: s.arrival_cycle,
                     start_cycle: start,
                     end_cycle: now,
                     queue_cycles: start - admitted[idx],
-                    service_cycles: p.duration_cycles,
+                    service_cycles: p.service_cycles,
                     energy_mj: p.power_w * secs * 1e3,
                 });
+                outstanding -= 1;
+                if slot.up {
+                    if let Some(next) = slot.pop_next() {
+                        start_segment(
+                            slot, slot_idx, next, now, &mut pending, &mut starts, &mut heap,
+                            sessions,
+                        );
+                    }
+                }
+            }
+            EV_CRASH => {
+                if outstanding == 0 {
+                    continue; // fleet drained; stop the fault process
+                }
+                let fm = fault_model.as_ref().expect("crash events require a model");
+                let cm = fm.crash.as_ref().expect("crash events require the process");
+                let streams = &mut fault_streams[slot_idx];
+                let repair = faults::draw_cycles(&mut streams.crash, cm.mttr_s);
+                let gap = faults::draw_cycles(&mut streams.crash, cm.mtbf_s);
+                let slot = &mut slots[slot_idx];
+                slot.crashes += 1;
+                slot.down_cycles += repair;
+                totals.crashes += 1;
+                if let Some((idx, made)) = close_segment(slot, now, &mut pending) {
+                    let p = pending[idx].as_mut().expect("interrupted sessions are resolved");
+                    totals.nominal_done_cycles += made;
+                    let durable = p.work.durable_floor(p.done);
+                    let lost_steps = p.work.steps_at(p.done) - p.work.steps_at(durable);
+                    p.steps_lost += lost_steps;
+                    p.steps_resumed += p.work.steps_at(durable);
+                    totals.steps_lost += lost_steps;
+                    totals.steps_resumed += p.work.steps_at(durable);
+                    totals.nominal_lost_cycles += p.done - durable;
+                    p.done = durable;
+                    p.crashes += 1;
+                    totals.recoveries += 1;
+                    if p.crashes >= MAX_CRASHES_PER_SESSION {
+                        return Err(anyhow!(
+                            "session {} crashed {} times without completing — the \
+                             fault config (MTBF far below service times, no \
+                             checkpointing?) cannot drain this fleet",
+                            sessions[idx].id,
+                            p.crashes
+                        ));
+                    }
+                    // Recovery, not retry: resume at the front of its
+                    // class as soon as the slot repairs.
+                    slot.queues[sessions[idx].priority].push_front(idx);
+                }
+                slot.up = false;
+                heap.push(Reverse((now + repair, EV_REPAIR, slot_idx as u64, slot_idx, 0)));
+                heap.push(Reverse((
+                    now + repair + gap,
+                    EV_CRASH,
+                    slot_idx as u64,
+                    slot_idx,
+                    0,
+                )));
+            }
+            EV_REPAIR => {
+                let slot = &mut slots[slot_idx];
+                slot.up = true;
+                debug_assert!(slot.running.is_none(), "down slots run nothing");
                 if let Some(next) = slot.pop_next() {
-                    start_session(slot, next, now, &pending, &mut starts, &mut heap, sessions);
+                    start_segment(
+                        slot, slot_idx, next, now, &mut pending, &mut starts, &mut heap,
+                        sessions,
+                    );
+                }
+            }
+            EV_THROTTLE_START | EV_THROTTLE_END => {
+                let starting = class == EV_THROTTLE_START;
+                if starting && outstanding == 0 {
+                    continue; // fleet drained; stop the fault process
+                }
+                let fm = fault_model.as_ref().expect("throttle events require a model");
+                let tm = fm.throttle.as_ref().expect("throttle events require the process");
+                if starting {
+                    let streams = &mut fault_streams[slot_idx];
+                    let dwell = faults::draw_cycles(&mut streams.throttle, tm.dwell_s);
+                    let gap = faults::draw_cycles(&mut streams.throttle, tm.mtbf_s);
+                    slots[slot_idx].throttles += 1;
+                    totals.throttles += 1;
+                    heap.push(Reverse((
+                        now + dwell,
+                        EV_THROTTLE_END,
+                        slot_idx as u64,
+                        slot_idx,
+                        0,
+                    )));
+                    heap.push(Reverse((
+                        now + dwell + gap,
+                        EV_THROTTLE_START,
+                        slot_idx as u64,
+                        slot_idx,
+                        0,
+                    )));
+                }
+                let new_rate = if starting { tm.derate_ppm() } else { PPM };
+                let slot = &mut slots[slot_idx];
+                // Re-price the in-flight segment at the new clock:
+                // close it (progress accrues — throttles lose nothing)
+                // and immediately reopen at the new rate.
+                if let Some((idx, made)) = close_segment(slot, now, &mut pending) {
+                    totals.nominal_done_cycles += made;
+                    slot.rate_ppm = new_rate;
+                    start_segment(
+                        slot, slot_idx, idx, now, &mut pending, &mut starts, &mut heap,
+                        sessions,
+                    );
+                } else {
+                    slot.rate_ppm = new_rate;
                 }
             }
             _ => {
+                debug_assert_eq!(class, EV_ARRIVE);
+                let idx = sid as usize;
                 let s = &sessions[idx];
                 attempts[idx] += 1;
                 // Fleet admission control runs before the advisor is
@@ -336,14 +623,15 @@ pub fn run(
                     shed_total += 1;
                     true
                 } else {
-                    match resolve(advisor, s, &mut zoo, &mut step_costs)? {
+                    match resolve(advisor, s, ckpt_every, &mut zoo, &mut step_costs)? {
                         Resolution::Run(p) => {
                             pending[idx] = Some(p);
                             admitted[idx] = now;
                             let slot = &mut slots[slot_idx];
-                            if slot.running.is_none() {
-                                start_session(
-                                    slot, idx, now, &pending, &mut starts, &mut heap, sessions,
+                            if slot.up && slot.running.is_none() {
+                                start_segment(
+                                    slot, slot_idx, idx, now, &mut pending, &mut starts,
+                                    &mut heap, sessions,
                                 );
                             } else {
                                 slot.queues[s.priority].push_back(idx);
@@ -358,6 +646,7 @@ pub fn run(
                                 attempts[idx],
                                 shed_counts[idx],
                             ));
+                            outstanding -= 1;
                             false
                         }
                     }
@@ -366,7 +655,7 @@ pub fn run(
                     if retry.allows(attempts[idx]) {
                         retries_total += 1;
                         let delay = retry.backoff_cycles(attempts[idx], &mut jitter);
-                        heap.push(Reverse((now + delay, EV_ARRIVE, s.id, s.device_slot)));
+                        heap.push(Reverse((now + delay, EV_ARRIVE, s.id, s.device_slot, 0)));
                     } else {
                         records[idx] = Some(SessionRecord::unserved(
                             s,
@@ -374,6 +663,7 @@ pub fn run(
                             attempts[idx],
                             shed_counts[idx],
                         ));
+                        outstanding -= 1;
                     }
                 }
             }
@@ -392,6 +682,9 @@ pub fn run(
             slot: i,
             sessions: s.served,
             busy_cycles: s.busy_cycles,
+            down_cycles: s.down_cycles,
+            crashes: s.crashes,
+            throttles: s.throttles,
         })
         .collect();
     let class_names: Vec<String> =
@@ -404,5 +697,7 @@ pub fn run(
         class_names,
         retries_total,
         shed_total,
+        fault_model.map(|_| totals),
+        cfg.slo_by_rank(),
     ))
 }

@@ -40,6 +40,11 @@
 //!   mechanism: jittered-exponential-backoff retries
 //!   (`--max-retries`) and queue-depth load shedding that drops
 //!   low-priority work first (`--shed-below` / `--shed-depth`);
+//! * [`faults`] — deterministic fault injection: per-slot crash and
+//!   throttle processes on their own seed sub-streams
+//!   (`--crash-mtbf`/`--crash-mttr`, `--throttle-mtbf`/
+//!   `--throttle-dwell`/`--throttle-derate`), and the checkpointed
+//!   work model (`--checkpoint-steps`) recovery resumes from;
 //! * [`report`] — fleet metrics aggregation (per-class sojourn
 //!   p50/p95/p99, retry/shed/abandon totals), table + JSON emission.
 //!
@@ -76,6 +81,7 @@
 //! are concurrent.
 
 pub mod engine;
+pub mod faults;
 pub mod policy;
 pub mod report;
 pub mod trace;
@@ -148,6 +154,20 @@ pub struct FleetConfig {
     /// in each state. `None` = plain Poisson (draw-identical to the
     /// pre-MMPP trace).
     pub burst: Option<(f64, f64)>,
+    /// Device fault injection: per-slot crash and/or throttle
+    /// processes on dedicated seed sub-streams. `None` = every slot
+    /// runs forever at nominal clock (byte-identical to the pre-fault
+    /// engine).
+    pub faults: Option<faults::FaultModel>,
+    /// Sessions write a recovery checkpoint after every this many
+    /// completed training steps (priced from the retrained weight
+    /// bytes over the device's DRAM bandwidth); a crash resumes from
+    /// the last completed write. 0 = off: a crash restarts the session
+    /// from step zero.
+    pub checkpoint_steps: usize,
+    /// Per-class sojourn SLO targets in reference-clock cycles, by
+    /// priority-class name; graded (met/violated) in the report.
+    pub slo: Vec<(String, u64)>,
 }
 
 impl Default for FleetConfig {
@@ -169,6 +189,9 @@ impl Default for FleetConfig {
             shed_below: None,
             shed_depth: 8,
             burst: None,
+            faults: None,
+            checkpoint_steps: 0,
+            slo: Vec::new(),
         }
     }
 }
@@ -347,6 +370,68 @@ impl FleetConfig {
         self.shed_depth = shed_depth;
         self.burst = burst;
         Ok(self)
+    }
+
+    /// Parse and validate the fault/recovery/SLO CLI knobs onto a base
+    /// config: `--crash-mtbf`/`--crash-mttr` and `--throttle-mtbf`/
+    /// `--throttle-dwell` (each pair together or not at all, modeled
+    /// seconds), `--throttle-derate` (throttled clock fraction in
+    /// (0, 1)), `--checkpoint-steps N` (0 = off), and `--slo
+    /// CLASS:CYCLES,...` per-class sojourn targets. Call *after*
+    /// [`Self::with_closed_loop`]: SLO classes validate against the
+    /// parsed priority mix.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_faults(
+        mut self,
+        crash_mtbf_s: Option<f64>,
+        crash_mttr_s: Option<f64>,
+        throttle_mtbf_s: Option<f64>,
+        throttle_dwell_s: Option<f64>,
+        throttle_derate: f64,
+        checkpoint_steps: usize,
+        slo: Option<&str>,
+    ) -> crate::Result<Self> {
+        self.faults = faults::FaultModel::from_knobs(
+            crash_mtbf_s,
+            crash_mttr_s,
+            throttle_mtbf_s,
+            throttle_dwell_s,
+            throttle_derate,
+        )?;
+        self.checkpoint_steps = checkpoint_steps;
+        self.slo = Vec::new();
+        if let Some(csv) = slo {
+            for (class, cycles) in split_mix(csv)? {
+                if !self.priority_mix.iter().any(|(name, _)| *name == class) {
+                    return Err(anyhow!(
+                        "--slo class `{class}` is not a --priority-mix class (have {:?})",
+                        self.priority_mix.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                    ));
+                }
+                if self.slo.iter().any(|(name, _)| *name == class) {
+                    return Err(anyhow!("--slo names class `{class}` twice"));
+                }
+                if cycles < 1.0 || cycles.fract() != 0.0 {
+                    return Err(anyhow!(
+                        "--slo target for `{class}` must be a positive whole \
+                         number of cycles"
+                    ));
+                }
+                self.slo.push((class, cycles as u64));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Per-rank SLO targets aligned with the priority mix (`None` =
+    /// ungraded class).
+    pub fn slo_by_rank(&self) -> Vec<Option<u64>> {
+        self.priority_mix
+            .iter()
+            .map(|(name, _)| {
+                self.slo.iter().find(|(c, _)| c == name).map(|&(_, cycles)| cycles)
+            })
+            .collect()
     }
 
     /// The fleet's device instances, flattened in mix order:

@@ -32,7 +32,7 @@ use super::{FleetConfig, REF_FREQ_MHZ};
 
 /// The salt of the [`SplitMix64`] sub-stream backoff jitter draws
 /// come from (arrivals use 1, session attributes 2, the MMPP
-/// modulating chain 4).
+/// modulating chain 4, device faults 5).
 pub const RETRY_JITTER_SALT: u64 = 3;
 
 /// Jitter amplitude: each backoff is scaled by a uniform factor in

@@ -41,6 +41,16 @@ pub struct SessionRecord {
     pub attempts: u32,
     /// How many of those attempts the fleet's shed policy refused.
     pub shed: u32,
+    /// Device crashes that interrupted this session mid-service. A
+    /// crash is a *recovery*, not a retry: it consumes no retry budget
+    /// and the session resumes from its last durable checkpoint.
+    pub crashes: u32,
+    /// Adaptation steps re-done because a crash rolled past them
+    /// (uncheckpointed progress), summed over all crashes.
+    pub steps_lost: u64,
+    /// Steps recovered from durable checkpoints instead of being
+    /// re-done, summed over all crashes.
+    pub steps_resumed: u64,
     /// The advisor-chosen layout scheme (`None` if the session never
     /// ran).
     pub scheme: Option<String>,
@@ -85,6 +95,9 @@ impl SessionRecord {
             priority: s.priority,
             attempts,
             shed,
+            crashes: 0,
+            steps_lost: 0,
+            steps_resumed: 0,
             scheme: None,
             source: source.to_string(),
             arrival_cycle: s.arrival_cycle,
@@ -104,6 +117,49 @@ pub struct DeviceStat {
     pub slot: usize,
     pub sessions: usize,
     pub busy_cycles: u64,
+    /// Cycles the slot spent down across all crash-repair intervals.
+    pub down_cycles: u64,
+    pub crashes: u64,
+    pub throttles: u64,
+}
+
+/// Fleet-wide fault and recovery totals, present only when a fault
+/// model was configured (keeping faults-off reports byte-identical to
+/// the pre-fault engine).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultStats {
+    /// Crash events injected across all slots (idle-slot crashes
+    /// included).
+    pub crashes: u64,
+    /// Throttle dwells injected across all slots.
+    pub throttles: u64,
+    /// Crashes that interrupted a running session (each one is a
+    /// rollback-and-requeue).
+    pub recoveries: u64,
+    /// Steps re-done because crashes rolled past them.
+    pub steps_lost: u64,
+    /// Steps restored from durable checkpoints across all recoveries.
+    pub steps_resumed: u64,
+    /// Nominal-clock work cycles the fleet accrued (checkpoint writes
+    /// and re-done work included).
+    pub nominal_done_cycles: u64,
+    /// Nominal-clock cycles crashes rolled back (the re-done fraction
+    /// of `nominal_done_cycles`).
+    pub nominal_lost_cycles: u64,
+}
+
+impl FaultStats {
+    /// Fraction of accrued work that survived to completion: `(done -
+    /// lost) / done`, or 1.0 for an idle fleet. Checkpoint overhead
+    /// counts as useful work here (it is what makes recovery cheap);
+    /// goodput isolates the *re-done* waste.
+    pub fn goodput(&self) -> f64 {
+        if self.nominal_done_cycles == 0 {
+            return 1.0;
+        }
+        (self.nominal_done_cycles - self.nominal_lost_cycles) as f64
+            / self.nominal_done_cycles as f64
+    }
 }
 
 /// The advisor counters the fleet exercised, snapshotted at the end of
@@ -160,6 +216,16 @@ pub struct ClassStat {
     pub completed: usize,
     pub abandoned: usize,
     pub sojourn: CyclePercentiles,
+    /// The class's sojourn target (`--slo CLASS:CYCLES`), if one was
+    /// set. Grading covers completed + abandoned sessions — an
+    /// abandoned session is a violation by definition, while
+    /// infeasible/errored sessions are excluded (no fleet behaviour
+    /// could have met a target for them).
+    pub slo_cycles: Option<u64>,
+    /// Graded sessions that completed within the target.
+    pub slo_met: usize,
+    /// Graded sessions that missed the target (late or abandoned).
+    pub slo_violated: usize,
 }
 
 /// A finished fleet run, aggregated.
@@ -190,12 +256,20 @@ pub struct FleetReport {
     pub classes: Vec<ClassStat>,
     pub devices: Vec<DeviceStat>,
     pub advisor: AdvisorCounters,
+    /// Fault/recovery totals — `Some` exactly when a fault model was
+    /// configured, and the gate on every fault-specific table row and
+    /// JSON field (faults-off output stays byte-identical to the
+    /// pre-fault engine).
+    pub faults: Option<FaultStats>,
     pub records: Vec<SessionRecord>,
 }
 
 impl FleetReport {
     /// Aggregate one engine run. `records` are in session-id order;
-    /// `class_names` are the config's priority classes in rank order.
+    /// `class_names` are the config's priority classes in rank order;
+    /// `slo_targets` are per-rank sojourn targets aligned with them
+    /// (`None` = ungraded class).
+    #[allow(clippy::too_many_arguments)]
     pub fn build(
         records: Vec<SessionRecord>,
         devices: Vec<DeviceStat>,
@@ -204,6 +278,8 @@ impl FleetReport {
         class_names: Vec<String>,
         retries: u64,
         shed: u64,
+        faults: Option<FaultStats>,
+        slo_targets: Vec<Option<u64>>,
     ) -> Self {
         let completed = records.iter().filter(|r| r.ran()).count();
         let abandoned = records.iter().filter(|r| r.source == "abandoned").count();
@@ -222,15 +298,28 @@ impl FleetReport {
             .map(|(rank, name)| {
                 let of_class: Vec<&SessionRecord> =
                     records.iter().filter(|r| r.priority == rank).collect();
+                let completed = of_class.iter().filter(|r| r.ran()).count();
+                let abandoned = of_class
+                    .iter()
+                    .filter(|r| r.source == "abandoned")
+                    .count();
+                let slo_cycles = slo_targets.get(rank).copied().flatten();
+                let (slo_met, slo_violated) = match slo_cycles {
+                    Some(target) => {
+                        let met = of_class
+                            .iter()
+                            .filter(|r| r.ran() && r.sojourn_cycles() <= target)
+                            .count();
+                        (met, completed + abandoned - met)
+                    }
+                    None => (0, 0),
+                };
                 ClassStat {
                     name,
                     rank,
                     sessions: of_class.len(),
-                    completed: of_class.iter().filter(|r| r.ran()).count(),
-                    abandoned: of_class
-                        .iter()
-                        .filter(|r| r.source == "abandoned")
-                        .count(),
+                    completed,
+                    abandoned,
                     sojourn: CyclePercentiles::of(
                         of_class
                             .iter()
@@ -238,6 +327,9 @@ impl FleetReport {
                             .map(|r| r.sojourn_cycles())
                             .collect(),
                     ),
+                    slo_cycles,
+                    slo_met,
+                    slo_violated,
                 }
             })
             .collect();
@@ -270,8 +362,27 @@ impl FleetReport {
             classes,
             devices,
             advisor,
+            faults,
             records,
         }
+    }
+
+    /// Fraction of SLO-graded sessions (completed + abandoned in
+    /// classes with a target) that violated their target; 0.0 when
+    /// nothing was graded.
+    pub fn slo_violation_rate(&self) -> f64 {
+        let graded: usize = self.classes.iter().map(|c| c.slo_met + c.slo_violated).sum();
+        if graded == 0 {
+            return 0.0;
+        }
+        let violated: usize = self.classes.iter().map(|c| c.slo_violated).sum();
+        violated as f64 / graded as f64
+    }
+
+    /// Does any class carry an SLO target? Gates the SLO table rows
+    /// and JSON fields so target-free runs stay byte-identical.
+    fn has_slo(&self) -> bool {
+        self.classes.iter().any(|c| c.slo_cycles.is_some())
     }
 
     /// Makespan in modeled seconds.
@@ -350,6 +461,37 @@ impl FleetReport {
                     c.abandoned
                 ),
             );
+            if let Some(target) = c.slo_cycles {
+                row(
+                    &format!("[{}] SLO {:.1} ms", c.name, Self::cycles_ms(target)),
+                    format!("{} met / {} violated", c.slo_met, c.slo_violated),
+                );
+            }
+        }
+        if self.has_slo() {
+            row(
+                "SLO violation rate",
+                format!("{:.1}%", 100.0 * self.slo_violation_rate()),
+            );
+        }
+        if let Some(f) = &self.faults {
+            row(
+                "faults: crashes / throttles / recoveries",
+                format!("{} / {} / {}", f.crashes, f.throttles, f.recoveries),
+            );
+            row(
+                "steps lost / steps resumed from checkpoint",
+                format!("{} / {}", f.steps_lost, f.steps_resumed),
+            );
+            let down: u64 = self.devices.iter().map(|d| d.down_cycles).sum();
+            row(
+                "device downtime / goodput",
+                format!(
+                    "{:.2} modeled s / {:.1}%",
+                    down as f64 / (REF_FREQ_MHZ as f64 * 1e6),
+                    100.0 * f.goodput()
+                ),
+            );
         }
         row(
             "advisor hits / misses / coalesced / rejected",
@@ -368,25 +510,40 @@ impl FleetReport {
         t
     }
 
-    /// Per device-slot occupancy as a printable [`Table`].
+    /// Per device-slot occupancy as a printable [`Table`]. Fault
+    /// columns (downtime, crash/throttle counts) appear only when a
+    /// fault model ran, keeping faults-off output byte-identical.
     pub fn device_table(&self) -> Table {
-        let mut t = Table::new(
-            "Fleet device occupancy",
-            &["Slot", "Device", "Sessions", "Busy (modeled s)", "Utilization"],
-        );
+        let base = ["Slot", "Device", "Sessions", "Busy (modeled s)", "Utilization"];
+        let mut t = if self.faults.is_some() {
+            let mut headers: Vec<&str> = base.to_vec();
+            headers.extend(["Down (modeled s)", "Crashes", "Throttles"]);
+            Table::new("Fleet device occupancy", &headers)
+        } else {
+            Table::new("Fleet device occupancy", &base)
+        };
         for d in &self.devices {
             let util = if self.makespan_cycles == 0 {
                 0.0
             } else {
                 d.busy_cycles as f64 / self.makespan_cycles as f64
             };
-            t.push(vec![
+            let mut row = vec![
                 d.slot.to_string(),
                 d.kind.clone(),
                 d.sessions.to_string(),
                 format!("{:.2}", d.busy_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6)),
                 format!("{:.1}%", 100.0 * util),
-            ]);
+            ];
+            if self.faults.is_some() {
+                row.push(format!(
+                    "{:.2}",
+                    d.down_cycles as f64 / (REF_FREQ_MHZ as f64 * 1e6)
+                ));
+                row.push(d.crashes.to_string());
+                row.push(d.throttles.to_string());
+            }
+            t.push(row);
         }
         t
     }
@@ -437,6 +594,14 @@ impl FleetReport {
                         m.insert("completed".into(), Json::Num(c.completed as f64));
                         m.insert("abandoned".into(), Json::Num(c.abandoned as f64));
                         m.insert("sojourn".into(), c.sojourn.to_json());
+                        if let Some(target) = c.slo_cycles {
+                            m.insert("slo_cycles".into(), Json::Num(target as f64));
+                            m.insert("slo_met".into(), Json::Num(c.slo_met as f64));
+                            m.insert(
+                                "slo_violated".into(),
+                                Json::Num(c.slo_violated as f64),
+                            );
+                        }
                         Json::Obj(m)
                     })
                     .collect(),
@@ -465,11 +630,45 @@ impl FleetReport {
                         m.insert("kind".into(), Json::Str(d.kind.clone()));
                         m.insert("sessions".into(), Json::Num(d.sessions as f64));
                         m.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
+                        if self.faults.is_some() {
+                            m.insert(
+                                "down_cycles".into(),
+                                Json::Num(d.down_cycles as f64),
+                            );
+                            m.insert("crashes".into(), Json::Num(d.crashes as f64));
+                            m.insert("throttles".into(), Json::Num(d.throttles as f64));
+                        }
                         Json::Obj(m)
                     })
                     .collect(),
             ),
         );
+        if self.has_slo() {
+            root.insert(
+                "slo_violation_rate".into(),
+                Json::Num(self.slo_violation_rate()),
+            );
+        }
+        if let Some(f) = &self.faults {
+            let mut m = BTreeMap::new();
+            m.insert("crashes".into(), Json::Num(f.crashes as f64));
+            m.insert("throttles".into(), Json::Num(f.throttles as f64));
+            m.insert("recoveries".into(), Json::Num(f.recoveries as f64));
+            m.insert("steps_lost".into(), Json::Num(f.steps_lost as f64));
+            m.insert("steps_resumed".into(), Json::Num(f.steps_resumed as f64));
+            m.insert(
+                "nominal_done_cycles".into(),
+                Json::Num(f.nominal_done_cycles as f64),
+            );
+            m.insert(
+                "nominal_lost_cycles".into(),
+                Json::Num(f.nominal_lost_cycles as f64),
+            );
+            m.insert("goodput".into(), Json::Num(f.goodput()));
+            let down: u64 = self.devices.iter().map(|d| d.down_cycles).sum();
+            m.insert("down_cycles_total".into(), Json::Num(down as f64));
+            root.insert("faults".into(), Json::Obj(m));
+        }
         Json::Obj(root)
     }
 }

@@ -80,7 +80,7 @@ fn steps_to_converge(rng: &mut SplitMix64, depth_frac: f64, max_steps: usize) ->
 }
 
 /// The salt of the MMPP modulating chain's [`SplitMix64`] sub-stream
-/// (arrivals use 1, attributes 2, retry jitter 3).
+/// (arrivals use 1, attributes 2, retry jitter 3, device faults 5).
 pub const MMPP_CHAIN_SALT: u64 = 4;
 
 /// The arrival process: plain Poisson, or a two-state MMPP when a

@@ -33,13 +33,17 @@ USAGE:
   ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
                  [--cache-file FILE] [--stats-json FILE] [--jobs N]
                  [--search-tilings] [--max-inflight-misses N]
-                 [--save-every N]
+                 [--save-every N] [--read-timeout-ms MS]
   ef-train fleet [--sessions N] [--seed S] [--jobs J] [--cache-file PATH]
                  [--arrival-rate R] [--depth-mix CSV] [--device-mix CSV]
                  [--net-mix CSV] [--batch-mix CSV] [--max-steps N]
                  [--priority-mix CSV] [--max-retries N] [--retry-base-ms MS]
                  [--shed-below CLASS] [--shed-depth N]
                  [--burst-rate R] [--burst-dwell S]
+                 [--crash-mtbf S] [--crash-mttr S]
+                 [--throttle-mtbf S] [--throttle-dwell S]
+                 [--throttle-derate F] [--checkpoint-steps N]
+                 [--slo CLASS:CYCLES,...]
                  [--max-inflight-misses N] [--save-every N]
                  [--search-tilings] [--out FILE]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
@@ -71,6 +75,10 @@ coalesce), write back to --cache-file every --save-every fresh cells
 concurrent miss pricings: excess queries get a retryable
 {\"error\": \"overloaded\"} reply. `{\"stats\": true}` or --stats-json F
 reports hits/misses/coalesced/rejected and p50/p95 times.
+`--read-timeout-ms MS` bounds how long a TCP connection may sit idle
+between request lines: a stalled client gets a structured error reply,
+its connection closes, and the stall counts as a timeout in the stats
+(instead of pinning a pool worker forever).
 
 `fleet` simulates an online-adaptation fleet end to end through the
 advisor: a seedable deterministic trace of adaptation sessions
@@ -86,9 +94,20 @@ retry with jittered exponential backoff up to --max-retries times,
 then abandon. --priority-mix lists classes most-urgent-first, e.g.
 `interactive:1,background:3`; --burst-rate/--burst-dwell switch the
 arrivals to a two-state MMPP that alternates between the base and
-burst rates. Prints fleet metrics (per-class sojourn p50/p95/p99) and
-writes the JSON report to --out; a fixed --seed is bit-identical
-across runs and --jobs values.";
+burst rates. Fault injection is deterministic per seed:
+--crash-mtbf/--crash-mttr give each device slot an exponential
+crash/repair process (an in-flight session loses uncheckpointed
+progress and resumes at the front of its class when the slot
+repairs); --throttle-mtbf/--throttle-dwell/--throttle-derate derate
+the slot clock for exponential dwells (service stretches, nothing is
+lost). --checkpoint-steps N checkpoints every N training steps at a
+cost priced from the retrained weight bytes over the device's DRAM
+bandwidth, so crashes roll back to the last completed write instead
+of step zero. --slo CLASS:CYCLES grades each class's sojourn against
+a target (met/violated per class plus a fleet violation rate). Prints
+fleet metrics (per-class sojourn p50/p95/p99) and writes the JSON
+report to --out; a fixed --seed is bit-identical across runs and
+--jobs values.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
@@ -97,6 +116,8 @@ const VALUE_FLAGS: &[&str] = &[
     "arrival-rate", "device-mix", "net-mix", "batch-mix", "depth-mix",
     "max-inflight-misses", "save-every", "priority-mix", "max-retries",
     "retry-base-ms", "shed-below", "shed-depth", "burst-rate", "burst-dwell",
+    "crash-mtbf", "crash-mttr", "throttle-mtbf", "throttle-dwell",
+    "throttle-derate", "checkpoint-steps", "slo", "read-timeout-ms",
 ];
 
 fn main() {
@@ -324,10 +345,16 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 let listener = std::net::TcpListener::bind(addr)
                     .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
                 eprintln!("ef-train serve: listening on {}", listener.local_addr()?);
+                let read_timeout = match args.try_parse_flag::<u64>("read-timeout-ms")? {
+                    Some(0) => {
+                        return Err(anyhow::anyhow!("--read-timeout-ms must be at least 1"))
+                    }
+                    ms => ms.map(std::time::Duration::from_millis),
+                };
                 // The accept loop stays on this thread; handlers go to
                 // the pool (a pool-installed accept loop would starve a
                 // --jobs 1 pool of its only worker).
-                serve::serve_listener(&advisor, listener, None, pool.as_ref())?;
+                serve::serve_listener(&advisor, listener, None, pool.as_ref(), read_timeout)?;
             } else {
                 return Err(anyhow::anyhow!("serve needs --oneshot or --listen ADDR"));
             }
@@ -351,6 +378,15 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 args.parse_flag("shed-depth", 8usize),
                 args.try_parse_flag("burst-rate")?,
                 args.try_parse_flag("burst-dwell")?,
+            )?
+            .with_faults(
+                args.try_parse_flag("crash-mtbf")?,
+                args.try_parse_flag("crash-mttr")?,
+                args.try_parse_flag("throttle-mtbf")?,
+                args.try_parse_flag("throttle-dwell")?,
+                args.parse_flag("throttle-derate", 0.5f64),
+                args.parse_flag("checkpoint-steps", 0usize),
+                args.flag("slo"),
             )?;
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
             let cache = match cache_path.as_deref() {

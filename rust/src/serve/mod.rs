@@ -44,7 +44,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 use rayon::prelude::*;
@@ -160,6 +160,10 @@ pub struct ServeStats {
     rejected: AtomicU64,
     errors: AtomicU64,
     infeasible: AtomicU64,
+    /// TCP connections closed because no request line arrived within
+    /// the `--read-timeout-ms` window (a stalled client must not pin a
+    /// pool worker forever).
+    timeouts: AtomicU64,
     cells_priced: AtomicU64,
     points_priced: AtomicU64,
     /// Cache-file saves performed by the batched write-back path.
@@ -190,6 +194,10 @@ impl ServeStats {
 
     pub fn errors(&self) -> u64 {
         self.count(&self.errors)
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.count(&self.timeouts)
     }
 
     pub fn saves(&self) -> u64 {
@@ -521,6 +529,7 @@ impl Advisor {
         m.insert("rejected".into(), Json::Num(s.count(&s.rejected) as f64));
         m.insert("errors".into(), Json::Num(s.count(&s.errors) as f64));
         m.insert("infeasible".into(), Json::Num(s.count(&s.infeasible) as f64));
+        m.insert("timeouts".into(), Json::Num(s.count(&s.timeouts) as f64));
         m.insert("cells_priced".into(), Json::Num(s.count(&s.cells_priced) as f64));
         m.insert("points_priced".into(), Json::Num(s.count(&s.points_priced) as f64));
         m.insert("saves".into(), Json::Num(s.count(&s.saves) as f64));
@@ -611,11 +620,37 @@ pub fn serve_oneshot(advisor: &Advisor, input: &str) -> Vec<String> {
         .collect()
 }
 
-fn handle_conn(advisor: &Advisor, stream: TcpStream) -> crate::Result<()> {
+fn handle_conn(
+    advisor: &Advisor,
+    stream: TcpStream,
+    read_timeout: Option<Duration>,
+) -> crate::Result<()> {
+    stream.set_read_timeout(read_timeout)?;
     let mut writer = BufWriter::new(stream.try_clone()?);
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        if let Some(reply) = advisor.respond_line(&line?) {
+        let line = match line {
+            Ok(l) => l,
+            // A stalled client: no request line arrived within the
+            // read-timeout window. Close the connection with a
+            // structured reply (best effort — the peer may be gone)
+            // and count it; a stall is not a handler error.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                advisor.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                let reply = protocol::error("read timeout: connection closed");
+                let _ = writer.write_all(reply.to_string().as_bytes());
+                let _ = writer.write_all(b"\n");
+                let _ = writer.flush();
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if let Some(reply) = advisor.respond_line(&line) {
             writer.write_all(reply.as_bytes())?;
             writer.write_all(b"\n")?;
             writer.flush()?;
@@ -632,11 +667,14 @@ fn handle_conn(advisor: &Advisor, stream: TcpStream) -> crate::Result<()> {
 /// handler it spawns. Stats persist after every connection.
 /// `max_conns` bounds the accept loop (tests; `None` serves forever)
 /// and waits for the in-flight handlers before returning.
+/// `read_timeout` bounds how long a connection may sit idle between
+/// request lines (`--read-timeout-ms`); `None` waits forever.
 pub fn serve_listener(
     advisor: &Arc<Advisor>,
     listener: TcpListener,
     max_conns: Option<usize>,
     pool: Option<&rayon::ThreadPool>,
+    read_timeout: Option<Duration>,
 ) -> crate::Result<()> {
     let (tx, rx) = std::sync::mpsc::channel::<()>();
     let mut accepted = 0usize;
@@ -653,7 +691,7 @@ pub fn serve_listener(
         let advisor = Arc::clone(advisor);
         let tx = tx.clone();
         let task = move || {
-            if let Err(e) = handle_conn(&advisor, stream) {
+            if let Err(e) = handle_conn(&advisor, stream, read_timeout) {
                 eprintln!("serve: connection error: {e:#}");
             }
             if let Err(e) = advisor.persist_stats() {

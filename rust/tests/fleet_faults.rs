@@ -1,0 +1,328 @@
+//! Fault-injection integration tests: the faults-off byte-identity
+//! gate (all fault knobs at their defaults emit the exact pre-fault
+//! report bytes, with no fault/SLO fields anywhere in the JSON), chaos
+//! determinism (crashes + throttles + checkpoints + retries + shedding
+//! + priorities + bursts + SLOs all on, byte-identical across runs and
+//! rayon pool sizes), the terminal-outcome partition and per-attempt
+//! advisor accounting under full chaos, SLO grading consistency, and
+//! the ISSUE acceptance criterion: checkpointed recovery strictly
+//! out-completes restart-from-scratch under the same crash schedule.
+
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::fleet::{run_fleet, FleetConfig};
+use ef_train::serve::{Advisor, ServeOptions};
+
+/// Same tiny scenario as `fleet_sim.rs`: one net, one batch, both
+/// boards, open loop, faults off.
+fn tiny_cfg(sessions: usize, seed: u64) -> FleetConfig {
+    FleetConfig::parse(
+        sessions,
+        seed,
+        1.0,
+        "zcu102:1,pynq-z1:1",
+        "cnn1x:1",
+        "4:1",
+        "full:2,1:1,2:1",
+        60,
+    )
+    .unwrap()
+}
+
+fn advisor_for(cfg: &FleetConfig) -> Advisor {
+    Advisor::new(
+        SweepCache::empty(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            ..ServeOptions::default()
+        },
+    )
+}
+
+/// Everything on at once: two priority classes with retries, shedding,
+/// MMPP bursts, crash and throttle processes, checkpointing, and SLO
+/// targets on both classes. The `background` target is astronomically
+/// loose (1e15 cycles) so every *completed* background session meets it
+/// — which turns its `slo_violated` count into a sharp assertion that
+/// abandoned sessions grade as violations.
+fn chaos_cfg(sessions: usize, seed: u64, checkpoint_steps: usize) -> FleetConfig {
+    FleetConfig::parse(
+        sessions,
+        seed,
+        4.0,
+        "zcu102:1,pynq-z1:1",
+        "cnn1x:1",
+        "4:1",
+        "full:2,1:1,2:1",
+        60,
+    )
+    .unwrap()
+    .with_closed_loop(
+        "interactive:1,background:3",
+        3,
+        50.0,
+        Some("interactive"),
+        2,
+        Some(12.0),
+        Some(0.5),
+    )
+    .unwrap()
+    .with_faults(
+        Some(25.0),
+        Some(2.0),
+        Some(40.0),
+        Some(5.0),
+        0.6,
+        checkpoint_steps,
+        Some("interactive:6000000000,background:1000000000000000"),
+    )
+    .unwrap()
+}
+
+#[test]
+fn default_fault_knobs_leave_the_report_byte_identical() {
+    // `--crash-mtbf`/`--throttle-mtbf` unset, `--checkpoint-steps 0`,
+    // no `--slo`: the engine must take the exact pre-fault path. The
+    // report bytes of a config passed through `with_faults` at its CLI
+    // defaults must equal the plain config's, and no fault- or
+    // SLO-specific key may appear anywhere in the JSON.
+    let plain = tiny_cfg(32, 7);
+    let defaulted = tiny_cfg(32, 7)
+        .with_faults(None, None, None, None, 0.5, 0, None)
+        .unwrap();
+    let run = |cfg: &FleetConfig| {
+        let advisor = advisor_for(cfg);
+        run_fleet(cfg, &advisor).unwrap().to_json().to_string()
+    };
+    let a = run(&plain);
+    let b = run(&defaulted);
+    assert_eq!(a, b, "default fault knobs must be a no-op, byte for byte");
+    for key in ["\"faults\"", "\"slo_", "\"down_cycles\"", "\"crashes\""] {
+        assert!(
+            !a.contains(key),
+            "faults-off JSON must not contain {key} (gating regression)"
+        );
+    }
+}
+
+#[test]
+fn chaos_reports_are_byte_identical_across_runs_and_pool_sizes() {
+    let cfg = chaos_cfg(48, 17, 8);
+    let run_in_pool = |threads: usize| -> String {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .expect("pool");
+        // Fresh cold advisor per run: the report embeds advisor
+        // counters, so identical runs need identical advisor histories.
+        let advisor = advisor_for(&cfg);
+        let report = pool.install(|| run_fleet(&cfg, &advisor)).expect("fleet run");
+        report.to_json().to_string()
+    };
+    let a = run_in_pool(1);
+    let b = run_in_pool(1);
+    assert_eq!(a, b, "two identical chaos runs must emit identical bytes");
+    let c = run_in_pool(4);
+    assert_eq!(
+        a, c,
+        "fault processes live on the serial event loop; report bytes \
+         may not depend on the pool size"
+    );
+}
+
+#[test]
+fn outcome_partition_and_accounting_hold_under_chaos() {
+    let cfg = chaos_cfg(64, 23, 8);
+    let advisor = advisor_for(&cfg);
+    let report = run_fleet(&cfg, &advisor).unwrap();
+
+    // Terminal outcomes still partition exactly under crashes and
+    // recoveries — a crashed session is re-queued, not re-counted.
+    assert_eq!(
+        report.completed + report.abandoned + report.infeasible + report.errored,
+        report.sessions,
+        "outcomes must partition the session population"
+    );
+
+    // Per-attempt advisor accounting survives chaos: attempts are the
+    // initial arrivals plus every retry (crash recoveries consume no
+    // retry budget and never re-query the advisor), and every non-shed
+    // attempt is classified exactly once.
+    let attempts: u64 = report.records.iter().map(|r| u64::from(r.attempts)).sum();
+    assert_eq!(attempts, report.sessions as u64 + report.retries);
+    let adv = &report.advisor;
+    assert_eq!(
+        adv.hits + adv.misses + adv.coalesced + adv.rejected,
+        attempts - report.shed,
+        "one advisor classification per non-shed attempt: {adv:?}"
+    );
+    assert_eq!(adv.errors, 0);
+
+    // The fault ledger is present, active, and consistent with both
+    // the per-session records and the per-device stats.
+    let faults = report.faults.expect("fault model configured");
+    assert!(faults.crashes > 0, "the crash process must fire");
+    assert!(faults.throttles > 0, "the throttle process must fire");
+    assert!(
+        faults.recoveries > 0,
+        "crashes must interrupt in-flight sessions at this MTBF"
+    );
+    let rec_crashes: u64 = report.records.iter().map(|r| u64::from(r.crashes)).sum();
+    let rec_lost: u64 = report.records.iter().map(|r| r.steps_lost).sum();
+    let rec_resumed: u64 = report.records.iter().map(|r| r.steps_resumed).sum();
+    assert_eq!(rec_crashes, faults.recoveries);
+    assert_eq!(rec_lost, faults.steps_lost);
+    assert_eq!(rec_resumed, faults.steps_resumed);
+    assert!(
+        faults.steps_resumed > 0,
+        "checkpointing every 8 steps must save work across some crash"
+    );
+    assert_eq!(
+        faults.crashes,
+        report.devices.iter().map(|d| d.crashes).sum::<u64>()
+    );
+    assert_eq!(
+        faults.throttles,
+        report.devices.iter().map(|d| d.throttles).sum::<u64>()
+    );
+    assert!(report.devices.iter().map(|d| d.down_cycles).sum::<u64>() > 0);
+    let goodput = faults.goodput();
+    assert!((0.0..=1.0).contains(&goodput));
+    if faults.steps_lost > 0 {
+        assert!(goodput < 1.0, "lost work must show up as lost goodput");
+    }
+
+    // Segmented execution keeps per-record time consistent: every
+    // segment of a session lies between its first start and its end.
+    for r in report.records.iter().filter(|r| r.ran()) {
+        assert!(r.start_cycle >= r.arrival_cycle);
+        assert!(
+            r.end_cycle - r.start_cycle >= r.service_cycles,
+            "session {}: wall span must cover all service segments",
+            r.id
+        );
+        assert!(r.service_cycles > 0);
+    }
+
+    // SLO grading: met + violated covers exactly the completed and
+    // abandoned sessions of each targeted class; with the loose 1e15
+    // target, every completed background session meets and every
+    // abandoned one violates.
+    for class in &report.classes {
+        match class.slo_cycles {
+            Some(_) => assert_eq!(
+                class.slo_met + class.slo_violated,
+                class.completed + class.abandoned,
+                "class {}: grading must cover completed + abandoned",
+                class.name
+            ),
+            None => assert_eq!((class.slo_met, class.slo_violated), (0, 0)),
+        }
+    }
+    let background = report
+        .classes
+        .iter()
+        .find(|c| c.name == "background")
+        .expect("background class");
+    assert_eq!(background.slo_met, background.completed);
+    assert_eq!(background.slo_violated, background.abandoned);
+    let rate = report.slo_violation_rate();
+    assert!((0.0..=1.0).contains(&rate));
+}
+
+#[test]
+fn checkpointed_recovery_out_completes_restart_from_scratch() {
+    // The acceptance criterion: under one crash schedule (fault draws
+    // are a pure function of seed and slot, independent of the
+    // workload), checkpointing every 6 steps must strictly beat
+    // restart-from-scratch on redone work, goodput, and makespan.
+    // Crash-only, open loop, one slot: nothing but recovery differs.
+    let build = |checkpoint_steps: usize| {
+        FleetConfig::parse(32, 29, 1.0, "zcu102:1", "cnn1x:1", "4:1", "full:1", 120)
+            .unwrap()
+            .with_faults(Some(30.0), Some(2.0), None, None, 0.5, checkpoint_steps, None)
+            .unwrap()
+    };
+    let run = |cfg: &FleetConfig| {
+        let advisor = advisor_for(cfg);
+        run_fleet(cfg, &advisor).unwrap()
+    };
+    let scratch = run(&build(0));
+    let ckpt = run(&build(6));
+
+    let scratch_faults = scratch.faults.expect("fault model configured");
+    let ckpt_faults = ckpt.faults.expect("fault model configured");
+    assert!(
+        scratch_faults.recoveries > 0 && ckpt_faults.recoveries > 0,
+        "both runs must actually crash mid-service: {} vs {}",
+        scratch_faults.recoveries,
+        ckpt_faults.recoveries
+    );
+    assert_eq!(scratch.completed, scratch.sessions, "open loop completes all");
+    assert_eq!(ckpt.completed, ckpt.sessions, "open loop completes all");
+    assert_eq!(
+        scratch_faults.steps_resumed, 0,
+        "with checkpointing off there is no durable floor to resume from"
+    );
+    assert!(
+        ckpt_faults.steps_resumed > 0,
+        "the checkpointed run must actually resume saved work"
+    );
+
+    assert!(
+        ckpt_faults.steps_lost < scratch_faults.steps_lost,
+        "checkpointing must strictly reduce redone steps: {} vs {}",
+        ckpt_faults.steps_lost,
+        scratch_faults.steps_lost
+    );
+    assert!(
+        ckpt_faults.goodput() > scratch_faults.goodput(),
+        "checkpointing must strictly improve goodput: {} vs {}",
+        ckpt_faults.goodput(),
+        scratch_faults.goodput()
+    );
+    assert!(
+        ckpt.makespan_cycles < scratch.makespan_cycles,
+        "at this crash rate the saved re-work must dwarf the checkpoint \
+         overhead: {} vs {}",
+        ckpt.makespan_cycles,
+        scratch.makespan_cycles
+    );
+}
+
+#[test]
+fn fault_knobs_validate_as_pairs_and_slo_classes_must_exist() {
+    let base = || tiny_cfg(8, 1);
+    assert!(base()
+        .with_faults(Some(10.0), None, None, None, 0.5, 0, None)
+        .is_err());
+    assert!(base()
+        .with_faults(None, None, Some(10.0), None, 0.5, 0, None)
+        .is_err());
+    assert!(base()
+        .with_faults(Some(10.0), Some(1.0), None, None, 0.5, 0, None)
+        .is_ok());
+    assert!(
+        base()
+            .with_faults(None, None, Some(10.0), Some(1.0), 1.0, 0, None)
+            .is_err(),
+        "a derate of 1.0 is not a throttle"
+    );
+    assert!(
+        base().with_faults(None, None, None, None, 0.5, 4, None).is_ok(),
+        "checkpointing without faults is legal (pure overhead)"
+    );
+    assert!(
+        base()
+            .with_faults(None, None, None, None, 0.5, 0, Some("vip:100"))
+            .is_err(),
+        "SLO classes must come from the priority mix"
+    );
+    assert!(base()
+        .with_faults(None, None, None, None, 0.5, 0, Some("default:100"))
+        .is_ok());
+    assert!(base()
+        .with_faults(None, None, None, None, 0.5, 0, Some("default:0"))
+        .is_err());
+}

@@ -272,7 +272,7 @@ fn tcp_session_speaks_the_protocol() {
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn({
         let advisor = Arc::clone(&advisor);
-        move || serve_listener(&advisor, listener, Some(1), None).unwrap()
+        move || serve_listener(&advisor, listener, Some(1), None, None).unwrap()
     });
 
     use std::io::{BufRead, BufReader, Write};
@@ -297,4 +297,75 @@ fn tcp_session_speaks_the_protocol() {
     assert_eq!(stats.field_f64("queries"), Some(1.0));
     assert_eq!(stats.field_f64("hits"), Some(1.0));
     assert_eq!(stats.field_f64("misses"), Some(0.0));
+    assert_eq!(stats.field_f64("timeouts"), Some(0.0));
+}
+
+/// A client that connects and then goes silent must not pin a pool
+/// worker forever: with `--read-timeout-ms` the server replies with a
+/// structured error, closes the connection, and counts the stall —
+/// while a well-behaved query on the same server still answers.
+#[test]
+fn stalled_tcp_client_times_out_with_structured_error() {
+    let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,bhwc,reshaped").unwrap();
+    let mut cache = SweepCache::empty();
+    run_sweep_with(
+        &cfg,
+        &SweepOptions { parallel: false, search_tilings: false },
+        Some(&mut cache),
+    )
+    .unwrap();
+    let advisor = Arc::new(Advisor::new(
+        cache,
+        None,
+        None,
+        ServeOptions { search_tilings: false, miss_batches: vec![4], ..ServeOptions::default() },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn({
+        let advisor = Arc::clone(&advisor);
+        move || {
+            serve_listener(
+                &advisor,
+                listener,
+                Some(2),
+                None,
+                Some(std::time::Duration::from_millis(50)),
+            )
+            .unwrap()
+        }
+    });
+
+    use std::io::{BufRead, BufReader, Write};
+    // Connection 1: sends one good query, then stalls (no shutdown, no
+    // further bytes). The first reply is the answer; the second is the
+    // structured timeout error, after which the server closes.
+    let stalled = std::net::TcpStream::connect(addr).unwrap();
+    let mut w = stalled.try_clone().unwrap();
+    w.write_all(b"{\"net\": \"cnn1x\", \"device\": \"zcu102\", \"batch\": 4}\n")
+        .unwrap();
+    let replies: Vec<String> =
+        BufReader::new(stalled).lines().collect::<Result<_, _>>().unwrap();
+    assert_eq!(replies.len(), 2, "answer, then the timeout error, then EOF");
+    assert_eq!(Json::parse(&replies[0]).unwrap().field_bool("ok"), Some(true));
+    let err = Json::parse(&replies[1]).unwrap();
+    assert_eq!(err.field_bool("ok"), Some(false));
+    assert!(
+        err.field_str("error").unwrap().contains("timeout"),
+        "timeout reply must say so, got: {}",
+        replies[1]
+    );
+
+    // Connection 2: a prompt client on the same server is unaffected.
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"{\"net\": \"cnn1x\", \"device\": \"zcu102\", \"batch\": 4}\n")
+        .unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let replies: Vec<String> =
+        BufReader::new(stream).lines().collect::<Result<_, _>>().unwrap();
+    server.join().unwrap();
+    assert_eq!(replies.len(), 1);
+    assert_eq!(Json::parse(&replies[0]).unwrap().field_bool("ok"), Some(true));
+    assert_eq!(advisor.stats().timeouts(), 1, "exactly the stalled connection");
 }

@@ -59,12 +59,23 @@ KINDS = {
             "retries",
             "shed",
             "sojourn_p99_cycles",
+            "chaos_makespan_cycles",
+            "chaos_crashes",
+            "chaos_recoveries",
+            "chaos_throttles",
+            "chaos_steps_lost",
+            "chaos_steps_resumed",
+            "chaos_goodput",
+            "chaos_slo_violation_rate",
         ],
         # workload_schema: the seed-to-workload model version. An
         # intentional trace-model change (e.g. an RNG bias fix) bumps
         # it, making the runs not-comparable instead of red-failing the
-        # makespan gate.
-        "compat": ["fast_mode", "sessions", "seed", "workload_schema"],
+        # makespan gate. bench_schema: the artifact layout version (2
+        # added the fault-injected `chaos_*` keys) — a baseline from
+        # before the bump has no bench_schema at all, so the mismatch
+        # honestly skips the diff instead of red-failing it.
+        "compat": ["fast_mode", "sessions", "seed", "workload_schema", "bench_schema"],
     },
 }
 
