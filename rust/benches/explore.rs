@@ -82,6 +82,7 @@ fn main() {
     }
     .expect("valid sweep axes");
     let n_points = cfg.points().len();
+    let n_cells = cfg.nets.len() * cfg.devices.len() * cfg.batches.len();
 
     // Serial sweep, cold caches.
     reset_all_caches();
@@ -128,6 +129,10 @@ fn main() {
         parallel_s / warm_s
     );
     println!(
+        "  cold pricing throughput: {:.1} cells/s ({n_cells} cells)",
+        n_cells as f64 / parallel_s
+    );
+    println!(
         "zoo scheduler search: exhaustive {} evals in {ex_s:.3}s, pruned {} evals in \
          {pr_s:.3}s ({:.1}x fewer, {} candidates lower-bounded away)",
         ex_stats.latency_evals,
@@ -172,6 +177,13 @@ fn main() {
     out.insert("rayon_cold_s".to_string(), Json::Num(parallel_s));
     out.insert("rayon_warm_s".to_string(), Json::Num(warm_s));
     out.insert("rayon_speedup".to_string(), Json::Num(serial_s / parallel_s));
+    // Wall-clock throughput over the cold rayon pass: (net x device x
+    // batch) cells priced per second. Informational for bench_diff —
+    // printed in the context section, never gated.
+    out.insert(
+        "cells_priced_per_s".to_string(),
+        Json::Num(n_cells as f64 / parallel_s),
+    );
     out.insert("warm_cache_hits".to_string(), Json::Num(warm_hits as f64));
     out.insert("warm_cache_misses".to_string(), Json::Num(warm_misses as f64));
     out.insert(

@@ -47,7 +47,7 @@ use crate::layout::streams::StreamSpec;
 use crate::layout::{Process, Scheme};
 use crate::model::perf::aux_latency;
 use crate::model::resource::ResourceModel;
-use crate::model::scheduler::{schedule, SearchMode};
+use crate::model::scheduler::{schedule, Schedule, SchedulePlan, SearchMode};
 use crate::nets::network_by_name;
 use crate::search::SearchStats;
 use crate::report::Table;
@@ -144,8 +144,95 @@ pub fn price_point_on(
     p: &DesignPoint,
 ) -> PricedPoint {
     let sched = schedule(net, dev, p.batch);
+    price_point_with(net, dev, p, &sched)
+}
+
+/// Everything batch- and scheme-independent about one (network, device)
+/// cell, resolved and planned once: the structs themselves plus
+/// Algorithm 1's batch-free prefix ([`SchedulePlan`] — `pick_tile`, the
+/// BRAM boundary, the even-split `M_on` picks and `B_WEI`). The sweep's
+/// grouped miss path, `--fill`, the advisor's per-cell pricing and the
+/// fleet's step-cost memo all build one of these per cell group and fan
+/// the batch × scheme grid out over it; every `_in` entry point below
+/// is bit-identical to its name-resolving sibling because
+/// [`schedule`] itself delegates to the same plan.
+#[derive(Debug, Clone)]
+pub struct CellDecomposition {
+    net: crate::nets::Network,
+    dev: crate::device::Device,
+    plan: SchedulePlan,
+}
+
+impl CellDecomposition {
+    pub fn new(net: crate::nets::Network, dev: crate::device::Device) -> Self {
+        let plan = SchedulePlan::new(&net, &dev);
+        Self { net, dev, plan }
+    }
+
+    /// Resolve zoo names once and plan the cell.
+    pub fn resolve(net: &str, device: &str) -> crate::Result<Self> {
+        let n = network_by_name(net)
+            .ok_or_else(|| anyhow!("unknown network `{net}` in sweep"))?;
+        let d = device_by_name(device)
+            .ok_or_else(|| anyhow!("unknown device `{device}` in sweep"))?;
+        Ok(Self::new(n, d))
+    }
+
+    pub fn network(&self) -> &crate::nets::Network {
+        &self.net
+    }
+
+    pub fn device(&self) -> &crate::device::Device {
+        &self.dev
+    }
+
+    /// Algorithm 1 for one batch off the shared plan — bit-identical to
+    /// [`schedule`]`(net, dev, batch)`, minus the batch-free prefix.
+    pub fn schedule_for(&self, batch: usize) -> Schedule {
+        self.plan.schedule_for(batch, SearchMode::Pruned).0
+    }
+}
+
+/// [`price_point_on`] over a decomposition the caller shares across the
+/// cell's batch × scheme fan-out.
+pub fn price_point_in(cd: &CellDecomposition, p: &DesignPoint) -> PricedPoint {
+    let sched = cd.schedule_for(p.batch);
+    price_point_with(&cd.net, &cd.dev, p, &sched)
+}
+
+/// [`masked_point_cycles`] over a shared decomposition — the fleet's
+/// step-cost miss path.
+pub fn masked_point_cycles_in(
+    cd: &CellDecomposition,
+    p: &DesignPoint,
+    mask: &crate::model::PhaseMask,
+) -> u64 {
+    let sched = cd.schedule_for(p.batch);
+    simulate_point_cycles(&cd.net, &cd.dev, p, mask, &sched).0
+}
+
+/// The `(Tr, M_on)` search over a shared decomposition: the heuristic
+/// schedule the ladder is clamped to comes off the plan instead of a
+/// fresh Algorithm 1 run.
+pub fn search_tilings_in(
+    cd: &CellDecomposition,
+    batch: usize,
+) -> (tiling_search::SearchedTilings, SearchStats) {
+    let heur = cd.schedule_for(batch);
+    tiling_search::search_tilings_with(&cd.net, &cd.dev, batch, &heur, SearchMode::Pruned)
+}
+
+/// The shared pricing tail: everything [`price_point_on`] does after
+/// Algorithm 1, over a schedule the caller already holds (one per
+/// (network, device, batch) cell — the three scheme rows reuse it).
+pub fn price_point_with(
+    net: &crate::nets::Network,
+    dev: &crate::device::Device,
+    p: &DesignPoint,
+    sched: &Schedule,
+) -> PricedPoint {
     let full = crate::model::PhaseMask::full(net.conv_count());
-    let (cycles, realloc) = simulate_point_cycles(net, dev, p, &full, &sched);
+    let (cycles, realloc) = simulate_point_cycles(net, dev, p, &full, sched);
 
     let layers = net.conv_layers();
     let rm = ResourceModel::new(dev);
@@ -241,9 +328,8 @@ fn cell_search(
     cell: &(Arc<str>, Arc<str>, usize),
 ) -> crate::Result<(tiling_search::SearchedTilings, SearchStats)> {
     let (net, device, batch) = cell;
-    let n = network_by_name(net).ok_or_else(|| anyhow!("unknown network `{net}` in sweep"))?;
-    let d = device_by_name(device).ok_or_else(|| anyhow!("unknown device `{device}` in sweep"))?;
-    Ok(tiling_search::search_tilings_searched(&n, &d, *batch, SearchMode::Pruned))
+    let cd = CellDecomposition::resolve(net, device)?;
+    Ok(search_tilings_in(&cd, *batch))
 }
 
 /// The sweep grid: the cross product of its four axes.
@@ -303,10 +389,25 @@ impl SweepConfig {
         for d in &devices {
             device_by_name(d).ok_or_else(|| anyhow!("unknown device `{d}`"))?;
         }
-        let batches = split(batches)
-            .iter()
-            .map(|b| b.parse::<usize>().map_err(|_| anyhow!("bad batch size `{b}`")))
-            .collect::<crate::Result<Vec<_>>>()?;
+        // Batches accept both scalars and inclusive `lo-hi` ranges
+        // (`1-8,16` = 1..=8 plus 16) — dense grids are `--fill`'s bread
+        // and butter. Duplicates collapse, first occurrence wins.
+        let mut batch_list: Vec<usize> = Vec::new();
+        for b in split(batches) {
+            if let Some((lo, hi)) = b.split_once('-') {
+                let lo = lo.trim().parse::<usize>();
+                let hi = hi.trim().parse::<usize>();
+                match (lo, hi) {
+                    (Ok(lo), Ok(hi)) if lo >= 1 && hi >= lo => batch_list.extend(lo..=hi),
+                    _ => return Err(anyhow!("bad batch range `{b}` (want `lo-hi`, lo >= 1)")),
+                }
+            } else {
+                batch_list.push(b.parse::<usize>().map_err(|_| anyhow!("bad batch size `{b}`"))?);
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        batch_list.retain(|b| seen.insert(*b));
+        let batches = batch_list;
         let schemes = split(schemes)
             .iter()
             .map(|s| scheme_by_name(s).ok_or_else(|| anyhow!("unknown scheme `{s}`")))
@@ -346,12 +447,58 @@ impl SweepConfig {
 
 /// Price every point on the calling thread, in grid order.
 pub fn sweep_serial(points: &[DesignPoint]) -> crate::Result<Vec<PricedPoint>> {
-    points.iter().map(price_point).collect()
+    sweep_grouped(points, false)
 }
 
 /// Price every point across the rayon pool. Results keep grid order.
 pub fn sweep_parallel(points: &[DesignPoint]) -> crate::Result<Vec<PricedPoint>> {
-    points.par_iter().map(price_point).collect()
+    sweep_grouped(points, true)
+}
+
+fn sweep_grouped(points: &[DesignPoint], parallel: bool) -> crate::Result<Vec<PricedPoint>> {
+    let indexed: Vec<(usize, DesignPoint)> = points.iter().cloned().enumerate().collect();
+    let mut priced = price_points_grouped(indexed, parallel)?;
+    priced.sort_by_key(|&(i, _)| i);
+    Ok(priced.into_iter().map(|(_, p)| p).collect())
+}
+
+/// The grouped miss path every sweep entry point shares: resolve each
+/// (network, device) name pair once, plan Algorithm 1's batch-free
+/// prefix once per pair, schedule once per (pair, batch), and price the
+/// scheme rows off that one schedule. Work-stealing fans out over the
+/// pair groups (not points) so a straggler network does not serialize
+/// the rest. Output keeps each input index; order is group order.
+fn price_points_grouped(
+    indexed: Vec<(usize, DesignPoint)>,
+    parallel: bool,
+) -> crate::Result<Vec<(usize, PricedPoint)>> {
+    let mut groups: BTreeMap<(Arc<str>, Arc<str>), Vec<(usize, DesignPoint)>> = BTreeMap::new();
+    for (i, p) in indexed {
+        groups.entry((p.net.clone(), p.device.clone())).or_default().push((i, p));
+    }
+    let groups: Vec<_> = groups.into_iter().collect();
+    let price_group = |group: &((Arc<str>, Arc<str>), Vec<(usize, DesignPoint)>)|
+     -> crate::Result<Vec<(usize, PricedPoint)>> {
+        let ((net, device), pts) = group;
+        let cd = CellDecomposition::resolve(net, device)?;
+        let mut batches: Vec<usize> = pts.iter().map(|&(_, ref p)| p.batch).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        let mut out = Vec::with_capacity(pts.len());
+        for &b in &batches {
+            let sched = cd.schedule_for(b);
+            for (i, p) in pts.iter().filter(|(_, p)| p.batch == b) {
+                out.push((*i, price_point_with(&cd.net, &cd.dev, p, &sched)));
+            }
+        }
+        Ok(out)
+    };
+    let nested: Vec<Vec<(usize, PricedPoint)>> = if parallel {
+        groups.par_iter().map(price_group).collect::<crate::Result<Vec<_>>>()?
+    } else {
+        groups.iter().map(price_group).collect::<crate::Result<Vec<_>>>()?
+    };
+    Ok(nested.into_iter().flatten().collect())
 }
 
 /// Knobs for [`run_sweep_with`] beyond the grid itself.
@@ -446,17 +593,7 @@ pub fn run_sweep_with(
         .filter(|(i, _)| priced[*i].is_none())
         .map(|(i, p)| (i, p.clone()))
         .collect();
-    let fresh: Vec<(usize, PricedPoint)> = if opts.parallel {
-        missing
-            .par_iter()
-            .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
-            .collect::<crate::Result<Vec<_>>>()?
-    } else {
-        missing
-            .iter()
-            .map(|(i, p)| price_point(p).map(|pp| (*i, pp)))
-            .collect::<crate::Result<Vec<_>>>()?
-    };
+    let fresh: Vec<(usize, PricedPoint)> = price_points_grouped(missing, opts.parallel)?;
     let cache_misses = fresh.len();
     for (i, pp) in fresh {
         if let Some(c) = cache.as_deref_mut() {
@@ -520,6 +657,156 @@ pub fn run_sweep_with(
         cache_misses,
         cells_searched,
         cell_cache_hits,
+        search_stats,
+    })
+}
+
+/// One `ef-train explore --fill` run's accounting.
+#[derive(Debug, Clone)]
+pub struct FillReport {
+    /// Cells on the requested (net × device × batch) grid.
+    pub cells_total: usize,
+    /// Cells priced fresh this run (every scheme row, plus the search
+    /// outcome when `--search-tilings`).
+    pub cells_filled: usize,
+    /// Cells the cache already held completely.
+    pub cells_skipped: usize,
+    /// Points inserted into the cache this run.
+    pub points_priced: usize,
+    /// Cells whose `(Tr, M_on)` search ran this run.
+    pub cells_searched: usize,
+    pub wall_s: f64,
+    /// Rayon workers available while filling (1 when serial).
+    pub threads: usize,
+    /// Batched cache saves performed (one per `--save-every` chunk).
+    pub saves: usize,
+    /// Engine counters aggregated over the freshly searched cells.
+    pub search_stats: SearchStats,
+}
+
+impl FillReport {
+    /// Fresh cells per wall-clock second — the fill throughput figure.
+    pub fn cells_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.cells_filled as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Whole-frontier precompute: enumerate the full (net × device × batch
+/// × scheme) grid, skip cells the cache already holds completely, and
+/// price the rest with rayon work-stealing over *cells* (each cell =
+/// one shared schedule + one scheme fan-out + optionally one tiling
+/// search), streaming results into the cache with a crash-safe save
+/// after every `save_every` cells. The cache a fill leaves behind makes
+/// a subsequent warm sweep or advisor run price zero new points —
+/// `--fill` is the designated writer for the sharded design-space
+/// database (ROADMAP).
+pub fn run_fill(
+    cfg: &SweepConfig,
+    opts: &SweepOptions,
+    cache: &mut sweep_cache::SweepCache,
+    cache_path: &std::path::Path,
+    save_every: usize,
+) -> crate::Result<FillReport> {
+    let t0 = Instant::now();
+    // Resolve + plan every (network, device) pair once up front; this
+    // also validates the axes before any pricing starts.
+    let nets: Vec<Arc<str>> = cfg.nets.iter().map(|s| Arc::from(s.as_str())).collect();
+    let devices: Vec<Arc<str>> = cfg.devices.iter().map(|s| Arc::from(s.as_str())).collect();
+    let mut decomps: BTreeMap<(Arc<str>, Arc<str>), CellDecomposition> = BTreeMap::new();
+    for net in &nets {
+        for device in &devices {
+            decomps.insert((net.clone(), device.clone()), CellDecomposition::resolve(net, device)?);
+        }
+    }
+    let mut cells: Vec<(Arc<str>, Arc<str>, usize)> = Vec::new();
+    for net in &nets {
+        for device in &devices {
+            for &batch in &cfg.batches {
+                cells.push((net.clone(), device.clone(), batch));
+            }
+        }
+    }
+    let cells_total = cells.len();
+    // A cell is complete when every scheme row (and, when searching,
+    // the cell's search outcome) is already cached.
+    cells.retain(|(net, device, batch)| {
+        let have_points = cfg.schemes.iter().all(|&scheme| {
+            let p = DesignPoint {
+                net: net.clone(),
+                device: device.clone(),
+                batch: *batch,
+                scheme,
+            };
+            cache.lookup_point(&p).is_some()
+        });
+        let have_search = !opts.search_tilings || cache.lookup_cell(net, device, *batch).is_some();
+        !(have_points && have_search)
+    });
+    let cells_skipped = cells_total - cells.len();
+    let cells_filled = cells.len();
+
+    type CellOut = (Vec<PricedPoint>, Option<(tiling_search::SearchedTilings, SearchStats)>);
+    let fill_cell = |cell: &(Arc<str>, Arc<str>, usize)| -> CellOut {
+        let (net, device, batch) = cell;
+        let cd = &decomps[&(net.clone(), device.clone())];
+        let sched = cd.schedule_for(*batch);
+        let rows = cfg
+            .schemes
+            .iter()
+            .map(|&scheme| {
+                let p = DesignPoint {
+                    net: net.clone(),
+                    device: device.clone(),
+                    batch: *batch,
+                    scheme,
+                };
+                price_point_with(&cd.net, &cd.dev, &p, &sched)
+            })
+            .collect();
+        let searched = opts.search_tilings.then(|| {
+            tiling_search::search_tilings_with(&cd.net, &cd.dev, *batch, &sched, SearchMode::Pruned)
+        });
+        (rows, searched)
+    };
+
+    let mut points_priced = 0usize;
+    let mut cells_searched = 0usize;
+    let mut saves = 0usize;
+    let mut search_stats = SearchStats::default();
+    for chunk in cells.chunks(save_every.max(1)) {
+        let outs: Vec<CellOut> = if opts.parallel {
+            chunk.par_iter().map(fill_cell).collect()
+        } else {
+            chunk.iter().map(fill_cell).collect()
+        };
+        for ((net, device, batch), (rows, searched)) in chunk.iter().zip(outs) {
+            points_priced += rows.len();
+            for pp in &rows {
+                cache.insert_point(pp);
+            }
+            if let Some((outcome, stats)) = searched {
+                cells_searched += 1;
+                search_stats.absorb(&stats);
+                cache.insert_cell(net, device, *batch, &outcome);
+            }
+        }
+        cache.save(cache_path)?;
+        saves += 1;
+    }
+
+    Ok(FillReport {
+        cells_total,
+        cells_filled,
+        cells_skipped,
+        points_priced,
+        cells_searched,
+        wall_s: t0.elapsed().as_secs_f64(),
+        threads: if opts.parallel { rayon::current_num_threads() } else { 1 },
+        saves,
         search_stats,
     })
 }
@@ -648,6 +935,8 @@ impl SweepReport {
         stats.insert("floored_candidates".into(), Json::Num(ss.floored_candidates as f64));
         stats.insert("priced_levels".into(), Json::Num(ss.priced_levels as f64));
         stats.insert("pruned_levels".into(), Json::Num(ss.pruned_levels as f64));
+        stats.insert("arena_reused_walks".into(), Json::Num(ss.arena_reused_walks as f64));
+        stats.insert("arena_fresh_walks".into(), Json::Num(ss.arena_fresh_walks as f64));
         root.insert("search_stats".into(), Json::Obj(stats));
         Json::Obj(root)
     }
@@ -689,6 +978,33 @@ mod tests {
         assert!(SweepConfig::from_args("cnn1x", "zcu102", "four", "reshaped").is_err());
         assert!(SweepConfig::from_args("cnn1x", "zcu102", "4", "nchw").is_err());
         assert!(SweepConfig::from_args("", "zcu102", "4", "reshaped").is_err());
+    }
+
+    #[test]
+    fn batch_ranges_expand_inclusively_and_dedup() {
+        let cfg = SweepConfig::from_args("cnn1x", "zcu102", "1-4,2,8", "reshaped").unwrap();
+        assert_eq!(cfg.batches, vec![1, 2, 3, 4, 8]);
+        assert!(SweepConfig::from_args("cnn1x", "zcu102", "0-2", "reshaped").is_err());
+        assert!(SweepConfig::from_args("cnn1x", "zcu102", "4-2", "reshaped").is_err());
+        assert!(SweepConfig::from_args("cnn1x", "zcu102", "1-x", "reshaped").is_err());
+    }
+
+    #[test]
+    fn decomposition_pricing_bit_equals_the_plain_path() {
+        for p in tiny_cfg().points() {
+            let want = price_point(&p).unwrap();
+            let cd = CellDecomposition::resolve(&p.net, &p.device).unwrap();
+            let got = price_point_in(&cd, &p);
+            assert_eq!(got.cycles, want.cycles);
+            assert_eq!(got.realloc_cycles, want.realloc_cycles);
+            assert_eq!(got.tm, want.tm);
+            assert_eq!(got.energy_mj.to_bits(), want.energy_mj.to_bits());
+            let mask = crate::model::PhaseMask::full(cd.network().conv_count());
+            assert_eq!(
+                masked_point_cycles_in(&cd, &p, &mask),
+                masked_point_cycles(cd.network(), cd.device(), &p, &mask),
+            );
+        }
     }
 
     #[test]

@@ -49,10 +49,10 @@ use crate::layout::{Process, Tiling};
 use crate::model::perf::{conv_latency_lower_bound, conv_process_sum};
 use crate::model::resource::ResourceModel;
 use crate::model::scheduler::{
-    bram_boundary, max_feasible_tr, pick_tile, schedule, SearchMode, SearchStats,
+    bram_boundary, max_feasible_tr, pick_tile, schedule, Schedule, SearchMode, SearchStats,
 };
 use crate::nets::{ConvShape, Network};
-use crate::search::{Band, BoundedSearch, Candidate, Priced};
+use crate::search::{Band, BoundedSearch, Candidate, Priced, SearchArena};
 
 /// One (network, device, batch) cell searched beyond Algorithm 1.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -192,14 +192,44 @@ fn best_tr_floored(
         incumbent: true,
     });
     stats.tally_walk(&walk, Process::ALL.len() as u64);
+    let (lat, tr) = argmin_tr(&visited);
+    (lat, Tiling::new(tm, tm, tr, l.c, m_on))
+}
+
+/// [`best_tr_floored`] on a caller-owned [`SearchArena`]: the ladder's
+/// thousands of inner walks reuse one pair buffer and one visited
+/// buffer instead of allocating each — the ordering, pruning and
+/// reduction are the shared engine core, so the pick is bit-identical.
+fn best_tr_arena(
+    l: &ConvShape,
+    dev: &Device,
+    batch: usize,
+    tm: usize,
+    m_on: usize,
+    floors: &[u64],
+    arena: &mut SearchArena<usize>,
+    stats: &mut SearchStats,
+) -> (u64, Tiling) {
+    let pairs = floors.iter().enumerate().map(|(i, &f)| (f, i + 1));
+    let (visited, walk) = arena.run_floored(pairs, Band::Exact, None, |&tr| Priced {
+        cost: conv_process_sum(l, &Tiling::new(tm, tm, tr, l.c, m_on), dev, batch),
+        incumbent: true,
+    });
+    stats.tally_walk(&walk, Process::ALL.len() as u64);
+    let (lat, tr) = argmin_tr(visited);
+    (lat, Tiling::new(tm, tm, tr, l.c, m_on))
+}
+
+/// The walks' shared selection rule: strict-improvement argmin over the
+/// visit order (which already breaks floor ties toward the larger `Tr`).
+fn argmin_tr(visited: &[(u64, usize)]) -> (u64, usize) {
     let mut best: Option<(u64, usize)> = None;
-    for &(lat, tr) in &visited {
+    for &(lat, tr) in visited {
         if best.map_or(true, |(b, _)| lat < b) {
             best = Some((lat, tr));
         }
     }
-    let (lat, tr) = best.expect("tr_max >= 1 always yields a candidate");
-    (lat, Tiling::new(tm, tm, tr, l.c, m_on))
+    best.expect("tr_max >= 1 always yields a candidate")
 }
 
 /// [`best_tr_floored`] with the floors computed on the spot (only up
@@ -267,6 +297,8 @@ struct LadderSearch<'a> {
     /// (layer, `M_on`) -> per-`Tr` floors + prefix minima, shared by
     /// the level floors and the inner walks.
     floor_memo: HashMap<(usize, usize), FloorTable>,
+    /// Scratch shared by every inner `Tr` walk of this cell's sweep.
+    arena: SearchArena<usize>,
     stats: SearchStats,
 }
 
@@ -340,14 +372,16 @@ impl LadderSearch<'_> {
                 };
                 let key = (i, m_on, tr_max);
                 if !self.tr_memo.contains_key(&key) {
-                    let floors: Vec<u64> = self.floors(i, m_on).floors[..tr_max].to_vec();
-                    let entry = best_tr_floored(
+                    self.floors(i, m_on); // materialize the table
+                    let ft = &self.floor_memo[&(i, m_on)];
+                    let entry = best_tr_arena(
                         l,
                         self.dev,
                         self.batch,
                         self.tm,
                         m_on,
-                        &floors,
+                        &ft.floors[..tr_max],
+                        &mut self.arena,
                         &mut self.stats,
                     );
                     self.tr_memo.insert(key, entry);
@@ -388,11 +422,27 @@ pub fn search_tilings_searched(
     batch: usize,
     mode: SearchMode,
 ) -> (SearchedTilings, SearchStats) {
+    let heur = schedule(net, dev, batch);
+    search_tilings_with(net, dev, batch, &heur, mode)
+}
+
+/// [`search_tilings_searched`] over a heuristic schedule the caller
+/// already holds — the shared-decomposition fast path: a cell group
+/// runs Algorithm 1 once per batch (via
+/// [`crate::model::SchedulePlan::schedule_for`]) and hands the result
+/// here instead of re-deriving it per scheme. Bit-identical because
+/// `schedule` is deterministic in `(net, dev, batch)`.
+pub fn search_tilings_with(
+    net: &Network,
+    dev: &Device,
+    batch: usize,
+    heur: &Schedule,
+    mode: SearchMode,
+) -> (SearchedTilings, SearchStats) {
     let layers = net.conv_layers();
     let rm = ResourceModel::new(dev);
     let tm = pick_tile(dev);
     let budget = bram_boundary(dev);
-    let heur = schedule(net, dev, batch);
     let heur_cost: Vec<u64> = layers
         .iter()
         .zip(&heur.tilings)
@@ -429,6 +479,7 @@ pub fn search_tilings_searched(
         heur_cost: &heur_cost,
         tr_memo: HashMap::new(),
         floor_memo: HashMap::new(),
+        arena: SearchArena::new(),
         stats: SearchStats::default(),
     };
 
@@ -480,7 +531,9 @@ pub fn search_tilings_searched(
         }
     }
 
-    let stats = ls.stats;
+    let (reused, fresh) = ls.arena.counters();
+    let mut stats = ls.stats;
+    stats.tally_arena(reused, fresh);
     let searched = match best {
         Some((searched_cycles, _, tilings)) if searched_cycles < heuristic_cycles => {
             let b_wei = layers
@@ -500,7 +553,7 @@ pub fn search_tilings_searched(
         // The searched space modeled no faster (or no level passed the
         // bounds filter): Algorithm 1 stands.
         _ => SearchedTilings {
-            tilings: heur.tilings,
+            tilings: heur.tilings.clone(),
             searched_cycles: heuristic_cycles,
             heuristic_cycles,
             b_wei: heur.b_wei,

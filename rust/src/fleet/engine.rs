@@ -66,7 +66,7 @@ use std::sync::Arc;
 use anyhow::anyhow;
 
 use crate::device::Device;
-use crate::explore::{masked_point_cycles, scheme_by_name, DesignPoint};
+use crate::explore::{masked_point_cycles_in, scheme_by_name, CellDecomposition, DesignPoint};
 use crate::model::PhaseMask;
 use crate::nets::Network;
 use crate::serve::protocol::Query;
@@ -175,8 +175,10 @@ enum Resolution {
     Failed { source: String },
 }
 
-/// Resolved (network, device) structs per (net, kind) pair.
-type Zoo = BTreeMap<(String, String), (Network, Device)>;
+/// Resolved (network, device) structs per (net, kind) pair, carried as
+/// a [`CellDecomposition`] so every step-cost miss of the pair reuses
+/// one Algorithm-1 plan across its batch × scheme × depth spellings.
+type Zoo = BTreeMap<(String, String), CellDecomposition>;
 /// Per-step and per-checkpoint masked cost (reference-clock cycles)
 /// per (net, kind, batch, scheme, depth) — distinct sessions of one
 /// shape share one pricing, but each multiplies in its own
@@ -213,11 +215,11 @@ fn resolve(
     // hand-built session naming an unknown net or device is a caller
     // bug the engine reports as `Err`, not a panic (and not an advisor
     // "error" reply silently folded into the fleet accounting).
-    let (network, dev) = match zoo.entry((s.net.clone(), s.device_kind.clone())) {
+    let cd = match zoo.entry((s.net.clone(), s.device_kind.clone())) {
         Entry::Occupied(e) => e.into_mut(),
         Entry::Vacant(e) => {
             let (network, _, dev, _) = canonical_coords(&s.net, &s.device_kind)?;
-            e.insert((network, dev))
+            e.insert(CellDecomposition::new(network, dev))
         }
     };
     let q = Query {
@@ -253,7 +255,7 @@ fn resolve(
     let power_w = reply
         .field_f64("power_w")
         .ok_or_else(|| anyhow!("advisor reply lacks power_w: {reply}"))?;
-    let n_convs = network.conv_count();
+    let n_convs = cd.network().conv_count();
     // Clamp the depth before keying: depth k >= n_convs IS full
     // retraining, so "full" and every over-deep k share one memoized
     // pricing instead of re-simulating per spelling.
@@ -277,10 +279,10 @@ fn resolve(
                 batch: s.batch,
                 scheme,
             };
-            let step_cycles = masked_point_cycles(network, dev, &point, &mask);
+            let step_cycles = masked_point_cycles_in(cd, &point, &mask);
             // Device clock -> fleet reference clock.
-            let per_step = (step_cycles * REF_FREQ_MHZ / dev.freq_mhz as u64).max(1);
-            let ckpt_cost = checkpoint_cycles(network, dev, &mask);
+            let per_step = (step_cycles * REF_FREQ_MHZ / cd.device().freq_mhz as u64).max(1);
+            let ckpt_cost = checkpoint_cycles(cd.network(), cd.device(), &mask);
             step_costs.insert(key, (per_step, ckpt_cost));
             (per_step, ckpt_cost)
         }

@@ -27,9 +27,10 @@ USAGE:
   ef-train report
   ef-train ablate
   ef-train schedule [--net NET] [--device zcu102|pynq-z1] [--batch N]
-  ef-train explore [--nets A,B] [--devices D,E] [--batches N,M]
+  ef-train explore [--nets A,B] [--devices D,E] [--batches N,M|LO-HI]
                    [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
                    [--jobs N] [--cache-file FILE] [--search-tilings]
+                   [--fill] [--save-every N]
   ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
                  [--cache-file FILE] [--stats-json FILE] [--jobs N]
                  [--search-tilings] [--max-inflight-misses N]
@@ -61,7 +62,13 @@ BRAM, energy/image), and writes the full priced grid as JSON.
 `--jobs N` pins the rayon pool; `--cache-file F` persists priced points
 so a warm sweep only prices new grid cells; `--search-tilings` searches
 per-layer (Tr, M_on) beyond Algorithm 1 and reports where it beats the
-paper's heuristic.
+paper's heuristic. `--batches` accepts inclusive `lo-hi` ranges next
+to plain values (`1-8,16`). `--fill` switches to saturation mode: it
+enumerates every incomplete (net x device x batch) cell of the grid,
+prices all requested schemes per cell (plus the tiling search with
+--search-tilings) with rayon work-stealing over whole cells, and
+streams results into --cache-file (required), saving every
+--save-every cells (default 16) plus once at the end.
 
 `serve` answers {net, device, batch?, max_latency_ms?, max_bram?,
 max_energy_mj?, objective?} JSON-lines queries with the optimal cached
@@ -229,6 +236,43 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 Some(p) => Some(explore::sweep_cache::SweepCache::load(p)?),
                 None => None,
             };
+            if args.has("fill") {
+                let (Some(path), Some(cache)) = (&cache_path, point_cache.as_mut()) else {
+                    return Err(anyhow::anyhow!("explore --fill needs --cache-file FILE"));
+                };
+                let save_every = args.parse_flag("save-every", 16usize).max(1);
+                let fill = || explore::run_fill(&cfg, &opts, cache, path, save_every);
+                let report = if jobs > 0 {
+                    let pool = rayon::ThreadPoolBuilder::new()
+                        .num_threads(jobs)
+                        .build()
+                        .map_err(|e| anyhow::anyhow!("building a {jobs}-thread pool: {e}"))?;
+                    pool.install(fill)?
+                } else {
+                    fill()?
+                };
+                println!(
+                    "filled {} of {} cells ({} already complete) in {:.2}s \
+                     ({:.1} cells/s, {} threads, {} saves); {} points priced, {} cells searched",
+                    report.cells_filled,
+                    report.cells_total,
+                    report.cells_skipped,
+                    report.wall_s,
+                    report.cells_per_s(),
+                    report.threads,
+                    report.saves,
+                    report.points_priced,
+                    report.cells_searched
+                );
+                let pc = point_cache.as_ref().unwrap();
+                println!(
+                    "cache: {} entries, {} cells -> {}",
+                    pc.len(),
+                    pc.cell_count(),
+                    cache_path.as_ref().unwrap().display()
+                );
+                return Ok(());
+            }
             let report = if jobs > 0 {
                 let pool = rayon::ThreadPoolBuilder::new()
                     .num_threads(jobs)

@@ -7,11 +7,11 @@ pub mod perf;
 pub mod resource;
 pub mod scheduler;
 
-pub use perf::{conv_latency, conv_latency_lower_bound, LatencyBreakdown};
+pub use perf::{conv_latency, conv_latency_lower_bound, AffineLatency, LatencyBreakdown};
 pub use resource::{ConvResources, ResourceModel};
 pub use scheduler::{
-    network_training_cycles_masked, schedule, schedule_searched, Schedule, SearchMode,
-    SearchStats,
+    network_training_cycles_masked, schedule, schedule_searched, Schedule, SchedulePlan,
+    SearchMode, SearchStats,
 };
 
 use crate::layout::Process;

@@ -56,7 +56,7 @@ impl TileTimes {
 }
 
 /// Latency of one conv layer for one process, Eq. (15)–(27).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LatencyBreakdown {
     pub cycles: u64,
     /// Pure MAC cycles (`sum t_comp`), the Fig. 19 "MAC" bar.
@@ -278,24 +278,87 @@ pub fn conv_latency(
     LatencyBreakdown { cycles, mac_cycles }
 }
 
+/// The batch-affine factoring of [`conv_latency`]: for any fixed
+/// (layer, tiling, device, process) the closed form is *exactly*
+/// affine in the batch size, `f(b) = base + (b - 1) * per_batch` for
+/// every `b >= 1`.
+///
+/// Why this is exact, not an approximation: in [`fp_like_latency`] the
+/// per-tile times and the `lat1/lat2/latb1/latb2` prologue terms are
+/// batch-independent, the weight-group structure (the `m_done` loop)
+/// is batch-independent, and each group contributes
+/// `(batch - 1) * lat3 + latb3` — affine with nonnegative slope. Both
+/// branches of [`wu_latency`] have the same `(batch - 1) * k + c`
+/// shape, and `mac_cycles` is linear in batch outright. Sums of affine
+/// functions are affine, so `(f(1), f(2) - f(1))` reconstructs every
+/// batch bit-exactly — pinned per process over random networks in
+/// `rust/tests/affine_pricing_properties.rs`.
+///
+/// This is the pricing fast path: the explorer's batch axis and the
+/// fleet's depth-masked repricing evaluate one cached affine pair per
+/// (layer, tiling, process) instead of re-running the closed forms per
+/// batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AffineLatency {
+    /// `conv_latency(.., batch = 1)`.
+    pub base: LatencyBreakdown,
+    /// `conv_latency(.., 2) - conv_latency(.., 1)`, the per-image
+    /// steady-state increment (nonnegative: latency grows with batch).
+    pub per_batch: LatencyBreakdown,
+}
+
+impl AffineLatency {
+    /// Reconstruct the closed form at `batch` (>= 1; the closed forms
+    /// themselves are undefined at batch 0).
+    pub fn eval(&self, batch: usize) -> LatencyBreakdown {
+        debug_assert!(batch >= 1, "the closed forms price whole images");
+        let b = batch as u64 - 1;
+        LatencyBreakdown {
+            cycles: self.base.cycles + b * self.per_batch.cycles,
+            mac_cycles: self.base.mac_cycles + b * self.per_batch.mac_cycles,
+        }
+    }
+}
+
+/// Factor [`conv_latency`] into its exact batch-affine form (see
+/// [`AffineLatency`]): two closed-form evaluations buy every batch
+/// size on the grid.
+pub fn conv_latency_affine(
+    l: &ConvShape,
+    t: &Tiling,
+    dev: &Device,
+    process: Process,
+) -> AffineLatency {
+    let f1 = conv_latency(l, t, dev, process, 1);
+    let f2 = conv_latency(l, t, dev, process, 2);
+    AffineLatency {
+        base: f1,
+        per_batch: LatencyBreakdown {
+            cycles: f2.cycles - f1.cycles,
+            mac_cycles: f2.mac_cycles - f1.mac_cycles,
+        },
+    }
+}
+
 /// Memo key for [`conv_latency_cached`]: the closed form reads the
 /// device only through `t_start` and the DMA word width, so those two
-/// numbers (not the whole [`Device`]) identify the result.
+/// numbers (not the whole [`Device`]) identify the result. The key is
+/// deliberately batch-free — the memo stores the [`AffineLatency`]
+/// pair, so every batch size on a sweep's axis shares one entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct LatencyKey {
     layer: ConvShape,
     tiling: Tiling,
     process: Process,
-    batch: usize,
     t_start: u64,
     p_words: u64,
 }
 
 static LATENCY_MEMO: std::sync::OnceLock<
-    crate::util::memo::ShardedMemo<LatencyKey, LatencyBreakdown>,
+    crate::util::memo::ShardedMemo<LatencyKey, AffineLatency>,
 > = std::sync::OnceLock::new();
 
-fn latency_memo() -> &'static crate::util::memo::ShardedMemo<LatencyKey, LatencyBreakdown> {
+fn latency_memo() -> &'static crate::util::memo::ShardedMemo<LatencyKey, AffineLatency> {
     LATENCY_MEMO.get_or_init(crate::util::memo::ShardedMemo::new)
 }
 
@@ -303,7 +366,10 @@ fn latency_memo() -> &'static crate::util::memo::ShardedMemo<LatencyKey, Latency
 /// form thousands of times across its `Tr` search, and the explorer
 /// re-schedules the same (network, device, batch) under every layout
 /// scheme — the sharded memo makes the repeats free and is safe under
-/// rayon.
+/// rayon. The memo stores the batch-affine factoring
+/// ([`conv_latency_affine`]), so a candidate priced at one batch size
+/// prices at every other by evaluation: distinct batches on the grid
+/// cost one multiply-add, not a closed-form re-run.
 pub fn conv_latency_cached(
     l: &ConvShape,
     t: &Tiling,
@@ -315,11 +381,12 @@ pub fn conv_latency_cached(
         layer: *l,
         tiling: *t,
         process,
-        batch,
         t_start: dev.t_start,
         p_words: dev.p_words(),
     };
-    latency_memo().get_or_compute(&key, || conv_latency(l, t, dev, process, batch))
+    latency_memo()
+        .get_or_compute(&key, || conv_latency_affine(l, t, dev, process))
+        .eval(batch)
 }
 
 /// The three-process (FP + BP + WU) closed-form cycles of one
@@ -489,6 +556,29 @@ mod tests {
                             "batch-1 floor {floor} went blunt vs {actual} for {l:?} tr={tr}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn affine_factoring_bit_equals_the_closed_form() {
+        let dev = zcu102();
+        for l in [
+            ConvShape::new(96, 3, 55, 55, 11, 4),
+            ConvShape::new(384, 256, 13, 13, 3, 1),
+            ConvShape::new(64, 64, 8, 8, 3, 1),
+        ] {
+            let t = Tiling::new(16, 16, 2.min(l.r), l.c, l.m.min(112));
+            for p in Process::ALL {
+                let affine = conv_latency_affine(&l, &t, &dev, p);
+                for batch in [1usize, 2, 3, 4, 7, 16, 33, 128] {
+                    let direct = conv_latency(&l, &t, &dev, p, batch);
+                    assert_eq!(
+                        affine.eval(batch),
+                        direct,
+                        "{p:?} b={batch} must reconstruct exactly for {l:?}"
+                    );
                 }
             }
         }

@@ -210,95 +210,155 @@ pub fn schedule(net: &Network, dev: &Device, batch: usize) -> Schedule {
 }
 
 /// Algorithm 1 with an explicit [`SearchMode`], returning the work
-/// counters alongside the schedule.
+/// counters alongside the schedule. One-shot wrapper over
+/// [`SchedulePlan`]; callers scheduling the same (network, device)
+/// across a batch axis should build the plan once instead.
 pub fn schedule_searched(
     net: &Network,
     dev: &Device,
     batch: usize,
     mode: SearchMode,
 ) -> (Schedule, SearchStats) {
-    let layers = net.conv_layers();
-    assert!(!layers.is_empty());
-    let rm = ResourceModel::new(dev);
-    let t = pick_tile(dev);
-    let bram_budget = bram_boundary(dev);
+    SchedulePlan::new(net, dev).schedule_for(batch, mode)
+}
 
-    // Steps 3-4: lower bound for the feature buffers — one row of the
-    // largest map.
-    let k_idx = layers
-        .iter()
-        .enumerate()
-        .max_by_key(|(_, l)| l.r * l.c)
-        .map(|(i, _)| i)
-        .unwrap();
-    let lk = &layers[k_idx];
-    let inf_tiling = Tiling::new(t, t, 1, lk.c, t);
-    let inf_b_ifm = rm.b_ifm(lk, &inf_tiling);
-    let inf_b_ofm = rm.b_ofm(lk, &inf_tiling);
+/// The batch-independent prefix of Algorithm 1, hoisted so one
+/// (network, device) cell schedules its whole batch axis without
+/// redoing steps 2-12: the resolved conv stack, `Tm = Tn`, the BRAM
+/// budget, every layer's `M_on`, and the shared weight-bank
+/// reservation depend only on shapes and device resources — the batch
+/// enters Algorithm 1 only through the per-layer `Tr` pricing
+/// ([`TrSearch`]) and the final bank maxima, which
+/// [`SchedulePlan::schedule_for`] runs per batch.
+///
+/// [`schedule_searched`] delegates here, so a plan-built schedule is
+/// the *same code path* as a one-shot schedule — bit-identical by
+/// construction, and pinned across random networks in
+/// `rust/tests/affine_pricing_properties.rs`.
+#[derive(Debug, Clone)]
+pub struct SchedulePlan {
+    layers: Vec<ConvShape>,
+    dev: Device,
+    tm: usize,
+    bram_budget: usize,
+    m_ons: Vec<usize>,
+    b_wei: usize,
+}
 
-    // Steps 5-12: largest M^i_on per layer that leaves the feature
-    // buffers their lower bound.
-    let mut m_ons = Vec::with_capacity(layers.len());
-    for l in &layers {
-        let mut div = 1usize;
-        let m_on = loop {
-            let candidate = round_up_to(l.m.div_ceil(div), t).min(round_up_to(l.m, t));
-            let trial = Tiling::new(t, t, 1, l.c, candidate);
-            let b_wei = rm.b_wei(l, &trial);
-            if 2 * (inf_b_ifm + inf_b_ofm + b_wei) < bram_budget || candidate <= t {
-                break candidate;
-            }
-            div += 1;
-        };
-        m_ons.push(m_on);
+impl SchedulePlan {
+    /// Steps 2-12 of Algorithm 1 — everything the batch cannot touch.
+    pub fn new(net: &Network, dev: &Device) -> Self {
+        let layers = net.conv_layers();
+        assert!(!layers.is_empty());
+        let rm = ResourceModel::new(dev);
+        let t = pick_tile(dev);
+        let bram_budget = bram_boundary(dev);
+
+        // Steps 3-4: lower bound for the feature buffers — one row of
+        // the largest map.
+        let k_idx = layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.r * l.c)
+            .map(|(i, _)| i)
+            .unwrap();
+        let lk = &layers[k_idx];
+        let inf_tiling = Tiling::new(t, t, 1, lk.c, t);
+        let inf_b_ifm = rm.b_ifm(lk, &inf_tiling);
+        let inf_b_ofm = rm.b_ofm(lk, &inf_tiling);
+
+        // Steps 5-12: largest M^i_on per layer that leaves the feature
+        // buffers their lower bound.
+        let mut m_ons = Vec::with_capacity(layers.len());
+        for l in &layers {
+            let mut div = 1usize;
+            let m_on = loop {
+                let candidate = round_up_to(l.m.div_ceil(div), t).min(round_up_to(l.m, t));
+                let trial = Tiling::new(t, t, 1, l.c, candidate);
+                let b_wei = rm.b_wei(l, &trial);
+                if 2 * (inf_b_ifm + inf_b_ofm + b_wei) < bram_budget || candidate <= t {
+                    break candidate;
+                }
+                div += 1;
+            };
+            m_ons.push(m_on);
+        }
+        let b_wei = layers
+            .iter()
+            .zip(&m_ons)
+            .map(|(l, &m_on)| rm.b_wei(l, &Tiling::new(t, t, 1, l.c, m_on)))
+            .max()
+            .unwrap();
+
+        Self { layers, dev: dev.clone(), tm: t, bram_budget, m_ons, b_wei }
     }
-    let b_wei = layers
-        .iter()
-        .zip(&m_ons)
-        .map(|(l, &m_on)| rm.b_wei(l, &Tiling::new(t, t, 1, l.c, m_on)))
-        .max()
-        .unwrap();
 
-    // Steps 13-16: per layer, Tc = C and the latency-minimizing Tr that
-    // fits Eq. (29), (30), (32).
-    let mut stats = SearchStats::default();
-    let mut tilings = Vec::with_capacity(layers.len());
-    for (l, &m_on) in layers.iter().zip(&m_ons) {
-        let search = TrSearch { rm: &rm, l, dev, batch, tm: t, m_on, b_wei, bram_budget };
-        let candidates = match mode {
-            SearchMode::Pruned => search.pruned(&mut stats),
-            SearchMode::Exhaustive => search.exhaustive(&mut stats),
+    /// Steps 13-17 of Algorithm 1 for one batch size: per layer, Tc = C
+    /// and the latency-minimizing Tr that fits Eq. (29), (30), (32),
+    /// then the final bank counts.
+    pub fn schedule_for(&self, batch: usize, mode: SearchMode) -> (Schedule, SearchStats) {
+        let t = self.tm;
+        let rm = ResourceModel::new(&self.dev);
+        let mut stats = SearchStats::default();
+        let mut tilings = Vec::with_capacity(self.layers.len());
+        for (l, &m_on) in self.layers.iter().zip(&self.m_ons) {
+            let search = TrSearch {
+                rm: &rm,
+                l,
+                dev: &self.dev,
+                batch,
+                tm: t,
+                m_on,
+                b_wei: self.b_wei,
+                bram_budget: self.bram_budget,
+            };
+            let candidates = match mode {
+                SearchMode::Pruned => search.pruned(&mut stats),
+                SearchMode::Exhaustive => search.exhaustive(&mut stats),
+            };
+            let tiling =
+                select_tiling(&candidates).unwrap_or_else(|| Tiling::new(t, t, 1, l.c, m_on));
+            tilings.push(tiling);
+        }
+
+        // Step 17: final bank counts.
+        let b_ifm = self
+            .layers
+            .iter()
+            .zip(&tilings)
+            .map(|(l, tl)| rm.b_ifm(l, tl))
+            .max()
+            .unwrap();
+        let b_ofm = self
+            .layers
+            .iter()
+            .zip(&tilings)
+            .map(|(l, tl)| rm.b_ofm(l, tl))
+            .max()
+            .unwrap();
+
+        let schedule = Schedule {
+            tm: t,
+            tn: t,
+            tilings,
+            b_ifm,
+            b_ofm,
+            b_wei: self.b_wei,
+            d_conv: self.dev.q * t * t,
+            b_conv: 2 * (b_ifm + b_ofm + self.b_wei),
         };
-        let tiling =
-            select_tiling(&candidates).unwrap_or_else(|| Tiling::new(t, t, 1, l.c, m_on));
-        tilings.push(tiling);
+        (schedule, stats)
     }
 
-    // Step 17: final bank counts.
-    let b_ifm = layers
-        .iter()
-        .zip(&tilings)
-        .map(|(l, tl)| rm.b_ifm(l, tl))
-        .max()
-        .unwrap();
-    let b_ofm = layers
-        .iter()
-        .zip(&tilings)
-        .map(|(l, tl)| rm.b_ofm(l, tl))
-        .max()
-        .unwrap();
+    /// The resolved conv stack the plan schedules over.
+    pub fn conv_layers(&self) -> &[ConvShape] {
+        &self.layers
+    }
 
-    let schedule = Schedule {
-        tm: t,
-        tn: t,
-        tilings,
-        b_ifm,
-        b_ofm,
-        b_wei,
-        d_conv: dev.q * t * t,
-        b_conv: 2 * (b_ifm + b_ofm + b_wei),
-    };
-    (schedule, stats)
+    /// The device the plan was built for.
+    pub fn device(&self) -> &Device {
+        &self.dev
+    }
 }
 
 fn round_up_to(x: usize, t: usize) -> usize {

@@ -133,6 +133,12 @@ pub struct SearchStats {
     pub priced_levels: u64,
     /// Ladder levels the per-level floor excluded unpriced.
     pub pruned_levels: u64,
+    /// Walks served from a [`SearchArena`] whose scratch buffers were
+    /// already warm (no allocator traffic).
+    pub arena_reused_walks: u64,
+    /// Arena walks that had to grow their scratch from nothing (the
+    /// first walk per arena, or one that outgrew the retained buffers).
+    pub arena_fresh_walks: u64,
 }
 
 impl SearchStats {
@@ -151,6 +157,14 @@ impl SearchStats {
         self.pruned_levels += w.pruned;
     }
 
+    /// Fold one arena's reuse counters in (once, when the arena's
+    /// owning search finishes — never per walk, so the counters stay
+    /// zero on runs that searched nothing).
+    pub fn tally_arena(&mut self, reused: u64, fresh: u64) {
+        self.arena_reused_walks += reused;
+        self.arena_fresh_walks += fresh;
+    }
+
     /// Accumulate another run's counters (the explorer aggregates one
     /// `SearchStats` per searched grid cell).
     pub fn absorb(&mut self, o: &SearchStats) {
@@ -160,6 +174,8 @@ impl SearchStats {
         self.floored_candidates += o.floored_candidates;
         self.priced_levels += o.priced_levels;
         self.pruned_levels += o.pruned_levels;
+        self.arena_reused_walks += o.arena_reused_walks;
+        self.arena_fresh_walks += o.arena_fresh_walks;
     }
 }
 
@@ -192,7 +208,7 @@ impl<C: Candidate> BoundedSearch<C> {
     /// caller already computed (e.g. from a memoized floor table);
     /// these do not count toward [`WalkStats::floored`].
     pub fn from_floored(mut pairs: Vec<(u64, C)>, band: Band) -> Self {
-        pairs.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.tie_key().cmp(&a.1.tie_key())));
+        order_pairs(&mut pairs);
         Self { ordered: pairs, band, seed: None, floored: 0 }
     }
 
@@ -211,28 +227,113 @@ impl<C: Candidate> BoundedSearch<C> {
     /// in visit order — the caller reduces (argmin, tie-break band,
     /// lexicographic preference, ...) as its selection rule demands —
     /// plus the walk's counters.
-    pub fn run<P>(self, mut price: P) -> (Vec<(u64, C)>, WalkStats)
+    pub fn run<P>(self, price: P) -> (Vec<(u64, C)>, WalkStats)
     where
         P: FnMut(&C) -> Priced,
     {
-        let mut stats = WalkStats { floored: self.floored, priced: 0, pruned: 0 };
         let mut visited = Vec::with_capacity(self.ordered.len().min(8));
-        let mut incumbent = self.seed;
-        for (i, &(floor, c)) in self.ordered.iter().enumerate() {
-            if let Some(b) = incumbent {
-                if self.band.excludes(floor, b) {
-                    stats.pruned = (self.ordered.len() - i) as u64;
-                    break;
-                }
-            }
-            let p = price(&c);
-            stats.priced += 1;
-            if p.incumbent {
-                incumbent = Some(incumbent.map_or(p.cost, |b| b.min(p.cost)));
-            }
-            visited.push((p.cost, c));
-        }
+        let stats =
+            walk_core(&self.ordered, self.band, self.seed, self.floored, &mut visited, price);
         (visited, stats)
+    }
+}
+
+/// The one visit order: ascending floor, ties broken by descending
+/// [`Candidate::tie_key`], stably. Shared by [`BoundedSearch`] and
+/// [`SearchArena`] so the two entry points cannot drift.
+fn order_pairs<C: Candidate>(pairs: &mut [(u64, C)]) {
+    pairs.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.tie_key().cmp(&a.1.tie_key())));
+}
+
+/// The one pricing loop behind [`BoundedSearch::run`] and
+/// [`SearchArena::run_floored`]: identical incumbent/band/prune
+/// semantics regardless of who owns the scratch buffers, so the arena
+/// fast path is bit-identical to the allocating walk by construction.
+fn walk_core<C: Candidate, P: FnMut(&C) -> Priced>(
+    ordered: &[(u64, C)],
+    band: Band,
+    seed: Option<u64>,
+    floored: u64,
+    visited: &mut Vec<(u64, C)>,
+    mut price: P,
+) -> WalkStats {
+    let mut stats = WalkStats { floored, priced: 0, pruned: 0 };
+    let mut incumbent = seed;
+    for (i, &(floor, c)) in ordered.iter().enumerate() {
+        if let Some(b) = incumbent {
+            if band.excludes(floor, b) {
+                stats.pruned = (ordered.len() - i) as u64;
+                break;
+            }
+        }
+        let p = price(&c);
+        stats.priced += 1;
+        if p.incumbent {
+            incumbent = Some(incumbent.map_or(p.cost, |b| b.min(p.cost)));
+        }
+        visited.push((p.cost, c));
+    }
+    stats
+}
+
+/// Caller-owned scratch for a run of bounded walks. [`BoundedSearch`]
+/// allocates a candidate vector and a visited vector per walk; the
+/// tiling ladder performs thousands of inner `Tr` walks per searched
+/// cell, so those allocations dominate the miss path. An arena retains
+/// both buffers across walks (`clear()` keeps capacity), turning every
+/// walk after the first into zero allocator traffic while reusing the
+/// exact [`order_pairs`]/[`walk_core`] machinery — same ordering, same
+/// pruning, same results, byte for byte.
+///
+/// The arena also counts how often its buffers were warm
+/// ([`Self::counters`]); the owning search folds them into
+/// [`SearchStats::tally_arena`] once at the end so the bench can
+/// demonstrate the allocation win rather than assert it.
+#[derive(Debug, Default)]
+pub struct SearchArena<C: Candidate> {
+    pairs: Vec<(u64, C)>,
+    visited: Vec<(u64, C)>,
+    reused_walks: u64,
+    fresh_walks: u64,
+}
+
+impl<C: Candidate> SearchArena<C> {
+    pub fn new() -> Self {
+        Self { pairs: Vec::new(), visited: Vec::new(), reused_walks: 0, fresh_walks: 0 }
+    }
+
+    /// Run one walk over pre-floored `(floor, candidate)` pairs (the
+    /// arena analogue of [`BoundedSearch::from_floored`] +
+    /// [`BoundedSearch::run`], with `seed` playing
+    /// [`BoundedSearch::seed_incumbent`]'s role). The returned visited
+    /// slice borrows the arena and is valid until the next walk.
+    pub fn run_floored<P>(
+        &mut self,
+        pairs: impl IntoIterator<Item = (u64, C)>,
+        band: Band,
+        seed: Option<u64>,
+        price: P,
+    ) -> (&[(u64, C)], WalkStats)
+    where
+        P: FnMut(&C) -> Priced,
+    {
+        let fresh = self.pairs.capacity() == 0 && self.visited.capacity() == 0;
+        if fresh {
+            self.fresh_walks += 1;
+        } else {
+            self.reused_walks += 1;
+        }
+        self.pairs.clear();
+        self.pairs.extend(pairs);
+        order_pairs(&mut self.pairs);
+        self.visited.clear();
+        let stats = walk_core(&self.pairs, band, seed, 0, &mut self.visited, price);
+        (&self.visited, stats)
+    }
+
+    /// `(reused, fresh)` walk counts since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.reused_walks, self.fresh_walks)
     }
 }
 
@@ -318,6 +419,41 @@ mod tests {
         let (visited, w) = engine.run(|_| unreachable!("every floor exceeds the seed"));
         assert!(visited.is_empty());
         assert_eq!((w.priced, w.pruned), (0, 4));
+    }
+
+    #[test]
+    fn arena_walks_bit_match_bounded_search_and_count_reuse() {
+        // Same pairs, same band, same seed: the arena walk must return
+        // exactly what the allocating walk returns (they share one
+        // walk core, but pin it anyway).
+        let pairs: Vec<(u64, usize)> = vec![(5, 0), (7, 1), (5, 2), (9, 3), (6, 4)];
+        let costs = [5u64, 7, 6, 9, 12];
+        let price = |&i: &usize| Priced { cost: costs[i], incumbent: true };
+        let (want, want_w) =
+            BoundedSearch::from_floored(pairs.clone(), Band::Exact).run(price);
+
+        let mut arena = SearchArena::new();
+        let (got, got_w) = arena.run_floored(pairs.iter().copied(), Band::Exact, None, price);
+        assert_eq!(got, want.as_slice());
+        assert_eq!(got_w, want_w);
+        assert_eq!(arena.counters(), (0, 1), "first walk grows from nothing");
+
+        // A second walk reuses the warm buffers and still matches.
+        let (got2, got_w2) =
+            arena.run_floored(pairs.iter().copied(), Band::Exact, None, price);
+        assert_eq!(got2, want.as_slice());
+        assert_eq!(got_w2, want_w);
+        assert_eq!(arena.counters(), (1, 1));
+
+        // Seeding mirrors seed_incumbent.
+        let (want_s, want_sw) = BoundedSearch::from_floored(pairs.clone(), Band::Exact)
+            .seed_incumbent(4)
+            .run(price);
+        let (got_s, got_sw) =
+            arena.run_floored(pairs.iter().copied(), Band::Exact, Some(4), price);
+        assert_eq!(got_s, want_s.as_slice());
+        assert_eq!(got_sw, want_sw);
+        assert_eq!(arena.counters(), (2, 1));
     }
 
     #[test]

@@ -11,9 +11,9 @@
 //!   [`SweepCache`]: per-(net, device) Pareto frontiers sorted by
 //!   latency, so a budget query is a binary search plus a table read or
 //!   a short frontier scan, never a sweep over all priced points;
-//! * **miss path** — a query for an uncached cell prices it live
-//!   through [`crate::explore::price_point_on`] (all layout schemes,
-//!   plus the `(Tr, M_on)` search when enabled) behind a
+//! * **miss path** — a query for an uncached cell prices it live over
+//!   one shared [`crate::explore::CellDecomposition`] + schedule (all
+//!   layout schemes, plus the `(Tr, M_on)` search when enabled) behind a
 //!   [`CoalescingMemo`], so concurrent identical misses collapse to ONE
 //!   pricing; the result is written back into the cache (and its file,
 //!   when one backs the advisor) and the index is rebuilt before any
@@ -51,9 +51,10 @@ use rayon::prelude::*;
 
 use crate::device::{device_by_name, Device};
 use crate::explore::sweep_cache::SweepCache;
-use crate::explore::tiling_search::search_tilings;
-use crate::explore::{price_point_on, DesignPoint, PricedPoint, SweepConfig};
+use crate::explore::tiling_search::search_tilings_with;
+use crate::explore::{price_point_with, CellDecomposition, DesignPoint, PricedPoint, SweepConfig};
 use crate::layout::Scheme;
+use crate::model::SearchMode;
 use crate::nets::{network_by_name, Network};
 use crate::util::json::Json;
 use crate::util::memo::CoalescingMemo;
@@ -291,28 +292,34 @@ impl Advisor {
     fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> Ensure {
         let key = (net.to_string(), device.to_string(), batch);
         let (_, fresh) = self.inflight.get_or_compute(&key, || {
-            let network = network_by_name(net).expect("validated before the miss path");
-            let dev = device_by_name(device).expect("validated before the miss path");
+            // One decomposition + one Algorithm-1 schedule per cell,
+            // shared across the scheme fan-out and the tiling search —
+            // the miss path's redundant schedules were 3-4x this work.
+            let cd = CellDecomposition::resolve(net, device)
+                .expect("validated before the miss path");
+            let sched = cd.schedule_for(batch);
             let net_name: Arc<str> = Arc::from(net);
             let dev_name: Arc<str> = Arc::from(device);
             let points: Vec<PricedPoint> = Scheme::ALL
                 .as_slice()
                 .par_iter()
                 .map(|&scheme| {
-                    price_point_on(
-                        &network,
-                        &dev,
+                    price_point_with(
+                        cd.network(),
+                        cd.device(),
                         &DesignPoint {
                             net: net_name.clone(),
                             device: dev_name.clone(),
                             batch,
                             scheme,
                         },
+                        &sched,
                     )
                 })
                 .collect();
-            let search =
-                self.opts.search_tilings.then(|| search_tilings(&network, &dev, batch));
+            let search = self.opts.search_tilings.then(|| {
+                search_tilings_with(cd.network(), cd.device(), batch, &sched, SearchMode::Pruned).0
+            });
             self.stats.cells_priced.fetch_add(1, Ordering::Relaxed);
             self.stats.points_priced.fetch_add(points.len() as u64, Ordering::Relaxed);
             let mut cache = self.cache.lock().unwrap();

@@ -1,0 +1,217 @@
+//! Property tests pinning this PR's pricing fast paths bit-identical
+//! to the closed forms they replace, over random networks:
+//!
+//!   - the batch-affine factoring of `conv_latency` (`base +
+//!     (batch-1) * per_batch`, per field) equals the full closed form
+//!     for every process and batch;
+//!   - a [`SchedulePlan`]'s batch-free prefix re-derives exactly the
+//!     one-shot scheduler's output in both search modes;
+//!   - pricing through a shared [`CellDecomposition`] (full and
+//!     depth-masked, every scheme) equals the resolve-per-point path;
+//!   - the `(Tr, M_on)` search over a shared schedule equals the
+//!     self-scheduling search, counters included;
+//!   - `explore --fill` leaves a cache from which a warm sweep and a
+//!     warm advisor price zero new points, bit-identically.
+
+use std::sync::Arc;
+
+use ef_train::data::Rng;
+use ef_train::device::{pynq_z1, zcu102, Device};
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::explore::tiling_search::search_tilings_searched;
+use ef_train::explore::{
+    masked_point_cycles, masked_point_cycles_in, price_point_in, price_point_on, run_fill,
+    run_sweep_with, search_tilings_in, CellDecomposition, DesignPoint, SweepConfig, SweepOptions,
+};
+use ef_train::layout::{Process, Scheme};
+use ef_train::model::perf::{conv_latency, conv_latency_affine};
+use ef_train::model::scheduler::{schedule, schedule_searched, SchedulePlan, SearchMode};
+use ef_train::model::PhaseMask;
+use ef_train::nets::{random_network, Network};
+use ef_train::serve::{serve_oneshot, Advisor, ServeOptions};
+use ef_train::util::proptest::{default_cases, pick, run};
+
+fn random_cell(rng: &mut Rng) -> (Network, Device) {
+    let net = random_network(rng);
+    let dev = if rng.below(2) == 0 { zcu102() } else { pynq_z1() };
+    (net, dev)
+}
+
+#[test]
+fn affine_factoring_bit_equals_the_closed_form_on_random_networks() {
+    run(
+        "affine latency == closed form",
+        default_cases(),
+        random_cell,
+        |(net, dev)| {
+            let sched = schedule(net, dev, 4);
+            for (i, l) in net.conv_layers().iter().enumerate() {
+                let t = sched.tilings[i];
+                for process in Process::ALL {
+                    let affine = conv_latency_affine(l, &t, dev, process);
+                    for batch in [1usize, 2, 3, 5, 8, 16, 33, 128] {
+                        assert_eq!(
+                            affine.eval(batch),
+                            conv_latency(l, &t, dev, process, batch),
+                            "conv{} {process:?} batch {batch}",
+                            i + 1
+                        );
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn schedule_plan_bit_equals_the_one_shot_scheduler() {
+    run(
+        "plan.schedule_for == schedule_searched",
+        default_cases(),
+        random_cell,
+        |(net, dev)| {
+            let plan = SchedulePlan::new(net, dev);
+            for mode in [SearchMode::Pruned, SearchMode::Exhaustive] {
+                for batch in [1usize, 2, 4, 7, 16] {
+                    let (shared, shared_stats) = plan.schedule_for(batch, mode);
+                    let (plain, plain_stats) = schedule_searched(net, dev, batch, mode);
+                    assert_eq!(shared, plain, "{mode:?} batch {batch}");
+                    assert_eq!(shared_stats, plain_stats, "{mode:?} batch {batch}");
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn shared_decomposition_pricing_bit_equals_the_plain_path() {
+    run(
+        "price_point_in == price_point_on",
+        default_cases(),
+        |rng| {
+            let (net, dev) = random_cell(rng);
+            let batch = *pick(rng, &[1usize, 2, 4, 8, 16]);
+            (net, dev, batch)
+        },
+        |(net, dev, batch)| {
+            let cd = CellDecomposition::new(net.clone(), dev.clone());
+            let n_convs = net.conv_count();
+            for scheme in Scheme::ALL {
+                let p = DesignPoint {
+                    net: Arc::from(net.name),
+                    device: Arc::from(dev.name),
+                    batch: *batch,
+                    scheme,
+                };
+                let plain = price_point_on(net, dev, &p);
+                let shared = price_point_in(&cd, &p);
+                assert_eq!(plain.tm, shared.tm, "{scheme:?}");
+                assert_eq!(plain.cycles, shared.cycles, "{scheme:?}");
+                assert_eq!(plain.realloc_cycles, shared.realloc_cycles, "{scheme:?}");
+                assert_eq!(plain.used_dsps, shared.used_dsps, "{scheme:?}");
+                assert_eq!(plain.used_brams, shared.used_brams, "{scheme:?}");
+                assert_eq!(plain.latency_ms.to_bits(), shared.latency_ms.to_bits());
+                assert_eq!(plain.power_w.to_bits(), shared.power_w.to_bits());
+                assert_eq!(plain.energy_mj.to_bits(), shared.energy_mj.to_bits());
+                // Depth-masked fleet pricing, every retraining depth.
+                for k in 1..=n_convs {
+                    let mask = PhaseMask::last_k(n_convs, k);
+                    assert_eq!(
+                        masked_point_cycles(net, dev, &p, &mask),
+                        masked_point_cycles_in(&cd, &p, &mask),
+                        "{scheme:?} depth {k}"
+                    );
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn shared_schedule_tiling_search_bit_equals_the_self_scheduling_search() {
+    run(
+        "search_tilings_in == search_tilings_searched",
+        default_cases().min(24),
+        |rng| {
+            let (net, dev) = random_cell(rng);
+            let batch = *pick(rng, &[1usize, 4, 16]);
+            (net, dev, batch)
+        },
+        |(net, dev, batch)| {
+            let cd = CellDecomposition::new(net.clone(), dev.clone());
+            let (shared, shared_stats) = search_tilings_in(&cd, *batch);
+            let (plain, plain_stats) =
+                search_tilings_searched(net, dev, *batch, SearchMode::Pruned);
+            assert_eq!(shared, plain, "batch {batch}");
+            assert_eq!(shared_stats, plain_stats, "counters must match, batch {batch}");
+        },
+    );
+}
+
+#[test]
+fn fill_saturates_the_cache_for_warm_explore_and_serve() {
+    // Batch-range syntax rides along: `1-2,4` expands to [1, 2, 4].
+    let cfg =
+        SweepConfig::from_args("cnn1x,lenet10", "zcu102", "1-2,4", "bchw,bhwc,reshaped").unwrap();
+    let opts = SweepOptions { parallel: false, search_tilings: true };
+    let path = std::env::temp_dir()
+        .join(format!("ef_train_fill_cache_{}.json", std::process::id()));
+
+    let mut cache = SweepCache::empty();
+    let cold = run_fill(&cfg, &opts, &mut cache, &path, 2).unwrap();
+    assert_eq!(cold.cells_total, 6, "2 nets x 1 device x 3 batches");
+    assert_eq!(cold.cells_filled, 6);
+    assert_eq!(cold.cells_skipped, 0);
+    assert_eq!(cold.points_priced, 18, "every scheme row priced");
+    assert_eq!(cold.cells_searched, 6);
+    assert_eq!(cold.saves, 3, "6 cells / save-every 2");
+    assert!(cold.search_stats.priced_candidates > 0);
+    assert!(cold.search_stats.arena_fresh_walks > 0);
+
+    // A second fill over the saved cache finds every cell complete.
+    let mut warm_cache = SweepCache::load(&path).unwrap();
+    assert_eq!(warm_cache.len(), 18);
+    assert_eq!(warm_cache.cell_count(), 6);
+    let warm = run_fill(&cfg, &opts, &mut warm_cache, &path, 2).unwrap();
+    assert_eq!(warm.cells_filled, 0, "warm fill must price nothing");
+    assert_eq!(warm.cells_skipped, 6);
+    assert_eq!(warm.points_priced, 0);
+    assert_eq!(warm.saves, 0);
+
+    // A warm sweep over the filled cache prices zero new points and is
+    // bit-identical to a cache-free sweep of the same grid.
+    let fresh = run_sweep_with(&cfg, &opts, None).unwrap();
+    let swept = run_sweep_with(&cfg, &opts, Some(&mut warm_cache)).unwrap();
+    assert_eq!(swept.cache_hits, swept.points.len(), "all 18 rows hit");
+    assert_eq!(swept.cache_misses, 0);
+    assert_eq!(swept.cells_searched, 0);
+    for (a, b) in fresh.points.iter().zip(&swept.points) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.tm, b.tm);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.realloc_cycles, b.realloc_cycles);
+        assert_eq!(a.latency_ms.to_bits(), b.latency_ms.to_bits());
+        assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+        assert_eq!(a.search, b.search, "cell payload must round-trip");
+    }
+    assert_eq!(fresh.frontiers, swept.frontiers);
+
+    // A warm advisor over the filled cache answers without pricing.
+    let advisor = Advisor::new(
+        SweepCache::load(&path).unwrap(),
+        None,
+        None,
+        ServeOptions::default(),
+    );
+    std::fs::remove_file(&path).ok();
+    let input = "{\"net\": \"cnn1x\", \"device\": \"zcu102\", \"batch\": 4}\n\
+                 {\"net\": \"lenet10\", \"device\": \"zcu102\", \"batch\": 2}\n";
+    let replies = serve_oneshot(&advisor, input);
+    assert_eq!(replies.len(), 2);
+    assert!(
+        replies.iter().all(|r| !r.contains("\"error\"")),
+        "warm queries must resolve: {replies:?}"
+    );
+    assert_eq!(advisor.stats().hits(), 2, "every query answers off the frontier");
+    assert_eq!(advisor.stats().misses(), 0, "a filled cache leaves nothing to price");
+}

@@ -40,6 +40,7 @@ KINDS = {
         "context": [
             "rayon_cold_s",
             "rayon_warm_s",
+            "cells_priced_per_s",
             "pruning_factor",
             "tiling_exhaustive_priced",
             "tiling_pruned_levels",
@@ -51,6 +52,7 @@ KINDS = {
         "gated": ["fleet_makespan_cycles"],
         "context": [
             "sessions_per_modeled_s",
+            "sessions_simulated_per_s",
             "device_utilization",
             "total_energy_mj",
             "total_busy_cycles",
