@@ -84,6 +84,11 @@ fn main() {
     let n_points = cfg.points().len();
     let n_cells = cfg.nets.len() * cfg.devices.len() * cfg.batches.len();
 
+    // Profile the whole bench: the phase breakdown lands in
+    // BENCH_explore.json as context (self-time fractions sum to 1).
+    ef_train::obs::profile::reset();
+    ef_train::obs::profile::set_enabled(true);
+
     // Serial sweep, cold caches.
     reset_all_caches();
     let t0 = Instant::now();
@@ -222,6 +227,23 @@ fn main() {
     );
     out.insert("tiling_exhaustive_s".to_string(), Json::Num(ladder_ex_s));
     out.insert("tiling_pruned_s".to_string(), Json::Num(ladder_pr_s));
+    ef_train::obs::profile::set_enabled(false);
+    let phases = ef_train::obs::profile::report();
+    let frac_sum: f64 = phases.iter().map(|(_, _, f)| f).sum();
+    assert!(
+        (frac_sum - 1.0).abs() < 0.01,
+        "pricing-profile fractions must sum to 1, got {frac_sum}"
+    );
+    println!("pricing profile (self time):");
+    let mut profile = BTreeMap::new();
+    for (name, secs, fraction) in phases {
+        println!("  {name:<16} {secs:>9.3}s  fraction {fraction:.4}");
+        let mut row = BTreeMap::new();
+        row.insert("secs".to_string(), Json::Num(secs));
+        row.insert("fraction".to_string(), Json::Num(fraction));
+        profile.insert(name.to_string(), Json::Obj(row));
+    }
+    out.insert("pricing_profile".to_string(), Json::Obj(profile));
     std::fs::write("BENCH_explore.json", Json::Obj(out).to_string())
         .expect("write BENCH_explore.json");
     println!("wrote BENCH_explore.json");

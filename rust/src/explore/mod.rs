@@ -189,6 +189,7 @@ impl CellDecomposition {
     /// Algorithm 1 for one batch off the shared plan — bit-identical to
     /// [`schedule`]`(net, dev, batch)`, minus the batch-free prefix.
     pub fn schedule_for(&self, batch: usize) -> Schedule {
+        let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::Schedule);
         self.plan.schedule_for(batch, SearchMode::Pruned).0
     }
 }
@@ -231,6 +232,7 @@ pub fn price_point_with(
     p: &DesignPoint,
     sched: &Schedule,
 ) -> PricedPoint {
+    let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::SchemeRows);
     let full = crate::model::PhaseMask::full(net.conv_count());
     let (cycles, realloc) = simulate_point_cycles(net, dev, p, &full, sched);
 
@@ -294,8 +296,11 @@ fn simulate_point_cycles(
             realloc += r.realloc_cycles;
         }
     }
-    for kind in &net.layers {
-        cycles += aux_latency(kind, dev, p.batch);
+    {
+        let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::AuxLayers);
+        for kind in &net.layers {
+            cycles += aux_latency(kind, dev, p.batch);
+        }
     }
     (cycles, realloc)
 }
@@ -646,6 +651,7 @@ pub fn run_sweep_with(
         }
     }
 
+    search_stats.publish();
     let frontiers = compute_frontiers(&priced);
     Ok(SweepReport {
         points: priced,
@@ -797,6 +803,7 @@ pub fn run_fill(
         cache.save(cache_path)?;
         saves += 1;
     }
+    search_stats.publish();
 
     Ok(FillReport {
         cells_total,

@@ -439,6 +439,7 @@ pub fn search_tilings_with(
     heur: &Schedule,
     mode: SearchMode,
 ) -> (SearchedTilings, SearchStats) {
+    let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::TilingSearch);
     let layers = net.conv_layers();
     let rm = ResourceModel::new(dev);
     let tm = pick_tile(dev);

@@ -69,8 +69,10 @@ use crate::device::Device;
 use crate::explore::{masked_point_cycles_in, scheme_by_name, CellDecomposition, DesignPoint};
 use crate::model::PhaseMask;
 use crate::nets::Network;
+use crate::obs::trace::TraceSink;
 use crate::serve::protocol::Query;
 use crate::serve::{canonical_coords, Advisor};
+use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 
 use super::faults::{self, FaultModel, SessionWork, PPM};
@@ -92,6 +94,10 @@ const EV_THROTTLE_END: u8 = 2;
 const EV_CRASH: u8 = 3;
 const EV_THROTTLE_START: u8 = 4;
 const EV_ARRIVE: u8 = 5;
+
+/// Chrome-trace `pid` of the fleet's device-slot track group (`tid` is
+/// the slot index). The serve path uses pid 2 for query tracks.
+const FLEET_TRACE_PID: u64 = 1;
 
 /// Hard ceiling on crash interruptions of one session — a fault
 /// config whose MTBF is far below any session's service time could
@@ -365,6 +371,23 @@ pub fn run(
     sessions: &[Session],
     advisor: &Advisor,
 ) -> crate::Result<FleetReport> {
+    run_traced(cfg, sessions, advisor, None)
+}
+
+/// [`run`] with an optional trace sink: per-slot tracks carrying
+/// session-segment spans (completed / interrupted / re-priced) and
+/// crash / repair / throttle / checkpoint-restore instants, all
+/// timestamped in *modeled cycles*. The engine is strictly serial and
+/// the sink records events in push order, so a fleet trace is a pure
+/// function of the seed and knobs — byte-identical across runs and
+/// `--jobs` — and with `sink: None` nothing here executes at all, so
+/// untraced reports stay byte-identical to the pre-trace engine.
+pub fn run_traced(
+    cfg: &FleetConfig,
+    sessions: &[Session],
+    advisor: &Advisor,
+    sink: Option<&TraceSink>,
+) -> crate::Result<FleetReport> {
     let n_classes = cfg.priority_mix.len();
     if n_classes == 0 {
         return Err(anyhow!("fleet config declares no priority classes"));
@@ -397,6 +420,11 @@ pub fn run(
             throttles: 0,
         })
         .collect();
+    if let Some(t) = sink {
+        for (i, s) in slots.iter().enumerate() {
+            t.thread_name(FLEET_TRACE_PID, i as u64, &format!("{} slot {}", s.kind, i));
+        }
+    }
     let retry = RetryPolicy::from_config(cfg);
     let shed = ShedPolicy::from_config(cfg);
     let fault_model: Option<FaultModel> = cfg.faults;
@@ -495,6 +523,20 @@ pub fn run(
                     service_cycles: p.service_cycles,
                     energy_mj: p.power_w * secs * 1e3,
                 });
+                if let Some(t) = sink {
+                    t.span(
+                        FLEET_TRACE_PID,
+                        slot_idx as u64,
+                        &format!("session {}", s.id),
+                        slot.segment_start,
+                        elapsed,
+                        &[
+                            ("batch", Json::Num(s.batch as f64)),
+                            ("net", Json::Str(s.net.clone())),
+                            ("segment", Json::Str("completed".to_string())),
+                        ],
+                    );
+                }
                 outstanding -= 1;
                 if slot.up {
                     if let Some(next) = slot.pop_next() {
@@ -518,6 +560,9 @@ pub fn run(
                 slot.crashes += 1;
                 slot.down_cycles += repair;
                 totals.crashes += 1;
+                if let Some(t) = sink {
+                    t.instant(FLEET_TRACE_PID, slot_idx as u64, "crash", now, &[]);
+                }
                 if let Some((idx, made)) = close_segment(slot, now, &mut pending) {
                     let p = pending[idx].as_mut().expect("interrupted sessions are resolved");
                     totals.nominal_done_cycles += made;
@@ -531,6 +576,28 @@ pub fn run(
                     p.done = durable;
                     p.crashes += 1;
                     totals.recoveries += 1;
+                    if let Some(t) = sink {
+                        let s = &sessions[idx];
+                        t.span(
+                            FLEET_TRACE_PID,
+                            slot_idx as u64,
+                            &format!("session {}", s.id),
+                            slot.segment_start,
+                            now - slot.segment_start,
+                            &[
+                                ("batch", Json::Num(s.batch as f64)),
+                                ("net", Json::Str(s.net.clone())),
+                                ("segment", Json::Str("interrupted".to_string())),
+                            ],
+                        );
+                        t.instant(
+                            FLEET_TRACE_PID,
+                            slot_idx as u64,
+                            "checkpoint-restore",
+                            now,
+                            &[("durable_step", Json::Num(p.work.steps_at(durable) as f64))],
+                        );
+                    }
                     if p.crashes >= MAX_CRASHES_PER_SESSION {
                         return Err(anyhow!(
                             "session {} crashed {} times without completing — the \
@@ -555,6 +622,9 @@ pub fn run(
                 )));
             }
             EV_REPAIR => {
+                if let Some(t) = sink {
+                    t.instant(FLEET_TRACE_PID, slot_idx as u64, "repair", now, &[]);
+                }
                 let slot = &mut slots[slot_idx];
                 slot.up = true;
                 debug_assert!(slot.running.is_none(), "down slots run nothing");
@@ -593,6 +663,10 @@ pub fn run(
                         0,
                     )));
                 }
+                if let Some(t) = sink {
+                    let name = if starting { "throttle-start" } else { "throttle-end" };
+                    t.instant(FLEET_TRACE_PID, slot_idx as u64, name, now, &[]);
+                }
                 let new_rate = if starting { tm.derate_ppm() } else { PPM };
                 let slot = &mut slots[slot_idx];
                 // Re-price the in-flight segment at the new clock:
@@ -600,6 +674,21 @@ pub fn run(
                 // and immediately reopen at the new rate.
                 if let Some((idx, made)) = close_segment(slot, now, &mut pending) {
                     totals.nominal_done_cycles += made;
+                    if let Some(t) = sink {
+                        let s = &sessions[idx];
+                        t.span(
+                            FLEET_TRACE_PID,
+                            slot_idx as u64,
+                            &format!("session {}", s.id),
+                            slot.segment_start,
+                            now - slot.segment_start,
+                            &[
+                                ("batch", Json::Num(s.batch as f64)),
+                                ("net", Json::Str(s.net.clone())),
+                                ("segment", Json::Str("repriced".to_string())),
+                            ],
+                        );
+                    }
                     slot.rate_ppm = new_rate;
                     start_segment(
                         slot, slot_idx, idx, now, &mut pending, &mut starts, &mut heap,
@@ -691,6 +780,20 @@ pub fn run(
         .collect();
     let class_names: Vec<String> =
         cfg.priority_mix.iter().map(|(name, _)| name.clone()).collect();
+    if fault_model.is_some() {
+        let r = crate::obs::metrics::global();
+        for (name, v) in [
+            ("fleet_crashes_total", totals.crashes),
+            ("fleet_throttles_total", totals.throttles),
+            ("fleet_recoveries_total", totals.recoveries),
+            ("fleet_steps_lost_total", totals.steps_lost),
+            ("fleet_steps_resumed_total", totals.steps_resumed),
+        ] {
+            if v > 0 {
+                r.counter(name).add(v);
+            }
+        }
+    }
     Ok(FleetReport::build(
         records,
         devices,

@@ -455,8 +455,19 @@ impl FleetConfig {
 /// Generate the trace and run it through the engine — the whole
 /// `ef-train fleet` pipeline behind one call.
 pub fn run_fleet(cfg: &FleetConfig, advisor: &Advisor) -> crate::Result<report::FleetReport> {
+    run_fleet_traced(cfg, advisor, None)
+}
+
+/// [`run_fleet`] with an optional [`crate::obs::trace::TraceSink`]
+/// collecting per-device-slot timelines in modeled cycles (`ef-train
+/// fleet --trace-out`). `None` is byte-identical to [`run_fleet`].
+pub fn run_fleet_traced(
+    cfg: &FleetConfig,
+    advisor: &Advisor,
+    sink: Option<&crate::obs::trace::TraceSink>,
+) -> crate::Result<report::FleetReport> {
     let sessions = trace::generate(cfg)?;
-    engine::run(cfg, &sessions, advisor)
+    engine::run_traced(cfg, &sessions, advisor, sink)
 }
 
 #[cfg(test)]

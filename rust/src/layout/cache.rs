@@ -81,6 +81,9 @@ impl Visitor for BothVisitor {
 }
 
 fn compute_stats(spec: &StreamSpec) -> StreamStats {
+    // Profiler: stream summaries are the memo's miss-compute — warm
+    // sweeps attribute ~nothing here, cold ones the full drive cost.
+    let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::StreamSummaries);
     let mut v = BothVisitor { summary: SummaryVisitor::default(), cost: CostVisitor::default() };
     drive(spec, &mut v);
     StreamStats {

@@ -78,6 +78,7 @@ pub mod layout;
 pub mod metrics;
 pub mod model;
 pub mod nets;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod search;

@@ -30,11 +30,12 @@ USAGE:
   ef-train explore [--nets A,B] [--devices D,E] [--batches N,M|LO-HI]
                    [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
                    [--jobs N] [--cache-file FILE] [--search-tilings]
-                   [--fill] [--save-every N]
+                   [--fill] [--save-every N] [--profile]
   ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
                  [--cache-file FILE] [--stats-json FILE] [--jobs N]
                  [--search-tilings] [--max-inflight-misses N]
                  [--save-every N] [--read-timeout-ms MS]
+                 [--metrics-out FILE] [--trace-out FILE]
   ef-train fleet [--sessions N] [--seed S] [--jobs J] [--cache-file PATH]
                  [--arrival-rate R] [--depth-mix CSV] [--device-mix CSV]
                  [--net-mix CSV] [--batch-mix CSV] [--max-steps N]
@@ -46,12 +47,15 @@ USAGE:
                  [--throttle-derate F] [--checkpoint-steps N]
                  [--slo CLASS:CYCLES,...]
                  [--max-inflight-misses N] [--save-every N]
-                 [--search-tilings] [--out FILE]
+                 [--search-tilings] [--out FILE] [--trace-out FILE]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
 GLOBAL:
   --artifacts DIR   artifacts directory (default: artifacts)
+  --log-level L     stderr diagnostics threshold: error|warn|info|debug
+                    (default: warn); lines print as
+                    level=… target=… msg=\"…\"
 
 Networks: cnn1x, lenet10, alexnet, vgg16, vgg16_bn (train/adapt need
 AOT artifacts, available for cnn1x and lenet10 by default).
@@ -68,7 +72,10 @@ enumerates every incomplete (net x device x batch) cell of the grid,
 prices all requested schemes per cell (plus the tiling search with
 --search-tilings) with rayon work-stealing over whole cells, and
 streams results into --cache-file (required), saving every
---save-every cells (default 16) plus once at the end.
+--save-every cells (default 16) plus once at the end. `--fill
+--profile` attributes pricing wall-clock to its phases (schedule,
+scheme rows, stream summaries, aux layers, tiling search) and prints
+the self-time table after the run.
 
 `serve` answers {net, device, batch?, max_latency_ms?, max_bram?,
 max_energy_mj?, objective?} JSON-lines queries with the optimal cached
@@ -85,7 +92,11 @@ reports hits/misses/coalesced/rejected and p50/p95 times.
 `--read-timeout-ms MS` bounds how long a TCP connection may sit idle
 between request lines: a stalled client gets a structured error reply,
 its connection closes, and the stall counts as a timeout in the stats
-(instead of pinning a pool worker forever).
+(instead of pinning a pool worker forever). `--metrics-out FILE`
+writes a Prometheus-style metrics snapshot on exit (live snapshots via
+the `{\"metrics\": true}` request); `--trace-out FILE` records
+per-query wall-clock spans (lookup / pricing / search / write-back) as
+Chrome-trace JSON and threads a trace_id into each reply.
 
 `fleet` simulates an online-adaptation fleet end to end through the
 advisor: a seedable deterministic trace of adaptation sessions
@@ -114,7 +125,10 @@ of step zero. --slo CLASS:CYCLES grades each class's sojourn against
 a target (met/violated per class plus a fleet violation rate). Prints
 fleet metrics (per-class sojourn p50/p95/p99) and writes the JSON
 report to --out; a fixed --seed is bit-identical across runs and
---jobs values.";
+--jobs values. --trace-out FILE writes a Chrome-trace timeline (one
+track per device slot: session segments plus crash / repair /
+throttle / checkpoint-restore marks) stamped in modeled cycles, so
+the trace itself is byte-identical across runs and --jobs.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
@@ -125,6 +139,7 @@ const VALUE_FLAGS: &[&str] = &[
     "retry-base-ms", "shed-below", "shed-depth", "burst-rate", "burst-dwell",
     "crash-mtbf", "crash-mttr", "throttle-mtbf", "throttle-dwell",
     "throttle-derate", "checkpoint-steps", "slo", "read-timeout-ms",
+    "metrics-out", "trace-out", "log-level",
 ];
 
 fn main() {
@@ -136,6 +151,12 @@ fn main() {
 }
 
 fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
+    if let Some(name) = args.flag("log-level") {
+        let level = ef_train::obs::Level::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --log-level `{name}` (want error|warn|info|debug)")
+        })?;
+        ef_train::obs::set_log_level(level);
+    }
     let artifacts = args.flag_or("artifacts", "artifacts");
     match args.subcommand.as_deref() {
         Some("table") => {
@@ -241,6 +262,11 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                     return Err(anyhow::anyhow!("explore --fill needs --cache-file FILE"));
                 };
                 let save_every = args.parse_flag("save-every", 16usize).max(1);
+                let profile = args.has("profile");
+                if profile {
+                    ef_train::obs::profile::reset();
+                    ef_train::obs::profile::set_enabled(true);
+                }
                 let fill = || explore::run_fill(&cfg, &opts, cache, path, save_every);
                 let report = if jobs > 0 {
                     let pool = rayon::ThreadPoolBuilder::new()
@@ -271,6 +297,13 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                     pc.cell_count(),
                     cache_path.as_ref().unwrap().display()
                 );
+                if profile {
+                    ef_train::obs::profile::set_enabled(false);
+                    println!("pricing profile (self time):");
+                    for (name, secs, fraction) in ef_train::obs::profile::report() {
+                        println!("  {name:<16} {secs:>9.3}s  fraction {fraction:.4}");
+                    }
+                }
                 return Ok(());
             }
             let report = if jobs > 0 {
@@ -354,8 +387,16 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             if let Some(n) = args.try_parse_flag::<usize>("save-every")? {
                 opts.save_every = n.max(1);
             }
-            let advisor =
-                std::sync::Arc::new(serve::Advisor::new(cache, cache_path, stats_path, opts));
+            let metrics_out = args.flag("metrics-out").map(std::path::PathBuf::from);
+            let trace_out = args.flag("trace-out").map(std::path::PathBuf::from);
+            let sink = trace_out
+                .as_ref()
+                .map(|_| std::sync::Arc::new(ef_train::obs::trace::TraceSink::new()));
+            let mut advisor = serve::Advisor::new(cache, cache_path, stats_path, opts);
+            if let Some(s) = &sink {
+                advisor.set_trace(s.clone());
+            }
+            let advisor = std::sync::Arc::new(advisor);
             let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
             let pool = if jobs > 0 {
                 Some(
@@ -401,6 +442,14 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 serve::serve_listener(&advisor, listener, None, pool.as_ref(), read_timeout)?;
             } else {
                 return Err(anyhow::anyhow!("serve needs --oneshot or --listen ADDR"));
+            }
+            if let Some(p) = &metrics_out {
+                std::fs::write(p, ef_train::obs::metrics::global().snapshot())?;
+                eprintln!("wrote metrics snapshot to {}", p.display());
+            }
+            if let (Some(p), Some(s)) = (&trace_out, &sink) {
+                s.write(p)?;
+                eprintln!("wrote trace ({} events) to {}", s.len(), p.display());
             }
         }
         Some("fleet") => {
@@ -457,7 +506,9 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             }
             let advisor = serve::Advisor::new(cache, cache_path, None, opts);
             let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
-            let run = || fleet::run_fleet(&cfg, &advisor);
+            let trace_out = args.flag("trace-out").map(std::path::PathBuf::from);
+            let sink = trace_out.as_ref().map(|_| ef_train::obs::trace::TraceSink::new());
+            let run = || fleet::run_fleet_traced(&cfg, &advisor, sink.as_ref());
             let report = if jobs > 0 {
                 let pool = rayon::ThreadPoolBuilder::new()
                     .num_threads(jobs)
@@ -472,6 +523,10 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             let out = args.flag_or("out", "fleet_report.json");
             std::fs::write(&out, report.to_json().to_string())?;
             println!("wrote {out}");
+            if let (Some(p), Some(s)) = (&trace_out, &sink) {
+                s.write(p)?;
+                println!("wrote trace ({} events) to {}", s.len(), p.display());
+            }
         }
         Some("train") => {
             let net = args.flag_or("net", "cnn1x");

@@ -1,0 +1,324 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! log-bucketed histograms.
+//!
+//! Recording is lock-free — every metric is a handful of atomics and
+//! callers hold an `Arc` to the instrument itself, so the registry
+//! mutex is touched only on register/lookup and on snapshot. The
+//! histogram is HDR-style: values below [`LINEAR_MAX`] get exact
+//! one-per-value buckets; above that each power-of-two octave is split
+//! into 2^[`SUB_BITS`] sub-buckets, so the recorded-value error of any
+//! read-back quantile is bounded by `value >> SUB_BITS` (< 3.2%) and
+//! the true maximum is tracked exactly in a separate atomic.
+//!
+//! Registration uses *replace* semantics: registering a name that
+//! already exists swaps in the new instrument (latest wins). That keeps
+//! concurrently constructed advisors (e.g. parallel tests) from
+//! polluting each other — each holds its own `Arc`s and the global
+//! snapshot reflects the most recent registrant. Use
+//! [`Registry::counter`] (get-or-create) for process-cumulative
+//! counters shared across owners, e.g. search-arena and fleet fault
+//! totals.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of sub-bucket bits per octave: 32 sub-buckets, so relative
+/// bucket width (and the worst-case quantile error) is 1/32.
+pub const SUB_BITS: u32 = 5;
+/// Values below this are bucketed exactly (one bucket per value).
+pub const LINEAR_MAX: u64 = 1 << SUB_BITS;
+/// Total bucket count covering the full u64 range: 32 linear buckets
+/// plus 32 sub-buckets for each of the 59 octaves above them.
+pub const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS as usize) + (1 << SUB_BITS);
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins signed gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed u64 histogram with exact count/sum/max and nearest-rank
+/// quantile reads (same rank convention as `util::stats::percentile`).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        let counts: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            counts: counts.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a value. Exact below [`LINEAR_MAX`]; above that the
+/// value's octave (MSB position) selects a 32-bucket group and the next
+/// [`SUB_BITS`] bits below the MSB select the sub-bucket. Monotone in
+/// `v`, and continuous at the linear/log boundary (`bucket_of(32) ==
+/// 32`).
+pub fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    let octave = (msb - SUB_BITS + 1) as usize;
+    (octave << SUB_BITS) + ((v >> shift) as usize & (LINEAR_MAX as usize - 1))
+}
+
+/// Smallest value mapping to bucket `idx` — what quantile reads return,
+/// so reads under-estimate by less than one bucket width.
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let octave = idx >> SUB_BITS;
+    let sub = (idx & (LINEAR_MAX as usize - 1)) as u64;
+    (LINEAR_MAX + sub) << (octave - 1)
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank quantile: the floor of the bucket holding the
+    /// `round((n - 1) * q)`-th smallest sample — the same rank
+    /// `util::stats::percentile` selects on a sorted slice, so the two
+    /// differ by less than one bucket width. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum > rank {
+                return bucket_floor(idx);
+            }
+        }
+        // Unreachable with a consistent count, but racing recorders can
+        // briefly leave count ahead of the bucket sums.
+        self.max()
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Named-instrument registry. See the module docs for the locking and
+/// replace-vs-accumulate contract.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register a fresh counter under `name`, replacing any previous
+    /// registrant (latest wins).
+    pub fn register_counter(&self, name: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        self.lock().insert(name.to_string(), Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Get-or-create a process-cumulative counter: repeated calls with
+    /// the same name return the same instrument.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.lock();
+        if let Some(Metric::Counter(c)) = m.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::default());
+        m.insert(name.to_string(), Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Register a fresh gauge under `name`, replacing any previous
+    /// registrant.
+    pub fn register_gauge(&self, name: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        self.lock().insert(name.to_string(), Metric::Gauge(g.clone()));
+        g
+    }
+
+    /// Register a fresh histogram under `name`, replacing any previous
+    /// registrant.
+    pub fn register_histogram(&self, name: &str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::default());
+        self.lock()
+            .insert(name.to_string(), Metric::Histogram(h.clone()));
+        h
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.metrics.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Prometheus-style text snapshot: `# TYPE` comment per metric,
+    /// names in sorted order, histograms exposed as summaries with
+    /// `quantile` labels plus `_sum`/`_count`/`_max` lines.
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (name, metric) in self.lock().iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {name} summary");
+                    for q in [0.5, 0.95, 0.99] {
+                        let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {}", h.quantile(q));
+                    }
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                    let _ = writeln!(out, "{name}_max {}", h.max());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide registry every subsystem reports through.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_buckets_are_exact() {
+        for v in 0..LINEAR_MAX {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_floor(bucket_of(v)), v);
+        }
+    }
+
+    #[test]
+    fn bucketing_is_monotone_and_floor_consistent() {
+        let probes: Vec<u64> = (0..64)
+            .flat_map(|s| {
+                let base = 1u64 << s;
+                [base.saturating_sub(1), base, base + 1, base + base / 3]
+            })
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        let mut last = 0usize;
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        for v in sorted {
+            let idx = bucket_of(v);
+            assert!(idx >= last, "bucket_of not monotone at {v}");
+            last = idx;
+            let floor = bucket_floor(idx);
+            assert!(floor <= v, "floor {floor} above value {v}");
+            assert!(v - floor <= v >> SUB_BITS, "error too wide at {v}");
+            assert_eq!(bucket_of(floor), idx, "floor of {v} maps elsewhere");
+        }
+        assert!(bucket_of(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_max() {
+        let h = Histogram::default();
+        for v in [3, 17, 1000, 9] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1029);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.quantile(0.0), 3);
+        assert_eq!(h.quantile(1.0), bucket_floor(bucket_of(1000)));
+    }
+
+    #[test]
+    fn registry_replace_and_accumulate_semantics() {
+        let r = Registry::new();
+        let a = r.register_counter("x");
+        a.inc();
+        let b = r.register_counter("x");
+        assert_eq!(b.get(), 0, "register replaces");
+        assert_eq!(a.get(), 1, "old handle still readable");
+        let c = r.counter("y");
+        c.add(2);
+        let d = r.counter("y");
+        assert_eq!(d.get(), 2, "counter() accumulates");
+        let snap = r.snapshot();
+        assert!(snap.contains("# TYPE x counter"));
+        assert!(snap.contains("y 2"));
+    }
+}

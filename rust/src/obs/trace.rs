@@ -1,0 +1,149 @@
+//! Chrome-trace-event sink: collect spans and instants, serialize as
+//! `{"traceEvents": [...]}` JSON loadable in `chrome://tracing` or
+//! Perfetto (ui.perfetto.dev).
+//!
+//! Timestamps are caller-supplied `u64`s in whatever unit the caller
+//! chooses — the serve path uses wall-clock microseconds since the sink
+//! was created ([`TraceSink::now_us`]); the fleet engine uses *modeled
+//! cycles*, which keeps its traces a pure function of seed and knobs.
+//! Cycle counts stay below 2^53 in practice, so the f64 JSON encoding
+//! is exact and same-seed traces are byte-identical.
+//!
+//! Event ordering is the push order. The fleet engine pushes from its
+//! single event-loop thread in deterministic event order; concurrent
+//! serve pushes are serialized by the internal mutex (order there is
+//! wall-clock arrival, which is fine — serve traces are timelines, not
+//! fixtures).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Shared trace collector. Cheap to clone behind an `Arc`; absent sink
+/// (`Option::None`) is the off switch on every instrumented path.
+pub struct TraceSink {
+    epoch: Instant,
+    events: Mutex<Vec<Json>>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        TraceSink::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        TraceSink {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Wall-clock microseconds since the sink was created — the serve
+    /// path's timestamp base. Fleet never calls this.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn push(&self, event: Json) {
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(event);
+    }
+
+    fn base(ph: &str, pid: u64, tid: u64, name: &str, ts: u64) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("ph".into(), Json::Str(ph.into()));
+        m.insert("pid".into(), Json::Num(pid as f64));
+        m.insert("tid".into(), Json::Num(tid as f64));
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("ts".into(), Json::Num(ts as f64));
+        m
+    }
+
+    fn with_args(mut m: BTreeMap<String, Json>, args: &[(&str, Json)]) -> BTreeMap<String, Json> {
+        if !args.is_empty() {
+            let a: BTreeMap<String, Json> = args
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect();
+            m.insert("args".into(), Json::Obj(a));
+        }
+        m
+    }
+
+    /// Name a track: metadata event mapping `(pid, tid)` to a label in
+    /// the viewer's sidebar.
+    pub fn thread_name(&self, pid: u64, tid: u64, name: &str) {
+        let mut m = TraceSink::base("M", pid, tid, "thread_name", 0);
+        m.remove("ts");
+        let mut a = BTreeMap::new();
+        a.insert("name".to_string(), Json::Str(name.into()));
+        m.insert("args".into(), Json::Obj(a));
+        self.push(Json::Obj(m));
+    }
+
+    /// Complete span (`ph: "X"`): `[ts, ts + dur]` on track
+    /// `(pid, tid)`.
+    pub fn span(&self, pid: u64, tid: u64, name: &str, ts: u64, dur: u64, args: &[(&str, Json)]) {
+        let mut m = TraceSink::base("X", pid, tid, name, ts);
+        m.insert("dur".into(), Json::Num(dur as f64));
+        self.push(Json::Obj(TraceSink::with_args(m, args)));
+    }
+
+    /// Instant event (`ph: "i"`), thread-scoped.
+    pub fn instant(&self, pid: u64, tid: u64, name: &str, ts: u64, args: &[(&str, Json)]) {
+        let mut m = TraceSink::base("i", pid, tid, name, ts);
+        m.insert("s".into(), Json::Str("t".into()));
+        self.push(Json::Obj(TraceSink::with_args(m, args)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The full trace document: `{"traceEvents": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let events = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        let mut m = BTreeMap::new();
+        m.insert("traceEvents".to_string(), Json::Arr(events.clone()));
+        Json::Obj(m)
+    }
+
+    pub fn write(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_serialize_in_push_order() {
+        let t = TraceSink::new();
+        t.thread_name(1, 0, "slot 0");
+        t.span(1, 0, "session 3", 100, 50, &[("batch", Json::Num(4.0))]);
+        t.instant(1, 0, "crash", 160, &[]);
+        assert_eq!(t.len(), 3);
+        let s = t.to_json().to_string();
+        let name_at = s.find("thread_name").unwrap();
+        let span_at = s.find("session 3").unwrap();
+        let crash_at = s.find("crash").unwrap();
+        assert!(name_at < span_at && span_at < crash_at);
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert!(s.contains("\"ph\":\"X\""));
+        assert!(s.contains("\"dur\":50"));
+        assert!(s.contains("\"args\":{\"batch\":4}"));
+    }
+}

@@ -177,6 +177,29 @@ impl SearchStats {
         self.arena_reused_walks += o.arena_reused_walks;
         self.arena_fresh_walks += o.arena_fresh_walks;
     }
+
+    /// Add this run's counters to the process-cumulative
+    /// `search_*_total` metrics ([`crate::obs::metrics`]). Call once
+    /// per finished search or aggregate — the observability mirror of
+    /// [`Self::absorb`]; the local struct stays the source of truth for
+    /// reports and tests.
+    pub fn publish(&self) {
+        let r = crate::obs::metrics::global();
+        for (name, v) in [
+            ("search_priced_candidates_total", self.priced_candidates),
+            ("search_pruned_candidates_total", self.pruned_candidates),
+            ("search_latency_evals_total", self.latency_evals),
+            ("search_floored_candidates_total", self.floored_candidates),
+            ("search_priced_levels_total", self.priced_levels),
+            ("search_pruned_levels_total", self.pruned_levels),
+            ("search_arena_reused_walks_total", self.arena_reused_walks),
+            ("search_arena_fresh_walks_total", self.arena_fresh_walks),
+        ] {
+            if v > 0 {
+                r.counter(name).add(v);
+            }
+        }
+    }
 }
 
 /// A bounded best-first walk, fixed at construction: candidates are

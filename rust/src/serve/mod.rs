@@ -20,9 +20,11 @@
 //!   waiter proceeds;
 //! * **front end** ([`serve_oneshot`], [`serve_listener`]) — JSON-lines
 //!   over stdin or TCP ([`protocol`]), answered across the rayon pool,
-//!   with per-request [`ServeStats`] (hits/misses/dedup, p50/p95
-//!   service time) reported via `--stats-json` or a `{"stats": true}`
-//!   request.
+//!   with per-request [`ServeStats`] (hits/misses/dedup, p50/p95/p99
+//!   service time) reported via `--stats-json`, a `{"stats": true}`
+//!   request, or — as a Prometheus-style text snapshot of the whole
+//!   [`crate::obs::metrics`] registry — `{"metrics": true}` /
+//!   `--metrics-out`.
 //!
 //! Every request is classified exactly once: `hit` (index answered),
 //! `miss` (this request priced at least one cell), `coalesced` (waited
@@ -38,7 +40,6 @@
 pub mod index;
 pub mod protocol;
 
-use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -56,9 +57,10 @@ use crate::explore::{price_point_with, CellDecomposition, DesignPoint, PricedPoi
 use crate::layout::Scheme;
 use crate::model::SearchMode;
 use crate::nets::{network_by_name, Network};
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::trace::TraceSink;
 use crate::util::json::Json;
 use crate::util::memo::CoalescingMemo;
-use crate::util::stats::percentile;
 use index::{FrontierIndex, Lookup};
 use protocol::{Query, Request, Source};
 
@@ -98,6 +100,10 @@ pub fn canonical_coords(
     let (dev, device_name) = canonical_device(device)?;
     Ok((network, net_name, dev, device_name))
 }
+
+/// Chrome-trace `pid` of the serve track group (`tid` is the query's
+/// trace id). The fleet engine uses pid 1 for device slots.
+const SERVE_TRACE_PID: u64 = 2;
 
 /// Knobs of one advisor instance.
 #[derive(Debug, Clone)]
@@ -141,72 +147,102 @@ impl Default for ServeOptions {
     }
 }
 
-/// Service-time samples kept for the percentile report — a sliding
-/// window, so a long-lived `--listen` server neither grows without
-/// bound nor pays more than O(window) per report.
-const SERVICE_WINDOW: usize = 4096;
-
-/// Live serving counters. Hits/misses/coalesced partition the
-/// successfully parsed-and-validated queries; `errors` is the rest.
-/// Service-time percentiles cover the last [`SERVICE_WINDOW`] requests.
-#[derive(Default)]
+/// Live serving counters, each an instrument registered in the
+/// process-wide [`crate::obs::metrics`] registry (names prefixed
+/// `advisor_`). Hits/misses/coalesced partition the successfully
+/// parsed-and-validated queries; `errors` is the rest. Service-time
+/// percentiles come from a cumulative log-bucketed histogram
+/// (`advisor_service_time_us`): O(1) per record, bounded memory, read
+/// error under one part in 32 — the old sliding sample window is gone.
 pub struct ServeStats {
-    queries: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    coalesced: AtomicU64,
+    queries: Arc<Counter>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    coalesced: Arc<Counter>,
     /// Miss-path pricings refused by admission control
     /// (`max_inflight_misses`) — the overload signal a fleet
     /// controller retries on.
-    rejected: AtomicU64,
-    errors: AtomicU64,
-    infeasible: AtomicU64,
+    rejected: Arc<Counter>,
+    errors: Arc<Counter>,
+    infeasible: Arc<Counter>,
     /// TCP connections closed because no request line arrived within
     /// the `--read-timeout-ms` window (a stalled client must not pin a
     /// pool worker forever).
-    timeouts: AtomicU64,
-    cells_priced: AtomicU64,
-    points_priced: AtomicU64,
+    timeouts: Arc<Counter>,
+    cells_priced: Arc<Counter>,
+    points_priced: Arc<Counter>,
     /// Cache-file saves performed by the batched write-back path.
-    saves: AtomicU64,
-    service_us: Mutex<VecDeque<u64>>,
+    saves: Arc<Counter>,
+    service_us: Arc<Histogram>,
+}
+
+impl Default for ServeStats {
+    /// Each advisor owns fresh instruments, registered with replace
+    /// semantics — the registry snapshot reflects the latest advisor
+    /// while concurrently live ones (parallel tests) keep their own
+    /// handles unpolluted.
+    fn default() -> Self {
+        let r = crate::obs::metrics::global();
+        Self {
+            queries: r.register_counter("advisor_queries_total"),
+            hits: r.register_counter("advisor_hits_total"),
+            misses: r.register_counter("advisor_misses_total"),
+            coalesced: r.register_counter("advisor_coalesced_total"),
+            rejected: r.register_counter("advisor_rejected_total"),
+            errors: r.register_counter("advisor_errors_total"),
+            infeasible: r.register_counter("advisor_infeasible_total"),
+            timeouts: r.register_counter("advisor_timeouts_total"),
+            cells_priced: r.register_counter("advisor_cells_priced_total"),
+            points_priced: r.register_counter("advisor_points_priced_total"),
+            saves: r.register_counter("advisor_cache_saves_total"),
+            service_us: r.register_histogram("advisor_service_time_us"),
+        }
+    }
 }
 
 impl ServeStats {
-    fn count(&self, c: &AtomicU64) -> u64 {
-        c.load(Ordering::Relaxed)
+    pub fn queries(&self) -> u64 {
+        self.queries.get()
     }
 
     pub fn misses(&self) -> u64 {
-        self.count(&self.misses)
+        self.misses.get()
     }
 
     pub fn hits(&self) -> u64 {
-        self.count(&self.hits)
+        self.hits.get()
     }
 
     pub fn coalesced(&self) -> u64 {
-        self.count(&self.coalesced)
+        self.coalesced.get()
     }
 
     pub fn rejected(&self) -> u64 {
-        self.count(&self.rejected)
+        self.rejected.get()
     }
 
     pub fn errors(&self) -> u64 {
-        self.count(&self.errors)
+        self.errors.get()
+    }
+
+    pub fn infeasible(&self) -> u64 {
+        self.infeasible.get()
     }
 
     pub fn timeouts(&self) -> u64 {
-        self.count(&self.timeouts)
+        self.timeouts.get()
     }
 
     pub fn saves(&self) -> u64 {
-        self.count(&self.saves)
+        self.saves.get()
     }
 
     pub fn cells_priced(&self) -> u64 {
-        self.count(&self.cells_priced)
+        self.cells_priced.get()
+    }
+
+    pub fn points_priced(&self) -> u64 {
+        self.points_priced.get()
     }
 }
 
@@ -238,6 +274,12 @@ pub struct Advisor {
     /// connection persists; concurrent truncate+write would tear the
     /// file).
     stats_file_lock: Mutex<()>,
+    /// Trace sink for per-query timelines (`--trace-out`); `None` — the
+    /// default — keeps every reply byte-identical to the untraced
+    /// service (no `trace_id` field, no span bookkeeping).
+    trace: Option<Arc<TraceSink>>,
+    /// Monotone per-query trace-id source (first query gets id 1).
+    trace_ids: AtomicU64,
 }
 
 /// How one [`Advisor::ensure_cell`] call resolved.
@@ -268,7 +310,17 @@ impl Advisor {
             opts,
             stats: ServeStats::default(),
             stats_file_lock: Mutex::new(()),
+            trace: None,
+            trace_ids: AtomicU64::new(0),
         }
+    }
+
+    /// Install a trace sink (the `--trace-out` path). Call before the
+    /// advisor is shared: replies gain a `trace_id` field and every
+    /// query logs lookup/pricing/search/write-back spans in wall-clock
+    /// microseconds.
+    pub fn set_trace(&mut self, sink: Arc<TraceSink>) {
+        self.trace = Some(sink);
     }
 
     /// Price one (net, device, batch) cell — every layout scheme (in
@@ -289,7 +341,13 @@ impl Advisor {
     /// stays per-cell under the cache lock — waiters must wake to an
     /// index containing their cell; per-group incremental rebuilds are
     /// the remaining ROADMAP follow-on.
-    fn ensure_cell(&self, net: &str, device: &str, batch: usize) -> Ensure {
+    fn ensure_cell(
+        &self,
+        net: &str,
+        device: &str,
+        batch: usize,
+        tr: Option<(&TraceSink, u64)>,
+    ) -> Ensure {
         let key = (net.to_string(), device.to_string(), batch);
         let (_, fresh) = self.inflight.get_or_compute(&key, || {
             // One decomposition + one Algorithm-1 schedule per cell,
@@ -300,6 +358,7 @@ impl Advisor {
             let sched = cd.schedule_for(batch);
             let net_name: Arc<str> = Arc::from(net);
             let dev_name: Arc<str> = Arc::from(device);
+            let t_price = tr.map(|(t, _)| t.now_us());
             let points: Vec<PricedPoint> = Scheme::ALL
                 .as_slice()
                 .par_iter()
@@ -317,11 +376,43 @@ impl Advisor {
                     )
                 })
                 .collect();
+            if let (Some((t, id)), Some(ts)) = (tr, t_price) {
+                t.span(
+                    SERVE_TRACE_PID,
+                    id,
+                    "pricing",
+                    ts,
+                    t.now_us().saturating_sub(ts),
+                    &[("batch", Json::Num(batch as f64))],
+                );
+            }
+            let t_search = tr.map(|(t, _)| t.now_us());
             let search = self.opts.search_tilings.then(|| {
-                search_tilings_with(cd.network(), cd.device(), batch, &sched, SearchMode::Pruned).0
+                let (tilings, stats) = search_tilings_with(
+                    cd.network(),
+                    cd.device(),
+                    batch,
+                    &sched,
+                    SearchMode::Pruned,
+                );
+                stats.publish();
+                tilings
             });
-            self.stats.cells_priced.fetch_add(1, Ordering::Relaxed);
-            self.stats.points_priced.fetch_add(points.len() as u64, Ordering::Relaxed);
+            if search.is_some() {
+                if let (Some((t, id)), Some(ts)) = (tr, t_search) {
+                    t.span(
+                        SERVE_TRACE_PID,
+                        id,
+                        "search",
+                        ts,
+                        t.now_us().saturating_sub(ts),
+                        &[("batch", Json::Num(batch as f64))],
+                    );
+                }
+            }
+            self.stats.cells_priced.inc();
+            self.stats.points_priced.add(points.len() as u64);
+            let t_write = tr.map(|(t, _)| t.now_us());
             let mut cache = self.cache.lock().unwrap();
             for p in &points {
                 cache.insert_point(p);
@@ -334,6 +425,17 @@ impl Advisor {
                 self.save_locked(&cache);
             }
             *self.idx.write().unwrap() = FrontierIndex::from_cache(&cache);
+            drop(cache);
+            if let (Some((t, id)), Some(ts)) = (tr, t_write) {
+                t.span(
+                    SERVE_TRACE_PID,
+                    id,
+                    "write_back",
+                    ts,
+                    t.now_us().saturating_sub(ts),
+                    &[("batch", Json::Num(batch as f64))],
+                );
+            }
         });
         if fresh {
             Ensure::Fresh
@@ -350,9 +452,9 @@ impl Advisor {
             return;
         };
         self.unsaved_cells.store(0, Ordering::Relaxed);
-        self.stats.saves.fetch_add(1, Ordering::Relaxed);
+        self.stats.saves.inc();
         if let Err(e) = cache.save(path) {
-            eprintln!("serve: write-back to {} failed: {e:#}", path.display());
+            crate::obs::log!(Warn, "serve", "write-back to {} failed: {e:#}", path.display());
         }
     }
 
@@ -384,10 +486,18 @@ impl Advisor {
         let (_network, net, _dev, device) = match canonical_coords(&q.net, &q.device) {
             Ok(c) => c,
             Err(e) => {
-                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                self.stats.errors.inc();
                 return protocol::error(&format!("{e:#}"));
             }
         };
+        // Trace context: a fresh id and the query's start timestamp.
+        // `None` (the default) keeps the reply byte-identical to the
+        // untraced service.
+        let tr: Option<(&TraceSink, u64)> = self
+            .trace
+            .as_deref()
+            .map(|t| (t, self.trace_ids.fetch_add(1, Ordering::Relaxed) + 1));
+        let t_query = tr.map(|(t, _)| t.now_us());
         let mut wanted: Vec<usize> = match q.batch {
             Some(b) => vec![b],
             None => self.opts.miss_batches.clone(),
@@ -421,7 +531,7 @@ impl Advisor {
                     // classification: exactly one of hits/misses/
                     // coalesced/rejected per query, so fleet
                     // accounting stays exhaustive.
-                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    self.stats.rejected.inc();
                     return protocol::overloaded();
                 }
             }
@@ -430,7 +540,7 @@ impl Advisor {
         let mut waited = false;
         for &b in &wanted {
             if !self.idx.read().unwrap().has_cell(net, &device, b) {
-                match self.ensure_cell(net, &device, b) {
+                match self.ensure_cell(net, &device, b, tr) {
                     Ensure::Fresh => fresh = true,
                     Ensure::Waited => waited = true,
                 }
@@ -450,6 +560,7 @@ impl Advisor {
         // ones answer over exactly the advisor's batch axis (not
         // whatever else the cache happens to hold), so the answer set
         // never depends on which other queries ran first.
+        let t_lookup = tr.map(|(t, _)| t.now_us());
         let lookup = match q.batch {
             Some(_) => {
                 self.idx
@@ -464,6 +575,9 @@ impl Advisor {
                     .lookup_over(net, &device, &wanted, &q.budgets, q.objective)
             }
         };
+        if let (Some((t, id)), Some(ts)) = (tr, t_lookup) {
+            t.span(SERVE_TRACE_PID, id, "lookup", ts, t.now_us().saturating_sub(ts), &[]);
+        }
         let counter = match (&lookup, source) {
             // ensure_cell inserts every scheme row of the wanted cells,
             // so Unknown can only mean an empty miss-batch set.
@@ -472,20 +586,38 @@ impl Advisor {
             (_, Source::Coalesced) => &self.stats.coalesced,
             (_, Source::Hit) => &self.stats.hits,
         };
-        counter.fetch_add(1, Ordering::Relaxed);
-        match lookup {
+        counter.inc();
+        let mut reply = match lookup {
             Lookup::Found { point, search, considered } => {
                 protocol::found(q, &point, search.as_ref(), source, considered)
             }
             Lookup::Infeasible { considered } => {
-                self.stats.infeasible.fetch_add(1, Ordering::Relaxed);
+                self.stats.infeasible.inc();
                 protocol::infeasible(q, source, considered)
             }
             Lookup::Unknown => protocol::error(&format!(
                 "no priced points for {net}/{device} — the advisor's miss-batch set \
                  is empty and the query names no batch",
             )),
+        };
+        if let (Some((t, id)), Some(ts)) = (tr, t_query) {
+            t.span(
+                SERVE_TRACE_PID,
+                id,
+                "query",
+                ts,
+                t.now_us().saturating_sub(ts),
+                &[
+                    ("device", Json::Str(device.clone())),
+                    ("net", Json::Str(net.to_string())),
+                    ("source", Json::Str(source.name().to_string())),
+                ],
+            );
+            if let Json::Obj(m) = &mut reply {
+                m.insert("trace_id".to_string(), Json::Num(id as f64));
+            }
         }
+        reply
     }
 
     /// Serve one raw request line; `None` for blank lines. Timing,
@@ -497,22 +629,25 @@ impl Advisor {
         }
         let reply = match protocol::parse_request(line) {
             Ok(Request::Stats) => self.stats_json(),
+            Ok(Request::Metrics) => {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert(
+                    "metrics".to_string(),
+                    Json::Str(crate::obs::metrics::global().snapshot()),
+                );
+                Json::Obj(m)
+            }
             Ok(Request::Query(q)) => {
                 let t0 = Instant::now();
-                self.stats.queries.fetch_add(1, Ordering::Relaxed);
+                self.stats.queries.inc();
                 let reply = self.answer(&q);
-                let us = t0.elapsed().as_micros() as u64;
-                let mut window = self.stats.service_us.lock().unwrap();
-                if window.len() == SERVICE_WINDOW {
-                    window.pop_front();
-                }
-                window.push_back(us);
-                drop(window);
+                self.stats.service_us.record(t0.elapsed().as_micros() as u64);
                 reply
             }
             Err(e) => {
-                self.stats.queries.fetch_add(1, Ordering::Relaxed);
-                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                self.stats.queries.inc();
+                self.stats.errors.inc();
                 protocol::error(&format!("{e:#}"))
             }
         };
@@ -520,32 +655,30 @@ impl Advisor {
     }
 
     /// The live stats report (`--stats-json`, `{"stats": true}`).
-    /// Percentiles cover the last [`SERVICE_WINDOW`] requests.
+    /// Service-time percentiles read the cumulative log-bucketed
+    /// histogram — covering every request served, to within one bucket
+    /// width (< 1/32 relative error); the max is exact.
     pub fn stats_json(&self) -> Json {
-        let mut times: Vec<u64> =
-            self.stats.service_us.lock().unwrap().iter().copied().collect();
-        times.sort_unstable();
         let (groups, points, frontier) = self.idx.read().unwrap().sizes();
         let s = &self.stats;
+        let h = &s.service_us;
         let mut m = std::collections::BTreeMap::new();
         m.insert("ok".to_string(), Json::Bool(true));
-        m.insert("queries".into(), Json::Num(s.count(&s.queries) as f64));
-        m.insert("hits".into(), Json::Num(s.count(&s.hits) as f64));
-        m.insert("misses".into(), Json::Num(s.count(&s.misses) as f64));
-        m.insert("coalesced".into(), Json::Num(s.count(&s.coalesced) as f64));
-        m.insert("rejected".into(), Json::Num(s.count(&s.rejected) as f64));
-        m.insert("errors".into(), Json::Num(s.count(&s.errors) as f64));
-        m.insert("infeasible".into(), Json::Num(s.count(&s.infeasible) as f64));
-        m.insert("timeouts".into(), Json::Num(s.count(&s.timeouts) as f64));
-        m.insert("cells_priced".into(), Json::Num(s.count(&s.cells_priced) as f64));
-        m.insert("points_priced".into(), Json::Num(s.count(&s.points_priced) as f64));
-        m.insert("saves".into(), Json::Num(s.count(&s.saves) as f64));
-        m.insert("p50_service_us".into(), Json::Num(percentile(&times, 0.50) as f64));
-        m.insert("p95_service_us".into(), Json::Num(percentile(&times, 0.95) as f64));
-        m.insert(
-            "max_service_us".into(),
-            Json::Num(times.last().copied().unwrap_or(0) as f64),
-        );
+        m.insert("queries".into(), Json::Num(s.queries.get() as f64));
+        m.insert("hits".into(), Json::Num(s.hits.get() as f64));
+        m.insert("misses".into(), Json::Num(s.misses.get() as f64));
+        m.insert("coalesced".into(), Json::Num(s.coalesced.get() as f64));
+        m.insert("rejected".into(), Json::Num(s.rejected.get() as f64));
+        m.insert("errors".into(), Json::Num(s.errors.get() as f64));
+        m.insert("infeasible".into(), Json::Num(s.infeasible.get() as f64));
+        m.insert("timeouts".into(), Json::Num(s.timeouts.get() as f64));
+        m.insert("cells_priced".into(), Json::Num(s.cells_priced.get() as f64));
+        m.insert("points_priced".into(), Json::Num(s.points_priced.get() as f64));
+        m.insert("saves".into(), Json::Num(s.saves.get() as f64));
+        m.insert("p50_service_us".into(), Json::Num(h.quantile(0.50) as f64));
+        m.insert("p95_service_us".into(), Json::Num(h.quantile(0.95) as f64));
+        m.insert("p99_service_us".into(), Json::Num(h.quantile(0.99) as f64));
+        m.insert("max_service_us".into(), Json::Num(h.max() as f64));
         m.insert("indexed_groups".into(), Json::Num(groups as f64));
         m.insert("indexed_points".into(), Json::Num(points as f64));
         m.insert("frontier_points".into(), Json::Num(frontier as f64));
@@ -568,22 +701,21 @@ impl Advisor {
     /// One human line for stderr after a serving run.
     pub fn summary_line(&self) -> String {
         let s = &self.stats;
-        let mut times: Vec<u64> =
-            self.stats.service_us.lock().unwrap().iter().copied().collect();
-        times.sort_unstable();
+        let h = &s.service_us;
         format!(
             "served {} queries: {} hits, {} misses, {} coalesced, {} rejected, \
-             {} errors ({} cells priced, {} saves); p50 {}us p95 {}us",
-            s.count(&s.queries),
-            s.count(&s.hits),
-            s.count(&s.misses),
-            s.count(&s.coalesced),
-            s.count(&s.rejected),
-            s.count(&s.errors),
-            s.count(&s.cells_priced),
-            s.count(&s.saves),
-            percentile(&times, 0.50),
-            percentile(&times, 0.95),
+             {} errors ({} cells priced, {} saves); p50 {}us p95 {}us p99 {}us",
+            s.queries.get(),
+            s.hits.get(),
+            s.misses.get(),
+            s.coalesced.get(),
+            s.rejected.get(),
+            s.errors.get(),
+            s.cells_priced.get(),
+            s.saves.get(),
+            h.quantile(0.50),
+            h.quantile(0.95),
+            h.quantile(0.99),
         )
     }
 
@@ -648,7 +780,7 @@ fn handle_conn(
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                advisor.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                advisor.stats.timeouts.inc();
                 let reply = protocol::error("read timeout: connection closed");
                 let _ = writer.write_all(reply.to_string().as_bytes());
                 let _ = writer.write_all(b"\n");
@@ -691,7 +823,7 @@ pub fn serve_listener(
         let stream = match conn {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("serve: accept failed: {e}");
+                crate::obs::log!(Warn, "serve", "accept failed: {e}");
                 continue;
             }
         };
@@ -699,10 +831,10 @@ pub fn serve_listener(
         let tx = tx.clone();
         let task = move || {
             if let Err(e) = handle_conn(&advisor, stream, read_timeout) {
-                eprintln!("serve: connection error: {e:#}");
+                crate::obs::log!(Warn, "serve", "connection error: {e:#}");
             }
             if let Err(e) = advisor.persist_stats() {
-                eprintln!("serve: stats write failed: {e:#}");
+                crate::obs::log!(Warn, "serve", "stats write failed: {e:#}");
             }
             let _ = tx.send(());
         };
@@ -799,7 +931,7 @@ mod tests {
         // Exactly one request priced the cell; everyone else either
         // waited on it or arrived after the index rebuild.
         assert_eq!(advisor.stats.misses(), 1);
-        assert_eq!(advisor.stats.cells_priced.load(Ordering::Relaxed), 1);
+        assert_eq!(advisor.stats.cells_priced(), 1);
         assert_eq!(advisor.stats.hits() + advisor.stats.coalesced(), 7);
     }
 
@@ -860,7 +992,7 @@ mod tests {
             assert_eq!(j.field_bool("ok"), Some(false), "{line}");
             assert!(j.field_str("error").is_some(), "{line}");
         }
-        assert_eq!(advisor.stats.count(&advisor.stats.errors), 3);
+        assert_eq!(advisor.stats.errors(), 3);
         assert_eq!(advisor.stats.misses(), 0);
     }
 
@@ -884,6 +1016,72 @@ mod tests {
     }
 
     #[test]
+    fn stats_report_carries_p99_and_metrics_request_snapshots() {
+        let advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        advisor.respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#);
+        let stats =
+            Json::parse(&advisor.respond_line(r#"{"stats": true}"#).unwrap()).unwrap();
+        let p95 = stats.field_f64("p95_service_us").unwrap();
+        let p99 = stats.field_f64("p99_service_us").unwrap();
+        let max = stats.field_f64("max_service_us").unwrap();
+        assert!(p95 <= p99 && p99 <= max, "quantiles must be ordered");
+        // `{"metrics": true}` is control traffic answering a snapshot
+        // of the whole process registry.
+        let queries_before = advisor.stats.queries();
+        let metrics =
+            Json::parse(&advisor.respond_line(r#"{"metrics": true}"#).unwrap()).unwrap();
+        assert_eq!(metrics.field_bool("ok"), Some(true));
+        let snap = metrics.field_str("metrics").unwrap();
+        assert!(snap.contains("# TYPE advisor_queries_total counter"), "{snap}");
+        assert!(snap.contains("advisor_service_time_us_count"), "{snap}");
+        assert_eq!(advisor.stats.queries(), queries_before, "not a query");
+    }
+
+    #[test]
+    fn traced_replies_carry_trace_ids_and_spans() {
+        let mut advisor = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let sink = Arc::new(TraceSink::new());
+        advisor.set_trace(Arc::clone(&sink));
+        let hit = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(hit.field_f64("trace_id"), Some(1.0));
+        let miss = Json::parse(
+            &advisor
+                .respond_line(r#"{"net": "lenet10", "device": "zcu102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(miss.field_f64("trace_id"), Some(2.0));
+        let doc = sink.to_json().to_string();
+        assert!(doc.contains("\"name\":\"query\""), "{doc}");
+        assert!(doc.contains("\"name\":\"lookup\""), "{doc}");
+        assert!(doc.contains("\"name\":\"pricing\""), "miss path spans pricing: {doc}");
+        assert!(doc.contains("\"name\":\"write_back\""), "{doc}");
+        // Untraced advisors keep replies byte-free of trace fields.
+        let plain = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let j = Json::parse(
+            &plain
+                .respond_line(r#"{"net": "cnn1x", "device": "zcu102", "batch": 4}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.field_f64("trace_id"), None);
+    }
+
+    #[test]
     fn infeasible_budgets_answer_infeasible() {
         let advisor = warm_advisor(ServeOptions {
             miss_batches: vec![4],
@@ -901,7 +1099,7 @@ mod tests {
         assert_eq!(j.field_bool("ok"), Some(false));
         assert_eq!(j.field_bool("infeasible"), Some(true));
         assert_eq!(j.field_f64("considered"), Some(0.0));
-        assert_eq!(advisor.stats.count(&advisor.stats.infeasible), 1);
+        assert_eq!(advisor.stats.infeasible(), 1);
         assert_eq!(advisor.stats.hits(), 1, "infeasible is still an index hit");
     }
 
@@ -933,7 +1131,7 @@ mod tests {
         assert_eq!(rej.field_bool("retryable"), Some(true));
         assert_eq!(advisor.stats.rejected(), 1);
         assert_eq!(advisor.stats.misses(), 0);
-        assert_eq!(advisor.stats.cells_priced.load(Ordering::Relaxed), 0);
+        assert_eq!(advisor.stats.cells_priced(), 0);
         let stats =
             Json::parse(&advisor.respond_line(r#"{"stats": true}"#).unwrap()).unwrap();
         assert_eq!(stats.field_f64("rejected"), Some(1.0), "surfaced in the stats report");

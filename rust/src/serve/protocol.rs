@@ -16,7 +16,10 @@
 //! default), independent of what else the cache holds, so identical
 //! queries always get identical answers. `{"stats": true}` is a
 //! control request
-//! answered with the live [`super::ServeStats`] report. Parsing is
+//! answered with the live [`super::ServeStats`] report, and
+//! `{"metrics": true}` answers with a Prometheus-style text snapshot
+//! of the whole [`crate::obs::metrics`] registry (in a `"metrics"`
+//! string field). Parsing is
 //! strict — unknown fields and mistyped values are errors, not silent
 //! defaults — because a misspelled budget that quietly vanishes would
 //! serve an over-budget config as if it fit.
@@ -44,6 +47,8 @@ pub enum Request {
     Query(Query),
     /// `{"stats": true}` — report serving statistics.
     Stats,
+    /// `{"metrics": true}` — snapshot the process metrics registry.
+    Metrics,
 }
 
 /// A config question: coordinates, budgets, and what to minimize.
@@ -125,6 +130,15 @@ pub fn parse_request(line: &str) -> crate::Result<Request> {
         return match v.as_bool() {
             Some(true) => Ok(Request::Stats),
             _ => Err(anyhow!("`stats` must be `true`, got {v}")),
+        };
+    }
+    if let Some(v) = j.get("metrics") {
+        if obj.len() != 1 {
+            return Err(anyhow!("a metrics request carries no other fields"));
+        }
+        return match v.as_bool() {
+            Some(true) => Ok(Request::Metrics),
+            _ => Err(anyhow!("`metrics` must be `true`, got {v}")),
         };
     }
     for key in obj.keys() {
@@ -315,6 +329,13 @@ mod tests {
         assert_eq!(parse_request(r#"{"stats": true}"#).unwrap(), Request::Stats);
         assert!(parse_request(r#"{"stats": false}"#).is_err());
         assert!(parse_request(r#"{"stats": true, "net": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn metrics_request_parses() {
+        assert_eq!(parse_request(r#"{"metrics": true}"#).unwrap(), Request::Metrics);
+        assert!(parse_request(r#"{"metrics": false}"#).is_err());
+        assert!(parse_request(r#"{"metrics": true, "net": "x"}"#).is_err());
     }
 
     #[test]

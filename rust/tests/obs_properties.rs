@@ -1,0 +1,164 @@
+//! Observability-layer property tests: the log-bucketed histogram's
+//! quantile reads against the crate-wide nearest-rank percentile
+//! convention (`util::stats::percentile`), and the fleet trace
+//! determinism contract — same seed, same knobs: byte-identical
+//! Chrome-trace JSON across runs and rayon pool sizes, and tracing
+//! itself never perturbs a report byte.
+
+use ef_train::explore::sweep_cache::SweepCache;
+use ef_train::fleet::{run_fleet, run_fleet_traced, FleetConfig};
+use ef_train::obs::metrics::{Histogram, LINEAR_MAX, SUB_BITS};
+use ef_train::obs::trace::TraceSink;
+use ef_train::serve::{Advisor, ServeOptions};
+use ef_train::util::rng::SplitMix64;
+use ef_train::util::stats::percentile;
+
+#[test]
+fn histogram_quantiles_track_nearest_rank_percentiles() {
+    for seed in [1u64, 7, 42, 1234] {
+        let mut rng = SplitMix64::new(seed);
+        let h = Histogram::default();
+        let mut samples: Vec<u64> = Vec::new();
+        for _ in 0..1000 {
+            // Log-uniform-ish spread: shift a full-width draw right by
+            // a random amount so every octave gets exercised.
+            let v = rng.next_u64() >> (rng.below(64) as u32);
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let exact = percentile(&samples, q);
+            let approx = h.quantile(q);
+            assert!(
+                approx <= exact,
+                "seed {seed} q {q}: histogram read {approx} above exact {exact}"
+            );
+            assert!(
+                exact - approx <= exact >> SUB_BITS,
+                "seed {seed} q {q}: error {} beyond the bucket-width bound {}",
+                exact - approx,
+                exact >> SUB_BITS
+            );
+            if exact < LINEAR_MAX {
+                assert_eq!(
+                    approx, exact,
+                    "seed {seed} q {q}: linear-range reads are exact"
+                );
+            }
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max(), *samples.last().unwrap());
+        // The sum atomic wraps on overflow, so compare wrapping sums.
+        let wrapped = samples.iter().fold(0u64, |a, &v| a.wrapping_add(v));
+        assert_eq!(h.sum(), wrapped);
+    }
+}
+
+#[test]
+fn small_population_quantiles_are_exact() {
+    // Below LINEAR_MAX every bucket holds one value, so the histogram
+    // must agree with the sorted slice at every rank, not just within
+    // a bucket width.
+    let values = [3u64, 0, 17, 9, 31, 1, 1, 22];
+    let h = Histogram::default();
+    for &v in &values {
+        h.record(v);
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_unstable();
+    for i in 0..=10 {
+        let q = i as f64 / 10.0;
+        assert_eq!(h.quantile(q), percentile(&sorted, q), "q {q}");
+    }
+}
+
+/// The fault-test chaos scenario: retries, shedding, MMPP bursts,
+/// crash and throttle processes, and checkpointing all on — the same
+/// knobs `tests/fleet_faults.rs` proves produce crashes *and*
+/// recoveries at this size and seed.
+fn chaos_cfg() -> FleetConfig {
+    FleetConfig::parse(
+        64,
+        23,
+        4.0,
+        "zcu102:1,pynq-z1:1",
+        "cnn1x:1",
+        "4:1",
+        "full:2,1:1,2:1",
+        60,
+    )
+    .unwrap()
+    .with_closed_loop(
+        "interactive:1,background:3",
+        3,
+        50.0,
+        Some("interactive"),
+        2,
+        Some(12.0),
+        Some(0.5),
+    )
+    .unwrap()
+    .with_faults(Some(25.0), Some(2.0), Some(40.0), Some(5.0), 0.6, 8, None)
+    .unwrap()
+}
+
+fn advisor_for(cfg: &FleetConfig) -> Advisor {
+    Advisor::new(
+        SweepCache::empty(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            ..ServeOptions::default()
+        },
+    )
+}
+
+#[test]
+fn fleet_traces_are_byte_identical_and_tracing_never_perturbs_reports() {
+    let cfg = chaos_cfg();
+    let run_traced = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .expect("pool");
+        let advisor = advisor_for(&cfg);
+        let sink = TraceSink::new();
+        let report = pool
+            .install(|| run_fleet_traced(&cfg, &advisor, Some(&sink)))
+            .expect("traced fleet run");
+        (sink.to_json().to_string(), report)
+    };
+    let (trace_a, report_a) = run_traced(1);
+    let (trace_b, _) = run_traced(1);
+    assert_eq!(trace_a, trace_b, "same seed must emit byte-identical trace JSON");
+    let (trace_c, _) = run_traced(4);
+    assert_eq!(trace_a, trace_c, "trace bytes may not depend on the pool size");
+
+    // Tracing is observation only: an untraced run of the same seed
+    // emits the exact report bytes of the traced one.
+    let advisor = advisor_for(&cfg);
+    let untraced = run_fleet(&cfg, &advisor).expect("untraced fleet run");
+    assert_eq!(
+        untraced.to_json().to_string(),
+        report_a.to_json().to_string(),
+        "installing a trace sink must not change a single report byte"
+    );
+
+    // The chaos knobs exercise every emission kind this scenario
+    // guarantees (crashes interrupt in-flight work at this MTBF).
+    let faults = report_a.faults.as_ref().expect("chaos run configures faults");
+    assert!(trace_a.contains("\"name\":\"thread_name\""), "slot tracks are named");
+    assert!(trace_a.contains("\"segment\":\"completed\""));
+    assert!(faults.crashes > 0 && faults.recoveries > 0);
+    assert!(trace_a.contains("\"name\":\"crash\""));
+    assert!(trace_a.contains("\"name\":\"repair\""));
+    assert!(trace_a.contains("\"name\":\"checkpoint-restore\""));
+    assert!(trace_a.contains("\"segment\":\"interrupted\""));
+    if faults.throttles > 0 {
+        // A throttle always marks the timeline; it only emits a
+        // "repriced" segment when it caught a session in flight.
+        assert!(trace_a.contains("\"name\":\"throttle-start\""));
+    }
+}

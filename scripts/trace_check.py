@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace-event JSON file emitted by --trace-out.
+
+Checks, per file:
+
+  - the document is a JSON object with a "traceEvents" list;
+  - every event carries name/ph/pid/tid, ph is one of X (complete
+    span), i (instant), M (metadata), and non-metadata events carry a
+    non-negative numeric ts (spans also a non-negative dur);
+  - per (pid, tid) track, spans are properly nested or disjoint --
+    partially overlapping spans on one track mean the emitter closed a
+    segment it never opened (or vice versa) and render garbage in the
+    viewer.
+
+Exit 0 with a one-line summary per file when everything holds; exit 1
+with a diagnostic on the first violation.
+"""
+
+import json
+import sys
+
+ALLOWED_PH = {"X", "i", "M"}
+
+
+def fail(path, msg):
+    print(f"trace_check: {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(path, f"unreadable or not JSON: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail(path, 'document must be an object with a "traceEvents" list')
+    events = doc["traceEvents"]
+
+    tracks = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(path, f"event {i} is not an object")
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                fail(path, f"event {i} ({ev.get('name', '?')}) lacks {key!r}")
+        ph = ev["ph"]
+        if ph not in ALLOWED_PH:
+            fail(path, f"event {i} has unexpected ph {ph!r}")
+        if ph == "M":
+            continue
+        if not is_num(ev.get("ts")) or ev["ts"] < 0:
+            fail(path, f"event {i} ({ev['name']}) needs a non-negative numeric ts")
+        if ph == "X":
+            if not is_num(ev.get("dur")) or ev["dur"] < 0:
+                fail(path, f"span {i} ({ev['name']}) needs a non-negative numeric dur")
+            tracks.setdefault((ev["pid"], ev["tid"]), []).append(
+                (ev["ts"], ev["dur"], ev["name"])
+            )
+
+    n_spans = 0
+    for (pid, tid), spans in sorted(tracks.items()):
+        n_spans += len(spans)
+        # Longest-first at equal start so a parent precedes its children,
+        # then sweep with a stack of open-span end times: every span must
+        # sit entirely inside the innermost still-open span (nested) or
+        # start at/after its end (disjoint).
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack = []
+        for ts, dur, name in spans:
+            while stack and stack[-1] <= ts:
+                stack.pop()
+            end = ts + dur
+            if stack and end > stack[-1]:
+                fail(
+                    path,
+                    f"track pid={pid} tid={tid}: span {name!r} "
+                    f"[{ts}, {end}] partially overlaps an enclosing span "
+                    f"ending at {stack[-1]}",
+                )
+            stack.append(end)
+
+    print(
+        f"trace_check: {path}: OK "
+        f"({len(events)} events, {n_spans} spans on {len(tracks)} tracks)"
+    )
+
+
+def main():
+    if len(sys.argv) < 2:
+        print("usage: trace_check.py TRACE.json [TRACE.json ...]", file=sys.stderr)
+        sys.exit(2)
+    for path in sys.argv[1:]:
+        check_file(path)
+
+
+if __name__ == "__main__":
+    main()
