@@ -1,0 +1,69 @@
+//! Calibration benchmark: price the sweep grid through both the
+//! closed-form scheduler model and the discrete-event simulator at
+//! every retraining depth, pin serial/parallel byte-identity, and
+//! write the residual artifact.
+//!
+//! Writes `BENCH_calibrate.json` — the artifact the CI calibrate-smoke
+//! lane uploads and gates with `scripts/calib_gate.py` (every cell
+//! must sit inside the drift band, and the worst residual may not
+//! grow >10% over the previous run). Unlike the other bench
+//! artifacts, this one is the [`CalibrationReport`] JSON itself (cells
+//! and aggregates are the payload, and the gate needs the schema), so
+//! wall-clock timings go to stdout only and the artifact stays a pure
+//! function of the grid.
+//!
+//! Pass `--fast` (or set `EF_BENCH_FAST=1`) to shrink the grid for CI.
+
+use std::time::Instant;
+
+use ef_train::calib::{run_calibration, CalibrationReport, DEFAULT_BAND};
+use ef_train::explore::SweepConfig;
+
+fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast")
+        || std::env::var("EF_BENCH_FAST").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+fn main() {
+    let fast = fast_mode();
+    let cfg = if fast {
+        SweepConfig::from_args("cnn1x,lenet10", "zcu102", "4", "bchw,reshaped")
+            .expect("valid sweep axes")
+    } else {
+        SweepConfig::default_sweep()
+    };
+
+    let t0 = Instant::now();
+    let serial = run_calibration(&cfg, false).expect("serial calibration");
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let report = run_calibration(&cfg, true).expect("parallel calibration");
+    let parallel_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        serial.to_json().to_string(),
+        report.to_json().to_string(),
+        "serial and rayon calibration must produce byte-identical artifacts"
+    );
+    let reparsed = CalibrationReport::from_json(&report.to_json()).expect("round-trip");
+    assert_eq!(reparsed, report, "artifact must round-trip losslessly");
+
+    println!("{}", report.aggregate_table());
+    println!(
+        "calibrated {} cells{}: serial {serial_s:.3}s, rayon {parallel_s:.3}s \
+         ({:.2}x); worst |rel residual| {:.4} (default band {DEFAULT_BAND})",
+        report.cells.len(),
+        if fast { " (fast mode)" } else { "" },
+        serial_s / parallel_s,
+        report.worst_abs_rel()
+    );
+    assert!(
+        report.worst_abs_rel().is_finite(),
+        "residuals must stay finite over the whole grid"
+    );
+
+    std::fs::write("BENCH_calibrate.json", report.to_json().to_string())
+        .expect("write BENCH_calibrate.json");
+    println!("wrote BENCH_calibrate.json");
+}

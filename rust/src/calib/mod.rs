@@ -1,0 +1,716 @@
+//! Calibration observatory: closed-form vs discrete-event drift
+//! tracking (ROADMAP's "Model calibration" item; the inverse of
+//! perf4sight's fit-a-measured-model flow in PAPERS.md).
+//!
+//! The repo prices the same design twice: the §5 closed forms
+//! ([`crate::model::scheduler::network_training_cycles`], Eq. 15–27)
+//! and the discrete-event stream simulator
+//! ([`crate::explore::simulate_point_phases`]). They should agree —
+//! but "should" is an assumption until it is measured. This module
+//! sweeps the (net × device × batch × scheme) grid **at every
+//! [`PhaseMask`] depth** (so the fleet's partial-retraining path is
+//! covered too), prices every cell through both paths, and reports
+//! signed residuals:
+//!
+//! * `residual_cycles = closed − sim` per cell, with a per-phase
+//!   FP/BP/WU/aux breakdown (both paths walk the same loop shape, so
+//!   phases align one to one);
+//! * `rel_residual = residual_cycles / sim_cycles` — the number the
+//!   drift gate (`scripts/calib_gate.py`) bands;
+//! * energy residuals (both paths share the resource/power model, so
+//!   energy drift is cycle drift through the same watts);
+//! * per-(net, device) aggregates — max/p50/p95 absolute relative
+//!   residual — published as `calib_*` instruments in the
+//!   [`crate::obs::metrics`] registry alongside a residual histogram.
+//!
+//! The closed forms are **scheme-independent** (Eq. 15–27 price the
+//! tiled loop nest; data layout never appears), while the simulator
+//! prices layout effects (BHWC conv-to-conv reshaping, BCHW host
+//! realloc, reshaped weight reuse). That asymmetry *is* the drift
+//! being observed, and it is why the derived [`Corrections`] factors
+//! key on (device, scheme): the factor maps a simulator-priced
+//! latency onto the closed-form axis for that layout on that board.
+//! `ef-train serve --corrections FILE` applies them as an *additional*
+//! `calibrated_latency_ms` reply field — the raw model number is never
+//! silently replaced.
+//!
+//! Everything here is deterministic: same grid in, byte-identical
+//! report out, across runs and `--jobs` values (groups fan out over
+//! rayon but results are reassembled in input order, and every priced
+//! number is a pure function of the cell).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+use rayon::prelude::*;
+
+use crate::explore::{
+    scheme_by_name, scheme_name, simulate_point_phases, CellDecomposition, DesignPoint, SimPhases,
+    SweepConfig,
+};
+use crate::layout::Scheme;
+use crate::model::{network_training_phases_masked, PhaseCycles, PhaseMask, ResourceModel};
+use crate::report::Table;
+use crate::util::json::Json;
+use crate::util::stats::percentile_f64;
+
+/// Version of the `BENCH_calibrate.json` artifact layout. Bump on any
+/// field rename/removal; `scripts/calib_gate.py` treats a version
+/// mismatch as not-comparable (skip the growth gate) rather than a
+/// regression.
+pub const CALIB_SCHEMA_VERSION: u64 = 1;
+
+/// Version of the corrections file `serve --corrections` accepts.
+pub const CORRECTIONS_SCHEMA_VERSION: u64 = 1;
+
+/// Default drift band: a cell whose `|rel_residual|` exceeds this is
+/// out of band. The closed forms idealize inter-tile overlap and carry
+/// no layout costs, so they sit well below the simulator on the
+/// BCHW/BHWC schemes; the observed zoo-grid worst case is ~0.31 and
+/// the band leaves headroom without admitting a regression class.
+pub const DEFAULT_BAND: f64 = 0.45;
+
+/// One grid cell priced through both paths, with signed residuals.
+/// Sign convention everywhere: `closed − sim` (negative = the closed
+/// form under-prices the simulated cost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResidual {
+    pub net: String,
+    pub device: String,
+    pub batch: usize,
+    pub scheme: Scheme,
+    /// Retrained conv suffix this cell was masked to (`depth == convs`
+    /// is full retraining — the advisor/sweep path).
+    pub depth: usize,
+    /// Conv-layer count of the network (context for `depth`).
+    pub convs: usize,
+    pub closed: PhaseCycles,
+    pub sim: SimPhases,
+    pub closed_energy_mj: f64,
+    pub sim_energy_mj: f64,
+}
+
+impl CellResidual {
+    pub fn residual_cycles(&self) -> i64 {
+        self.closed.total() as i64 - self.sim.total() as i64
+    }
+
+    /// Signed relative residual against the simulated total.
+    pub fn rel_residual(&self) -> f64 {
+        self.residual_cycles() as f64 / self.sim.total() as f64
+    }
+
+    pub fn residual_energy_mj(&self) -> f64 {
+        self.closed_energy_mj - self.sim_energy_mj
+    }
+
+    /// Per-phase signed residuals `[fp, bp, wu, aux]`.
+    pub fn phase_residuals(&self) -> [i64; 4] {
+        [
+            self.closed.fp as i64 - self.sim.fp as i64,
+            self.closed.bp as i64 - self.sim.bp as i64,
+            self.closed.wu as i64 - self.sim.wu as i64,
+            self.closed.aux as i64 - self.sim.aux as i64,
+        ]
+    }
+
+    /// Closed-over-sim cycle ratio — the raw material of a correction
+    /// factor.
+    pub fn ratio(&self) -> f64 {
+        self.closed.total() as f64 / self.sim.total() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let num = |v: u64| Json::Num(v as f64);
+        m.insert("net".into(), Json::Str(self.net.clone()));
+        m.insert("device".into(), Json::Str(self.device.clone()));
+        m.insert("batch".into(), num(self.batch as u64));
+        m.insert("scheme".into(), Json::Str(scheme_name(self.scheme).into()));
+        m.insert("depth".into(), num(self.depth as u64));
+        m.insert("convs".into(), num(self.convs as u64));
+        m.insert("closed_cycles".into(), num(self.closed.total()));
+        m.insert("closed_fp".into(), num(self.closed.fp));
+        m.insert("closed_bp".into(), num(self.closed.bp));
+        m.insert("closed_wu".into(), num(self.closed.wu));
+        m.insert("closed_aux".into(), num(self.closed.aux));
+        m.insert("sim_cycles".into(), num(self.sim.total()));
+        m.insert("sim_fp".into(), num(self.sim.fp));
+        m.insert("sim_bp".into(), num(self.sim.bp));
+        m.insert("sim_wu".into(), num(self.sim.wu));
+        m.insert("sim_aux".into(), num(self.sim.aux));
+        m.insert("sim_realloc".into(), num(self.sim.realloc));
+        m.insert("residual_cycles".into(), Json::Num(self.residual_cycles() as f64));
+        m.insert("rel_residual".into(), Json::Num(self.rel_residual()));
+        m.insert("closed_energy_mj".into(), Json::Num(self.closed_energy_mj));
+        m.insert("sim_energy_mj".into(), Json::Num(self.sim_energy_mj));
+        m.insert("residual_energy_mj".into(), Json::Num(self.residual_energy_mj()));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let str_field = |k: &str| -> crate::Result<String> {
+            j.field_str(k)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("calibration cell lacks string `{k}`"))
+        };
+        let u64_field = |k: &str| -> crate::Result<u64> {
+            j.field_f64(k)
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow!("calibration cell lacks whole-number `{k}`"))
+        };
+        let f64_field = |k: &str| -> crate::Result<f64> {
+            j.field_f64(k)
+                .ok_or_else(|| anyhow!("calibration cell lacks number `{k}`"))
+        };
+        let scheme_str = str_field("scheme")?;
+        Ok(CellResidual {
+            net: str_field("net")?,
+            device: str_field("device")?,
+            batch: u64_field("batch")? as usize,
+            scheme: scheme_by_name(&scheme_str)
+                .ok_or_else(|| anyhow!("unknown scheme `{scheme_str}` in calibration cell"))?,
+            depth: u64_field("depth")? as usize,
+            convs: u64_field("convs")? as usize,
+            closed: PhaseCycles {
+                fp: u64_field("closed_fp")?,
+                bp: u64_field("closed_bp")?,
+                wu: u64_field("closed_wu")?,
+                aux: u64_field("closed_aux")?,
+            },
+            sim: SimPhases {
+                fp: u64_field("sim_fp")?,
+                bp: u64_field("sim_bp")?,
+                wu: u64_field("sim_wu")?,
+                aux: u64_field("sim_aux")?,
+                realloc: u64_field("sim_realloc")?,
+            },
+            closed_energy_mj: f64_field("closed_energy_mj")?,
+            sim_energy_mj: f64_field("sim_energy_mj")?,
+        })
+    }
+}
+
+/// Per-(net, device) residual aggregate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Aggregate {
+    pub net: String,
+    pub device: String,
+    pub cells: usize,
+    pub max_abs_rel: f64,
+    pub p50_abs_rel: f64,
+    pub p95_abs_rel: f64,
+}
+
+/// The calibration sweep's outcome: every cell, in deterministic grid
+/// order (nets × devices × batches × schemes × depths, each axis in
+/// its configured order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    pub cells: Vec<CellResidual>,
+    /// The swept axes as [`SweepConfig::axes_csv`] strings — the
+    /// artifact's comparability key for the drift gate.
+    pub axes: [String; 4],
+}
+
+impl CalibrationReport {
+    /// Per-(net, device) aggregates in first-appearance order.
+    pub fn aggregates(&self) -> Vec<Aggregate> {
+        let mut order: Vec<(String, String)> = Vec::new();
+        let mut by_cell: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+        for c in &self.cells {
+            let key = (c.net.clone(), c.device.clone());
+            if !order.contains(&key) {
+                order.push(key.clone());
+            }
+            by_cell.entry(key).or_default().push(c.rel_residual().abs());
+        }
+        order
+            .into_iter()
+            .map(|key| {
+                let rels = &by_cell[&key];
+                Aggregate {
+                    net: key.0,
+                    device: key.1,
+                    cells: rels.len(),
+                    max_abs_rel: rels.iter().cloned().fold(0.0, f64::max),
+                    p50_abs_rel: percentile_f64(rels, 0.50),
+                    p95_abs_rel: percentile_f64(rels, 0.95),
+                }
+            })
+            .collect()
+    }
+
+    /// The worst absolute relative residual over the whole grid.
+    pub fn worst_abs_rel(&self) -> f64 {
+        self.cells.iter().map(|c| c.rel_residual().abs()).fold(0.0, f64::max)
+    }
+
+    /// Derive per-(device, scheme) correction factors: the median
+    /// closed/sim cycle ratio over that pair's **full-depth** cells —
+    /// the depth the advisor's `latency_ms` is priced at. Median, not
+    /// mean: one pathological cell must not drag every reply.
+    pub fn corrections(&self) -> Corrections {
+        let mut ratios: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for c in &self.cells {
+            if c.depth == c.convs {
+                ratios
+                    .entry(Corrections::key(&c.device, scheme_name(c.scheme)))
+                    .or_default()
+                    .push(c.ratio());
+            }
+        }
+        Corrections {
+            factors: ratios
+                .into_iter()
+                .map(|(k, v)| (k, percentile_f64(&v, 0.50)))
+                .collect(),
+        }
+    }
+
+    /// One row per grid cell.
+    pub fn cells_table(&self) -> Table {
+        let mut t = Table::new(
+            "Calibration: closed form vs discrete event, per grid cell",
+            &[
+                "net", "device", "batch", "scheme", "depth", "closed cyc", "sim cyc",
+                "resid cyc", "rel %",
+            ],
+        );
+        for c in &self.cells {
+            t.push(vec![
+                c.net.clone(),
+                c.device.clone(),
+                c.batch.to_string(),
+                scheme_name(c.scheme).to_string(),
+                format!("{}/{}", c.depth, c.convs),
+                c.closed.total().to_string(),
+                c.sim.total().to_string(),
+                c.residual_cycles().to_string(),
+                format!("{:+.2}", c.rel_residual() * 100.0),
+            ]);
+        }
+        t
+    }
+
+    /// Per-(net, device) aggregate table.
+    pub fn aggregate_table(&self) -> Table {
+        let mut t = Table::new(
+            "Calibration residual aggregates per (net, device)",
+            &["net", "device", "cells", "max |rel| %", "p50 |rel| %", "p95 |rel| %"],
+        );
+        for a in self.aggregates() {
+            t.push(vec![
+                a.net,
+                a.device,
+                a.cells.to_string(),
+                format!("{:.2}", a.max_abs_rel * 100.0),
+                format!("{:.2}", a.p50_abs_rel * 100.0),
+                format!("{:.2}", a.p95_abs_rel * 100.0),
+            ]);
+        }
+        t
+    }
+
+    /// The schema-versioned artifact (`BENCH_calibrate.json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("bench".into(), Json::Str("calibrate".into()));
+        m.insert("schema_version".into(), Json::Num(CALIB_SCHEMA_VERSION as f64));
+        let mut axes = BTreeMap::new();
+        for (name, csv) in ["nets", "devices", "batches", "schemes"].iter().zip(&self.axes) {
+            axes.insert(name.to_string(), Json::Str(csv.clone()));
+        }
+        m.insert("axes".into(), Json::Obj(axes));
+        m.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(CellResidual::to_json).collect()),
+        );
+        let mut aggs = BTreeMap::new();
+        for a in self.aggregates() {
+            let mut row = BTreeMap::new();
+            row.insert("cells".to_string(), Json::Num(a.cells as f64));
+            row.insert("max_abs_rel".to_string(), Json::Num(a.max_abs_rel));
+            row.insert("p50_abs_rel".to_string(), Json::Num(a.p50_abs_rel));
+            row.insert("p95_abs_rel".to_string(), Json::Num(a.p95_abs_rel));
+            aggs.insert(format!("{}|{}", a.net, a.device), Json::Obj(row));
+        }
+        m.insert("aggregates".into(), Json::Obj(aggs));
+        m.insert("worst_abs_rel".into(), Json::Num(self.worst_abs_rel()));
+        m.insert("corrections".into(), self.corrections().factors_json());
+        Json::Obj(m)
+    }
+
+    /// Parse an artifact back — the table↔JSON round-trip the property
+    /// suite pins, and what a future warm consumer would load.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        if j.field_str("bench") != Some("calibrate") {
+            return Err(anyhow!("not a calibration artifact (no `bench: calibrate`)"));
+        }
+        let version = j
+            .field_f64("schema_version")
+            .ok_or_else(|| anyhow!("calibration artifact lacks `schema_version`"))?;
+        if version != CALIB_SCHEMA_VERSION as f64 {
+            return Err(anyhow!(
+                "calibration artifact schema {version} != supported {CALIB_SCHEMA_VERSION}"
+            ));
+        }
+        let axes_obj = j.get("axes").ok_or_else(|| anyhow!("artifact lacks `axes`"))?;
+        let axis = |k: &str| -> crate::Result<String> {
+            axes_obj
+                .field_str(k)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifact axes lack `{k}`"))
+        };
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact lacks a `cells` list"))?
+            .iter()
+            .map(CellResidual::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(CalibrationReport {
+            cells,
+            axes: [axis("nets")?, axis("devices")?, axis("batches")?, axis("schemes")?],
+        })
+    }
+
+    /// Publish the report into a metrics registry: a residual
+    /// histogram (absolute relative residual in ppm — the registry's
+    /// histograms are integer-valued), per-(net, device) aggregate
+    /// gauges, and a grid-size counter.
+    pub fn publish_metrics(&self, reg: &crate::obs::metrics::Registry) {
+        let ppm = |rel: f64| (rel * 1e6).round() as u64;
+        let hist = reg.register_histogram("calib_abs_rel_residual_ppm");
+        for c in &self.cells {
+            hist.record(ppm(c.rel_residual().abs()));
+        }
+        reg.register_counter("calib_cells_total").add(self.cells.len() as u64);
+        reg.register_gauge("calib_worst_abs_rel_ppm").set(ppm(self.worst_abs_rel()) as i64);
+        for a in self.aggregates() {
+            let slug = format!("{}_{}", a.net, a.device).replace('-', "_");
+            reg.register_gauge(&format!("calib_max_rel_ppm_{slug}"))
+                .set(ppm(a.max_abs_rel) as i64);
+            reg.register_gauge(&format!("calib_p50_rel_ppm_{slug}"))
+                .set(ppm(a.p50_abs_rel) as i64);
+            reg.register_gauge(&format!("calib_p95_rel_ppm_{slug}"))
+                .set(ppm(a.p95_abs_rel) as i64);
+        }
+    }
+
+    /// Emit the report as a deterministic trace: one track per
+    /// (net, device) group, cells laid side by side (`dur` = simulated
+    /// cycles) with a `ph: "C"` counter sample of the cell's absolute
+    /// relative residual at each span start. Timestamps are modeled
+    /// cycles, never the wall, so same grid → byte-identical trace.
+    pub fn trace_into(&self, sink: &crate::obs::trace::TraceSink) {
+        let mut tracks: Vec<(String, String)> = Vec::new();
+        let mut cursor: Vec<u64> = Vec::new();
+        for c in &self.cells {
+            let key = (c.net.clone(), c.device.clone());
+            let tid = match tracks.iter().position(|t| *t == key) {
+                Some(i) => i,
+                None => {
+                    tracks.push(key.clone());
+                    cursor.push(0);
+                    sink.thread_name(0, tracks.len() as u64 - 1, &format!("{}/{}", key.0, key.1));
+                    tracks.len() - 1
+                }
+            };
+            let ts = cursor[tid];
+            let name = format!("{} b{} d{}", scheme_name(c.scheme), c.batch, c.depth);
+            sink.span(
+                0,
+                tid as u64,
+                &name,
+                ts,
+                c.sim.total(),
+                &[("rel_residual", Json::Num(c.rel_residual()))],
+            );
+            sink.counter(
+                0,
+                tid as u64,
+                "calib_abs_rel_ppm",
+                ts,
+                &[("ppm", Json::Num((c.rel_residual().abs() * 1e6).round()))],
+            );
+            cursor[tid] = ts + c.sim.total();
+        }
+    }
+}
+
+/// Price every (batch × scheme × depth) cell of one (net, device)
+/// group through both paths. Public so the property suite can
+/// calibrate synthetic [`crate::nets::random_network`]s that are not
+/// zoo members.
+pub fn calibrate_cell(
+    cd: &CellDecomposition,
+    net_name: &str,
+    dev_name: &str,
+    batches: &[usize],
+    schemes: &[Scheme],
+) -> Vec<CellResidual> {
+    let net = cd.network();
+    let dev = cd.device();
+    let convs = net.conv_count();
+    let layers = net.conv_layers();
+    let rm = ResourceModel::new(dev);
+    let mut out = Vec::new();
+    for &batch in batches {
+        let sched = cd.schedule_for(batch);
+        let conv = rm.conv_resources(&layers, &sched.tilings);
+        let (used_dsps, used_brams) = rm.end_to_end_utilization(net, &conv);
+        let power_w = dev.power_w(used_dsps, used_brams);
+        let energy = |cycles: u64| power_w * dev.cycles_to_s(cycles) * 1e3;
+        for &scheme in schemes {
+            let point = DesignPoint {
+                net: Arc::from(net_name),
+                device: Arc::from(dev_name),
+                batch,
+                scheme,
+            };
+            for depth in 1..=convs {
+                let mask = PhaseMask::last_k(convs, depth);
+                let closed = network_training_phases_masked(net, &sched, dev, batch, &mask);
+                let sim = simulate_point_phases(net, dev, &point, &mask, &sched);
+                out.push(CellResidual {
+                    net: net_name.to_string(),
+                    device: dev_name.to_string(),
+                    batch,
+                    scheme,
+                    depth,
+                    convs,
+                    closed,
+                    sim,
+                    closed_energy_mj: energy(closed.total()),
+                    sim_energy_mj: energy(sim.total()),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Sweep the whole grid through both pricing paths. `parallel` fans
+/// the (net, device) groups out over rayon; results are reassembled in
+/// input order, so the report is byte-identical across `--jobs`.
+pub fn run_calibration(cfg: &SweepConfig, parallel: bool) -> crate::Result<CalibrationReport> {
+    let mut groups: Vec<(String, String)> = Vec::new();
+    for net in &cfg.nets {
+        for dev in &cfg.devices {
+            groups.push((net.clone(), dev.clone()));
+        }
+    }
+    let price_group = |(net, dev): &(String, String)| -> crate::Result<Vec<CellResidual>> {
+        let cd = CellDecomposition::resolve(net, dev)?;
+        Ok(calibrate_cell(&cd, net, dev, &cfg.batches, &cfg.schemes))
+    };
+    let per_group: Vec<Vec<CellResidual>> = if parallel {
+        groups.par_iter().map(price_group).collect::<crate::Result<_>>()?
+    } else {
+        groups.iter().map(price_group).collect::<crate::Result<_>>()?
+    };
+    Ok(CalibrationReport {
+        cells: per_group.into_iter().flatten().collect(),
+        axes: cfg.axes_csv(),
+    })
+}
+
+/// Per-(device, scheme) multiplicative correction factors, persisted
+/// as a small schema-versioned JSON file: `calibrated_latency_ms =
+/// latency_ms × factor`. Applying corrections is idempotent — the
+/// calibrated field is always derived from the raw `latency_ms`, never
+/// from a previous calibrated value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Corrections {
+    factors: BTreeMap<String, f64>,
+}
+
+impl Corrections {
+    fn key(device: &str, scheme: &str) -> String {
+        format!("{device}|{scheme}")
+    }
+
+    /// Build from explicit factors (tests, hand-authored files).
+    pub fn from_factors(factors: BTreeMap<String, f64>) -> Self {
+        Corrections { factors }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+
+    pub fn factor_for(&self, device: &str, scheme: &str) -> Option<f64> {
+        self.factors.get(&Corrections::key(device, scheme)).copied()
+    }
+
+    fn factors_json(&self) -> Json {
+        Json::Obj(
+            self.factors
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "schema_version".into(),
+            Json::Num(CORRECTIONS_SCHEMA_VERSION as f64),
+        );
+        m.insert("factors".into(), self.factors_json());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let version = j
+            .field_f64("schema_version")
+            .ok_or_else(|| anyhow!("corrections file lacks `schema_version`"))?;
+        if version != CORRECTIONS_SCHEMA_VERSION as f64 {
+            return Err(anyhow!(
+                "corrections schema {version} != supported {CORRECTIONS_SCHEMA_VERSION} \
+                 (re-run `ef-train calibrate`)"
+            ));
+        }
+        let factors = j
+            .get("factors")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("corrections file lacks a `factors` object"))?;
+        let mut out = BTreeMap::new();
+        for (k, v) in factors {
+            let f = v
+                .as_f64()
+                .filter(|f| f.is_finite() && *f > 0.0)
+                .ok_or_else(|| anyhow!("correction factor `{k}` must be a positive number"))?;
+            if !k.contains('|') {
+                return Err(anyhow!("correction key `{k}` is not `device|scheme`"));
+            }
+            out.insert(k.clone(), f);
+        }
+        Ok(Corrections { factors: out })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read corrections file {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("corrections file {} is not JSON: {e}", path.display()))?;
+        Corrections::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Decorate a serve reply in place: when the reply carries a
+    /// served config (`scheme` + `latency_ms`) and a factor exists for
+    /// `(device, scheme)`, insert `calibrated_latency_ms` *alongside*
+    /// the raw field. `device` is the canonical device name (the
+    /// reply's own `device` field echoes the caller's spelling).
+    /// Replies without a factor — and non-config replies — pass
+    /// through untouched.
+    pub fn apply(&self, reply: &mut Json, device: &str) {
+        let (scheme, latency_ms) = match (reply.field_str("scheme"), reply.field_f64("latency_ms"))
+        {
+            (Some(s), Some(l)) => (s.to_string(), l),
+            _ => return,
+        };
+        if let Some(factor) = self.factor_for(device, &scheme) {
+            if let Json::Obj(m) = reply {
+                m.insert(
+                    "calibrated_latency_ms".to_string(),
+                    Json::Num(latency_ms * factor),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> CalibrationReport {
+        let cfg = SweepConfig::from_args("cnn1x", "zcu102", "4", "bchw,reshaped").unwrap();
+        run_calibration(&cfg, false).unwrap()
+    }
+
+    #[test]
+    fn phase_sums_match_totals_and_residuals_are_finite() {
+        let r = tiny_report();
+        assert!(!r.cells.is_empty());
+        for c in &r.cells {
+            assert_eq!(
+                c.closed.total(),
+                c.closed.fp + c.closed.bp + c.closed.wu + c.closed.aux
+            );
+            assert_eq!(c.sim.total(), c.sim.fp + c.sim.bp + c.sim.wu + c.sim.aux);
+            assert!(c.rel_residual().is_finite());
+            let phase_sum: i64 = c.phase_residuals().iter().sum();
+            assert_eq!(phase_sum, c.residual_cycles(), "phases must decompose the residual");
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = tiny_report();
+        let parsed = CalibrationReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+        // And the re-serialized artifact is byte-identical.
+        assert_eq!(parsed.to_json().to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn serial_and_parallel_calibration_agree() {
+        let cfg = SweepConfig::from_args("cnn1x,lenet10", "zcu102", "4", "bchw").unwrap();
+        let a = run_calibration(&cfg, false).unwrap();
+        let b = run_calibration(&cfg, true).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn corrections_round_trip_and_reject_bad_schema() {
+        let r = tiny_report();
+        let corr = r.corrections();
+        assert!(!corr.is_empty());
+        let parsed = Corrections::from_json(&corr.to_json()).unwrap();
+        assert_eq!(parsed, corr);
+        let newer = r#"{"schema_version": 99, "factors": {}}"#;
+        assert!(Corrections::from_json(&Json::parse(newer).unwrap()).is_err());
+        let bad_key = r#"{"schema_version": 1, "factors": {"zcu102": 1.0}}"#;
+        assert!(Corrections::from_json(&Json::parse(bad_key).unwrap()).is_err());
+        let bad_factor = r#"{"schema_version": 1, "factors": {"zcu102|bchw": -1.0}}"#;
+        assert!(Corrections::from_json(&Json::parse(bad_factor).unwrap()).is_err());
+    }
+
+    #[test]
+    fn apply_decorates_and_is_idempotent() {
+        let mut factors = BTreeMap::new();
+        factors.insert("zcu102|bchw".to_string(), 0.8);
+        let corr = Corrections::from_factors(factors);
+        let mut reply = Json::parse(
+            r#"{"ok": true, "scheme": "bchw", "latency_ms": 10.0, "device": "ZCU102"}"#,
+        )
+        .unwrap();
+        corr.apply(&mut reply, "zcu102");
+        let once = reply.to_string();
+        assert_eq!(reply.field_f64("calibrated_latency_ms"), Some(8.0));
+        assert_eq!(reply.field_f64("latency_ms"), Some(10.0), "raw field untouched");
+        corr.apply(&mut reply, "zcu102");
+        assert_eq!(reply.to_string(), once, "second application is a no-op");
+        // No factor for the pair, or a non-config reply: untouched.
+        let mut miss = Json::parse(r#"{"ok": true, "scheme": "bhwc", "latency_ms": 1.0}"#).unwrap();
+        let before = miss.to_string();
+        corr.apply(&mut miss, "zcu102");
+        assert_eq!(miss.to_string(), before);
+        let mut err = Json::parse(r#"{"ok": false, "error": "boom"}"#).unwrap();
+        let before = err.to_string();
+        corr.apply(&mut err, "zcu102");
+        assert_eq!(err.to_string(), before);
+    }
+}

@@ -257,24 +257,51 @@ pub fn price_point_with(
     }
 }
 
+/// The discrete-event cycle total of one training step, split by
+/// training phase. `total()` is bit-identical to what
+/// [`price_point_on`] / [`masked_point_cycles`] price — the total *is*
+/// the sum of the four phase fields plus nothing else (host realloc is
+/// part of each phase's stream total and reported separately only as an
+/// attribution). The calibration harness diffs this against
+/// [`crate::model::PhaseCycles`] field by field.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimPhases {
+    /// Forward-propagation conv stream cycles.
+    pub fp: u64,
+    /// Backward-propagation conv stream cycles.
+    pub bp: u64,
+    /// Weight-update conv stream cycles.
+    pub wu: u64,
+    /// Non-conv streaming cycles (pool/FC/softmax via `aux_latency`).
+    pub aux: u64,
+    /// Host-side reallocation share of the phase totals above (zero
+    /// for the reshaped scheme).
+    pub realloc: u64,
+}
+
+impl SimPhases {
+    pub fn total(&self) -> u64 {
+        self.fp + self.bp + self.wu + self.aux
+    }
+}
+
 /// The one discrete-event pricing loop, mask-parameterized: simulate
 /// every conv (layer, process) the [`crate::model::PhaseMask`] runs
 /// (FP everywhere; BP/WU only over the retrained suffix; layer 1's BP
 /// is structurally skipped either way), plus the aux-layer streaming.
-/// Returns `(total cycles, host-realloc share)`. [`price_point_on`]
-/// calls this with a full mask and [`masked_point_cycles`] with the
-/// session's, so the two can never drift apart.
-fn simulate_point_cycles(
+/// [`price_point_on`] sums this with a full mask and
+/// [`masked_point_cycles`] with the session's, so the two can never
+/// drift apart; the calibration harness reads the fields.
+pub fn simulate_point_phases(
     net: &crate::nets::Network,
     dev: &crate::device::Device,
     p: &DesignPoint,
     mask: &crate::model::PhaseMask,
     sched: &crate::model::Schedule,
-) -> (u64, u64) {
+) -> SimPhases {
     let layers = net.conv_layers();
     let budget = on_chip_feature_words(dev);
-    let mut cycles = 0u64;
-    let mut realloc = 0u64;
+    let mut phases = SimPhases::default();
     for (i, (l, t)) in layers.iter().zip(&sched.tilings).enumerate() {
         for process in Process::ALL {
             if i == 0 && process == Process::Bp {
@@ -292,17 +319,43 @@ fn simulate_point_cycles(
                 weight_reuse: p.scheme == Scheme::Reshaped,
             };
             let r = simulate_layer(&spec, dev, i, budget);
-            cycles += r.total();
-            realloc += r.realloc_cycles;
+            match process {
+                Process::Fp => phases.fp += r.total(),
+                Process::Bp => phases.bp += r.total(),
+                Process::Wu => phases.wu += r.total(),
+            }
+            phases.realloc += r.realloc_cycles;
         }
     }
     {
         let _phase = crate::obs::profile::enter(crate::obs::profile::Phase::AuxLayers);
         for kind in &net.layers {
-            cycles += aux_latency(kind, dev, p.batch);
+            phases.aux += aux_latency(kind, dev, p.batch);
         }
     }
-    (cycles, realloc)
+    phases
+}
+
+/// [`simulate_point_phases`] over a shared decomposition — the
+/// calibration sweep's per-cell entry point.
+pub fn simulate_point_phases_in(
+    cd: &CellDecomposition,
+    p: &DesignPoint,
+    mask: &crate::model::PhaseMask,
+) -> SimPhases {
+    let sched = cd.schedule_for(p.batch);
+    simulate_point_phases(&cd.net, &cd.dev, p, mask, &sched)
+}
+
+fn simulate_point_cycles(
+    net: &crate::nets::Network,
+    dev: &crate::device::Device,
+    p: &DesignPoint,
+    mask: &crate::model::PhaseMask,
+    sched: &crate::model::Schedule,
+) -> (u64, u64) {
+    let phases = simulate_point_phases(net, dev, p, mask, sched);
+    (phases.total(), phases.realloc)
 }
 
 /// Modeled cycles of one training step under a partial-retraining

@@ -67,7 +67,7 @@ use anyhow::anyhow;
 
 use crate::device::Device;
 use crate::explore::{masked_point_cycles_in, scheme_by_name, CellDecomposition, DesignPoint};
-use crate::model::PhaseMask;
+use crate::model::{network_training_cycles_masked, PhaseMask};
 use crate::nets::Network;
 use crate::obs::trace::TraceSink;
 use crate::serve::protocol::Query;
@@ -164,6 +164,10 @@ struct Pending {
     /// checkpoint writes included — the device is busy and burning
     /// power either way).
     service_cycles: u64,
+    /// Closed-form-predicted reference-clock cycles per adaptation
+    /// step — the drift section's yardstick. Pure model prediction:
+    /// no checkpoint writes, no crash re-work.
+    predicted_per_step: u64,
     first_start: Option<u64>,
     crashes: u32,
     steps_lost: u64,
@@ -185,11 +189,14 @@ enum Resolution {
 /// a [`CellDecomposition`] so every step-cost miss of the pair reuses
 /// one Algorithm-1 plan across its batch × scheme × depth spellings.
 type Zoo = BTreeMap<(String, String), CellDecomposition>;
-/// Per-step and per-checkpoint masked cost (reference-clock cycles)
-/// per (net, kind, batch, scheme, depth) — distinct sessions of one
-/// shape share one pricing, but each multiplies in its own
-/// steps-to-converge and checkpoint cadence.
-type StepCostMemo = BTreeMap<(String, String, usize, String, usize), (u64, u64)>;
+/// Per-step, per-checkpoint, and closed-form-predicted per-step masked
+/// cost (reference-clock cycles) per (net, kind, batch, scheme, depth)
+/// — distinct sessions of one shape share one pricing, but each
+/// multiplies in its own steps-to-converge and checkpoint cadence. The
+/// predicted cost (the §5 closed forms, scheme-independent) rides
+/// along so `--drift` reports can compare it against the simulated
+/// service without a second pricing pass.
+type StepCostMemo = BTreeMap<(String, String, usize, String, usize), (u64, u64, u64)>;
 
 /// Checkpoint write cost on the fleet reference clock: the *retrained*
 /// weight tensors (BP+WU suffix only — a frozen layer's weights never
@@ -273,7 +280,7 @@ fn resolve(
         scheme_name.clone(),
         depth,
     );
-    let (per_step, ckpt_cost) = match step_costs.get(&key).copied() {
+    let (per_step, ckpt_cost, predicted_per_step) = match step_costs.get(&key).copied() {
         Some(c) => c,
         None => {
             let scheme = scheme_by_name(&scheme_name)
@@ -286,11 +293,19 @@ fn resolve(
                 scheme,
             };
             let step_cycles = masked_point_cycles_in(cd, &point, &mask);
+            // The closed-form twin of the same masked step, priced on
+            // the same Algorithm-1 plan — what the drift section holds
+            // the simulator's number against.
+            let sched = cd.schedule_for(s.batch);
+            let predicted_cycles =
+                network_training_cycles_masked(cd.network(), &sched, cd.device(), s.batch, &mask);
             // Device clock -> fleet reference clock.
-            let per_step = (step_cycles * REF_FREQ_MHZ / cd.device().freq_mhz as u64).max(1);
+            let scale = |c: u64| (c * REF_FREQ_MHZ / cd.device().freq_mhz as u64).max(1);
+            let per_step = scale(step_cycles);
+            let predicted_per_step = scale(predicted_cycles);
             let ckpt_cost = checkpoint_cycles(cd.network(), cd.device(), &mask);
-            step_costs.insert(key, (per_step, ckpt_cost));
-            (per_step, ckpt_cost)
+            step_costs.insert(key, (per_step, ckpt_cost, predicted_per_step));
+            (per_step, ckpt_cost, predicted_per_step)
         }
     };
     // The memo holds only the per-step/per-write costs: every session —
@@ -309,6 +324,7 @@ fn resolve(
         scheme: scheme_name,
         source,
         service_cycles: 0,
+        predicted_per_step,
         first_start: None,
         crashes: 0,
         steps_lost: 0,
@@ -521,6 +537,7 @@ pub fn run_traced(
                     end_cycle: now,
                     queue_cycles: start - admitted[idx],
                     service_cycles: p.service_cycles,
+                    predicted_service_cycles: Some(s.steps as u64 * p.predicted_per_step),
                     energy_mj: p.power_w * secs * 1e3,
                 });
                 if let Some(t) = sink {
@@ -804,5 +821,6 @@ pub fn run_traced(
         shed_total,
         fault_model.map(|_| totals),
         cfg.slo_by_rank(),
+        cfg.drift,
     ))
 }

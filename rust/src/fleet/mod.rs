@@ -168,6 +168,12 @@ pub struct FleetConfig {
     /// Per-class sojourn SLO targets in reference-clock cycles, by
     /// priority-class name; graded (met/violated) in the report.
     pub slo: Vec<(String, u64)>,
+    /// Grow the report with a per-class predicted-vs-simulated drift
+    /// section (`--drift`): signed closed-form-minus-simulator service
+    /// residuals, the fleet-side view of [`crate::calib`]. Off by
+    /// default — drift-off reports stay byte-identical to the
+    /// pre-calibration engine.
+    pub drift: bool,
 }
 
 impl Default for FleetConfig {
@@ -192,6 +198,7 @@ impl Default for FleetConfig {
             faults: None,
             checkpoint_steps: 0,
             slo: Vec::new(),
+            drift: false,
         }
     }
 }

@@ -19,7 +19,7 @@ use std::collections::BTreeMap;
 use crate::report::Table;
 use crate::serve::Advisor;
 use crate::util::json::Json;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, percentile_f64};
 
 use super::trace::Session;
 use super::REF_FREQ_MHZ;
@@ -67,6 +67,12 @@ pub struct SessionRecord {
     pub queue_cycles: u64,
     /// Modeled adaptation time on the device.
     pub service_cycles: u64,
+    /// What the closed-form scheduler model predicted the adaptation
+    /// time would be (same step count and frequency scaling as
+    /// `service_cycles`, which the discrete-event simulator priced).
+    /// `Some` for every session that ran; `None` for unserved ones.
+    /// Feeds the report's drift section; never serialized per session.
+    pub predicted_service_cycles: Option<u64>,
     pub energy_mj: f64,
 }
 
@@ -105,6 +111,7 @@ impl SessionRecord {
             end_cycle: s.arrival_cycle,
             queue_cycles: 0,
             service_cycles: 0,
+            predicted_service_cycles: None,
             energy_mj: 0.0,
         }
     }
@@ -228,6 +235,26 @@ pub struct ClassStat {
     pub slo_violated: usize,
 }
 
+/// One priority class's calibration-drift view: how far the closed-form
+/// scheduler model's predicted adaptation time sat from the
+/// discrete-event service time the fleet actually simulated, per ran
+/// session. Residuals are signed, `(predicted − simulated) /
+/// simulated` — the same `closed − sim` convention as
+/// [`crate::calib`] — so a persistently negative drift means the
+/// closed form under-prices that class's workload mix.
+#[derive(Debug, Clone)]
+pub struct ClassDrift {
+    pub name: String,
+    /// Rank in the priority mix (0 = most urgent).
+    pub rank: usize,
+    /// Ran sessions contributing a residual.
+    pub sessions: usize,
+    pub mean_rel: f64,
+    pub p50_rel: f64,
+    pub p95_rel: f64,
+    pub max_abs_rel: f64,
+}
+
 /// A finished fleet run, aggregated.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
@@ -261,6 +288,11 @@ pub struct FleetReport {
     /// JSON field (faults-off output stays byte-identical to the
     /// pre-fault engine).
     pub faults: Option<FaultStats>,
+    /// Per-class predicted-vs-simulated sojourn drift — `Some` exactly
+    /// when the run asked for it (`--drift`), and the gate on every
+    /// drift table row and JSON field (drift-off output stays
+    /// byte-identical to the pre-calibration engine).
+    pub drift: Option<Vec<ClassDrift>>,
     pub records: Vec<SessionRecord>,
 }
 
@@ -268,7 +300,8 @@ impl FleetReport {
     /// Aggregate one engine run. `records` are in session-id order;
     /// `class_names` are the config's priority classes in rank order;
     /// `slo_targets` are per-rank sojourn targets aligned with them
-    /// (`None` = ungraded class).
+    /// (`None` = ungraded class); `drift` asks for the per-class
+    /// predicted-vs-simulated residual section.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         records: Vec<SessionRecord>,
@@ -280,6 +313,7 @@ impl FleetReport {
         shed: u64,
         faults: Option<FaultStats>,
         slo_targets: Vec<Option<u64>>,
+        drift: bool,
     ) -> Self {
         let completed = records.iter().filter(|r| r.ran()).count();
         let abandoned = records.iter().filter(|r| r.source == "abandoned").count();
@@ -292,7 +326,7 @@ impl FleetReport {
             CyclePercentiles::of(ran.iter().map(|r| r.service_cycles).collect());
         let sojourn =
             CyclePercentiles::of(ran.iter().map(|r| r.sojourn_cycles()).collect());
-        let classes = class_names
+        let classes: Vec<ClassStat> = class_names
             .into_iter()
             .enumerate()
             .map(|(rank, name)| {
@@ -333,6 +367,41 @@ impl FleetReport {
                 }
             })
             .collect();
+        let drift = if drift {
+            Some(
+                classes
+                    .iter()
+                    .map(|c| {
+                        let rels: Vec<f64> = records
+                            .iter()
+                            .filter(|r| r.priority == c.rank && r.ran())
+                            .filter_map(|r| {
+                                r.predicted_service_cycles.map(|p| {
+                                    (p as f64 - r.service_cycles as f64)
+                                        / r.service_cycles as f64
+                                })
+                            })
+                            .collect();
+                        let mean_rel = if rels.is_empty() {
+                            0.0
+                        } else {
+                            rels.iter().sum::<f64>() / rels.len() as f64
+                        };
+                        ClassDrift {
+                            name: c.name.clone(),
+                            rank: c.rank,
+                            sessions: rels.len(),
+                            mean_rel,
+                            p50_rel: percentile_f64(&rels, 0.50),
+                            p95_rel: percentile_f64(&rels, 0.95),
+                            max_abs_rel: rels.iter().map(|v| v.abs()).fold(0.0, f64::max),
+                        }
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
         let total_busy_cycles = devices.iter().map(|d| d.busy_cycles).sum();
         let total_energy_mj = ran.iter().map(|r| r.energy_mj).sum();
         let stats = advisor.stats();
@@ -363,6 +432,7 @@ impl FleetReport {
             devices,
             advisor,
             faults,
+            drift,
             records,
         }
     }
@@ -473,6 +543,20 @@ impl FleetReport {
                 "SLO violation rate",
                 format!("{:.1}%", 100.0 * self.slo_violation_rate()),
             );
+        }
+        if let Some(drift) = &self.drift {
+            for d in drift {
+                row(
+                    &format!("[{}] model drift p50 / p95 / max|.|", d.name),
+                    format!(
+                        "{:+.2}% / {:+.2}% / {:.2}% ({} sessions)",
+                        100.0 * d.p50_rel,
+                        100.0 * d.p95_rel,
+                        100.0 * d.max_abs_rel,
+                        d.sessions
+                    ),
+                );
+            }
         }
         if let Some(f) = &self.faults {
             row(
@@ -647,6 +731,27 @@ impl FleetReport {
             root.insert(
                 "slo_violation_rate".into(),
                 Json::Num(self.slo_violation_rate()),
+            );
+        }
+        if let Some(drift) = &self.drift {
+            root.insert(
+                "drift".into(),
+                Json::Arr(
+                    drift
+                        .iter()
+                        .map(|d| {
+                            let mut m = BTreeMap::new();
+                            m.insert("name".into(), Json::Str(d.name.clone()));
+                            m.insert("rank".into(), Json::Num(d.rank as f64));
+                            m.insert("sessions".into(), Json::Num(d.sessions as f64));
+                            m.insert("mean_rel".into(), Json::Num(d.mean_rel));
+                            m.insert("p50_rel".into(), Json::Num(d.p50_rel));
+                            m.insert("p95_rel".into(), Json::Num(d.p95_rel));
+                            m.insert("max_abs_rel".into(), Json::Num(d.max_abs_rel));
+                            Json::Obj(m)
+                        })
+                        .collect(),
+                ),
             );
         }
         if let Some(f) = &self.faults {

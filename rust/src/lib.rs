@@ -67,7 +67,19 @@
 //! device. Reports fleet throughput, utilization, queueing/adaptation
 //! latency percentiles, energy, and advisor load as table + JSON
 //! (`benches/fleet.rs` → `BENCH_fleet.json`, diffed in CI).
+//!
+//! The **calibration observatory** ([`calib`], `ef-train calibrate`)
+//! measures the invariant the two pricing paths are supposed to
+//! uphold: it sweeps the grid through both the closed forms and the
+//! discrete-event simulator at every [`model::PhaseMask`] depth,
+//! reports signed per-cell residuals (cycles, energy, per-phase
+//! FP/BP/WU breakdown) as table + `BENCH_calibrate.json` (banded in CI
+//! by `scripts/calib_gate.py`), publishes `calib_*` instruments into
+//! the [`obs::metrics`] registry, and derives per-(device, scheme)
+//! correction factors `ef-train serve --corrections` applies as an
+//! extra `calibrated_latency_ms` reply field.
 
+pub mod calib;
 pub mod coordinator;
 pub mod data;
 pub mod device;

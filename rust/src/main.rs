@@ -31,10 +31,16 @@ USAGE:
                    [--schemes bchw,bhwc,reshaped] [--out FILE] [--serial]
                    [--jobs N] [--cache-file FILE] [--search-tilings]
                    [--fill] [--save-every N] [--profile]
+                   [--metrics-out FILE]
+  ef-train calibrate [--nets A,B] [--devices D,E] [--batches N,M|LO-HI]
+                     [--schemes bchw,bhwc,reshaped] [--band F] [--serial]
+                     [--jobs N] [--out FILE] [--corrections-out FILE]
+                     [--metrics-out FILE] [--trace-out FILE]
   ef-train serve (--oneshot [--queries FILE] | --listen ADDR)
                  [--cache-file FILE] [--stats-json FILE] [--jobs N]
                  [--search-tilings] [--max-inflight-misses N]
                  [--save-every N] [--read-timeout-ms MS]
+                 [--corrections FILE]
                  [--metrics-out FILE] [--trace-out FILE]
   ef-train fleet [--sessions N] [--seed S] [--jobs J] [--cache-file PATH]
                  [--arrival-rate R] [--depth-mix CSV] [--device-mix CSV]
@@ -48,6 +54,7 @@ USAGE:
                  [--slo CLASS:CYCLES,...]
                  [--max-inflight-misses N] [--save-every N]
                  [--search-tilings] [--out FILE] [--trace-out FILE]
+                 [--drift] [--metrics-out FILE]
   ef-train train [--net NET] [--steps N] [--lr F] [--seed N] [--reference]
   ef-train adapt [--net NET] [--max-steps N] [--lr F] [--shift F]
 
@@ -76,6 +83,22 @@ streams results into --cache-file (required), saving every
 --profile` attributes pricing wall-clock to its phases (schedule,
 scheme rows, stream summaries, aux layers, tiling search) and prints
 the self-time table after the run.
+
+`calibrate` measures the drift between the two pricing paths: every
+(net x device x batch x scheme) cell — at every partial-retraining
+depth — is priced through both the closed-form scheduler model and the
+discrete-event simulator, and the signed residuals (cycles, energy,
+per-phase FP/BP/WU breakdown) print as tables and land in a
+schema-versioned artifact (--out, default BENCH_calibrate.json) that
+scripts/calib_gate.py diffs in CI. Exits nonzero when any cell's
+|relative residual| leaves the --band (after writing the artifact).
+--corrections-out FILE persists per-(device, scheme) multiplicative
+correction factors (median closed/sim ratio over full-depth cells)
+that `serve --corrections FILE` applies to each reply as an extra
+calibrated_latency_ms field — the raw latency_ms is never replaced.
+Aggregates publish as calib_* instruments (--metrics-out) and
+--trace-out writes the residual grid as a Chrome-trace timeline in
+modeled cycles. Output is byte-identical across runs and --jobs.
 
 `serve` answers {net, device, batch?, max_latency_ms?, max_bram?,
 max_energy_mj?, objective?} JSON-lines queries with the optimal cached
@@ -128,7 +151,10 @@ report to --out; a fixed --seed is bit-identical across runs and
 --jobs values. --trace-out FILE writes a Chrome-trace timeline (one
 track per device slot: session segments plus crash / repair /
 throttle / checkpoint-restore marks) stamped in modeled cycles, so
-the trace itself is byte-identical across runs and --jobs.";
+the trace itself is byte-identical across runs and --jobs. --drift
+grows the report with a per-class predicted-vs-simulated service
+residual section (the fleet-side view of `calibrate`); --metrics-out
+writes the global metrics snapshot on exit.";
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "steps", "every", "net", "device", "batch", "lr", "seed",
@@ -139,8 +165,20 @@ const VALUE_FLAGS: &[&str] = &[
     "retry-base-ms", "shed-below", "shed-depth", "burst-rate", "burst-dwell",
     "crash-mtbf", "crash-mttr", "throttle-mtbf", "throttle-dwell",
     "throttle-derate", "checkpoint-steps", "slo", "read-timeout-ms",
-    "metrics-out", "trace-out", "log-level",
+    "metrics-out", "trace-out", "log-level", "corrections",
+    "corrections-out", "band",
 ];
+
+/// Shared `--metrics-out FILE` handling (serve, fleet, explore --fill,
+/// calibrate): write the global registry snapshot on the way out. One
+/// helper, not a copy per subcommand.
+fn maybe_write_metrics(args: &cli::Args) -> ef_train::Result<()> {
+    if let Some(p) = args.flag("metrics-out").map(std::path::PathBuf::from) {
+        std::fs::write(&p, ef_train::obs::metrics::global().snapshot())?;
+        eprintln!("wrote metrics snapshot to {}", p.display());
+    }
+    Ok(())
+}
 
 fn main() {
     let args = cli::parse(std::env::args().skip(1), VALUE_FLAGS);
@@ -304,6 +342,7 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                         println!("  {name:<16} {secs:>9.3}s  fraction {fraction:.4}");
                     }
                 }
+                maybe_write_metrics(args)?;
                 return Ok(());
             }
             let report = if jobs > 0 {
@@ -365,6 +404,79 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             std::fs::write(&out, report.to_json().to_string())?;
             println!("wrote {out}");
         }
+        Some("calibrate") => {
+            let [nets_d, devices_d, batches_d, schemes_d] =
+                explore::SweepConfig::default_sweep().axes_csv();
+            let cfg = explore::SweepConfig::from_args(
+                &args.flag_or("nets", &nets_d),
+                &args.flag_or("devices", &devices_d),
+                &args.flag_or("batches", &batches_d),
+                &args.flag_or("schemes", &schemes_d),
+            )?;
+            let band = args.parse_flag("band", ef_train::calib::DEFAULT_BAND);
+            if !(band > 0.0 && band.is_finite()) {
+                return Err(anyhow::anyhow!("--band must be a positive number"));
+            }
+            let parallel = !args.has("serial");
+            let jobs: usize = args.try_parse_flag("jobs")?.unwrap_or(0);
+            let run = || ef_train::calib::run_calibration(&cfg, parallel);
+            let report = if jobs > 0 {
+                let pool = rayon::ThreadPoolBuilder::new()
+                    .num_threads(jobs)
+                    .build()
+                    .map_err(|e| anyhow::anyhow!("building a {jobs}-thread pool: {e}"))?;
+                pool.install(run)?
+            } else {
+                run()?
+            };
+            println!("{}", report.cells_table());
+            println!("{}", report.aggregate_table());
+            report.publish_metrics(ef_train::obs::metrics::global());
+            let out = args.flag_or("out", "BENCH_calibrate.json");
+            std::fs::write(&out, report.to_json().to_string())?;
+            println!("wrote {out}");
+            if let Some(p) = args.flag("corrections-out") {
+                report.corrections().save(std::path::Path::new(p))?;
+                println!("wrote correction factors to {p}");
+            }
+            if let Some(p) = args.flag("trace-out") {
+                let sink = ef_train::obs::trace::TraceSink::new();
+                report.trace_into(&sink);
+                sink.write(std::path::Path::new(p))?;
+                println!("wrote trace ({} events) to {p}", sink.len());
+            }
+            maybe_write_metrics(args)?;
+            println!(
+                "calibrated {} cells; worst |rel residual| {:.4} (band {:.2})",
+                report.cells.len(),
+                report.worst_abs_rel(),
+                band
+            );
+            let out_of_band: Vec<&ef_train::calib::CellResidual> = report
+                .cells
+                .iter()
+                .filter(|c| c.rel_residual().abs() > band)
+                .collect();
+            if !out_of_band.is_empty() {
+                for c in &out_of_band {
+                    eprintln!(
+                        "out of band: {}/{} batch {} {} depth {}/{}: rel residual {:+.4}",
+                        c.net,
+                        c.device,
+                        c.batch,
+                        explore::scheme_name(c.scheme),
+                        c.depth,
+                        c.convs,
+                        c.rel_residual()
+                    );
+                }
+                return Err(anyhow::anyhow!(
+                    "{} of {} cells drifted outside the +/-{band} band",
+                    out_of_band.len(),
+                    report.cells.len()
+                ));
+            }
+        }
         Some("serve") => {
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
             let cache = match cache_path.as_deref() {
@@ -387,7 +499,11 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             if let Some(n) = args.try_parse_flag::<usize>("save-every")? {
                 opts.save_every = n.max(1);
             }
-            let metrics_out = args.flag("metrics-out").map(std::path::PathBuf::from);
+            if let Some(p) = args.flag("corrections") {
+                opts.corrections =
+                    Some(ef_train::calib::Corrections::load(std::path::Path::new(p))?);
+                eprintln!("serve: applying correction factors from {p}");
+            }
             let trace_out = args.flag("trace-out").map(std::path::PathBuf::from);
             let sink = trace_out
                 .as_ref()
@@ -443,10 +559,7 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             } else {
                 return Err(anyhow::anyhow!("serve needs --oneshot or --listen ADDR"));
             }
-            if let Some(p) = &metrics_out {
-                std::fs::write(p, ef_train::obs::metrics::global().snapshot())?;
-                eprintln!("wrote metrics snapshot to {}", p.display());
-            }
+            maybe_write_metrics(args)?;
             if let (Some(p), Some(s)) = (&trace_out, &sink) {
                 s.write(p)?;
                 eprintln!("wrote trace ({} events) to {}", s.len(), p.display());
@@ -481,6 +594,8 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
                 args.parse_flag("checkpoint-steps", 0usize),
                 args.flag("slo"),
             )?;
+            let mut cfg = cfg;
+            cfg.drift = args.has("drift");
             let cache_path = args.flag("cache-file").map(std::path::PathBuf::from);
             let cache = match cache_path.as_deref() {
                 Some(p) => explore::sweep_cache::SweepCache::load(p)?,
@@ -523,6 +638,7 @@ fn dispatch(args: &cli::Args) -> ef_train::Result<()> {
             let out = args.flag_or("out", "fleet_report.json");
             std::fs::write(&out, report.to_json().to_string())?;
             println!("wrote {out}");
+            maybe_write_metrics(args)?;
             if let (Some(p), Some(s)) = (&trace_out, &sink) {
                 s.write(p)?;
                 println!("wrote trace ({} events) to {}", s.len(), p.display());

@@ -10,8 +10,8 @@ pub mod scheduler;
 pub use perf::{conv_latency, conv_latency_lower_bound, AffineLatency, LatencyBreakdown};
 pub use resource::{ConvResources, ResourceModel};
 pub use scheduler::{
-    network_training_cycles_masked, schedule, schedule_searched, Schedule, SchedulePlan,
-    SearchMode, SearchStats,
+    network_training_cycles_masked, network_training_phases_masked, schedule, schedule_searched,
+    PhaseCycles, Schedule, SchedulePlan, SearchMode, SearchStats,
 };
 
 use crate::layout::Process;

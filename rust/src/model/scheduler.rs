@@ -408,6 +408,43 @@ pub fn network_conv_training_cycles(
     network_cycles_inner(net, sched, dev, batch, false, &mask)
 }
 
+/// The closed-form cycle total of one training step, split by training
+/// phase. `total()` equals [`network_training_cycles_masked`] exactly —
+/// the masked total *is* the sum of these four fields (u64 addition is
+/// associative), so the calibration harness can break residuals down by
+/// phase without risking drift against the numbers everything else
+/// prices with.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCycles {
+    /// Forward-propagation conv cycles (every conv layer).
+    pub fp: u64,
+    /// Backward-propagation conv cycles (retrained suffix, sans layer 1).
+    pub bp: u64,
+    /// Weight-update conv cycles (retrained suffix).
+    pub wu: u64,
+    /// Non-conv streaming cycles (pool/FC/softmax via `aux_latency`).
+    pub aux: u64,
+}
+
+impl PhaseCycles {
+    pub fn total(&self) -> u64 {
+        self.fp + self.bp + self.wu + self.aux
+    }
+}
+
+/// [`network_training_cycles_masked`], reported per phase. The sum of
+/// the returned fields is bit-identical to the masked total — both are
+/// one walk of the same loop.
+pub fn network_training_phases_masked(
+    net: &Network,
+    sched: &Schedule,
+    dev: &Device,
+    batch: usize,
+    mask: &crate::model::PhaseMask,
+) -> PhaseCycles {
+    network_phases_inner(net, sched, dev, batch, true, mask)
+}
+
 fn network_cycles_inner(
     net: &Network,
     sched: &Schedule,
@@ -416,7 +453,18 @@ fn network_cycles_inner(
     include_fc: bool,
     mask: &crate::model::PhaseMask,
 ) -> u64 {
-    let mut cycles = 0u64;
+    network_phases_inner(net, sched, dev, batch, include_fc, mask).total()
+}
+
+fn network_phases_inner(
+    net: &Network,
+    sched: &Schedule,
+    dev: &Device,
+    batch: usize,
+    include_fc: bool,
+    mask: &crate::model::PhaseMask,
+) -> PhaseCycles {
+    let mut phases = PhaseCycles::default();
     let mut conv_idx = 0usize;
     for kind in &net.layers {
         match kind {
@@ -429,15 +477,20 @@ fn network_cycles_inner(
                     if !mask.runs(conv_idx, p) {
                         continue; // frozen prefix: FP-only
                     }
-                    cycles += conv_latency_cached(l, t, dev, p, batch).cycles;
+                    let cycles = conv_latency_cached(l, t, dev, p, batch).cycles;
+                    match p {
+                        Process::Fp => phases.fp += cycles,
+                        Process::Bp => phases.bp += cycles,
+                        Process::Wu => phases.wu += cycles,
+                    }
                 }
                 conv_idx += 1;
             }
             crate::nets::LayerKind::Fc { .. } if !include_fc => {}
-            other => cycles += crate::model::perf::aux_latency(other, dev, batch),
+            other => phases.aux += crate::model::perf::aux_latency(other, dev, batch),
         }
     }
-    cycles
+    phases
 }
 
 #[cfg(test)]

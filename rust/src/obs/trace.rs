@@ -103,6 +103,14 @@ impl TraceSink {
         self.push(Json::Obj(TraceSink::with_args(m, args)));
     }
 
+    /// Counter sample (`ph: "C"`): the viewer plots each numeric arg
+    /// as a series named `name.arg` over time. `scripts/trace_check.py`
+    /// requires every arg value to be numeric.
+    pub fn counter(&self, pid: u64, tid: u64, name: &str, ts: u64, args: &[(&str, Json)]) {
+        let m = TraceSink::base("C", pid, tid, name, ts);
+        self.push(Json::Obj(TraceSink::with_args(m, args)));
+    }
+
     pub fn len(&self) -> usize {
         self.events.lock().unwrap_or_else(|e| e.into_inner()).len()
     }

@@ -134,6 +134,13 @@ pub struct ServeOptions {
     /// instead of rewriting the whole file per cell. A burst of K
     /// misses performs at most `ceil(K / save_every) + 1` saves.
     pub save_every: usize,
+    /// Calibration correction factors (`serve --corrections FILE`).
+    /// When set, every served config gains a `calibrated_latency_ms`
+    /// field (raw `latency_ms` × the cell's (device, scheme) factor)
+    /// *alongside* the raw model number — never replacing it. `None`
+    /// (the default) leaves every reply byte-identical to an advisor
+    /// without the option.
+    pub corrections: Option<crate::calib::Corrections>,
 }
 
 impl Default for ServeOptions {
@@ -143,6 +150,7 @@ impl Default for ServeOptions {
             miss_batches: SweepConfig::default_sweep().batches,
             max_inflight_misses: None,
             save_every: 16,
+            corrections: None,
         }
     }
 }
@@ -600,6 +608,13 @@ impl Advisor {
                  is empty and the query names no batch",
             )),
         };
+        // Calibration decoration: served configs gain
+        // `calibrated_latency_ms` when a (device, scheme) factor is
+        // loaded. Keyed on the canonical device name — the reply's own
+        // `device` field echoes the caller's spelling.
+        if let Some(corrections) = &self.opts.corrections {
+            corrections.apply(&mut reply, &device);
+        }
         if let (Some((t, id)), Some(ts)) = (tr, t_query) {
             t.span(
                 SERVE_TRACE_PID,
@@ -883,6 +898,41 @@ mod tests {
         assert_eq!(j.field_str("scheme"), Some("reshaped"), "reshaping dominates");
         assert_eq!(advisor.stats.misses(), 0);
         assert_eq!(advisor.stats.hits(), 1);
+    }
+
+    #[test]
+    fn corrections_decorate_replies_without_touching_raw_fields() {
+        let query = r#"{"net": "CNN1X", "device": "ZCU102", "batch": 4}"#;
+        let plain = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            ..ServeOptions::default()
+        });
+        let baseline = plain.respond_line(query).unwrap();
+        assert!(
+            !baseline.contains("calibrated_latency_ms"),
+            "no corrections loaded -> no calibrated field"
+        );
+
+        let mut factors = std::collections::BTreeMap::new();
+        // Keyed on the *canonical* device name; the query deliberately
+        // uses an alias spelling.
+        factors.insert("zcu102|reshaped".to_string(), 0.5);
+        let corrected = warm_advisor(ServeOptions {
+            miss_batches: vec![4],
+            corrections: Some(crate::calib::Corrections::from_factors(factors)),
+            ..ServeOptions::default()
+        });
+        let reply = corrected.respond_line(query).unwrap();
+        let j = Json::parse(&reply).unwrap();
+        let raw = j.field_f64("latency_ms").unwrap();
+        assert_eq!(j.field_f64("calibrated_latency_ms"), Some(raw * 0.5));
+        // Dropping only the calibrated field reproduces the baseline
+        // byte for byte: corrections add, never mutate.
+        let mut stripped = Json::parse(&reply).unwrap();
+        if let Json::Obj(m) = &mut stripped {
+            m.remove("calibrated_latency_ms");
+        }
+        assert_eq!(stripped.to_string(), baseline);
     }
 
     #[test]

@@ -20,6 +20,21 @@ pub fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// [`percentile`] lifted to finite floats (calibration residuals, drift
+/// ratios). Takes an *unsorted* slice — float populations are small
+/// and one-shot, so sorting here beats making every caller juggle a
+/// `partial_cmp` sort. Panics on NaN (residuals are finite by
+/// construction); an empty population reports 0.
+pub fn percentile_f64(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite percentile population"));
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,5 +63,18 @@ mod tests {
         for q in [0.0, 0.5, 0.99, 1.0] {
             assert_eq!(percentile(&[7], q), 7);
         }
+    }
+
+    #[test]
+    fn float_percentile_matches_integer_convention() {
+        let ints: Vec<u64> = (1..=100).collect();
+        let floats: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        // Deliberately shuffled input: percentile_f64 sorts internally.
+        let mut shuffled = floats.clone();
+        shuffled.reverse();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile_f64(&shuffled, q), percentile(&ints, q) as f64);
+        }
+        assert_eq!(percentile_f64(&[], 0.5), 0.0);
     }
 }

@@ -1,0 +1,148 @@
+//! Integration tests for the calibration observatory: artifact
+//! determinism across runs and thread pools, and the CI tooling
+//! contract — `scripts/calib_gate.py` must red-fail an out-of-band
+//! fixture and pass an in-band artifact, and the calibration trace
+//! must satisfy `scripts/trace_check.py` (including its counter-event
+//! rules). Python-driven tests skip gracefully when `python3` is not
+//! on PATH so `cargo test` stays hermetic.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use ef_train::calib::run_calibration;
+use ef_train::explore::SweepConfig;
+
+fn tiny_cfg() -> SweepConfig {
+    SweepConfig::from_args("cnn1x,lenet10", "zcu102,pynq-z1", "4", "bchw,reshaped")
+        .expect("valid sweep axes")
+}
+
+fn scripts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../scripts")
+}
+
+/// Absent python3 is a skip, not a failure: the Rust suite must pass
+/// on machines without the CI tooling installed.
+fn have_python3() -> bool {
+    match Command::new("python3").arg("--version").output() {
+        Ok(out) if out.status.success() => true,
+        _ => {
+            eprintln!("skipping: python3 not on PATH");
+            false
+        }
+    }
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ef_train_calib_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn calibration_is_byte_identical_across_runs_and_pools() {
+    let cfg = tiny_cfg();
+    let a = run_calibration(&cfg, false).expect("serial run");
+    let b = run_calibration(&cfg, false).expect("second serial run");
+    let c = run_calibration(&cfg, true).expect("rayon run");
+    let bytes = a.to_json().to_string();
+    assert_eq!(bytes, b.to_json().to_string(), "re-runs must be byte-identical");
+    assert_eq!(bytes, c.to_json().to_string(), "thread count must not leak into the artifact");
+
+    // And under an explicitly sized pool, like `ef-train calibrate --jobs N`.
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(2)
+        .build()
+        .expect("2-thread pool");
+    let d = pool.install(|| run_calibration(&cfg, true)).expect("pooled run");
+    assert_eq!(bytes, d.to_json().to_string(), "--jobs must not change the artifact");
+}
+
+#[test]
+fn calib_gate_red_fails_an_out_of_band_fixture() {
+    if !have_python3() {
+        return;
+    }
+    // Hand-authored fixture: one cell sits far outside any sane band.
+    let fixture = tmp_path("out_of_band.json");
+    std::fs::write(
+        &fixture,
+        r#"{"bench": "calibrate", "schema_version": 1,
+            "axes": {"nets": "cnn1x", "devices": "zcu102", "batches": "4", "schemes": "bchw"},
+            "cells": [{"net": "cnn1x", "device": "zcu102", "batch": 4, "scheme": "bchw",
+                       "depth": 1, "convs": 1, "rel_residual": 2.0}],
+            "worst_abs_rel": 2.0}"#,
+    )
+    .expect("write fixture");
+    let out = Command::new("python3")
+        .arg(scripts_dir().join("calib_gate.py"))
+        .arg(&fixture)
+        .output()
+        .expect("run calib_gate.py");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    std::fs::remove_file(&fixture).ok();
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "out-of-band fixture must red-fail the gate; stdout:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("OUT OF BAND"),
+        "gate must name the drifting cell; stdout:\n{stdout}"
+    );
+}
+
+#[test]
+fn calib_gate_passes_a_real_in_band_artifact() {
+    if !have_python3() {
+        return;
+    }
+    let report = run_calibration(&tiny_cfg(), false).expect("calibration");
+    let current = tmp_path("current.json");
+    std::fs::write(&current, report.to_json().to_string()).expect("write artifact");
+    // Band wide open: this exercises the gate's parse/aggregate path
+    // and the self-baseline growth gate (0% growth), not the band.
+    let out = Command::new("python3")
+        .arg(scripts_dir().join("calib_gate.py"))
+        .arg(&current)
+        .arg(&current)
+        .arg("--band")
+        .arg("1000000")
+        .output()
+        .expect("run calib_gate.py");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    std::fs::remove_file(&current).ok();
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "real artifact inside the band must pass; stdout:\n{stdout}"
+    );
+    assert!(stdout.contains("calibration gate clean"), "stdout:\n{stdout}");
+}
+
+#[test]
+fn calib_trace_satisfies_trace_check() {
+    if !have_python3() {
+        return;
+    }
+    let report = run_calibration(&tiny_cfg(), false).expect("calibration");
+    let sink = ef_train::obs::trace::TraceSink::new();
+    report.trace_into(&sink);
+    let trace = tmp_path("trace.json");
+    sink.write(&trace).expect("write trace");
+    let out = Command::new("python3")
+        .arg(scripts_dir().join("trace_check.py"))
+        .arg(&trace)
+        .output()
+        .expect("run trace_check.py");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    std::fs::remove_file(&trace).ok();
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "calibration trace must validate; stdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("counter samples"),
+        "summary must count the residual counter events; stdout:\n{stdout}"
+    );
+}

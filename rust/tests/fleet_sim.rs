@@ -6,7 +6,10 @@
 //! attempts), the closed-loop retry/shed/priority behaviour, the
 //! completion-only makespan regression, and the canonical-name
 //! regression (alias device spellings hit one cache cell from the
-//! fleet engine too).
+//! fleet engine too). The drift tests pin the `--drift` section's
+//! gating contract: off by default and byte-invisible, and when on it
+//! adds the predicted-vs-simulated sojourn residuals without
+//! perturbing any other report byte.
 
 use ef_train::data::Rng;
 use ef_train::explore::sweep_cache::SweepCache;
@@ -522,4 +525,94 @@ fn depth_k_prices_strictly_less_and_monotonically_over_random_networks() {
             assert_eq!(prev_sim, full_sim, "depth n == full retraining");
         },
     );
+}
+
+#[test]
+fn drift_section_appears_only_with_the_flag_and_changes_nothing_else() {
+    let cfg = tiny_cfg(48, 11);
+    let off = run_fleet(&cfg, &advisor_for(&cfg)).unwrap();
+    assert!(off.drift.is_none(), "drift defaults off");
+    let off_bytes = off.to_json().to_string();
+    assert!(
+        !off_bytes.contains("\"drift\""),
+        "a drift-off report must serialize byte-identically to pre-drift builds"
+    );
+
+    let mut cfg_on = tiny_cfg(48, 11);
+    cfg_on.drift = true;
+    let on = run_fleet(&cfg_on, &advisor_for(&cfg_on)).unwrap();
+    let drift = on.drift.as_ref().expect("--drift populates the section");
+    assert_eq!(drift.len(), on.classes.len(), "one drift row per class");
+    let ran = on.records.iter().filter(|r| r.ran()).count();
+    assert_eq!(
+        drift.iter().map(|d| d.sessions).sum::<usize>(),
+        ran,
+        "drift rows partition the ran sessions"
+    );
+    for d in drift {
+        assert!(d.mean_rel.is_finite());
+        assert!(d.p50_rel.is_finite() && d.p95_rel.is_finite());
+        assert!(d.max_abs_rel.is_finite() && d.max_abs_rel >= 0.0);
+        assert!(d.max_abs_rel >= d.p50_rel.abs(), "max bounds the percentiles");
+        assert!(d.max_abs_rel >= d.p95_rel.abs());
+    }
+    // Every ran session carries its closed-form prediction; the field
+    // is per-record bookkeeping only and never serialized.
+    for r in &on.records {
+        assert_eq!(
+            r.predicted_service_cycles.is_some(),
+            r.ran(),
+            "session {}: prediction iff it ran",
+            r.id
+        );
+        if let Some(p) = r.predicted_service_cycles {
+            assert!(p > 0);
+            assert_eq!(
+                p % r.steps as u64,
+                0,
+                "prediction is steps x a per-step closed form"
+            );
+        }
+    }
+    // Removing the drift key from the drift-on JSON yields the
+    // drift-off bytes: the flag adds a section, it perturbs nothing.
+    let on_bytes = on.to_json().to_string();
+    let mut on_json = ef_train::util::json::Json::parse(&on_bytes).unwrap();
+    if let ef_train::util::json::Json::Obj(m) = &mut on_json {
+        assert!(m.remove("drift").is_some(), "drift-on JSON carries the key");
+    } else {
+        panic!("report JSON is an object");
+    }
+    assert_eq!(on_json.to_string(), off_bytes);
+}
+
+#[test]
+fn drift_handles_a_fleet_where_nothing_ran() {
+    // A zero-permit cold advisor refuses everything: the drift section
+    // still renders, with empty per-class populations.
+    let mut cfg = tiny_cfg(8, 9);
+    cfg.drift = true;
+    let choked = Advisor::new(
+        SweepCache::empty(),
+        None,
+        None,
+        ServeOptions {
+            miss_batches: cfg.batch_mix.iter().map(|(b, _)| *b).collect(),
+            max_inflight_misses: Some(0),
+            ..ServeOptions::default()
+        },
+    );
+    let report = run_fleet(&cfg, &choked).unwrap();
+    assert_eq!(report.completed, 0);
+    for r in &report.records {
+        assert!(r.predicted_service_cycles.is_none(), "unserved sessions predict nothing");
+    }
+    let drift = report.drift.as_ref().expect("section present even when empty");
+    for d in drift {
+        assert_eq!(d.sessions, 0);
+        assert_eq!(d.mean_rel, 0.0);
+        assert_eq!(d.p50_rel, 0.0);
+        assert_eq!(d.p95_rel, 0.0);
+        assert_eq!(d.max_abs_rel, 0.0);
+    }
 }

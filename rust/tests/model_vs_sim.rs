@@ -2,14 +2,24 @@
 //! model (Eq. 15–27) and the discrete-event simulator must agree within
 //! a modest tolerance across random layer geometries — they are two
 //! independent implementations of the same accelerator.
+//!
+//! The second half drives the calibration observatory over random
+//! whole networks: residuals must stay finite and signed-consistent
+//! (phase residuals decompose the total, the relative residual carries
+//! the total's sign), the [`CalibrationReport`] must round-trip
+//! table↔JSON losslessly, and correction factors applied twice must be
+//! idempotent.
 
+use ef_train::calib::{calibrate_cell, CalibrationReport};
 use ef_train::data::Rng;
+use ef_train::explore::CellDecomposition;
 use ef_train::device::{pynq_z1, zcu102};
 use ef_train::layout::streams::StreamSpec;
 use ef_train::layout::{Process, Scheme, Tiling};
 use ef_train::model::perf::conv_latency;
 use ef_train::nets::ConvShape;
 use ef_train::sim::{on_chip_feature_words, simulate_layer};
+use ef_train::util::json::Json;
 use ef_train::util::proptest::{pick, range, run};
 
 fn random_layer(rng: &mut Rng) -> (ConvShape, Tiling) {
@@ -180,6 +190,148 @@ fn weight_reuse_never_hurts_total_in_sim() {
                 yes as f64 <= no as f64 * 1.02,
                 "{layer:?} {tiling:?} b={batch}: reuse {yes} vs {no}"
             );
+        },
+    );
+}
+
+// ---- calibration observatory over random whole networks ----
+
+/// A random (network, device, batch) calibration input. Devices are
+/// picked by index so the generated case stays `Debug`-replayable.
+fn random_calib_case(rng: &mut Rng) -> (ef_train::nets::Network, usize, usize) {
+    let net = ef_train::nets::random_network(rng);
+    let dev_idx = range(rng, 0, 1);
+    let batch = *pick(rng, &[1usize, 2, 4, 8]);
+    (net, dev_idx, batch)
+}
+
+fn device_for(idx: usize) -> ef_train::device::Device {
+    if idx == 0 {
+        zcu102()
+    } else {
+        pynq_z1()
+    }
+}
+
+const CALIB_SCHEMES: [Scheme; 3] = [Scheme::Bchw, Scheme::Bhwc, Scheme::Reshaped];
+
+/// Calibrate one random cell over every scheme and depth.
+fn random_cells(
+    net: &ef_train::nets::Network,
+    dev_idx: usize,
+    batch: usize,
+) -> Vec<ef_train::calib::CellResidual> {
+    let dev = device_for(dev_idx);
+    let dev_name = dev.name;
+    let cd = CellDecomposition::new(net.clone(), dev);
+    calibrate_cell(&cd, net.name, dev_name, &[batch], &CALIB_SCHEMES)
+}
+
+#[test]
+fn calibration_residuals_are_finite_and_signed_consistent() {
+    run(
+        "calib residuals finite + signed",
+        ef_train::util::proptest::default_cases() / 8,
+        random_calib_case,
+        |(net, dev_idx, batch)| {
+            let cells = random_cells(net, *dev_idx, *batch);
+            let convs = net.conv_count();
+            // Every scheme at every retraining depth, grid-ordered.
+            assert_eq!(cells.len(), CALIB_SCHEMES.len() * convs);
+            for c in &cells {
+                assert!(c.rel_residual().is_finite(), "{c:?}");
+                assert!(c.ratio().is_finite() && c.ratio() > 0.0, "{c:?}");
+                assert!(c.residual_energy_mj().is_finite(), "{c:?}");
+                // Phase residuals decompose the total residual exactly.
+                let phase_sum: i64 = c.phase_residuals().iter().sum();
+                assert_eq!(phase_sum, c.residual_cycles(), "{c:?}");
+                // rel_residual carries residual_cycles' sign (closed − sim).
+                let rel = c.rel_residual();
+                let res = c.residual_cycles();
+                assert_eq!(rel > 0.0, res > 0, "{c:?}");
+                assert_eq!(rel < 0.0, res < 0, "{c:?}");
+                assert!((1..=convs).contains(&c.depth), "{c:?}");
+                assert_eq!(c.convs, convs, "{c:?}");
+            }
+        },
+    );
+}
+
+#[test]
+fn calibration_report_round_trips_table_and_json() {
+    run(
+        "calib report round-trips",
+        ef_train::util::proptest::default_cases() / 16,
+        random_calib_case,
+        |(net, dev_idx, batch)| {
+            let cells = random_cells(net, *dev_idx, *batch);
+            let dev_name = device_for(*dev_idx).name;
+            let report = CalibrationReport {
+                cells,
+                axes: [
+                    net.name.to_string(),
+                    dev_name.to_string(),
+                    batch.to_string(),
+                    "bchw,bhwc,reshaped".to_string(),
+                ],
+            };
+            // Table: one row per cell, every row mentions its own net.
+            let table = report.cells_table();
+            assert_eq!(table.rows.len(), report.cells.len());
+            for row in &table.rows {
+                assert_eq!(row[0], net.name);
+            }
+            // JSON: lossless round-trip, byte-stable re-serialization.
+            let j = report.to_json();
+            let back = CalibrationReport::from_json(&j).expect("artifact parses back");
+            assert_eq!(back, report);
+            assert_eq!(back.to_json().to_string(), j.to_string());
+        },
+    );
+}
+
+#[test]
+fn corrections_applied_twice_are_idempotent() {
+    run(
+        "corrections idempotent",
+        ef_train::util::proptest::default_cases() / 16,
+        random_calib_case,
+        |(net, dev_idx, batch)| {
+            let cells = random_cells(net, *dev_idx, *batch);
+            let dev_name = device_for(*dev_idx).name;
+            let report = CalibrationReport {
+                cells,
+                axes: [
+                    net.name.to_string(),
+                    dev_name.to_string(),
+                    batch.to_string(),
+                    "bchw,bhwc,reshaped".to_string(),
+                ],
+            };
+            let corr = report.corrections();
+            for scheme in CALIB_SCHEMES {
+                let scheme = ef_train::explore::scheme_name(scheme);
+                let factor = corr
+                    .factor_for(dev_name, scheme)
+                    .expect("full-depth cells exist for every scheme");
+                assert!(factor.is_finite() && factor > 0.0);
+
+                let mut reply = std::collections::BTreeMap::new();
+                reply.insert("scheme".to_string(), Json::Str(scheme.to_string()));
+                reply.insert("latency_ms".to_string(), Json::Num(12.5));
+                let mut reply = Json::Obj(reply);
+                corr.apply(&mut reply, dev_name);
+                let once = reply.to_string();
+                assert_eq!(
+                    reply.field_f64("calibrated_latency_ms"),
+                    Some(12.5 * factor),
+                    "calibrated field decorates, raw latency untouched"
+                );
+                assert_eq!(reply.field_f64("latency_ms"), Some(12.5));
+                // Second application re-derives from the raw field: no-op.
+                corr.apply(&mut reply, dev_name);
+                assert_eq!(reply.to_string(), once);
+            }
         },
     );
 }

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Gate CI on calibration drift between the two pricing paths.
+
+Reads the BENCH_calibrate.json artifact `ef-train calibrate` emits
+(closed-form vs discrete-event residuals over the whole grid at every
+retraining depth) and fails the lane when:
+
+  - any cell's |rel_residual| leaves the configured --band (the model
+    and the simulator disagree more than the drift budget allows), or
+  - the grid's worst |rel_residual| grew by more than --max-growth-pct
+    over the previous artifact (drift is creeping up even while still
+    inside the band).
+
+Modeled on bench_diff.py's exit philosophy: exit 0 whenever there is no
+usable baseline -- the previous artifact is missing (first run on a
+branch, or the retention window expired), unreadable, a different
+schema version, or swept over different axes -- and only a genuine
+drift failure of the CURRENT artifact exits 1 (a corrupt *current*
+artifact is also an error: that is this run's own output). Usage
+errors exit 2.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SUPPORTED_SCHEMA = 1
+
+
+def load_current(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: current artifact {path} is unreadable ({e})")
+        return None
+    if doc.get("bench") != "calibrate":
+        print(f"FAIL: {path} is not a calibration artifact (no bench: calibrate)")
+        return None
+    if doc.get("schema_version") != SUPPORTED_SCHEMA:
+        print(
+            f"FAIL: {path} has schema_version {doc.get('schema_version')!r}, "
+            f"this gate supports {SUPPORTED_SCHEMA}"
+        )
+        return None
+    if not isinstance(doc.get("cells"), list) or not doc["cells"]:
+        print(f"FAIL: {path} carries no cells")
+        return None
+    return doc
+
+
+def load_baseline(path):
+    """A usable previous artifact, or None with a skip message."""
+    if path is None:
+        print("no baseline given, band check only")
+        return None
+    if not os.path.exists(path):
+        print(
+            f"no baseline, skipping growth gate: {path} does not exist "
+            "(first run on this branch, or the artifact retention window expired)"
+        )
+        return None
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"no baseline, skipping growth gate: {path} is unreadable ({e})")
+        return None
+    if doc.get("bench") != "calibrate" or doc.get("schema_version") != SUPPORTED_SCHEMA:
+        print(
+            "baseline is a different artifact kind or schema version; "
+            "not comparable, skipping growth gate"
+        )
+        return None
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="this run's BENCH_calibrate.json")
+    ap.add_argument(
+        "previous",
+        nargs="?",
+        help="previous run's artifact for the growth gate (optional)",
+    )
+    ap.add_argument(
+        "--band",
+        type=float,
+        default=0.45,
+        help="max |rel_residual| any cell may reach (default 0.45)",
+    )
+    ap.add_argument(
+        "--max-growth-pct",
+        type=float,
+        default=10.0,
+        help="max growth of the worst |rel_residual| vs the baseline",
+    )
+    args = ap.parse_args()
+
+    cur = load_current(args.current)
+    if cur is None:
+        return 1
+
+    out_of_band = []
+    worst = 0.0
+    for cell in cur["cells"]:
+        rel = abs(float(cell.get("rel_residual", 0.0)))
+        worst = max(worst, rel)
+        if rel > args.band:
+            out_of_band.append(
+                f"{cell.get('net')}/{cell.get('device')} "
+                f"batch {cell.get('batch')} {cell.get('scheme')} "
+                f"depth {cell.get('depth')}/{cell.get('convs')}: "
+                f"|rel| {rel:.4f}"
+            )
+    print(
+        f"  {len(cur['cells'])} cells, worst |rel_residual| {worst:.4f} "
+        f"(band {args.band:g})"
+    )
+    if out_of_band:
+        for line in out_of_band:
+            print(f"  OUT OF BAND: {line}")
+        print(
+            f"FAIL: {len(out_of_band)} cells outside the +/-{args.band:g} "
+            "drift band -- the closed forms and the simulator disagree "
+            "beyond the calibration budget"
+        )
+        return 1
+
+    prev = load_baseline(args.previous)
+    if prev is not None:
+        if prev.get("axes") != cur.get("axes"):
+            print(
+                f"axes changed ({prev.get('axes')} -> {cur.get('axes')}); "
+                "runs are not comparable, skipping growth gate"
+            )
+        else:
+            prev_worst = float(prev.get("worst_abs_rel", 0.0))
+            pct = 100.0 * (worst - prev_worst) / prev_worst if prev_worst else 0.0
+            print(
+                f"  worst |rel_residual|: {prev_worst:g} -> {worst:g} ({pct:+.1f}%)"
+            )
+            if prev_worst and worst > prev_worst * (1.0 + args.max_growth_pct / 100.0):
+                print(
+                    f"FAIL: worst drift grew >{args.max_growth_pct:g}% over the "
+                    "baseline -- the pricing paths are diverging"
+                )
+                return 1
+
+    print("calibration gate clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,26 +5,37 @@ Checks, per file:
 
   - the document is a JSON object with a "traceEvents" list;
   - every event carries name/ph/pid/tid, ph is one of X (complete
-    span), i (instant), M (metadata), and non-metadata events carry a
-    non-negative numeric ts (spans also a non-negative dur);
+    span), i (instant), C (counter sample), M (metadata), and
+    non-metadata events carry a non-negative numeric ts (spans also a
+    non-negative dur);
+  - counter events ("ph": "C") carry an args object whose values are
+    all numeric -- the viewer plots each arg as a series, and a
+    non-numeric value renders as a silent empty chart;
   - per (pid, tid) track, spans are properly nested or disjoint --
     partially overlapping spans on one track mean the emitter closed a
     segment it never opened (or vice versa) and render garbage in the
     viewer.
 
-Exit 0 with a one-line summary per file when everything holds; exit 1
-with a diagnostic on the first violation.
+Exit 0 with a one-line summary per file when everything holds. Failures
+carry distinct exit codes so CI lanes can tell malformed output from a
+broken emitter state machine: exit 1 on a schema error (missing or
+mistyped fields, unknown ph, unreadable file), exit 3 on a span
+nesting violation, exit 2 on usage errors.
 """
 
 import json
 import sys
 
-ALLOWED_PH = {"X", "i", "M"}
+ALLOWED_PH = {"X", "i", "C", "M"}
+
+EXIT_SCHEMA = 1
+EXIT_USAGE = 2
+EXIT_NESTING = 3
 
 
-def fail(path, msg):
+def fail(path, msg, code=EXIT_SCHEMA):
     print(f"trace_check: {path}: {msg}", file=sys.stderr)
-    sys.exit(1)
+    sys.exit(code)
 
 
 def is_num(v):
@@ -42,6 +53,7 @@ def check_file(path):
     events = doc["traceEvents"]
 
     tracks = {}
+    n_counters = 0
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
             fail(path, f"event {i} is not an object")
@@ -55,6 +67,21 @@ def check_file(path):
             continue
         if not is_num(ev.get("ts")) or ev["ts"] < 0:
             fail(path, f"event {i} ({ev['name']}) needs a non-negative numeric ts")
+        if ph == "C":
+            n_counters += 1
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                fail(
+                    path,
+                    f"counter {i} ({ev['name']}) needs a non-empty args object",
+                )
+            for k, v in args.items():
+                if not is_num(v):
+                    fail(
+                        path,
+                        f"counter {i} ({ev['name']}) arg {k!r} must be "
+                        f"numeric, got {type(v).__name__}",
+                    )
         if ph == "X":
             if not is_num(ev.get("dur")) or ev["dur"] < 0:
                 fail(path, f"span {i} ({ev['name']}) needs a non-negative numeric dur")
@@ -81,19 +108,21 @@ def check_file(path):
                     f"track pid={pid} tid={tid}: span {name!r} "
                     f"[{ts}, {end}] partially overlaps an enclosing span "
                     f"ending at {stack[-1]}",
+                    code=EXIT_NESTING,
                 )
             stack.append(end)
 
     print(
         f"trace_check: {path}: OK "
-        f"({len(events)} events, {n_spans} spans on {len(tracks)} tracks)"
+        f"({len(events)} events, {n_spans} spans, {n_counters} counter "
+        f"samples on {len(tracks)} tracks)"
     )
 
 
 def main():
     if len(sys.argv) < 2:
         print("usage: trace_check.py TRACE.json [TRACE.json ...]", file=sys.stderr)
-        sys.exit(2)
+        sys.exit(EXIT_USAGE)
     for path in sys.argv[1:]:
         check_file(path)
 
